@@ -1,0 +1,29 @@
+//! Bench: regenerate Figs. 11 & 12 — 1024 tasks × 9 GB across up to
+//! three XSEDE machines — printing overall T, the task distribution,
+//! and per-machine runtime statistics, plus the wall-clock cost of the
+//! discrete-event replay.
+//!
+//! Run with: `cargo bench --bench fig11_scale`
+
+use pilot_data::experiments::fig11::{run_scenario, FULL_TASKS, SCENARIOS};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    println!("# Fig 11/12 — 1024 tasks x 9 GB, up to 3 XSEDE machines (simulated)");
+    let t0 = Instant::now();
+    for (i, name) in SCENARIOS.iter().enumerate() {
+        let r = run_scenario(i + 1, 42, FULL_TASKS)?;
+        println!("\n{name}: T = {:.0} s", r.t_total);
+        for (machine, count) in &r.distribution {
+            let (mean, std) = r.runtime_stats[machine];
+            println!("  {machine:<10} {count:>5} tasks   runtime {mean:>6.0} ± {std:>5.0} s");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\n[bench] 4 x {FULL_TASKS}-task discrete-event replays in {wall:.3}s wall \
+         ({:.0} simulated-tasks/s)",
+        4.0 * FULL_TASKS as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate Fig. 13 — the time series of the 3-machine run
+//! (active CUs, cumulative finishes per machine, pilot activations).
+//!
+//! Run with: `cargo bench --bench fig13_timeline`
+
+use pilot_data::experiments::fig11::run_scenario;
+use pilot_data::metrics::TimelineEvent;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let r = run_scenario(4, 42, 1024)?;
+    let m = &r.metrics;
+
+    println!("# Fig 13 — 3-machine run timeline (simulated)");
+    for (ts, who, ev) in &m.timeline {
+        if *ev == TimelineEvent::PilotActive {
+            println!("pilot on {who:<10} active at t={ts:>7.0}s");
+        }
+    }
+    let active = m.active_curve();
+    let peak = active.iter().map(|(_, v)| *v).max().unwrap_or(0);
+    println!("\npeak active CUs: {peak}");
+    let horizon = r.t_total;
+    println!("{:>8} {:>8} {:>10} {:>10} {:>10}", "t(s)", "active", "lonestar", "stampede", "trestles");
+    for i in 0..=12 {
+        let ts = horizon * i as f64 / 12.0;
+        let at = active.iter().take_while(|(x, _)| *x <= ts).last().map(|(_, v)| *v).unwrap_or(0);
+        let done = |mm: &str| {
+            m.finished_curve(mm)
+                .iter()
+                .take_while(|(x, _)| *x <= ts)
+                .last()
+                .map(|(_, v)| *v)
+                .unwrap_or(0)
+        };
+        println!(
+            "{ts:>8.0} {at:>8} {:>10} {:>10} {:>10}",
+            done("lonestar"),
+            done("stampede"),
+            done("trestles")
+        );
+    }
+    println!("\n[bench] timeline replay in {:.3}s wall", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 7 (T_S per backend × size) and report both
+//! the simulated staging times (the paper's series) and the wall-clock
+//! cost of producing them.
+//!
+//! Run with: `cargo bench --bench fig7_staging`
+
+use pilot_data::experiments::fig7::{staging_time, BACKENDS, SIZES_MB};
+use pilot_data::util::Bytes;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    println!("# Fig 7 — T_S to instantiate a Pilot-Data (simulated seconds)");
+    println!("{:<12}{}", "size", BACKENDS.map(|(n, _)| format!("{n:>14}")).join(""));
+    let t0 = Instant::now();
+    let mut sims = 0u32;
+    for &mb in &SIZES_MB {
+        let size = Bytes::mb(mb);
+        let mut row = format!("{:<12}", size.to_string());
+        for (i, (_, pd)) in BACKENDS.iter().enumerate() {
+            let ts = staging_time(42 + i as u64, pd, size, 16)?;
+            sims += 1;
+            row.push_str(&format!("{ts:>14.1}"));
+        }
+        println!("{row}");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\n[bench] {sims} staged-upload simulations in {wall:.3}s wall ({:.1} sims/s)",
+        sims as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 8 (T_R group vs sequential replication on
+//! OSG, plus the per-host T_X inset), reporting sim results and wall
+//! cost.
+//!
+//! Run with: `cargo bench --bench fig8_replication`
+
+use pilot_data::experiments::fig8::{group_replication, sequential_replication};
+use pilot_data::util::Bytes;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    println!("# Fig 8 — T_R on OSG (simulated seconds)");
+    println!("{:<10}{:>16}{:>22}{:>20}{:>12}", "size", "iRODS group(9)", "iRODS sequential(6)", "SRM sequential(6)", "replicas");
+    let t0 = Instant::now();
+    for gb in [1u64, 2, 4] {
+        let size = Bytes::gb(gb);
+        let (grp, replicas, _) = group_replication(42, size)?;
+        let si = sequential_replication(43, size, "irods-", 6)?;
+        let ss = sequential_replication(44, size, "srm-", 6)?;
+        println!("{:<10}{grp:>16.0}{si:>22.0}{ss:>20.0}{:>10}/9", size.to_string(), replicas);
+    }
+    println!("\n# inset: per-host T_X, 4 GiB group replication");
+    let (_, _, per_host) = group_replication(45, Bytes::gb(4))?;
+    for (host, tx) in &per_host {
+        println!("{host:<12}{tx:>8.0}s");
+    }
+    println!("\n[bench] fig8 regenerated in {:.3}s wall", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Figs. 9 & 10 — the 5-scenario BWA comparison —
+//! printing T, T_D, task distribution, and the staging/runtime
+//! decomposition per scenario.
+//!
+//! Run with: `cargo bench --bench fig9_bwa`
+
+use pilot_data::experiments::fig9::{run_scenario_avg, SCENARIOS};
+use pilot_data::util::mean;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    println!("# Fig 9/10 — BWA, 8 tasks x 256 MiB reads + 8 GiB reference (simulated)");
+    println!(
+        "{:<22}{:>9}{:>9}{:>12}{:>15}{:>15}",
+        "scenario", "T (s)", "T_D (s)", "on lonestar", "staging mean", "runtime mean"
+    );
+    let t0 = Instant::now();
+    for (i, name) in SCENARIOS.iter().enumerate() {
+        let r = run_scenario_avg(i + 1, 42, 3)?;
+        let lonestar = *r.distribution.get("lonestar").unwrap_or(&0) as f64 / 3.0;
+        let staging: Vec<f64> = r.records.iter().map(|x| x.staging_s).collect();
+        let runtime: Vec<f64> = r.records.iter().map(|x| x.compute_s).collect();
+        println!(
+            "{name:<22}{:>9.0}{:>9.0}{:>10.1}/8{:>15.0}{:>15.0}",
+            r.t_total,
+            r.t_d,
+            lonestar,
+            mean(&staging),
+            mean(&runtime),
+        );
+    }
+    println!(
+        "\n[bench] 5 scenarios x 3 seeds in {:.3}s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Perf bench for the compute hot path: PJRT execution throughput of
+//! the AOT alignment artifacts (L1/L2), measured from rust — reads/s
+//! end-to-end through `Runtime::align`, plus the per-phase VMEM/MXU
+//! estimates recorded in DESIGN.md §Perf.
+//!
+//! Requires `make artifacts`. Run with: `cargo bench --bench perf_align`
+
+use pilot_data::rng::Rng;
+use pilot_data::runtime::Runtime;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("PD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("[skip] no artifacts at {dir}; run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::open(&dir)?;
+    let mut rng = Rng::new(1);
+
+    for name in ["align_small.hlo.txt", "model.hlo.txt", "model_large.hlo.txt"] {
+        let info = rt.info(name)?.clone();
+        let reads: Vec<f32> = (0..info.b * info.l).map(|_| rng.below(4) as f32).collect();
+        let windows: Vec<f32> = (0..info.w * info.lw).map(|_| rng.below(4) as f32).collect();
+
+        // Warmup includes compilation.
+        let t0 = Instant::now();
+        rt.align(name, &reads, &windows)?;
+        let compile_and_first = t0.elapsed().as_secs_f64();
+
+        let iters = 50;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(rt.align(name, &reads, &windows)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let per_batch = dt / iters as f64;
+        println!(
+            "{name:<22} B={:<4} first(+compile) {compile_and_first:>7.3}s   steady {:>8.2} ms/batch   {:>9.0} reads/s",
+            info.b,
+            per_batch * 1e3,
+            info.b as f64 / per_batch
+        );
+    }
+
+    // Batched throughput through larger read sets (the AlignExecutor
+    // loop shape).
+    let info = rt.info("model.hlo.txt")?.clone();
+    let n_reads = 4096;
+    let reads: Vec<f32> = (0..n_reads * info.l).map(|_| rng.below(4) as f32).collect();
+    let windows: Vec<f32> = (0..info.w * info.lw).map(|_| rng.below(4) as f32).collect();
+    let t0 = Instant::now();
+    let mut idx = 0;
+    while idx < n_reads {
+        let mut batch = vec![0f32; info.b * info.l];
+        for r in 0..info.b {
+            let src = (idx + r).min(n_reads - 1);
+            batch[r * info.l..(r + 1) * info.l]
+                .copy_from_slice(&reads[src * info.l..(src + 1) * info.l]);
+        }
+        std::hint::black_box(rt.align("model.hlo.txt", &batch, &windows)?);
+        idx += info.b;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\n[e2e] {n_reads} reads through the executor loop: {dt:.3}s ({:.0} reads/s)",
+        n_reads as f64 / dt
+    );
+    Ok(())
+}

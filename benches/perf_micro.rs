@@ -1,0 +1,115 @@
+//! Micro-benchmarks of the L3 hot paths: scheduler placement,
+//! coordination-store operations, JSON parsing, and raw discrete-event
+//! throughput. These are the §Perf numbers for the coordinator layer.
+//!
+//! Run with: `cargo bench --bench perf_micro`
+
+use pilot_data::coordination::{keys, Store};
+use pilot_data::pilot::{ManagerState, PilotCompute, PilotComputeDescription, PilotState};
+use pilot_data::scheduler::{AffinityScheduler, SchedContext, Scheduler};
+use pilot_data::simtime::Sim;
+use pilot_data::topology::{Label, Topology};
+use pilot_data::unit::{ComputeUnit, ComputeUnitDescription};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:<34}{:>12.0} ops/s   ({:.2} us/op)",
+        iters as f64 / dt,
+        1e6 * dt / iters as f64
+    );
+}
+
+fn main() {
+    println!("# L3 micro-benchmarks");
+
+    // --- scheduler placement over a realistic pilot fleet ---
+    let mut st = ManagerState::new();
+    for i in 0..16 {
+        let mut p = PilotCompute::new(PilotComputeDescription {
+            service_url: "batch://m".into(),
+            cores: 64,
+            walltime_s: 1e6,
+            affinity: Some(Label::new(&format!("osg/site{}", i % 8))),
+        });
+        p.state = PilotState::Active;
+        st.add_pilot(p);
+    }
+    let topo = Topology::new();
+    let mut locs = BTreeMap::new();
+    for d in 0..64 {
+        locs.insert(
+            format!("du-{d}"),
+            vec![Label::new(&format!("osg/site{}", d % 8))],
+        );
+    }
+    let depth = BTreeMap::new();
+    let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+    let sched = AffinityScheduler::new(None);
+    let cu = ComputeUnit::new(ComputeUnitDescription {
+        executable: "x".into(),
+        cores: 2,
+        input_data: vec!["du-3".into(), "du-17".into()],
+        ..Default::default()
+    });
+    bench("scheduler.place (16 pilots, 2 DUs)", 200_000, || {
+        std::hint::black_box(sched.place(&cu, &ctx));
+    });
+
+    // --- coordination store ---
+    let store = Store::new();
+    let mut i = 0u64;
+    bench("store hset+hget", 500_000, || {
+        i += 1;
+        let k = keys::cu("cu-bench");
+        store.hset(&k, "state", "Running").unwrap();
+        std::hint::black_box(store.hget(&k, "state").unwrap());
+    });
+    bench("store queue rpush+lpop", 500_000, || {
+        store.rpush(keys::GLOBAL_QUEUE, "cu-1").unwrap();
+        std::hint::black_box(store.lpop(keys::GLOBAL_QUEUE).unwrap());
+    });
+
+    // --- JSON ---
+    let doc = r#"{"executable":"/bin/bwa","arguments":["aln","-t","4"],"cores":2,
+                  "input_data":["du-1","du-2"],"output_data":["du-3"],
+                  "affinity":"osg/purdue","cpu_secs_hint":2200.0,"io_bytes_hint":9663676416}"#;
+    bench("json parse CUD", 200_000, || {
+        std::hint::black_box(pilot_data::json::parse(doc).unwrap());
+    });
+
+    // --- discrete-event engine ---
+    bench("DES schedule+pop (1k events)", 2_000, || {
+        let mut sim: Sim<u32> = Sim::new();
+        for i in 0..1000u32 {
+            sim.schedule((i % 97) as f64, i);
+        }
+        let mut n = 0;
+        sim.run(|_, _, _| {
+            n += 1;
+            true
+        });
+        std::hint::black_box(n);
+    });
+
+    // --- end-to-end sim throughput ---
+    let t0 = Instant::now();
+    let r = pilot_data::experiments::fig11::run_scenario(3, 42, 1024).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<34}{:>12.0} tasks/s   (1024-task fig11 sc3 in {dt:.3}s, T={:.0}s simulated)",
+        "sim end-to-end",
+        1024.0 / dt,
+        r.t_total
+    );
+}

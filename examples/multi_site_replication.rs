@@ -1,0 +1,85 @@
+//! Reasoning about compute-data placement (paper §6.1) in simulation:
+//! sweep the replication factor for a BWA ensemble across OSG sites and
+//! report the T_Q / T_X trade-off — when is it worth paying T_R to
+//! replicate, and how far?
+//!
+//! This is the "hybrid modes" study the paper sketches: "replication
+//! might commence over a subset of suitably chosen nodes, followed by a
+//! sequential increase in the replication factor if compute resources
+//! close to the replica do not have sufficient compute capacity."
+//!
+//! Run with: `cargo run --release --example multi_site_replication`
+
+use pilot_data::config::{paper_testbed, OSG_SITES};
+use pilot_data::experiments::simdrive::SimSystem;
+use pilot_data::metrics::Table;
+use pilot_data::util::Bytes;
+use pilot_data::workload::bwa_ensemble;
+
+fn run_with_replicas(replicas: usize, seed: u64) -> anyhow::Result<(f64, f64)> {
+    let mut sys = SimSystem::new(paper_testbed(), seed);
+    let ens = bwa_ensemble(16, Bytes::gb(4), Bytes::gb(8));
+
+    // Upload to the iRODS server, replicate to the first `replicas`
+    // sites.
+    let ref_du = sys.upload_du(&ens.reference, "irods-fnal")?;
+    sys.run()?;
+    for site in OSG_SITES.iter().take(replicas) {
+        if format!("irods-{site}") != "irods-fnal" {
+            sys.replicate(&ref_du, &format!("irods-{site}"))?;
+        }
+    }
+    sys.run()?;
+    let t_d = sys.sim.now();
+
+    // Chunks live at the server; 8 pilots across the sites.
+    let mut chunks = Vec::new();
+    for c in &ens.read_chunks {
+        chunks.push(sys.upload_du(c, "irods-fnal")?);
+    }
+    sys.run()?;
+    for site in OSG_SITES.iter().take(8) {
+        sys.submit_pilot(&format!("osg-{site}"), 4, &format!("irods-{site}"))?;
+    }
+    for chunk in &chunks {
+        let mut cud = ens.cu_template.clone();
+        cud.input_data = vec![ref_du.clone(), chunk.clone()];
+        sys.submit_cu(cud)?;
+    }
+    sys.run()?;
+    anyhow::ensure!(sys.state.workload_finished(), "did not finish");
+    Ok((sys.metrics.makespan(), t_d))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Replication-factor sweep: 16 BWA tasks over 8 OSG pilots",
+        &["replicas R", "T_D incl. T_R (s)", "workload T (s)", "total (s)"],
+    );
+    let mut best: Option<(usize, f64)> = None;
+    for replicas in [1usize, 2, 4, 6, 9] {
+        // Average over seeds: queue waits dominate the variance.
+        let reps = 3;
+        let (mut t_total, mut t_d_total) = (0.0, 0.0);
+        for r in 0..reps {
+            let (t, td) = run_with_replicas(replicas, 42 + r * 97)?;
+            t_total += t;
+            t_d_total += td;
+        }
+        let (t, td) = (t_total / reps as f64, t_d_total / reps as f64);
+        table.row(vec![
+            replicas.to_string(),
+            format!("{td:.0}"),
+            format!("{t:.0}"),
+            format!("{:.0}", t + td),
+        ]);
+        if best.map(|(_, bt)| t + td < bt).unwrap_or(true) {
+            best = Some((replicas, t + td));
+        }
+    }
+    println!("{}", table.render());
+    let (r, t) = best.unwrap();
+    println!("sweet spot at R={r} (total {t:.0}s): enough replicas that every pilot");
+    println!("is data-local, but not so many that T_R dominates.");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX/Pallas alignment pipeline -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+HLO text via ``HloModuleProto::from_text_file`` and executes it on the
+PJRT CPU client. HLO *text* — not ``.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts (under ``artifacts/``):
+  model.hlo.txt        align_pipeline  B=64  L=64  W=32   Lw=128
+  model_large.hlo.txt  align_pipeline  B=128 L=64  W=128  Lw=128
+  align_small.hlo.txt  align_pipeline  B=8   L=32  W=8    Lw=64
+  seed.hlo.txt         seed_scores     B=64  L=64  W=32
+  manifest.json        shapes/dtypes for every artifact
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref, seed
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_align(b, l, w, lw):
+    reads = jax.ShapeDtypeStruct((b, l), jnp.float32)
+    windows = jax.ShapeDtypeStruct((w, lw), jnp.float32)
+    return model.align_jit().lower(reads, windows)
+
+
+def lower_seed(b, l, w):
+    reads_oh = jax.ShapeDtypeStruct((b, l, 4), jnp.float32)
+    windows_oh = jax.ShapeDtypeStruct((w, l, 4), jnp.float32)
+    fn = jax.jit(
+        lambda x, y: (
+            seed.seed_scores(x, y, block_b=min(seed.BLOCK_B, b), block_w=min(seed.BLOCK_W, w)),
+        )
+    )
+    return fn.lower(reads_oh, windows_oh)
+
+
+ARTIFACTS = {
+    "model.hlo.txt": {
+        "entry": "align_pipeline",
+        "shapes": {"B": 64, "L": 64, "W": 32, "Lw": 128},
+        "inputs": [["f32", [64, 64]], ["f32", [32, 128]]],
+        "outputs": [["f32", [64]], ["f32", [64]]],
+    },
+    "model_large.hlo.txt": {
+        "entry": "align_pipeline",
+        "shapes": {"B": 128, "L": 64, "W": 128, "Lw": 128},
+        "inputs": [["f32", [128, 64]], ["f32", [128, 128]]],
+        "outputs": [["f32", [128]], ["f32", [128]]],
+    },
+    "align_small.hlo.txt": {
+        "entry": "align_pipeline",
+        "shapes": {"B": 8, "L": 32, "W": 8, "Lw": 64},
+        "inputs": [["f32", [8, 32]], ["f32", [8, 64]]],
+        "outputs": [["f32", [8]], ["f32", [8]]],
+    },
+    "seed.hlo.txt": {
+        "entry": "seed_scores",
+        "shapes": {"B": 64, "L": 64, "W": 32},
+        "inputs": [["f32", [64, 64, 4]], ["f32", [32, 64, 4]]],
+        "outputs": [["f32", [64, 32]]],
+    },
+}
+
+
+def build(outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    jobs = {
+        "model.hlo.txt": lambda: lower_align(64, 64, 32, 128),
+        "model_large.hlo.txt": lambda: lower_align(128, 64, 128, 128),
+        "align_small.hlo.txt": lambda: lower_align(8, 32, 8, 64),
+        "seed.hlo.txt": lambda: lower_seed(64, 64, 32),
+    }
+    manifest = {"match": ref.MATCH, "mismatch": ref.MISMATCH, "gap": ref.GAP, "artifacts": {}}
+    for name, job in jobs.items():
+        text = to_hlo_text(job())
+        path = os.path.join(outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = ARTIFACTS[name]
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact; siblings land next to it")
+    args = ap.parse_args()
+    build(os.path.dirname(os.path.abspath(args.out)) or ".")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Pure-reference oracles for the alignment kernels.
+
+These are the correctness ground truth for the Pallas kernels (L1).
+`seed_scores_ref` is pure jnp; `sw_score_ref` is a deliberately
+straightforward numpy dynamic program — slow, obviously correct, and
+the target of the pytest/hypothesis comparisons.
+
+Scoring scheme (shared by kernel and reference):
+  match = +2, mismatch = -1, linear gap = -1, local alignment
+  (Smith-Waterman: scores clamp at 0; result is the matrix maximum).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+MATCH = 2.0
+MISMATCH = -1.0
+GAP = 1.0  # subtracted
+
+# Seed-phase shift lattice: candidate alignments are evaluated every
+# SHIFT_STRIDE bases within the window (the k-mer seed-lattice trick:
+# exact seeding on a stride-4 lattice, SW extension recovers the rest).
+SHIFT_STRIDE = 4
+
+
+def one_hot_bases(codes):
+    """(…, L) float base codes in {0,1,2,3} -> (…, L, 4) one-hot f32.
+
+    Implemented with equality tests (no integer gather) so the same
+    construction lowers cleanly in the AOT model.
+    """
+    codes = jnp.asarray(codes, jnp.float32)
+    cls = jnp.arange(4, dtype=jnp.float32)
+    return (codes[..., None] == cls).astype(jnp.float32)
+
+
+def seed_scores_ref(reads_oh, windows_oh):
+    """Seed-match scores: best count of positionally matching bases
+    over all stride-SHIFT_STRIDE placements of the read in the window.
+
+    reads_oh: (B, L, 4), windows_oh: (W, Lw, 4) with Lw >= L ->
+    (B, W) f32. Each shifted comparison is an MXU-shaped contraction —
+    exactly what the Pallas seed kernel tiles.
+    """
+    b, l, c = reads_oh.shape
+    w, lw, _ = windows_oh.shape
+    x = reads_oh.reshape(b, l * c)
+    best = jnp.full((b, w), -jnp.inf, jnp.float32)
+    for k in range(0, lw - l + 1, SHIFT_STRIDE):
+        y = windows_oh[:, k : k + l].reshape(w, l * c)
+        best = jnp.maximum(best, x @ y.T)
+    return best
+
+
+def sw_score_ref(read_codes, window_codes):
+    """Smith-Waterman local-alignment score, single pair, numpy DP.
+
+    read_codes: (L,), window_codes: (Lw,) integer base codes.
+    Returns the float best local alignment score.
+    """
+    read = np.asarray(read_codes)
+    win = np.asarray(window_codes)
+    l, lw = len(read), len(win)
+    h = np.zeros((l + 1, lw + 1), dtype=np.float64)
+    best = 0.0
+    for i in range(1, l + 1):
+        for j in range(1, lw + 1):
+            s = MATCH if read[i - 1] == win[j - 1] else MISMATCH
+            h[i, j] = max(
+                0.0,
+                h[i - 1, j - 1] + s,
+                h[i - 1, j] - GAP,
+                h[i, j - 1] - GAP,
+            )
+            best = max(best, h[i, j])
+    return best
+
+
+def sw_scores_ref(read_codes, window_codes):
+    """Batched reference: (B, L) x (B, Lw) -> (B,) scores."""
+    return np.array(
+        [sw_score_ref(r, w) for r, w in zip(read_codes, window_codes)],
+        dtype=np.float32,
+    )
+
+
+def align_pipeline_ref(read_codes, window_codes):
+    """Full-pipeline reference: seed -> select best window -> SW extend.
+
+    read_codes: (B, L) float codes; window_codes: (W, Lw) float codes.
+    Returns (scores (B,), best_window (B,)) as numpy arrays.
+    """
+    read_codes = np.asarray(read_codes)
+    window_codes = np.asarray(window_codes)
+    b, l = read_codes.shape
+    w, lw = window_codes.shape
+    # Seed phase scans the read across the window on the shift lattice.
+    reads_oh = np.asarray(one_hot_bases(read_codes))
+    windows_oh = np.asarray(one_hot_bases(window_codes))
+    seeds = np.asarray(seed_scores_ref(jnp.asarray(reads_oh), jnp.asarray(windows_oh)))
+    best_idx = seeds.argmax(axis=1)
+    chosen = window_codes[best_idx]
+    scores = sw_scores_ref(read_codes, chosen)
+    return scores, best_idx

@@ -1,0 +1,103 @@
+"""Pallas seed-match kernel (L1).
+
+BWA's seeding phase finds candidate reference windows by exact/near
+k-mer matching. On TPU idioms this is not a hash lookup but an
+MXU-shaped contraction: one-hot encode bases and compute
+
+    scores[b, w] = sum_{l, c} reads_oh[b, l, c] * windows_oh[w, l, c]
+
+i.e. a (B, 4L) @ (4L, W) matmul whose result counts positionally
+matching bases. The kernel tiles the (B, W) output grid with
+``BlockSpec`` so a read-block and a window-block are resident in VMEM
+while the MXU consumes them (DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom calls; interpret mode lowers to plain HLO which both the
+pytest harness and the rust runtime execute. Block shapes are still
+chosen for the real-TPU layout (multiples of 8×128 tiles).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block sizes: one full 128x128 MXU output tile per grid step
+# (the §Perf block sweep: VMEM/step is only 512 KiB at 128x128, far
+# under the 16 MiB budget, and MXU utilisation goes 0.06 -> 1.00
+# versus the initial 32x32 choice). Callers clamp to the actual B/W.
+BLOCK_B = 128
+BLOCK_W = 128
+
+
+def _make_seed_kernel(l, shifts):
+    """Kernel over one (read-block, window-block) tile: the max over
+    `shifts` shifted contractions. The whole window block stays
+    resident in VMEM while the MXU consumes one shifted slice per
+    step — the HBM<->VMEM schedule a GPU code would express with
+    threadblock tiling."""
+
+    def kernel(x_ref, y_ref, o_ref):
+        x = x_ref[...]  # (bb, L, 4)
+        y = y_ref[...]  # (bw, Lw, 4)
+        bb = x.shape[0]
+        bw = y.shape[0]
+        xf = x.reshape(bb, l * 4)
+        best = jnp.full((bb, bw), -jnp.inf, jnp.float32)
+        for k in shifts:
+            yk = y[:, k : k + l].reshape(bw, l * 4)
+            s = jax.lax.dot_general(
+                xf,
+                yk,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            best = jnp.maximum(best, s)
+        o_ref[...] = best
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_w"))
+def seed_scores(reads_oh, windows_oh, block_b=BLOCK_B, block_w=BLOCK_W):
+    """Shift-lattice seed scores via the tiled Pallas kernel.
+
+    reads_oh: (B, L, 4) f32 one-hot; windows_oh: (W, Lw, 4) f32
+    one-hot, Lw >= L. Returns (B, W) f32: per pair, the best match
+    count over stride-`ref.SHIFT_STRIDE` placements. B and W must be
+    divisible by the block sizes (the model pads).
+    """
+    b, l, c = reads_oh.shape
+    w, lw, _ = windows_oh.shape
+    assert b % block_b == 0, f"B={b} not divisible by block_b={block_b}"
+    assert w % block_w == 0, f"W={w} not divisible by block_w={block_w}"
+    shifts = tuple(range(0, lw - l + 1, ref.SHIFT_STRIDE))
+    grid = (b // block_b, w // block_w)
+    return pl.pallas_call(
+        _make_seed_kernel(l, shifts),
+        grid=grid,
+        in_specs=[
+            # Read block varies with grid axis 0.
+            pl.BlockSpec((block_b, l, c), lambda i, j: (i, 0, 0)),
+            # Window block varies with grid axis 1; full Lw resident.
+            pl.BlockSpec((block_w, lw, c), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_w), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.float32),
+        interpret=True,
+    )(reads_oh, windows_oh)
+
+
+def vmem_bytes(block_b=BLOCK_B, block_w=BLOCK_W, l=64, lw=128, c=4):
+    """Estimated VMEM working set of one grid step (perf reporting)."""
+    f32 = 4
+    return (block_b * l * c + block_w * lw * c + 2 * block_b * block_w) * f32
+
+
+def mxu_flops_per_step(block_b=BLOCK_B, block_w=BLOCK_W, l=64, lw=128, c=4):
+    """MACs per grid step — used for the MXU utilization estimate."""
+    n_shifts = len(range(0, lw - l + 1, ref.SHIFT_STRIDE))
+    return 2 * block_b * block_w * l * c * n_shifts

@@ -1,0 +1,111 @@
+"""Pallas banded Smith-Waterman extension kernel (L1).
+
+BWA's extension phase scores candidate placements with an affine/linear
+gap dynamic program. The classic row-wise DP has a sequential
+dependence along the row (H[i, j] needs H[i, j-1]); GPU codes resolve
+this with per-thread-block wavefronts. The TPU rethink (DESIGN.md
+§Hardware-Adaptation): process **anti-diagonals** — every cell on an
+anti-diagonal depends only on the two previous diagonals, so each step
+is a dense vector max over the whole diagonal (VPU-friendly), batched
+over reads. The two carried diagonals live in VMEM scratch for the
+entire scan; HBM traffic is one read of the match scores and one write
+of the result.
+
+Recurrence (linear gap g, local alignment):
+    H[i, j] = max(0, H[i-1, j-1] + s(i, j), H[i-1, j] - g, H[i, j-1] - g)
+Diagonal form with d = i + j, vectors indexed by i:
+    Hd[d][i] = max(0, Hd[d-2][i-1] + s[i, d-i], Hd[d-1][i-1] - g,
+                   Hd[d-1][i] - g)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# 16 reads per grid step: the carried diagonals are (16, L) f32 —
+# two full 8x128 VPU sublane tiles at L=64 (was 8: half-utilised
+# lanes). VMEM/step stays < 600 KiB.
+BLOCK_B = 16
+
+
+def _sw_kernel(x_ref, y_ref, o_ref):
+    """Scores one block of (read, window) pairs.
+
+    x_ref: (BLOCK_B, L, 4) one-hot reads; y_ref: (BLOCK_B, Lw, 4)
+    one-hot windows; o_ref: (BLOCK_B,) best local score.
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    bb, l, _ = x.shape
+    lw = y.shape[1]
+
+    # Match score for every (i, j): +MATCH if equal base else MISMATCH.
+    eq = jnp.einsum("bic,bjc->bij", x, y)  # 1.0 where bases match
+    s = eq * (ref.MATCH - ref.MISMATCH) + ref.MISMATCH  # (bb, L, Lw)
+
+    ii = jnp.arange(l)
+
+    def step(d, carry):
+        hd1, hd2, best = carry  # (bb, L) diagonals d-1, d-2
+        jj = d - ii  # column index per diagonal lane
+        valid = (jj >= 0) & (jj < lw)
+        # s on this diagonal: s[b, i, d-i], gathered along j.
+        jj_c = jnp.clip(jj, 0, lw - 1)
+        s_d = jnp.take_along_axis(
+            s, jj_c[None, :, None].repeat(bb, axis=0), axis=2
+        )[..., 0]
+        # Shift by one lane for the (i-1) terms.
+        shift = lambda v: jnp.concatenate(
+            [jnp.zeros((bb, 1), v.dtype), v[:, :-1]], axis=1
+        )
+        h = jnp.maximum(
+            jnp.maximum(shift(hd2) + s_d, shift(hd1) - ref.GAP),
+            hd1 - ref.GAP,
+        )
+        h = jnp.maximum(h, 0.0)
+        h = jnp.where(valid[None, :], h, 0.0)
+        best = jnp.maximum(best, jnp.max(h, axis=1))
+        return h, hd1, best
+
+    zeros = jnp.zeros((bb, l), jnp.float32)
+    best0 = jnp.zeros((bb,), jnp.float32)
+    _, _, best = jax.lax.fori_loop(0, l + lw - 1, step, (zeros, zeros, best0))
+    o_ref[...] = best
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sw_scores(reads_oh, windows_oh, block_b=BLOCK_B):
+    """Batched SW scores via the wavefront Pallas kernel.
+
+    reads_oh: (B, L, 4); windows_oh: (B, Lw, 4) (already gathered per
+    read). Returns (B,) f32 local-alignment scores. B must divide by
+    block_b.
+    """
+    b, l, c = reads_oh.shape
+    lw = windows_oh.shape[1]
+    assert b % block_b == 0, f"B={b} not divisible by block_b={block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _sw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, lw, c), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(reads_oh, windows_oh)
+
+
+def vmem_bytes(block_b=BLOCK_B, l=64, lw=128, c=4):
+    """VMEM working set per grid step: inputs + S matrix + 3 diagonals."""
+    f32 = 4
+    inputs = block_b * (l + lw) * c
+    s_matrix = block_b * l * lw
+    diags = 3 * block_b * l
+    return (inputs + s_matrix + diags) * f32

@@ -1,0 +1,61 @@
+"""L2: the JAX alignment pipeline (the BWA-task compute payload).
+
+``align_pipeline`` is the per-Compute-Unit work in local execution
+mode: a chunk of reads is aligned against a set of reference windows —
+seed scoring (Pallas matmul kernel), best-window selection, and
+Smith-Waterman extension (Pallas wavefront kernel). The whole pipeline
+is one jitted function so everything lowers into a single HLO module
+for the rust runtime; python never runs at request time.
+
+Inputs are float32 base-code arrays (values in {0,1,2,3}) because the
+PJRT interchange keeps every buffer f32; one-hot encoding happens
+in-graph via equality tests (no integer ops needed).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, seed, sw
+
+
+def align_pipeline(read_codes, window_codes):
+    """Align each read against the best of the candidate windows.
+
+    read_codes: (B, L) f32 codes; window_codes: (W, Lw) f32 codes.
+    Returns (scores (B,) f32, best_window (B,) f32).
+    """
+    b, l = read_codes.shape
+    w, lw = window_codes.shape
+
+    reads_oh = ref.one_hot_bases(read_codes)  # (B, L, 4)
+    windows_oh = ref.one_hot_bases(window_codes)  # (W, Lw, 4)
+
+    # Phase 1 — seeding (shift-lattice MXU kernel).
+    block_b = min(seed.BLOCK_B, b)
+    block_w = min(seed.BLOCK_W, w)
+    seeds = seed.seed_scores(
+        reads_oh, windows_oh, block_b=block_b, block_w=block_w
+    )  # (B, W)
+
+    # Phase 2 — select the best candidate window per read.
+    best_idx = jnp.argmax(seeds, axis=1)  # (B,)
+    chosen = window_codes[best_idx]  # (B, Lw) gather
+    chosen_oh = ref.one_hot_bases(chosen)  # (B, Lw, 4)
+
+    # Phase 3 — Smith-Waterman extension (wavefront kernel).
+    block_sw = min(sw.BLOCK_B, b)
+    scores = sw.sw_scores(reads_oh, chosen_oh, block_b=block_sw)  # (B,)
+
+    return scores, best_idx.astype(jnp.float32)
+
+
+def align_jit():
+    """The jitted entry point used by both tests and AOT lowering."""
+    return jax.jit(align_pipeline)
+
+
+def reads_per_second_estimate(b, l, lw):
+    """Crude arithmetic-intensity note for DESIGN.md §Perf."""
+    seed_flops = 2 * b * l * 4 * b  # per window block
+    sw_flops = b * (l + lw) * l * 6
+    return seed_flops + sw_flops

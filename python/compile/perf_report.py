@@ -1,0 +1,100 @@
+"""L1/L2 performance report (DESIGN.md / EXPERIMENTS.md §Perf).
+
+Under `interpret=True` the Pallas kernels execute as CPU numpy — wall
+clock is NOT a TPU proxy. What we can assess at build time:
+
+  * the **structural** quantities that determine real-TPU behaviour:
+    per-grid-step VMEM working set (must fit ~16 MiB/core) and MXU
+    utilisation of the seed contraction (fraction of each 128x128
+    systolic pass that carries useful work);
+  * the **graph** quality: one fused HLO module, no python at runtime;
+  * a CPU sanity ratio: the full pipeline vs the pure-jnp reference
+    implementation of the same math (the pipeline should be within a
+    small factor — it does strictly more work than the seed-only ref).
+
+Run: `cd python && python -m compile.perf_report`
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .kernels import ref, seed, sw
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TensorCore
+
+
+def mxu_utilization(block_b, block_w, l, c=4):
+    """Utilisation of one 128x128 MXU pass for the seed contraction.
+
+    The contraction is (block_b x K) @ (K x block_w) with K = 4L. The
+    MXU processes 128x128 output tiles; utilisation is the fraction of
+    the padded tile grid that is real work.
+    """
+    pad = lambda n: ((n + 127) // 128) * 128
+    useful = block_b * block_w
+    padded = pad(block_b) * pad(block_w)
+    _ = l, c
+    return useful / padded
+
+
+def block_shape_table():
+    print("== seed kernel block-shape sweep (L=64, Lw=128) ==")
+    print(f"{'block_b':>8} {'block_w':>8} {'VMEM/step':>12} {'fits':>6} {'MXU util':>9}")
+    best = None
+    for bb in [8, 16, 32, 64, 128]:
+        for bw in [8, 16, 32, 64, 128]:
+            v = seed.vmem_bytes(bb, bw, l=64, lw=128)
+            fits = v <= VMEM_BUDGET
+            util = mxu_utilization(bb, bw, 64)
+            print(f"{bb:>8} {bw:>8} {v/1024:>10.0f}Ki {str(fits):>6} {util:>9.2f}")
+            if fits and (best is None or util > best[2]):
+                best = (bb, bw, util)
+    print(f"-> best in-budget config: block_b={best[0]} block_w={best[1]} "
+          f"(util {best[2]:.2f}); shipped default: {seed.BLOCK_B}x{seed.BLOCK_W}")
+    print(f"   SW kernel VMEM/step (block_b={sw.BLOCK_B}): "
+          f"{sw.vmem_bytes(sw.BLOCK_B, 64, 128)/1024:.0f} KiB "
+          f"(fits: {sw.vmem_bytes(sw.BLOCK_B, 64, 128) <= VMEM_BUDGET})")
+
+
+def _time(f, *args, iters=10):
+    f(*args)  # compile + warm
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def pipeline_vs_reference():
+    print("\n== CPU sanity: pipeline vs pure-jnp seed reference ==")
+    b, l, w, lw = 64, 64, 32, 128
+    rng = np.random.default_rng(0)
+    reads = rng.integers(0, 4, size=(b, l)).astype(np.float32)
+    windows = rng.integers(0, 4, size=(w, lw)).astype(np.float32)
+
+    pipe = jax.jit(model.align_pipeline)
+    t_pipe = _time(pipe, reads, windows)
+
+    @jax.jit
+    def ref_seed_only(r, wdw):
+        return ref.seed_scores_ref(ref.one_hot_bases(r), ref.one_hot_bases(wdw))
+
+    t_ref = _time(ref_seed_only, reads, windows)
+    print(f"full pipeline (pallas interpret): {t_pipe*1e3:8.2f} ms/batch "
+          f"({b/t_pipe:8.0f} reads/s)")
+    print(f"seed-only pure-jnp reference:     {t_ref*1e3:8.2f} ms/batch")
+    print(f"ratio (pipeline does seed + select + SW extension): {t_pipe/t_ref:.1f}x")
+
+
+def main():
+    block_shape_table()
+    pipeline_vs_reference()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel is compared against the straightforward oracle in
+``compile.kernels.ref`` — fixed cases plus hypothesis sweeps over
+shapes and contents.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, seed, sw
+
+RNG = np.random.default_rng(42)
+
+
+def rand_codes(*shape):
+    return RNG.integers(0, 4, size=shape).astype(np.float32)
+
+
+# ---------- one-hot ----------
+
+def test_one_hot_shape_and_validity():
+    codes = rand_codes(5, 16)
+    oh = np.asarray(ref.one_hot_bases(codes))
+    assert oh.shape == (5, 16, 4)
+    np.testing.assert_array_equal(oh.sum(-1), np.ones((5, 16)))
+    np.testing.assert_array_equal(oh.argmax(-1), codes.astype(int))
+
+
+# ---------- seed kernel ----------
+
+def test_seed_kernel_matches_ref_fixed():
+    reads = rand_codes(32, 64)
+    windows = rand_codes(32, 64)
+    x = np.asarray(ref.one_hot_bases(reads))
+    y = np.asarray(ref.one_hot_bases(windows))
+    got = np.asarray(seed.seed_scores(x, y, block_b=32, block_w=32))
+    want = np.asarray(ref.seed_scores_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_seed_identical_read_scores_full_match():
+    reads = rand_codes(32, 64)
+    x = np.asarray(ref.one_hot_bases(reads))
+    got = np.asarray(seed.seed_scores(x, x[:32], block_b=32, block_w=32))
+    # Diagonal = perfect match = L.
+    np.testing.assert_allclose(np.diag(got), 64.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b_blocks=st.integers(1, 3),
+    w_blocks=st.integers(1, 3),
+    l=st.sampled_from([8, 16, 32]),
+    block=st.sampled_from([8, 16]),
+    seed_=st.integers(0, 2**31 - 1),
+)
+def test_seed_kernel_matches_ref_hypothesis(b_blocks, w_blocks, l, block, seed_):
+    rng = np.random.default_rng(seed_)
+    b, w = b_blocks * block, w_blocks * block
+    reads = rng.integers(0, 4, size=(b, l)).astype(np.float32)
+    windows = rng.integers(0, 4, size=(w, l)).astype(np.float32)
+    x = np.asarray(ref.one_hot_bases(reads))
+    y = np.asarray(ref.one_hot_bases(windows))
+    got = np.asarray(seed.seed_scores(x, y, block_b=block, block_w=block))
+    want = np.asarray(ref.seed_scores_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_seed_kernel_rejects_unaligned_batch():
+    x = np.asarray(ref.one_hot_bases(rand_codes(10, 16)))
+    y = np.asarray(ref.one_hot_bases(rand_codes(8, 16)))
+    with pytest.raises(AssertionError):
+        seed.seed_scores(x, y, block_b=8, block_w=8)
+
+
+# ---------- SW kernel ----------
+
+def test_sw_kernel_matches_ref_fixed():
+    b, l, lw = 8, 16, 32
+    reads = rand_codes(b, l)
+    windows = rand_codes(b, lw)
+    got = np.asarray(
+        sw.sw_scores(
+            np.asarray(ref.one_hot_bases(reads)),
+            np.asarray(ref.one_hot_bases(windows)),
+            block_b=8,
+        )
+    )
+    want = ref.sw_scores_ref(reads, windows)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_sw_perfect_match_scores_match_times_length():
+    b, l = 8, 12
+    reads = rand_codes(b, l)
+    got = np.asarray(
+        sw.sw_scores(
+            np.asarray(ref.one_hot_bases(reads)),
+            np.asarray(ref.one_hot_bases(reads)),
+            block_b=8,
+        )
+    )
+    np.testing.assert_allclose(got, ref.MATCH * l)
+
+
+def test_sw_disjoint_alphabet_scores_at_least_single_match_or_zero():
+    # Read of base 0 vs window of base 1: no matches anywhere -> 0.
+    b, l, lw = 8, 10, 20
+    reads = np.zeros((b, l), np.float32)
+    windows = np.ones((b, lw), np.float32)
+    got = np.asarray(
+        sw.sw_scores(
+            np.asarray(ref.one_hot_bases(reads)),
+            np.asarray(ref.one_hot_bases(windows)),
+            block_b=8,
+        )
+    )
+    np.testing.assert_allclose(got, 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.integers(4, 24),
+    lw=st.integers(4, 40),
+    seed_=st.integers(0, 2**31 - 1),
+)
+def test_sw_kernel_matches_ref_hypothesis(l, lw, seed_):
+    rng = np.random.default_rng(seed_)
+    b = 8
+    reads = rng.integers(0, 4, size=(b, l)).astype(np.float32)
+    windows = rng.integers(0, 4, size=(b, lw)).astype(np.float32)
+    got = np.asarray(
+        sw.sw_scores(
+            np.asarray(ref.one_hot_bases(reads)),
+            np.asarray(ref.one_hot_bases(windows)),
+            block_b=8,
+        )
+    )
+    want = ref.sw_scores_ref(reads, windows)
+    np.testing.assert_allclose(got, want, rtol=1e-6, err_msg=f"l={l} lw={lw}")
+
+
+def test_sw_score_is_subsequence_invariant():
+    # Embedding the read exactly inside a longer window must give the
+    # perfect-match score.
+    rng = np.random.default_rng(7)
+    b, l, lw = 8, 10, 30
+    reads = rng.integers(0, 4, size=(b, l)).astype(np.float32)
+    windows = rng.integers(0, 4, size=(b, lw)).astype(np.float32)
+    windows[:, 5 : 5 + l] = reads
+    got = np.asarray(
+        sw.sw_scores(
+            np.asarray(ref.one_hot_bases(reads)),
+            np.asarray(ref.one_hot_bases(windows)),
+            block_b=8,
+        )
+    )
+    assert (got >= ref.MATCH * l - 1e-6).all()

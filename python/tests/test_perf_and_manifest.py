@@ -1,0 +1,118 @@
+"""Build-path invariants: artifact manifest consistency, VMEM budgets,
+block-shape legality, and scoring-constant agreement across layers."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, perf_report
+from compile.kernels import ref, seed, sw
+
+
+def test_manifest_shapes_match_artifact_table():
+    # The ARTIFACTS table is what the rust runtime trusts; its shapes
+    # must be consistent (inputs derivable from B/L/W/Lw).
+    for name, info in aot.ARTIFACTS.items():
+        s = info["shapes"]
+        if info["entry"] != "align_pipeline":
+            continue
+        assert info["inputs"][0][1] == [s["B"], s["L"]], name
+        assert info["inputs"][1][1] == [s["W"], s["Lw"]], name
+        assert info["outputs"][0][1] == [s["B"]], name
+
+
+def test_artifact_batch_shapes_are_block_compatible():
+    for name, info in aot.ARTIFACTS.items():
+        s = info["shapes"]
+        if info["entry"] != "align_pipeline":
+            continue
+        b, w = s["B"], s["W"]
+        assert b % min(seed.BLOCK_B, b) == 0, name
+        assert w % min(seed.BLOCK_W, w) == 0, name
+        assert b % min(sw.BLOCK_B, b) == 0, name
+
+
+def test_shipped_blocks_fit_vmem_budget():
+    v_seed = seed.vmem_bytes(seed.BLOCK_B, seed.BLOCK_W, l=64, lw=128)
+    v_sw = sw.vmem_bytes(sw.BLOCK_B, l=64, lw=128)
+    assert v_seed <= perf_report.VMEM_BUDGET
+    assert v_sw <= perf_report.VMEM_BUDGET
+    # Full-tile MXU utilisation for the shipped seed block at >=128.
+    assert perf_report.mxu_utilization(128, 128, 64) == 1.0
+
+
+def test_mxu_utilization_monotone_in_block():
+    u = [perf_report.mxu_utilization(b, b, 64) for b in [8, 32, 128]]
+    assert u[0] < u[1] < u[2] == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bb=st.sampled_from([8, 16, 32, 64, 128]),
+    bw=st.sampled_from([8, 16, 32, 64, 128]),
+    l=st.sampled_from([32, 64, 100]),
+    lw_extra=st.integers(0, 128),
+)
+def test_vmem_estimate_positive_and_scales(bb, bw, l, lw_extra):
+    lw = l + lw_extra
+    v = seed.vmem_bytes(bb, bw, l=l, lw=lw)
+    assert v > 0
+    assert seed.vmem_bytes(2 * bb, bw, l=l, lw=lw) > v
+
+
+def test_scoring_constants_exported_to_manifest(tmp_path):
+    aot.build(str(tmp_path))
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    # The rust side reads these to interpret scores.
+    assert manifest["match"] == ref.MATCH
+    assert manifest["mismatch"] == ref.MISMATCH
+    assert manifest["gap"] == ref.GAP
+    assert set(manifest["artifacts"]) == set(aot.ARTIFACTS)
+
+
+def test_hlo_text_is_parseable_prefix(tmp_path):
+    # Every artifact must be HLO text starting with HloModule — the
+    # exact contract HloModuleProto::from_text_file expects.
+    aot.build(str(tmp_path))
+    for name in aot.ARTIFACTS:
+        text = (tmp_path / name).read_text()
+        assert text.startswith("HloModule"), name
+        # No serialized-proto artifacts by accident.
+        assert "\x00" not in text, name
+
+
+def test_shift_lattice_covers_window():
+    # Every read offset on the lattice must be one of the kernel's
+    # shifts, for all artifact shapes.
+    for info in aot.ARTIFACTS.values():
+        s = info["shapes"]
+        if info["entry"] != "align_pipeline":
+            continue
+        l, lw = s["L"], s["Lw"]
+        shifts = set(range(0, lw - l + 1, ref.SHIFT_STRIDE))
+        for offset in range(0, lw - l + 1, ref.SHIFT_STRIDE):
+            assert offset in shifts
+
+
+def test_seed_scores_shift_invariance():
+    # Planting a read at any lattice offset must give the full score.
+    rng = np.random.default_rng(3)
+    b, l, w, lw = 8, 16, 8, 48
+    reads = rng.integers(0, 4, size=(b, l)).astype(np.float32)
+    windows = rng.integers(0, 4, size=(w, lw)).astype(np.float32)
+    offsets = [0, 4, 8, 16, 32, 28, 12, 20]
+    for i in range(b):
+        windows[i, offsets[i] : offsets[i] + l] = reads[i]
+    got = np.asarray(
+        seed.seed_scores(
+            np.asarray(ref.one_hot_bases(reads)),
+            np.asarray(ref.one_hot_bases(windows)),
+            block_b=8,
+            block_w=8,
+        )
+    )
+    for i in range(b):
+        assert got[i, i] == pytest.approx(l), f"read {i} offset {offsets[i]}"

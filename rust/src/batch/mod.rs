@@ -1,0 +1,310 @@
+//! Batch-queue simulation: machines, queue-wait models, slot accounting.
+//!
+//! Pilot startup on production DCI is dominated by the local resource
+//! manager's queue wait T_Q (paper §6.1). We model each machine with a
+//! heavy-tailed (log-normal) wait distribution whose parameters are
+//! calibrated per machine class from the values the paper reports
+//! (e.g. Stampede's mean T_Q ≈ 8100 s in Fig. 11 scenario 3, OSG pilots
+//! waiting longer than XSEDE ones in Fig. 9), plus core/slot accounting
+//! and walltime limits.
+
+use crate::net::Bandwidth;
+use crate::rng::Rng;
+use crate::topology::Label;
+use std::collections::BTreeMap;
+
+/// Queue wait-time model for a machine: `T_Q = base + LogNormal(mu,
+/// sigma)` seconds, truncated at `cap`.
+#[derive(Debug, Clone)]
+pub struct QueueModel {
+    pub base: f64,
+    pub mu: f64,
+    pub sigma: f64,
+    pub cap: f64,
+}
+
+impl QueueModel {
+    /// A queue with the given mean wait and mild heavy tail. We pick
+    /// sigma, then solve mu so that the log-normal mean `exp(mu +
+    /// sigma²/2)` matches `mean_wait - base`.
+    pub fn with_mean(base: f64, mean_wait: f64, sigma: f64) -> QueueModel {
+        let excess = (mean_wait - base).max(1.0);
+        let mu = excess.ln() - sigma * sigma / 2.0;
+        QueueModel { base, mu, sigma, cap: mean_wait * 10.0 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        (self.base + rng.lognormal(self.mu, self.sigma)).min(self.cap)
+    }
+
+    /// Analytic mean of the model (for reporting / assertions).
+    pub fn mean(&self) -> f64 {
+        self.base + (self.mu + self.sigma * self.sigma / 2.0).exp()
+    }
+}
+
+/// A compute resource: cores, shared-filesystem aggregate bandwidth
+/// (the Lustre/GPFS I/O ceiling that Fig. 11/12 shows saturating), and a
+/// queue model.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: String,
+    pub label: Label,
+    pub cores: u32,
+    pub queue: QueueModel,
+    /// Aggregate shared-FS bandwidth; concurrent I/O-heavy tasks share it.
+    pub fs_bandwidth: Bandwidth,
+    /// Maximum walltime for a pilot job (seconds).
+    pub walltime_limit: f64,
+    /// Max cores a single pilot may marshal (OSG pilots are 1 core/node).
+    pub max_pilot_cores: u32,
+    /// Relative CPU speed (1.0 = reference machine; >1 = slower).
+    pub speed_factor: f64,
+}
+
+impl Machine {
+    pub fn new(name: &str, label: &str, cores: u32) -> Machine {
+        Machine {
+            name: name.to_string(),
+            label: Label::new(label),
+            cores,
+            queue: QueueModel::with_mean(30.0, 600.0, 1.0),
+            fs_bandwidth: Bandwidth::mbps(2000.0),
+            walltime_limit: 48.0 * 3600.0,
+            max_pilot_cores: u32::MAX,
+            speed_factor: 1.0,
+        }
+    }
+
+    pub fn with_speed_factor(mut self, f: f64) -> Machine {
+        self.speed_factor = f;
+        self
+    }
+
+    pub fn with_queue(mut self, q: QueueModel) -> Machine {
+        self.queue = q;
+        self
+    }
+
+    pub fn with_fs_bandwidth(mut self, bw: Bandwidth) -> Machine {
+        self.fs_bandwidth = bw;
+        self
+    }
+
+    pub fn with_max_pilot_cores(mut self, n: u32) -> Machine {
+        self.max_pilot_cores = n;
+        self
+    }
+}
+
+/// Slot accounting across a set of machines. Tracks cores handed to
+/// active pilots and the number of I/O-active tasks per machine (for the
+/// shared-FS contention model).
+#[derive(Debug, Default)]
+pub struct BatchState {
+    machines: BTreeMap<String, Machine>,
+    used_cores: BTreeMap<String, u32>,
+    io_active: BTreeMap<String, u32>,
+}
+
+impl BatchState {
+    pub fn new(machines: Vec<Machine>) -> BatchState {
+        let mut m = BTreeMap::new();
+        for mach in machines {
+            m.insert(mach.name.clone(), mach);
+        }
+        BatchState { machines: m, used_cores: BTreeMap::new(), io_active: BTreeMap::new() }
+    }
+
+    pub fn machine(&self, name: &str) -> anyhow::Result<&Machine> {
+        self.machines
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown machine '{name}'"))
+    }
+
+    pub fn machines(&self) -> impl Iterator<Item = &Machine> {
+        self.machines.values()
+    }
+
+    /// Override a machine's queue model (experiments replay specific
+    /// observed waits, e.g. Stampede's 8100 s mean in Fig. 11 sc. 3).
+    pub fn set_queue(&mut self, name: &str, q: QueueModel) -> anyhow::Result<()> {
+        self.machines
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown machine '{name}'"))?
+            .queue = q;
+        Ok(())
+    }
+
+    /// Override a machine's relative CPU speed.
+    pub fn set_speed_factor(&mut self, name: &str, f: f64) -> anyhow::Result<()> {
+        self.machines
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown machine '{name}'"))?
+            .speed_factor = f;
+        Ok(())
+    }
+
+    /// Override a machine's shared-FS bandwidth.
+    pub fn set_fs_bandwidth(&mut self, name: &str, bw: Bandwidth) -> anyhow::Result<()> {
+        self.machines
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown machine '{name}'"))?
+            .fs_bandwidth = bw;
+        Ok(())
+    }
+
+    /// Sample the queue wait for a pilot requesting `cores` on `name`
+    /// and reserve the cores (they are released with
+    /// [`BatchState::release`]). Errors if the request exceeds machine
+    /// capacity or the per-pilot limit.
+    pub fn submit(&mut self, name: &str, cores: u32, rng: &mut Rng) -> anyhow::Result<f64> {
+        let m = self.machine(name)?;
+        if cores > m.max_pilot_cores {
+            anyhow::bail!(
+                "pilot of {cores} cores exceeds per-pilot limit {} on {name}",
+                m.max_pilot_cores
+            );
+        }
+        if cores > m.cores {
+            anyhow::bail!("pilot of {cores} cores exceeds machine capacity {} on {name}", m.cores);
+        }
+        let wait = m.queue.sample(rng);
+        // Heavier requests relative to the machine wait longer: scale
+        // the sampled wait by (1 + fraction requested).
+        let frac = cores as f64 / m.cores as f64;
+        let wait = wait * (1.0 + frac);
+        *self.used_cores.entry(name.to_string()).or_insert(0) += cores;
+        Ok(wait)
+    }
+
+    pub fn release(&mut self, name: &str, cores: u32) {
+        if let Some(u) = self.used_cores.get_mut(name) {
+            *u = u.saturating_sub(cores);
+        }
+    }
+
+    pub fn used(&self, name: &str) -> u32 {
+        *self.used_cores.get(name).unwrap_or(&0)
+    }
+
+    /// Mark a task on `name` as performing heavy I/O (entering its
+    /// staging or scan phase); returns current I/O-active count
+    /// including this one.
+    pub fn io_begin(&mut self, name: &str) -> u32 {
+        let n = self.io_active.entry(name.to_string()).or_insert(0);
+        *n += 1;
+        *n
+    }
+
+    pub fn io_end(&mut self, name: &str) {
+        if let Some(n) = self.io_active.get_mut(name) {
+            *n = n.saturating_sub(1);
+        }
+    }
+
+    pub fn io_active(&self, name: &str) -> u32 {
+        *self.io_active.get(name).unwrap_or(&0)
+    }
+
+    /// Per-task share of the machine's shared-FS bandwidth given current
+    /// I/O activity — the Fig. 11 "Lustre saturates at 1024 concurrent
+    /// readers" effect.
+    pub fn fs_share(&self, name: &str) -> Bandwidth {
+        let m = &self.machines[name];
+        let sharers = (self.io_active(name).max(1)) as f64;
+        Bandwidth(m.fs_bandwidth.0 / sharers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_model_mean_calibration() {
+        let q = QueueModel::with_mean(30.0, 600.0, 1.0);
+        assert!((q.mean() - 600.0).abs() < 1.0);
+        let mut rng = Rng::new(1);
+        let n = 30_000;
+        let m: f64 = (0..n).map(|_| q.sample(&mut rng)).sum::<f64>() / n as f64;
+        // Sampled mean within 10% (cap truncation biases slightly low).
+        assert!((m - 600.0).abs() < 60.0, "sampled mean {m}");
+    }
+
+    #[test]
+    fn samples_nonnegative_and_capped() {
+        let q = QueueModel::with_mean(10.0, 100.0, 2.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let s = q.sample(&mut rng);
+            assert!(s >= 10.0 && s <= 1000.0, "s={s}");
+        }
+    }
+
+    #[test]
+    fn submit_reserves_and_release_frees() {
+        let mut bs = BatchState::new(vec![Machine::new("lonestar", "xsede/tacc/lonestar", 2048)]);
+        let mut rng = Rng::new(3);
+        let w = bs.submit("lonestar", 1024, &mut rng).unwrap();
+        assert!(w > 0.0);
+        assert_eq!(bs.used("lonestar"), 1024);
+        bs.release("lonestar", 1024);
+        assert_eq!(bs.used("lonestar"), 0);
+    }
+
+    #[test]
+    fn oversized_requests_rejected() {
+        let mut bs = BatchState::new(vec![
+            Machine::new("osg-node", "osg/purdue", 8).with_max_pilot_cores(1),
+        ]);
+        let mut rng = Rng::new(4);
+        assert!(bs.submit("osg-node", 4, &mut rng).is_err()); // per-pilot limit
+        assert!(bs.submit("osg-node", 1, &mut rng).is_ok());
+        assert!(bs.submit("nowhere", 1, &mut rng).is_err());
+    }
+
+    #[test]
+    fn fs_share_divides_by_io_activity() {
+        let mut bs = BatchState::new(vec![Machine::new("m", "x/m", 64)
+            .with_fs_bandwidth(Bandwidth::mbps(1000.0))]);
+        let full = bs.fs_share("m").0;
+        bs.io_begin("m");
+        bs.io_begin("m");
+        assert!((bs.fs_share("m").0 - full / 2.0).abs() < 1.0);
+        bs.io_end("m");
+        bs.io_end("m");
+        assert_eq!(bs.io_active("m"), 0);
+        assert!((bs.fs_share("m").0 - full).abs() < 1.0);
+    }
+
+    #[test]
+    fn io_accounting_property_never_negative() {
+        crate::prop::check_default(
+            |rng| {
+                (0..crate::prop::gen::usize_in(rng, 1, 60))
+                    .map(|_| rng.chance(0.5))
+                    .collect::<Vec<bool>>()
+            },
+            |ops| {
+                let mut bs =
+                    BatchState::new(vec![Machine::new("m", "x/m", 8)]);
+                let mut live = 0i64;
+                for begin in ops {
+                    if *begin {
+                        bs.io_begin("m");
+                        live += 1;
+                    } else {
+                        bs.io_end("m");
+                        live = (live - 1).max(0);
+                    }
+                }
+                if bs.io_active("m") as i64 == live {
+                    Ok(())
+                } else {
+                    Err(format!("io_active={} expected {live}", bs.io_active("m")))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! JSON-loadable testbed definitions — the config system a downstream
+//! user edits to model *their* infrastructure instead of the paper's.
+//!
+//! Schema (all bandwidths in MiB/s, times in seconds):
+//!
+//! ```json
+//! {
+//!   "default_uplink_mib": 100,
+//!   "uplinks":  { "xsede/tacc/lonestar": 200, ... },
+//!   "machines": [
+//!     { "name": "lonestar", "label": "xsede/tacc/lonestar",
+//!       "cores": 22656, "queue_base": 60, "queue_mean": 420,
+//!       "queue_sigma": 0.9, "fs_mib": 2000, "speed": 1.0,
+//!       "max_pilot_cores": 0 }
+//!   ],
+//!   "endpoints": [
+//!     { "name": "lonestar-scratch",
+//!       "url": "ssh://lonestar-scratch/scratch/pd",
+//!       "label": "xsede/tacc/lonestar" }
+//!   ],
+//!   "groups": { "osgGridFtpGroup": ["irods-a", "irods-b"] },
+//!   "gateway": "xsede/iu/gw68"
+//! }
+//! ```
+//!
+//! `max_pilot_cores: 0` means unlimited.
+
+use super::Testbed;
+use crate::batch::{BatchState, Machine, QueueModel};
+use crate::json::Json;
+use crate::net::{Bandwidth, Network};
+use crate::storage::{simstore::SimStore, Endpoint};
+use crate::topology::{Label, Topology};
+
+/// Build a [`Testbed`] from a JSON document.
+pub fn testbed_from_json(j: &Json) -> anyhow::Result<Testbed> {
+    let mut net = Network::new();
+    net.set_default_uplink(Bandwidth::mbps(j.f64_field_or("default_uplink_mib", 100.0)));
+    if let Some(Json::Obj(uplinks)) = j.get("uplinks") {
+        for (label, bw) in uplinks {
+            let mib = bw
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("uplink '{label}' must be a number"))?;
+            net.set_uplink(label, Bandwidth::mbps(mib));
+        }
+    }
+
+    let mut machines = Vec::new();
+    for m in j.get("machines").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = m.str_field("name")?;
+        let label = m.str_field("label")?;
+        let cores = m.u64_field_or("cores", 64) as u32;
+        let queue = QueueModel::with_mean(
+            m.f64_field_or("queue_base", 30.0),
+            m.f64_field_or("queue_mean", 600.0),
+            m.f64_field_or("queue_sigma", 1.0),
+        );
+        let mut machine = Machine::new(name, label, cores)
+            .with_queue(queue)
+            .with_fs_bandwidth(Bandwidth::mbps(m.f64_field_or("fs_mib", 2000.0)))
+            .with_speed_factor(m.f64_field_or("speed", 1.0));
+        let max_pilot = m.u64_field_or("max_pilot_cores", 0) as u32;
+        if max_pilot > 0 {
+            machine = machine.with_max_pilot_cores(max_pilot);
+        }
+        machines.push(machine);
+    }
+    anyhow::ensure!(!machines.is_empty(), "testbed needs at least one machine");
+    let batch = BatchState::new(machines);
+
+    let mut store = SimStore::new();
+    for e in j.get("endpoints").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = e.str_field("name")?;
+        let endpoint = Endpoint::new(e.str_field("url")?, e.str_field("label")?)?;
+        store.add_pd(name, endpoint);
+    }
+    if let Some(Json::Obj(groups)) = j.get("groups") {
+        for (group, members) in groups {
+            let members: Vec<String> = members
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect();
+            let refs: Vec<&str> = members.iter().map(String::as_str).collect();
+            store.define_group(group, &refs)?;
+        }
+    }
+
+    let gateway = Label::new(j.get("gateway").and_then(Json::as_str).unwrap_or(""));
+    Ok(Testbed { topo: Topology::new(), net, batch, store, gateway })
+}
+
+/// Load a testbed from a JSON file.
+pub fn testbed_from_file(path: &std::path::Path) -> anyhow::Result<Testbed> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    testbed_from_json(&crate::json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Bytes;
+
+    fn sample() -> &'static str {
+        r#"{
+            "default_uplink_mib": 50,
+            "uplinks": { "siteA/m1": 200, "siteB": 25 },
+            "machines": [
+                { "name": "m1", "label": "siteA/m1", "cores": 128,
+                  "queue_mean": 100, "fs_mib": 1000, "speed": 1.2 },
+                { "name": "m2", "label": "siteB/m2", "cores": 16,
+                  "max_pilot_cores": 4 }
+            ],
+            "endpoints": [
+                { "name": "pd-a", "url": "ssh://pd-a/data", "label": "siteA/m1" },
+                { "name": "pd-b", "url": "srm://pd-b/pool", "label": "siteB/m2" }
+            ],
+            "groups": { "all": ["pd-a", "pd-b"] },
+            "gateway": "siteA/m1"
+        }"#
+    }
+
+    #[test]
+    fn loads_complete_testbed() {
+        let tb = testbed_from_json(&crate::json::parse(sample()).unwrap()).unwrap();
+        let m1 = tb.batch.machine("m1").unwrap();
+        assert_eq!(m1.cores, 128);
+        assert!((m1.speed_factor - 1.2).abs() < 1e-9);
+        assert!((m1.queue.mean() - 100.0).abs() < 1.0);
+        let m2 = tb.batch.machine("m2").unwrap();
+        assert_eq!(m2.max_pilot_cores, 4);
+        assert!(tb.store.pd("pd-a").is_ok());
+        assert_eq!(tb.store.group_members("all").unwrap().len(), 2);
+        assert_eq!(tb.gateway, Label::new("siteA/m1"));
+        // Uplink override took effect: siteB is the 25 MiB/s bottleneck.
+        let bw = tb.net.effective_bandwidth(&Label::new("siteA/m1"), &Label::new("siteB/m2"));
+        assert!((bw.0 - Bandwidth::mbps(25.0).0).abs() < 1.0);
+    }
+
+    #[test]
+    fn loaded_testbed_runs_a_workload() {
+        use crate::experiments::simdrive::SimSystem;
+        use crate::workload::bwa_ensemble;
+        let tb = testbed_from_json(&crate::json::parse(sample()).unwrap()).unwrap();
+        let mut sys = SimSystem::new(tb, 5);
+        let ens = bwa_ensemble(2, Bytes::mb(512), Bytes::gb(1));
+        let ref_du = sys.upload_du(&ens.reference, "pd-a").unwrap();
+        sys.run().unwrap();
+        sys.submit_pilot("m1", 8, "pd-a").unwrap();
+        for c in &ens.read_chunks {
+            let chunk = sys.upload_du(c, "pd-a").unwrap();
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk];
+            sys.submit_cu(cud).unwrap();
+        }
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+    }
+
+    #[test]
+    fn rejects_invalid_documents() {
+        assert!(testbed_from_json(&crate::json::parse("{}").unwrap()).is_err()); // no machines
+        let bad = r#"{ "machines": [ { "label": "x/y" } ] }"#; // missing name
+        assert!(testbed_from_json(&crate::json::parse(bad).unwrap()).is_err());
+        let bad_ep = r#"{ "machines": [ {"name":"m","label":"x/m"} ],
+                          "endpoints": [ {"name":"p","url":"bogus://x","label":"x/m"} ] }"#;
+        assert!(testbed_from_json(&crate::json::parse(bad_ep).unwrap()).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_error() {
+        assert!(testbed_from_file(std::path::Path::new("/nonexistent/tb.json")).is_err());
+    }
+}

@@ -1,0 +1,488 @@
+//! Distributed coordination & communication service — the in-process
+//! Redis equivalent.
+//!
+//! BigJob keeps its complete state in a shared in-memory data store
+//! (Redis): the Pilot-Manager and the Pilot-Agents exchange control
+//! data through "a defined set of Redis data structures and protocols"
+//! (paper §4.2) — agent resource info, CU queues (one global + one per
+//! pilot), and entity state. The store persists snapshots so both the
+//! application and the Pilot-Manager can disconnect and re-connect, and
+//! both survive transient store failures.
+//!
+//! This module is a from-scratch implementation of exactly that service
+//! surface: string KV, hashes, list-queues, pub/sub, key scans,
+//! JSON snapshots, and injectable transient failure for fault-tolerance
+//! tests.
+
+use crate::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Errors surfaced by store operations.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StoreError {
+    /// The store is unreachable (injected transient failure) — callers
+    /// are expected to retry, as BigJob agents do.
+    #[error("coordination store unavailable")]
+    Unavailable,
+    #[error("wrong type for key '{0}'")]
+    WrongType(String),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Str(String),
+    Hash(BTreeMap<String, String>),
+    List(VecDeque<String>),
+}
+
+#[derive(Default)]
+struct Inner {
+    data: BTreeMap<String, Value>,
+    subs: BTreeMap<String, Vec<Sender<String>>>,
+    down: bool,
+    ops: u64,
+}
+
+/// Cloneable handle to the shared store (the "connection").
+#[derive(Clone)]
+pub struct Store {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store { inner: Arc::new(Mutex::new(Inner::default())) }
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn check_up(inner: &mut Inner) -> Result<(), StoreError> {
+        inner.ops += 1;
+        if inner.down {
+            Err(StoreError::Unavailable)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Inject / clear a transient outage.
+    pub fn set_down(&self, down: bool) {
+        self.guard().down = down;
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.guard().down
+    }
+
+    /// Total operations served (metrics / perf assertions).
+    pub fn op_count(&self) -> u64 {
+        self.guard().ops
+    }
+
+    // ---- string KV ----
+
+    pub fn set(&self, key: &str, value: &str) -> Result<(), StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        g.data.insert(key.to_string(), Value::Str(value.to_string()));
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Result<Option<String>, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.get(key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s.clone())),
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    pub fn del(&self, key: &str) -> Result<bool, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        Ok(g.data.remove(key).is_some())
+    }
+
+    /// Keys with the given prefix (BigJob scans `bigjob:pilot:*`-style
+    /// namespaces on re-connect).
+    pub fn keys_with_prefix(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        Ok(g.data.keys().filter(|k| k.starts_with(prefix)).cloned().collect())
+    }
+
+    // ---- hashes (entity state: pilots, CUs, DUs) ----
+
+    pub fn hset(&self, key: &str, field: &str, value: &str) -> Result<(), StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.entry(key.to_string()).or_insert_with(|| Value::Hash(BTreeMap::new())) {
+            Value::Hash(h) => {
+                h.insert(field.to_string(), value.to_string());
+                Ok(())
+            }
+            _ => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    pub fn hget(&self, key: &str, field: &str) -> Result<Option<String>, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.get(key) {
+            None => Ok(None),
+            Some(Value::Hash(h)) => Ok(h.get(field).cloned()),
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    pub fn hgetall(&self, key: &str) -> Result<BTreeMap<String, String>, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.get(key) {
+            None => Ok(BTreeMap::new()),
+            Some(Value::Hash(h)) => Ok(h.clone()),
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    // ---- list queues (global CU queue + per-pilot queues) ----
+
+    pub fn rpush(&self, key: &str, value: &str) -> Result<usize, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.entry(key.to_string()).or_insert_with(|| Value::List(VecDeque::new())) {
+            Value::List(l) => {
+                l.push_back(value.to_string());
+                Ok(l.len())
+            }
+            _ => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    pub fn lpop(&self, key: &str) -> Result<Option<String>, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.get_mut(key) {
+            None => Ok(None),
+            Some(Value::List(l)) => Ok(l.pop_front()),
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    pub fn llen(&self, key: &str) -> Result<usize, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        match g.data.get(key) {
+            None => Ok(0),
+            Some(Value::List(l)) => Ok(l.len()),
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+        }
+    }
+
+    // ---- pub/sub (state-change notifications) ----
+
+    pub fn subscribe(&self, channel: &str) -> Receiver<String> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.guard().subs.entry(channel.to_string()).or_default().push(tx);
+        rx
+    }
+
+    pub fn publish(&self, channel: &str, message: &str) -> Result<usize, StoreError> {
+        let mut g = self.guard();
+        Self::check_up(&mut g)?;
+        let mut delivered = 0;
+        if let Some(subs) = g.subs.get_mut(channel) {
+            subs.retain(|tx| tx.send(message.to_string()).is_ok());
+            delivered = subs.len();
+        }
+        Ok(delivered)
+    }
+
+    // ---- durability ----
+
+    /// Serialize the full store state to JSON (Redis RDB-equivalent).
+    pub fn snapshot(&self) -> Json {
+        let g = self.guard();
+        let mut obj = std::collections::BTreeMap::new();
+        for (k, v) in &g.data {
+            let jv = match v {
+                Value::Str(s) => Json::obj().set("t", "s").set("v", s.as_str()),
+                Value::Hash(h) => {
+                    let mut hm = std::collections::BTreeMap::new();
+                    for (f, val) in h {
+                        hm.insert(f.clone(), Json::Str(val.clone()));
+                    }
+                    Json::obj().set("t", "h").set("v", Json::Obj(hm))
+                }
+                Value::List(l) => Json::obj().set(
+                    "t",
+                    "l",
+                ).set(
+                    "v",
+                    Json::Arr(l.iter().map(|s| Json::Str(s.clone())).collect()),
+                ),
+            };
+            obj.insert(k.clone(), jv);
+        }
+        Json::Obj(obj)
+    }
+
+    /// Restore state from a snapshot, replacing current contents —
+    /// "the ability to quickly restart the Redis server (if necessary
+    /// on another resource)".
+    pub fn restore(&self, snap: &Json) -> anyhow::Result<()> {
+        let Json::Obj(map) = snap else {
+            anyhow::bail!("snapshot must be an object");
+        };
+        let mut data = BTreeMap::new();
+        for (k, entry) in map {
+            let t = entry.str_field("t")?;
+            let v = entry
+                .get("v")
+                .ok_or_else(|| anyhow::anyhow!("snapshot entry '{k}' missing v"))?;
+            let value = match t {
+                "s" => Value::Str(v.as_str().unwrap_or_default().to_string()),
+                "h" => {
+                    let Json::Obj(hm) = v else {
+                        anyhow::bail!("hash entry '{k}' not an object");
+                    };
+                    Value::Hash(
+                        hm.iter()
+                            .map(|(f, x)| (f.clone(), x.as_str().unwrap_or_default().to_string()))
+                            .collect(),
+                    )
+                }
+                "l" => Value::List(
+                    v.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|x| x.as_str().unwrap_or_default().to_string())
+                        .collect(),
+                ),
+                other => anyhow::bail!("unknown snapshot type '{other}'"),
+            };
+            data.insert(k.clone(), value);
+        }
+        let mut g = self.guard();
+        g.data = data;
+        g.down = false;
+        Ok(())
+    }
+
+    /// Persist a snapshot to disk and reload it — used by the fault
+    /// tolerance tests and the local-mode manager checkpoint.
+    pub fn save_to(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.snapshot().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load_from(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        self.restore(&crate::json::parse(&text)?)
+    }
+}
+
+/// Well-known key-space layout (mirrors BigJob's Redis schema).
+pub mod keys {
+    pub fn pilot(id: &str) -> String {
+        format!("pd:pilot:{id}")
+    }
+    pub fn cu(id: &str) -> String {
+        format!("pd:cu:{id}")
+    }
+    pub fn du(id: &str) -> String {
+        format!("pd:du:{id}")
+    }
+    /// The global CU queue any agent may pull from.
+    pub const GLOBAL_QUEUE: &str = "pd:queue:global";
+    /// The agent-specific queue of one pilot.
+    pub fn pilot_queue(pilot_id: &str) -> String {
+        format!("pd:queue:pilot:{pilot_id}")
+    }
+    pub const STATE_CHANNEL: &str = "pd:events";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_roundtrip_and_delete() {
+        let s = Store::new();
+        s.set("a", "1").unwrap();
+        assert_eq!(s.get("a").unwrap(), Some("1".to_string()));
+        assert!(s.del("a").unwrap());
+        assert!(!s.del("a").unwrap());
+        assert_eq!(s.get("a").unwrap(), None);
+    }
+
+    #[test]
+    fn hashes_hold_entity_state() {
+        let s = Store::new();
+        let k = keys::cu("cu-1");
+        s.hset(&k, "state", "Queued").unwrap();
+        s.hset(&k, "pilot", "pilot-3").unwrap();
+        assert_eq!(s.hget(&k, "state").unwrap(), Some("Queued".to_string()));
+        let all = s.hgetall(&k).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(s.hgetall("absent").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn type_confusion_is_an_error() {
+        let s = Store::new();
+        s.set("k", "v").unwrap();
+        assert_eq!(s.hget("k", "f"), Err(StoreError::WrongType("k".into())));
+        assert_eq!(s.lpop("k"), Err(StoreError::WrongType("k".into())));
+        s.rpush("q", "x").unwrap();
+        assert_eq!(s.get("q"), Err(StoreError::WrongType("q".into())));
+    }
+
+    #[test]
+    fn queues_are_fifo() {
+        let s = Store::new();
+        for i in 0..5 {
+            s.rpush(keys::GLOBAL_QUEUE, &format!("cu-{i}")).unwrap();
+        }
+        assert_eq!(s.llen(keys::GLOBAL_QUEUE).unwrap(), 5);
+        assert_eq!(s.lpop(keys::GLOBAL_QUEUE).unwrap(), Some("cu-0".to_string()));
+        assert_eq!(s.lpop(keys::GLOBAL_QUEUE).unwrap(), Some("cu-1".to_string()));
+        assert_eq!(s.lpop("empty").unwrap(), None);
+    }
+
+    #[test]
+    fn pubsub_delivers_to_all_subscribers() {
+        let s = Store::new();
+        let r1 = s.subscribe(keys::STATE_CHANNEL);
+        let r2 = s.subscribe(keys::STATE_CHANNEL);
+        let n = s.publish(keys::STATE_CHANNEL, "cu-1:Running").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(r1.try_recv().unwrap(), "cu-1:Running");
+        assert_eq!(r2.try_recv().unwrap(), "cu-1:Running");
+    }
+
+    #[test]
+    fn dropped_subscribers_are_pruned() {
+        let s = Store::new();
+        {
+            let _r = s.subscribe("ch");
+        } // receiver dropped
+        let n = s.publish("ch", "x").unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn outage_fails_ops_then_recovers() {
+        let s = Store::new();
+        s.set("a", "1").unwrap();
+        s.set_down(true);
+        assert_eq!(s.get("a"), Err(StoreError::Unavailable));
+        assert_eq!(s.set("b", "2"), Err(StoreError::Unavailable));
+        s.set_down(false);
+        // State survived the transient outage.
+        assert_eq!(s.get("a").unwrap(), Some("1".to_string()));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let s = Store::new();
+        s.set("k", "v").unwrap();
+        s.hset("h", "f1", "x").unwrap();
+        s.rpush("q", "a").unwrap();
+        s.rpush("q", "b").unwrap();
+        let snap = s.snapshot();
+
+        let fresh = Store::new();
+        fresh.restore(&snap).unwrap();
+        assert_eq!(fresh.get("k").unwrap(), Some("v".to_string()));
+        assert_eq!(fresh.hget("h", "f1").unwrap(), Some("x".to_string()));
+        assert_eq!(fresh.lpop("q").unwrap(), Some("a".to_string()));
+        assert_eq!(fresh.lpop("q").unwrap(), Some("b".to_string()));
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let s = Store::new();
+        s.set("k", "v").unwrap();
+        let path = std::env::temp_dir().join(format!("pd-store-{}.json", std::process::id()));
+        s.save_to(&path).unwrap();
+        let fresh = Store::new();
+        fresh.load_from(&path).unwrap();
+        assert_eq!(fresh.get("k").unwrap(), Some("v".to_string()));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn keyspace_prefix_scan() {
+        let s = Store::new();
+        s.hset(&keys::pilot("p1"), "state", "Active").unwrap();
+        s.hset(&keys::pilot("p2"), "state", "New").unwrap();
+        s.hset(&keys::cu("c1"), "state", "New").unwrap();
+        let pilots = s.keys_with_prefix("pd:pilot:").unwrap();
+        assert_eq!(pilots.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_queue_consumers_split_work() {
+        let s = Store::new();
+        for i in 0..100 {
+            s.rpush("q", &format!("{i}")).unwrap();
+        }
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(Some(v)) = s.lpop("q") {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<String> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_by_key(|v| v.parse::<u32>().unwrap());
+        assert_eq!(all.len(), 100, "each item consumed exactly once");
+        assert_eq!(all[0], "0");
+        assert_eq!(all[99], "99");
+    }
+
+    #[test]
+    fn snapshot_property_roundtrip() {
+        crate::prop::check_default(
+            |rng| {
+                let s = Store::new();
+                for i in 0..crate::prop::gen::usize_in(rng, 0, 10) {
+                    match rng.below(3) {
+                        0 => s.set(&format!("k{i}"), &crate::prop::gen::ascii_string(rng, 12)).unwrap(),
+                        1 => s.hset(&format!("h{i}"), "f", &crate::prop::gen::ascii_string(rng, 12)).unwrap(),
+                        _ => {
+                            s.rpush(&format!("q{i}"), &crate::prop::gen::ascii_string(rng, 12)).unwrap();
+                        }
+                    }
+                }
+                s.snapshot()
+            },
+            |snap| {
+                let fresh = Store::new();
+                fresh.restore(snap).map_err(|e| e.to_string())?;
+                if fresh.snapshot() == *snap {
+                    Ok(())
+                } else {
+                    Err("snapshot not idempotent".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,294 @@
+//! Figs. 11, 12, 13: large-scale distributed genome sequencing —
+//! 1024 BWA tasks, each consuming 9 GB (8 GB shared reference + 1 GB
+//! read chunk), 2 cores per task, on up to three XSEDE machines:
+//!
+//! 1. Lonestar only (I/O saturation on the shared filesystem);
+//! 2. Lonestar + Stampede, no replication (remote tasks must move
+//!    9 GB each — only a trickle executes on Stampede);
+//! 3. Lonestar + Stampede with up-front reference replication
+//!    (Stampede's share jumps to ≈40 % despite an ≈8100 s queue wait);
+//! 4. Lonestar + Stampede + Trestles (WAN), replication everywhere —
+//!    better than a single machine, worse than scenario 3, with high
+//!    per-CU variance (Fig. 13 timeline).
+
+use crate::batch::QueueModel;
+use crate::config::paper_testbed;
+use crate::experiments::simdrive::SimSystem;
+use crate::metrics::{Table, TimelineEvent};
+use crate::util::Bytes;
+use crate::workload::bwa_ensemble;
+
+pub const SCENARIOS: [&str; 4] = [
+    "1: lonestar",
+    "2: lonestar+stampede",
+    "3: +stampede, replicated",
+    "4: 3 machines, replicated",
+];
+
+pub struct ScaleResult {
+    pub t_total: f64,
+    pub distribution: std::collections::BTreeMap<String, usize>,
+    pub runtime_stats: std::collections::BTreeMap<String, (f64, f64)>,
+    pub metrics: crate::metrics::RunMetrics,
+}
+
+/// Run one Fig. 11 scenario. `tasks` is parameterized so benches can
+/// run smaller instances with the same shape (paper: 1024).
+pub fn run_scenario(scenario: usize, seed: u64, tasks: usize) -> anyhow::Result<ScaleResult> {
+    let mut sys = SimSystem::new(paper_testbed(), seed);
+    // Stampede's observed queue waits differed wildly between the
+    // paper's runs; replay them, scaled to the instance size so small
+    // bench/test runs keep the same shape as the 1024-task original.
+    let scale = tasks as f64 / FULL_TASKS as f64;
+    match scenario {
+        2 => sys.tb.batch.set_queue("stampede", QueueModel::with_mean(60.0, 400.0 * scale, 0.7))?,
+        3 => sys
+            .tb
+            .batch
+            .set_queue("stampede", QueueModel::with_mean(60.0, 8100.0 * scale, 0.5))?,
+        4 => {
+            // Fig. 13's run: "Stampede represented a significant
+            // bottleneck"; Trestles' queue time fluctuated strongly
+            // and its CUs run slowest — they form the straggler tail
+            // that puts scenario 4 behind scenario 3.
+            sys.tb
+                .batch
+                .set_queue("stampede", QueueModel::with_mean(60.0, 8100.0 * scale, 0.5))?;
+            sys.tb
+                .batch
+                .set_queue("trestles", QueueModel::with_mean(60.0, 4000.0 * scale, 1.0))?;
+            // Loaded Trestles ran CUs much slower than the TACC
+            // machines ("the more CUs ... the slower the average
+            // runtime of each CU").
+            sys.tb.batch.set_speed_factor("trestles", 1.55)?;
+        }
+        _ => {}
+    }
+    // BigJob agents drive a couple of remote stagings at a time.
+    sys.max_concurrent_staging = 2;
+
+    let ens = bwa_ensemble(tasks, Bytes::gb(tasks as u64), Bytes::gb(8));
+
+    // Data starts resident on Lonestar's scratch (pre-staged).
+    let ref_du = sys.place_du_instant(&ens.reference, "lonestar-scratch")?;
+    let chunk_dus: Vec<String> = ens
+        .read_chunks
+        .iter()
+        .map(|c| sys.place_du_instant(c, "lonestar-scratch"))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    // Up-front replication of the shared reference.
+    if scenario >= 3 {
+        sys.replicate(&ref_du, "stampede-scratch")?;
+    }
+    if scenario == 4 {
+        sys.replicate(&ref_du, "trestles-scratch")?;
+    }
+    sys.run()?; // land replication before compute starts (paper: "before the Pilot-Computes and tasks are started")
+    let repl_s = sys.sim.now();
+
+    // Pilots: the paper requests a pilot of `tasks` cores (1024) on
+    // each machine in play -> at most tasks/2 concurrent 2-core CUs.
+    let cores = (tasks as u32).max(8);
+    sys.submit_pilot("lonestar", cores, "lonestar-scratch")?;
+    if scenario >= 2 {
+        sys.submit_pilot("stampede", cores, "stampede-scratch")?;
+    }
+    if scenario == 4 {
+        sys.submit_pilot("trestles", cores, "trestles-scratch")?;
+    }
+
+    for chunk in &chunk_dus {
+        let mut cud = ens.cu_template.clone();
+        cud.input_data = vec![ref_du.clone(), chunk.clone()];
+        sys.submit_cu(cud)?;
+    }
+    sys.run()?;
+    anyhow::ensure!(sys.state.workload_finished(), "workload did not finish");
+    let mut metrics = sys.metrics.clone();
+    metrics.set_scalar("replication_s", repl_s);
+    Ok(ScaleResult {
+        t_total: metrics.makespan(),
+        distribution: metrics.distribution(),
+        runtime_stats: metrics.runtime_stats(),
+        metrics,
+    })
+}
+
+/// Default task count for the full reproduction (paper: 1024).
+pub const FULL_TASKS: usize = 1024;
+
+pub fn run_fig11(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 11: overall runtime T, 1024 tasks x 9 GB, up to 3 XSEDE machines",
+        &["scenario", "T (s)", "lonestar", "stampede", "trestles"],
+    );
+    for (i, name) in SCENARIOS.iter().enumerate() {
+        let r = run_scenario(i + 1, seed, FULL_TASKS)?;
+        let d = |m: &str| r.distribution.get(m).copied().unwrap_or(0).to_string();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}", r.t_total),
+            d("lonestar"),
+            d("stampede"),
+            d("trestles"),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+pub fn run_fig12(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 12: per-machine CU runtimes (mean ± std) and distribution",
+        &["scenario", "machine", "tasks", "runtime mean (s)", "runtime std (s)"],
+    );
+    for (i, name) in SCENARIOS.iter().enumerate() {
+        let r = run_scenario(i + 1, seed, FULL_TASKS)?;
+        for (machine, count) in &r.distribution {
+            let (mean, std) = r.runtime_stats[machine];
+            t.row(vec![
+                name.to_string(),
+                machine.clone(),
+                count.to_string(),
+                format!("{mean:.0}"),
+                format!("{std:.0}"),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+pub fn run_fig13(seed: u64) -> anyhow::Result<Vec<Table>> {
+    // Scenario 4 timeline, sampled at fixed intervals.
+    let r = run_scenario(4, seed, FULL_TASKS)?;
+    let m = &r.metrics;
+    let active = m.active_curve();
+    let machines = ["lonestar", "stampede", "trestles"];
+    let finished: Vec<(&str, Vec<(f64, u64)>)> =
+        machines.iter().map(|mm| (*mm, m.finished_curve(mm))).collect();
+    let horizon = r.t_total.max(1.0);
+    let mut t = Table::new(
+        "Fig 13: time series, 3-machine run (active CUs + cumulative finished per machine)",
+        &["t (s)", "active CUs", "done lonestar", "done stampede", "done trestles"],
+    );
+    let samples = 24;
+    for i in 0..=samples {
+        let ts = horizon * i as f64 / samples as f64;
+        let active_at = active
+            .iter()
+            .take_while(|(x, _)| *x <= ts)
+            .last()
+            .map(|(_, v)| *v)
+            .unwrap_or(0);
+        let mut row = vec![format!("{ts:.0}"), active_at.to_string()];
+        for (_, curve) in &finished {
+            let done = curve
+                .iter()
+                .take_while(|(x, _)| *x <= ts)
+                .last()
+                .map(|(_, v)| *v)
+                .unwrap_or(0);
+            row.push(done.to_string());
+        }
+        t.row(row);
+    }
+    // Pilot activation times (the Fig. 13 "Pilot N becomes active" marks).
+    let mut marks = Table::new("Fig 13 marks: pilot activation times", &["machine", "t_active (s)"]);
+    for (ts, who, ev) in &m.timeline {
+        if *ev == TimelineEvent::PilotActive {
+            marks.row(vec![who.clone(), format!("{ts:.0}")]);
+        }
+    }
+    Ok(vec![t, marks])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full paper scale (1024 tasks); the sim replays it in well under a
+    // second per scenario. Scenario comparisons average a few seeds, as
+    // the paper's reported numbers do.
+    const N: usize = FULL_TASKS;
+
+    fn avg_t(scenario: usize, seeds: &[u64]) -> f64 {
+        seeds
+            .iter()
+            .map(|s| run_scenario(scenario, *s, N).unwrap().t_total)
+            .sum::<f64>()
+            / seeds.len() as f64
+    }
+
+    const SEEDS: [u64; 3] = [42, 43, 44];
+
+    #[test]
+    fn two_machines_beat_one() {
+        let one = avg_t(1, &SEEDS);
+        let two = avg_t(2, &SEEDS);
+        assert!(two < one, "two={two} one={one}");
+    }
+
+    #[test]
+    fn replication_beats_no_replication_share() {
+        let share = |scenario: usize| -> f64 {
+            SEEDS
+                .iter()
+                .map(|s| {
+                    let r = run_scenario(scenario, *s, N).unwrap();
+                    r.distribution.get("stampede").copied().unwrap_or(0) as f64
+                        / r.distribution.values().sum::<usize>() as f64
+                })
+                .sum::<f64>()
+                / SEEDS.len() as f64
+        };
+        let (s_no, s_yes) = (share(2), share(3));
+        // Paper: ~5% without replication vs ~40% with.
+        assert!(s_no < 0.15, "no-replication stampede share {s_no}");
+        assert!(s_yes > 1.8 * s_no.max(0.01), "share did not improve: {s_no} -> {s_yes}");
+        assert!(s_yes > 0.12, "replicated share only {s_yes}");
+    }
+
+    #[test]
+    fn replication_beats_no_replication_runtime() {
+        let t2 = avg_t(2, &SEEDS);
+        let t3 = avg_t(3, &SEEDS);
+        assert!(t3 < t2, "t3={t3} t2={t2}");
+    }
+
+    #[test]
+    fn wan_scenario_between_single_and_best() {
+        // Paper: scenario 4 is ~6000 s behind the best case (3) but
+        // still beats the single-resource run (1).
+        let one = avg_t(1, &SEEDS);
+        let three = avg_t(3, &SEEDS);
+        let wan = avg_t(4, &SEEDS);
+        assert!(wan < one, "wan={wan} one={one}");
+        assert!(wan > three, "wan={wan} three={three}");
+    }
+
+    #[test]
+    fn io_contention_slows_single_machine_tasks() {
+        // Scenario 1 runs everything concurrently on Lonestar: per-CU
+        // runtimes must clearly exceed the uncontended compute time.
+        let r = run_scenario(1, 37, N).unwrap();
+        let (mean, _) = r.runtime_stats["lonestar"];
+        let uncontended = crate::config::bwa_cpu_secs_per_chunk() * 4.0; // 1 GB chunk
+        assert!(mean > 1.1 * uncontended, "mean={mean} uncontended={uncontended}");
+    }
+
+    #[test]
+    fn timeline_has_activity_for_all_three_machines() {
+        let r = run_scenario(4, 42, N).unwrap();
+        for m in ["lonestar", "stampede", "trestles"] {
+            assert!(
+                r.metrics.timeline.iter().any(|(_, who, _)| who == m),
+                "no timeline events for {m}"
+            );
+        }
+        let curve = r.metrics.active_curve();
+        let peak = curve.iter().map(|(_, v)| *v).max().unwrap_or(0);
+        assert!(peak > 8, "peak concurrency {peak}");
+        // Curve returns to zero at the end.
+        assert_eq!(curve.last().unwrap().1, 0);
+    }
+}

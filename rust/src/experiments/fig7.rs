@@ -1,0 +1,113 @@
+//! Fig. 7: Pilot-Data on different infrastructures — time T_S to
+//! instantiate a Pilot-Data with a dataset of a given size, for the
+//! five backends (SSH, iRODS, SRM, Globus Online, S3), staged from the
+//! GW68 submission machine.
+//!
+//! Expected shape (paper): SRM best (GridFTP); SSH and iRODS acceptable
+//! for smaller datasets; Globus Online pays a service overhead visible
+//! at small sizes but competitive at volume; S3 scales linearly,
+//! limited by the WAN bandwidth to the AWS datacenter.
+
+use crate::config::paper_testbed;
+use crate::experiments::simdrive::SimSystem;
+use crate::faults::RetryPolicy;
+use crate::metrics::Table;
+use crate::unit::{DataUnitDescription, FileRef};
+use crate::util::Bytes;
+
+/// (display name, destination PD in the testbed).
+pub const BACKENDS: [(&str, &str); 5] = [
+    ("SSH", "lonestar-scratch"),
+    ("iRODS", "irods-fnal"),
+    ("SRM", "osg-srm"),
+    ("GlobusOnline", "lonestar-go"),
+    ("S3", "s3-east"),
+];
+
+pub const SIZES_MB: [u64; 4] = [512, 1024, 2048, 4096];
+
+/// Measure T_S for one (backend, size) on a fresh testbed.
+pub fn staging_time(seed: u64, pd: &str, size: Bytes, files: u32) -> anyhow::Result<f64> {
+    let mut sys = SimSystem::new(paper_testbed(), seed);
+    sys.retry = RetryPolicy::default();
+    let descr = DataUnitDescription {
+        name: "fig7-dataset".into(),
+        files: (0..files)
+            .map(|i| FileRef::sized(&format!("part{i:03}"), Bytes(size.0 / files as u64)))
+            .collect(),
+        affinity: None,
+    };
+    let du = sys.upload_du(&descr, pd)?;
+    sys.run()?;
+    let t = sys.metrics.scalar(&format!("staged:{du}:{pd}"));
+    anyhow::ensure!(t.is_finite(), "staging never completed for {pd}");
+    Ok(t)
+}
+
+pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut headers = vec!["size".to_string()];
+    headers.extend(BACKENDS.iter().map(|(n, _)| n.to_string()));
+    let mut t = Table::new(
+        "Fig 7: T_S to instantiate a Pilot-Data (seconds, from GW68)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for &mb in &SIZES_MB {
+        let size = Bytes::mb(mb);
+        let mut row = vec![format!("{}", size)];
+        for (i, (_, pd)) in BACKENDS.iter().enumerate() {
+            let ts = staging_time(seed + i as u64, pd, size, 16)?;
+            row.push(format!("{ts:.1}"));
+        }
+        t.row(row);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_shape_matches_paper() {
+        let size = Bytes::gb(4);
+        let ts = |pd: &str| staging_time(100, pd, size, 16).unwrap();
+        let (ssh, irods, srm, go, s3) = (
+            ts("lonestar-scratch"),
+            ts("irods-fnal"),
+            ts("osg-srm"),
+            ts("lonestar-go"),
+            ts("s3-east"),
+        );
+        // SRM clearly best.
+        assert!(srm < ssh && srm < irods && srm < go && srm < s3, "srm={srm} ssh={ssh} irods={irods} go={go} s3={s3}");
+        // At 4 GB GO beats SSH (GridFTP underneath).
+        assert!(go < ssh, "go={go} ssh={ssh}");
+        // S3 is the slowest at volume (WAN-limited).
+        assert!(s3 > ssh && s3 > srm, "s3={s3}");
+        // iRODS ≈ SSH ballpark (within 2.5x).
+        assert!(irods / ssh < 2.5 && ssh / irods < 2.5, "irods={irods} ssh={ssh}");
+    }
+
+    #[test]
+    fn fig7_small_sizes_favour_ssh_over_go() {
+        let size = Bytes::mb(256);
+        let ssh = staging_time(7, "lonestar-scratch", size, 4).unwrap();
+        let go = staging_time(7, "lonestar-go", size, 4).unwrap();
+        assert!(ssh < go, "ssh={ssh} go={go} (GO request overhead must dominate small transfers)");
+    }
+
+    #[test]
+    fn fig7_s3_scales_linearly() {
+        let t1 = staging_time(8, "s3-east", Bytes::gb(1), 8).unwrap();
+        let t4 = staging_time(8, "s3-east", Bytes::gb(4), 8).unwrap();
+        let ratio = t4 / t1;
+        assert!((3.0..5.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn fig7_full_table_renders() {
+        let tables = run(42).unwrap();
+        assert_eq!(tables[0].rows.len(), SIZES_MB.len());
+        assert!(tables[0].render().contains("GlobusOnline"));
+    }
+}

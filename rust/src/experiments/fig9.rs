@@ -1,0 +1,258 @@
+//! Figs. 9 & 10: genome sequencing (BWA, 8 tasks × 256 MB reads +
+//! 8 GB shared reference) across five infrastructure configurations:
+//!
+//! 1. OSG, naive data management (each task pulls all 8.3 GB from the
+//!    GW68 submission machine);
+//! 2. XSEDE/Lonestar, naive (single 24-core pilot, same remote pulls);
+//! 3. OSG + iRODS Pilot-Data, reference replicated to the 9-site
+//!    group, compute co-located with data;
+//! 4. XSEDE/Lonestar + SSH Pilot-Data on the Lustre scratch,
+//!    co-located;
+//! 5. Hybrid: input on a Lonestar Pilot-Data, one 12-core Lonestar
+//!    pilot + four OSG pilots (the interoperability demo).
+//!
+//! Expected shape (paper): PD scenarios (3–5) beat naive (1–2);
+//! T_D(iRODS) ≫ T_D(SSH) (≈1418 s vs ≈338 s); in scenario 5 the
+//! majority of tasks run on Lonestar (paper: ≈4.5 of 8).
+
+use crate::config::{paper_testbed, OSG_SITES};
+use crate::experiments::simdrive::SimSystem;
+use crate::metrics::{Table, CuRecord};
+use crate::util::Bytes;
+use crate::workload::bwa_ensemble;
+
+pub const SCENARIOS: [&str; 5] = [
+    "1: OSG naive",
+    "2: XSEDE naive",
+    "3: OSG iRODS PD",
+    "4: XSEDE SSH PD",
+    "5: hybrid XSEDE+OSG",
+];
+
+/// Result of one scenario run.
+pub struct ScenarioResult {
+    pub t_total: f64,
+    pub t_d: f64,
+    pub records: Vec<CuRecord>,
+    pub distribution: std::collections::BTreeMap<String, usize>,
+}
+
+/// Run one Fig. 9 scenario (1-based index).
+pub fn run_scenario(scenario: usize, seed: u64) -> anyhow::Result<ScenarioResult> {
+    let mut sys = SimSystem::new(paper_testbed(), seed);
+    let ens = bwa_ensemble(8, Bytes::gb(2), Bytes::gb(8));
+
+    // ---- Phase 1: data placement (T_D) ----
+    let (ref_du, chunk_dus): (String, Vec<String>) = match scenario {
+        1 | 2 => {
+            // Naive: everything stays on the submission machine.
+            let r = sys.upload_du(&ens.reference, "gw68-staging")?;
+            let cs = ens
+                .read_chunks
+                .iter()
+                .map(|c| sys.upload_du(c, "gw68-staging"))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            (r, cs)
+        }
+        3 => {
+            // iRODS PD: upload to the Fermilab server (reference
+            // first, then chunks), replicate the reference across the
+            // 9-site group.
+            let r = sys.upload_du(&ens.reference, "irods-fnal")?;
+            sys.run()?;
+            let cs = ens
+                .read_chunks
+                .iter()
+                .map(|c| sys.upload_du(c, "irods-fnal"))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            sys.run()?; // land the uploads before fanning out
+            sys.replicate_group(&r, "osgGridFtpGroup")?;
+            (r, cs)
+        }
+        4 | 5 => {
+            // SSH PD on Lonestar's Lustre scratch (reference first,
+            // then the chunks).
+            let r = sys.upload_du(&ens.reference, "lonestar-scratch")?;
+            sys.run()?;
+            let cs = ens
+                .read_chunks
+                .iter()
+                .map(|c| sys.upload_du(c, "lonestar-scratch"))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            (r, cs)
+        }
+        other => anyhow::bail!("scenario {other} out of range 1..=5"),
+    };
+    sys.run()?;
+    let t_d = sys.sim.now();
+
+    // ---- Phase 2: pilots + workload ----
+    match scenario {
+        1 | 3 => {
+            // 8 single-slot OSG pilots across the iRODS-capable sites.
+            for site in OSG_SITES.iter().take(8) {
+                sys.submit_pilot(&format!("osg-{site}"), 2, &format!("irods-{site}"))?;
+            }
+        }
+        2 => {
+            sys.submit_pilot("lonestar", 24, "lonestar-scratch")?;
+        }
+        4 => {
+            sys.submit_pilot("lonestar", 24, "lonestar-scratch")?;
+        }
+        5 => {
+            sys.submit_pilot("lonestar", 12, "lonestar-scratch")?;
+            for site in OSG_SITES.iter().take(4) {
+                sys.submit_pilot(&format!("osg-{site}"), 2, &format!("irods-{site}"))?;
+            }
+        }
+        _ => unreachable!(),
+    }
+    for chunk in &chunk_dus {
+        let mut cud = ens.cu_template.clone();
+        cud.cores = 2;
+        cud.input_data = vec![ref_du.clone(), chunk.clone()];
+        sys.submit_cu(cud)?;
+    }
+    sys.run()?;
+    anyhow::ensure!(sys.state.workload_finished(), "workload did not finish");
+
+    Ok(ScenarioResult {
+        t_total: sys.metrics.makespan(),
+        t_d,
+        records: sys.metrics.cu_records.clone(),
+        distribution: sys.metrics.distribution(),
+    })
+}
+
+/// Average a scenario over a few seeds (the paper reports averages).
+pub fn run_scenario_avg(scenario: usize, seed: u64, reps: u64) -> anyhow::Result<ScenarioResult> {
+    let mut results = Vec::new();
+    for r in 0..reps {
+        results.push(run_scenario(scenario, seed + r * 101)?);
+    }
+    let n = results.len() as f64;
+    let t_total = results.iter().map(|r| r.t_total).sum::<f64>() / n;
+    let t_d = results.iter().map(|r| r.t_d).sum::<f64>() / n;
+    let mut distribution = std::collections::BTreeMap::new();
+    for r in &results {
+        for (m, c) in &r.distribution {
+            *distribution.entry(m.clone()).or_insert(0) += c;
+        }
+    }
+    let records = results.into_iter().flat_map(|r| r.records).collect();
+    Ok(ScenarioResult { t_total, t_d, records, distribution })
+}
+
+pub fn run_fig9(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 9: BWA runtimes, 8 tasks x 256 MB reads + 8 GB reference",
+        &["scenario", "T (s)", "T_D (s)", "tasks on lonestar"],
+    );
+    for (i, name) in SCENARIOS.iter().enumerate() {
+        let r = run_scenario_avg(i + 1, seed, 3)?;
+        let lonestar = *r.distribution.get("lonestar").unwrap_or(&0) as f64 / 3.0;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}", r.t_total),
+            format!("{:.0}", r.t_d),
+            format!("{lonestar:.1}/8"),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+pub fn run_fig10(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 10: per-task staging (download) vs runtime (seconds, mean over tasks)",
+        &["scenario", "staging mean", "staging max", "runtime mean", "runtime max"],
+    );
+    for (i, name) in SCENARIOS.iter().enumerate() {
+        let r = run_scenario(i + 1, seed)?;
+        let staging: Vec<f64> = r.records.iter().map(|x| x.staging_s).collect();
+        let runtime: Vec<f64> = r.records.iter().map(|x| x.compute_s).collect();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}", crate::util::mean(&staging)),
+            format!("{:.0}", staging.iter().cloned().fold(0.0, f64::max)),
+            format!("{:.0}", crate::util::mean(&runtime)),
+            format!("{:.0}", runtime.iter().cloned().fold(0.0, f64::max)),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pd_scenarios_beat_naive() {
+        let naive_osg = run_scenario_avg(1, 11, 2).unwrap();
+        let pd_osg = run_scenario_avg(3, 11, 2).unwrap();
+        assert!(
+            pd_osg.t_total < naive_osg.t_total,
+            "iRODS PD {} !< naive {}",
+            pd_osg.t_total,
+            naive_osg.t_total
+        );
+        let naive_x = run_scenario_avg(2, 11, 2).unwrap();
+        let pd_x = run_scenario_avg(4, 11, 2).unwrap();
+        assert!(
+            pd_x.t_total < naive_x.t_total,
+            "SSH PD {} !< naive {}",
+            pd_x.t_total,
+            naive_x.t_total
+        );
+    }
+
+    #[test]
+    fn td_irods_much_larger_than_td_ssh() {
+        // Paper: T_D(iRODS) ≈ 1418 s (upload + 9-site replication),
+        // T_D(SSH) ≈ 338 s (upload only).
+        let irods = run_scenario(3, 13).unwrap();
+        let ssh = run_scenario(4, 13).unwrap();
+        assert!(
+            irods.t_d > 2.0 * ssh.t_d,
+            "t_d irods={} ssh={}",
+            irods.t_d,
+            ssh.t_d
+        );
+        assert!(irods.t_d > 600.0 && irods.t_d < 4000.0, "irods t_d={}", irods.t_d);
+        assert!(ssh.t_d > 60.0 && ssh.t_d < 1000.0, "ssh t_d={}", ssh.t_d);
+    }
+
+    #[test]
+    fn staging_dominates_naive_but_not_pd() {
+        let naive = run_scenario(1, 17).unwrap();
+        let pd = run_scenario(3, 17).unwrap();
+        let mean_staging_naive =
+            crate::util::mean(&naive.records.iter().map(|r| r.staging_s).collect::<Vec<_>>());
+        let mean_staging_pd =
+            crate::util::mean(&pd.records.iter().map(|r| r.staging_s).collect::<Vec<_>>());
+        assert!(
+            mean_staging_naive > 5.0 * mean_staging_pd.max(1.0),
+            "naive={mean_staging_naive} pd={mean_staging_pd}"
+        );
+    }
+
+    #[test]
+    fn hybrid_runs_majority_on_lonestar() {
+        let r = run_scenario_avg(5, 19, 4).unwrap();
+        let lonestar = *r.distribution.get("lonestar").unwrap_or(&0);
+        let total: usize = r.distribution.values().sum();
+        assert_eq!(total, 32);
+        assert!(
+            lonestar * 2 > total,
+            "lonestar ran {lonestar}/{total}, expected majority"
+        );
+    }
+
+    #[test]
+    fn fig9_and_fig10_tables_render() {
+        let t9 = run_fig9(3).unwrap();
+        assert_eq!(t9[0].rows.len(), 5);
+        let t10 = run_fig10(3).unwrap();
+        assert_eq!(t10[0].rows.len(), 5);
+    }
+}

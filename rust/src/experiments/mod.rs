@@ -1,0 +1,77 @@
+//! Experiment drivers — one per table/figure of the paper's §6
+//! evaluation. Each driver builds the calibrated testbed, replays the
+//! experiment in the discrete-event pilot system, and prints/saves the
+//! same rows or series the paper reports.
+//!
+//! | id     | paper result                                        |
+//! |--------|-----------------------------------------------------|
+//! | table1 | data-cyberinfrastructure capability matrix          |
+//! | fig7   | T_S per backend × dataset size                      |
+//! | fig8   | T_R group vs sequential replication (+ inset)       |
+//! | fig9   | BWA 8 tasks, 5 infrastructure scenarios (+ T_D)     |
+//! | fig10  | per-scenario staging vs task runtime                |
+//! | fig11  | 1024-task distributed run, 4 scenarios              |
+//! | fig12  | per-machine task runtimes + distribution            |
+//! | fig13  | timeline of the 3-machine run                       |
+
+pub mod simdrive;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig11;
+pub mod table1;
+
+use crate::metrics::Table;
+use std::path::Path;
+
+/// Run one experiment by id; returns the rendered tables.
+pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
+    match id {
+        "table1" => table1::run(),
+        "fig7" => fig7::run(seed),
+        "fig8" => fig8::run(seed),
+        "fig9" => fig9::run_fig9(seed),
+        "fig10" => fig9::run_fig10(seed),
+        "fig11" => fig11::run_fig11(seed),
+        "fig12" => fig11::run_fig12(seed),
+        "fig13" => fig11::run_fig13(seed),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13)"
+        ),
+    }
+}
+
+pub const ALL: [&str; 8] =
+    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13"];
+
+/// Print tables and persist CSVs under `results/`.
+pub fn report(id: &str, tables: &[Table], results_dir: &Path) -> anyhow::Result<()> {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        let name = if tables.len() == 1 {
+            id.to_string()
+        } else {
+            format!("{id}_{i}")
+        };
+        let path = t.save_csv(results_dir, &name)?;
+        println!("  [csv] {}\n", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_experiment_is_error() {
+        assert!(super::run("fig99", 1).is_err());
+    }
+
+    #[test]
+    fn all_ids_resolve() {
+        // Smoke-run the cheap ones here; heavyweight figs have their
+        // own module tests.
+        for id in ["table1"] {
+            assert!(super::run(id, 1).is_ok(), "{id}");
+        }
+    }
+}

@@ -1,0 +1,794 @@
+//! The simulation driver: the full Pilot system (manager, agents,
+//! scheduler, queues, storage) running inside the discrete-event
+//! engine against the calibrated testbed.
+//!
+//! This is the same coordinator logic as the local-mode services —
+//! identical scheduler, state machines and coordination store — driven
+//! by simulated time so the paper's hour-scale production-DCI
+//! experiments replay in milliseconds, deterministically per seed.
+
+use crate::config::Testbed;
+use crate::coordination::{keys, Store};
+use crate::faults::{attempt_transfer, RetryPolicy};
+use crate::metrics::{CuRecord, RunMetrics, TimelineEvent};
+use crate::net::FlowHandle;
+use crate::pilot::{agent_pull, ManagerState, PilotCompute, PilotComputeDescription, PilotState};
+use crate::rng::Rng;
+use crate::scheduler::{AffinityScheduler, Placement, SchedContext, Scheduler};
+use crate::simtime::Sim;
+use crate::storage::simstore::TransferCost;
+use crate::topology::Label;
+use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUnitDescription, DuState};
+use crate::workload::task_runtime_s;
+use std::collections::BTreeMap;
+
+/// Events of the simulated pilot system.
+#[derive(Debug)]
+pub enum Ev {
+    /// Pilot finished waiting in the batch queue.
+    PilotActive { pilot: String },
+    /// A DU transfer into a PD completed (or failed permanently).
+    DuStaged { du: String, pd: String, flow: Option<FlowHandle>, ok: bool },
+    /// Ask a pilot's agent to try pulling work.
+    TryPull { pilot: String },
+    /// CU input staging finished.
+    CuStaged { cu: String, flow: Option<FlowHandle>, ok: bool },
+    /// CU compute finished.
+    CuDone { cu: String },
+    /// Delayed-scheduling re-evaluation.
+    Reschedule { cu: String },
+    /// Pilot hit its walltime limit (or was killed by fault injection).
+    PilotExpired { pilot: String },
+}
+
+/// The simulated pilot system.
+pub struct SimSystem {
+    pub sim: Sim<Ev>,
+    pub tb: Testbed,
+    pub state: ManagerState,
+    pub store: Store,
+    pub scheduler: Box<dyn Scheduler>,
+    pub rng: Rng,
+    pub metrics: RunMetrics,
+    pub retry: RetryPolicy,
+    /// pilot id -> (machine name, scratch pd name).
+    pilot_home: BTreeMap<String, (String, String)>,
+    /// Remote staging time already paid per (cu): avoids double I/O.
+    staged_remote: BTreeMap<String, bool>,
+    /// Count of CUs that failed staging permanently.
+    pub staging_failures: u32,
+    /// Max CUs a pilot's agent will stage remotely at once (BigJob
+    /// agents throttle staging; this is what limits how fast a
+    /// non-data-local pilot can drain the global queue — Fig. 11 sc. 2).
+    pub max_concurrent_staging: u32,
+    /// Per-pilot remote stagings in flight.
+    staging_in_flight: BTreeMap<String, u32>,
+    /// Staging re-queues per CU; bounded to avoid spinning forever on
+    /// inputs that can never materialize.
+    requeues: BTreeMap<String, u32>,
+    /// Cached DU-id -> replica labels, maintained incrementally on
+    /// placement events instead of being rebuilt per submit (perf:
+    /// the scheduler context is on the submit hot path).
+    du_location_cache: BTreeMap<String, Vec<Label>>,
+    /// Max staging retries before a CU is failed permanently.
+    pub max_requeues: u32,
+    /// Schedule automatic PilotExpired events at each machine's
+    /// walltime limit (off by default: most experiments end well
+    /// inside the 48 h limits; `kill_pilot_at` is always available).
+    pub enforce_walltime: bool,
+}
+
+impl SimSystem {
+    pub fn new(tb: Testbed, seed: u64) -> SimSystem {
+        SimSystem {
+            sim: Sim::new(),
+            tb,
+            state: ManagerState::new(),
+            store: Store::new(),
+            scheduler: Box::new(AffinityScheduler::new(None)),
+            rng: Rng::new(seed),
+            metrics: RunMetrics::default(),
+            retry: RetryPolicy::default(),
+            pilot_home: BTreeMap::new(),
+            staged_remote: BTreeMap::new(),
+            staging_failures: 0,
+            max_concurrent_staging: 4,
+            staging_in_flight: BTreeMap::new(),
+            requeues: BTreeMap::new(),
+            max_requeues: 24,
+            enforce_walltime: false,
+            du_location_cache: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_scheduler(mut self, s: Box<dyn Scheduler>) -> SimSystem {
+        self.scheduler = s;
+        self
+    }
+
+    /// Submit a Pilot-Compute to a machine's batch queue; becomes
+    /// Active after the sampled T_Q. `scratch_pd` is where its local
+    /// data lands (must exist in the testbed SimStore).
+    pub fn submit_pilot(
+        &mut self,
+        machine: &str,
+        cores: u32,
+        scratch_pd: &str,
+    ) -> anyhow::Result<String> {
+        let m = self.tb.batch.machine(machine)?.clone();
+        self.tb.store.pd(scratch_pd)?;
+        let wait = self.tb.batch.submit(machine, cores, &mut self.rng)?;
+        let mut pilot = PilotCompute::new(PilotComputeDescription {
+            service_url: format!("batch://{machine}"),
+            cores,
+            walltime_s: m.walltime_limit,
+            affinity: Some(m.label.clone()),
+        });
+        pilot.transition(PilotState::Queued)?;
+        let id = pilot.id.clone();
+        self.state.add_pilot(pilot);
+        self.pilot_home.insert(id.clone(), (machine.to_string(), scratch_pd.to_string()));
+        self.metrics.set_scalar(&format!("tq:{id}"), wait);
+        self.sim.schedule(wait, Ev::PilotActive { pilot: id.clone() });
+        if self.enforce_walltime && m.walltime_limit.is_finite() {
+            self.sim
+                .schedule(wait + m.walltime_limit, Ev::PilotExpired { pilot: id.clone() });
+        }
+        Ok(id)
+    }
+
+    /// Fault injection: kill a pilot at a given sim time; its running
+    /// and queued CUs are re-queued globally (the paper observed
+    /// wall-time-limit kills during the Fig. 11 runs).
+    pub fn kill_pilot_at(&mut self, pilot: &str, at_s: f64) {
+        self.sim.schedule_at(at_s, Ev::PilotExpired { pilot: pilot.to_string() });
+    }
+
+    /// Register a DU and stage it from the gateway into `pd`,
+    /// returning the id. Completion is an event; run the sim to let it
+    /// land. Records `ts:<du>:<pd>` (T_S) on completion.
+    pub fn upload_du(&mut self, descr: &DataUnitDescription, pd: &str) -> anyhow::Result<String> {
+        let mut du = DataUnit::new(descr.clone());
+        du.transition(DuState::Pending)?;
+        let id = du.id.clone();
+        self.tb.store.register_du(&id, du.size(), du.file_count());
+        self.state.add_du(du);
+        let gw_pd = self.gateway_pd()?;
+        self.start_transfer_from(&id, &gw_pd, pd, true)?;
+        Ok(id)
+    }
+
+    /// The Pilot-Data co-located with the submission gateway — the
+    /// source for initial uploads.
+    fn gateway_pd(&self) -> anyhow::Result<String> {
+        let gw = &self.tb.gateway;
+        self.tb
+            .store
+            .pds()
+            .find(|p| p.endpoint.label == *gw)
+            .map(|p| p.name.clone())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no Pilot-Data co-located with the gateway '{gw}'")
+            })
+    }
+
+    /// Register a DU as already resident in `pd` (pre-staged data —
+    /// no transfer, no events). Used when the experiment starts with
+    /// data in place, as Fig. 11 does on Lonestar.
+    pub fn place_du_instant(
+        &mut self,
+        descr: &DataUnitDescription,
+        pd: &str,
+    ) -> anyhow::Result<String> {
+        let mut du = DataUnit::new(descr.clone());
+        du.transition(DuState::Pending)?;
+        du.transition(DuState::Running)?;
+        let id = du.id.clone();
+        self.tb.store.register_du(&id, du.size(), du.file_count());
+        self.tb.store.place(&id, pd)?;
+        self.cache_location(&id, pd);
+        self.state.add_du(du);
+        Ok(id)
+    }
+
+    /// Replicate an existing DU to `dst_pd` from its closest replica.
+    pub fn replicate(&mut self, du: &str, dst_pd: &str) -> anyhow::Result<()> {
+        let dst_label = self.tb.store.pd(dst_pd)?.endpoint.label.clone();
+        let src = self
+            .tb
+            .store
+            .closest_replica(&self.tb.topo, du, &dst_label)
+            .ok_or_else(|| anyhow::anyhow!("DU '{du}' has no replica to copy from"))?
+            .name
+            .clone();
+        self.start_transfer_from(du, &src, dst_pd, false)
+    }
+
+    /// Group replication (iRODS resource group): concurrent transfers
+    /// from the group's home server to every member.
+    pub fn replicate_group(&mut self, du: &str, group: &str) -> anyhow::Result<()> {
+        let members: Vec<String> = self.tb.store.group_members(group)?.to_vec();
+        for m in &members {
+            if !self.tb.store.has_replica(du, m) {
+                self.replicate(du, m)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn start_transfer_from(
+        &mut self,
+        du: &str,
+        src_pd: &str,
+        dst_pd: &str,
+        via_gateway: bool,
+    ) -> anyhow::Result<()> {
+        if src_pd == dst_pd {
+            // Already there: instant success.
+            self.sim.schedule(0.0, Ev::DuStaged {
+                du: du.to_string(),
+                pd: dst_pd.to_string(),
+                flow: None,
+                ok: true,
+            });
+            return Ok(());
+        }
+        let gateway = self.tb.gateway.clone();
+        let via = if via_gateway { Some(&gateway) } else { None };
+        let cost = self.tb.store.staging_cost(&self.tb.net, du, src_pd, dst_pd, via)?;
+        let src_label = self.tb.store.pd(src_pd)?.endpoint.label.clone();
+        let dst_label = self.tb.store.pd(dst_pd)?.endpoint.label.clone();
+        let params = self.tb.store.pd(dst_pd)?.endpoint.params.clone();
+        let outcome = attempt_transfer(&mut self.rng, params.failure_rate, cost.wire_s, self.retry);
+        let flow = self.tb.net.begin_flow(&src_label, &dst_label);
+        let total = cost.total() + outcome.wasted_s;
+        self.sim.schedule(total, Ev::DuStaged {
+            du: du.to_string(),
+            pd: dst_pd.to_string(),
+            flow: Some(flow),
+            ok: outcome.succeeded,
+        });
+        Ok(())
+    }
+
+    /// Submit a CU through the scheduler.
+    pub fn submit_cu(&mut self, descr: ComputeUnitDescription) -> anyhow::Result<String> {
+        let mut cu = ComputeUnit::new(descr);
+        cu.t_submitted = self.sim.now();
+        let id = cu.id.clone();
+        self.state.add_cu(cu);
+        self.place_cu(&id)?;
+        Ok(id)
+    }
+
+    /// Record a new replica location in the scheduler-facing cache.
+    fn cache_location(&mut self, du: &str, pd: &str) {
+        if let Ok(p) = self.tb.store.pd(pd) {
+            let label = p.endpoint.label.clone();
+            let entry = self.du_location_cache.entry(du.to_string()).or_default();
+            if !entry.contains(&label) {
+                entry.push(label);
+            }
+        }
+    }
+
+    fn place_cu(&mut self, cu_id: &str) -> anyhow::Result<()> {
+        let placement = {
+            let depth: BTreeMap<String, usize> = self
+                .state
+                .pilots
+                .keys()
+                .map(|p| (p.clone(), self.store.llen(&keys::pilot_queue(p)).unwrap_or(0)))
+                .collect();
+            let cu = &self.state.cus[cu_id];
+            let ctx = SchedContext {
+                topo: &self.tb.topo,
+                state: &self.state,
+                du_locations: &self.du_location_cache,
+                queue_depth: &depth,
+            };
+            self.scheduler.place(cu, &ctx)
+        };
+        let cu = self.state.cus.get_mut(cu_id).unwrap();
+        match placement {
+            Placement::Pilot(pilot) => {
+                cu.transition(CuState::Queued)?;
+                self.store.rpush(&keys::pilot_queue(&pilot), cu_id)?;
+                self.sim.schedule(0.0, Ev::TryPull { pilot });
+            }
+            Placement::Global => {
+                cu.transition(CuState::Queued)?;
+                self.store.rpush(keys::GLOBAL_QUEUE, cu_id)?;
+                self.wake_all_pilots();
+            }
+            Placement::Delay(d) => {
+                cu.transition(CuState::Queued)?;
+                self.sim.schedule(d, Ev::Reschedule { cu: cu_id.to_string() });
+            }
+            Placement::Unschedulable(reason) => {
+                cu.transition(CuState::Unschedulable)?;
+                cu.error = Some(reason);
+            }
+        }
+        Ok(())
+    }
+
+    fn wake_all_pilots(&mut self) {
+        let ids: Vec<String> = self
+            .state
+            .pilots
+            .values()
+            .filter(|p| p.state == PilotState::Active)
+            .map(|p| p.id.clone())
+            .collect();
+        for pilot in ids {
+            self.sim.schedule(0.0, Ev::TryPull { pilot });
+        }
+    }
+
+    /// Drive the simulation until all events drain. Panics via the
+    /// budget guard rather than hanging.
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        let budget = 2_000_000u64;
+        let mut n = 0u64;
+        while let Some((t, ev)) = self.sim.next_event() {
+            n += 1;
+            anyhow::ensure!(n < budget, "event budget exceeded at {t}");
+            self.handle(t.secs(), ev)?;
+        }
+        Ok(())
+    }
+
+    fn handle(&mut self, now: f64, ev: Ev) -> anyhow::Result<()> {
+        match ev {
+            Ev::PilotActive { pilot } => {
+                let (machine, _) = self.pilot_home[&pilot].clone();
+                let p = self.state.pilots.get_mut(&pilot).unwrap();
+                p.transition(PilotState::Active)?;
+                p.t_active = now;
+                self.metrics.mark(now, &machine, TimelineEvent::PilotActive);
+                self.sim.schedule(0.0, Ev::TryPull { pilot });
+            }
+
+            Ev::DuStaged { du, pd, flow, ok } => {
+                if let Some(f) = flow {
+                    self.tb.net.end_flow(&f);
+                }
+                if ok {
+                    self.tb.store.place(&du, &pd)?;
+                    self.cache_location(&du, &pd);
+                    if let Some(d) = self.state.dus.get_mut(&du) {
+                        if d.state == DuState::Pending {
+                            d.transition(DuState::Running)?;
+                        }
+                    }
+                    self.metrics.set_scalar(&format!("staged:{du}:{pd}"), now);
+                } else if let Some(d) = self.state.dus.get_mut(&du) {
+                    // Partial replication (Fig. 8's ~7.5 of 9): the DU
+                    // stays usable from other replicas.
+                    let _ = d;
+                }
+                // New data may unlock data-local work.
+                self.wake_all_pilots();
+            }
+
+            Ev::TryPull { pilot } => {
+                if std::env::var("PD_DEBUG_PULL").is_ok() {
+                    let p = &self.state.pilots[&pilot];
+                    eprintln!(
+                        "DBGPULL t={now:.0} pilot={pilot} machine={} state={:?} free={} inflight={} own={} global={}",
+                        self.pilot_home[&pilot].0,
+                        p.state,
+                        p.free_slots(),
+                        self.staging_in_flight.get(&pilot).unwrap_or(&0),
+                        self.store.llen(&keys::pilot_queue(&pilot)).unwrap_or(0),
+                        self.store.llen(keys::GLOBAL_QUEUE).unwrap_or(0),
+                    );
+                }
+                self.try_pull(now, &pilot)?;
+            }
+
+            Ev::CuStaged { cu, flow, ok } => {
+                if let Some(f) = flow {
+                    self.tb.net.end_flow(&f);
+                }
+                // The pilot may have expired mid-staging (the CU was
+                // re-queued); drop the stale event.
+                if self.state.cus[&cu].state != CuState::StagingInput {
+                    return Ok(());
+                }
+                let pilot_id = self.state.cus[&cu].pilot.clone().unwrap();
+                let (machine, _) = self.pilot_home[&pilot_id].clone();
+                if self.staged_remote.get(&cu).copied().unwrap_or(false) {
+                    if let Some(n) = self.staging_in_flight.get_mut(&pilot_id) {
+                        *n = n.saturating_sub(1);
+                    }
+                }
+                self.sim.schedule(0.0, Ev::TryPull { pilot: pilot_id.clone() });
+                if !ok {
+                    // Staging failed after retries: re-queue globally,
+                    // up to a bound (inputs that never materialize —
+                    // e.g. a permanently failed upload — fail the CU).
+                    self.staging_failures += 1;
+                    let n = self.requeues.entry(cu.clone()).or_insert(0);
+                    *n += 1;
+                    let give_up = *n > self.max_requeues;
+                    let c = self.state.cus.get_mut(&cu).unwrap();
+                    let cores = c.description.cores.max(1);
+                    self.state.pilots.get_mut(&pilot_id).unwrap().busy_slots -= cores;
+                    let c = self.state.cus.get_mut(&cu).unwrap();
+                    if give_up {
+                        c.error = Some("input staging failed permanently".into());
+                        c.state = CuState::Failed;
+                    } else {
+                        c.transition(CuState::Queued)?;
+                        self.store.rpush(keys::GLOBAL_QUEUE, &cu)?;
+                        self.wake_all_pilots();
+                    }
+                    return Ok(());
+                }
+                let m = self.tb.batch.machine(&machine)?.clone();
+                self.tb.batch.io_begin(&machine);
+                let cu_cores = self.state.cus[&cu].description.cores.max(1);
+                let sharers = self.machine_sharers(&machine, cu_cores);
+                let fs_share = m.fs_bandwidth.0 / sharers;
+                if std::env::var("PD_DEBUG_IO").is_ok() {
+                    eprintln!(
+                        "DBG t={now:.1} cu={cu} machine={machine} sharers={sharers:.0} share={:.1}MiB/s",
+                        fs_share / 1048576.0
+                    );
+                }
+                let c = self.state.cus.get_mut(&cu).unwrap();
+                c.staging_s = now - c.t_started_staging;
+                c.transition(CuState::Running)?;
+                c.t_started_run = now;
+                // Remote-staged inputs were already paid on the wire;
+                // the run still scans them once from local disk.
+                let runtime = task_runtime_s(
+                    c.description.cpu_secs_hint,
+                    c.description.io_bytes_hint,
+                    m.speed_factor,
+                    fs_share,
+                ) * self.rng.range_f64(0.75, 1.40); // BWA runtime variance (paper Fig. 12 error bars)
+                self.metrics.mark(now, &machine, TimelineEvent::CuStarted);
+                self.sim.schedule(runtime, Ev::CuDone { cu });
+            }
+
+            Ev::CuDone { cu } => {
+                // Stale event for a CU whose pilot expired mid-run.
+                if self.state.cus[&cu].state != CuState::Running {
+                    return Ok(());
+                }
+                let pilot_id = self.state.cus[&cu].pilot.clone().unwrap();
+                let (machine, _) = self.pilot_home[&pilot_id].clone();
+                self.tb.batch.io_end(&machine);
+                let c = self.state.cus.get_mut(&cu).unwrap();
+                c.transition(CuState::StagingOutput)?;
+                c.transition(CuState::Done)?;
+                c.t_finished = now;
+                let rec = CuRecord {
+                    cu: cu.clone(),
+                    machine: machine.clone(),
+                    t_submitted: c.t_submitted,
+                    t_start: c.t_started_staging,
+                    t_end: now,
+                    staging_s: c.staging_s,
+                    compute_s: now - c.t_started_run,
+                };
+                let cores = c.description.cores.max(1);
+                self.metrics.record_cu(rec);
+                self.metrics.mark(now, &machine, TimelineEvent::CuFinished);
+                self.state.pilots.get_mut(&pilot_id).unwrap().busy_slots -= cores;
+                self.sim.schedule(0.0, Ev::TryPull { pilot: pilot_id });
+            }
+
+            Ev::Reschedule { cu } => {
+                if !self.state.cus[&cu].state.is_terminal() {
+                    self.place_cu(&cu)?;
+                }
+            }
+
+            Ev::PilotExpired { pilot } => {
+                let Some(p) = self.state.pilots.get_mut(&pilot) else { return Ok(()) };
+                if p.state.is_terminal() {
+                    return Ok(());
+                }
+                let was_active = p.state == crate::pilot::PilotState::Active;
+                p.state = crate::pilot::PilotState::Done;
+                p.busy_slots = 0;
+                let (machine, _) = self.pilot_home[&pilot].clone();
+                if was_active {
+                    let cores = self.state.pilots[&pilot].description.cores;
+                    self.tb.batch.release(&machine, cores);
+                }
+                // Re-queue this pilot's in-flight CUs and drain its
+                // agent queue back to the global queue.
+                let orphaned: Vec<String> = self
+                    .state
+                    .cus
+                    .values()
+                    .filter(|c| {
+                        c.pilot.as_deref() == Some(pilot.as_str()) && !c.state.is_terminal()
+                    })
+                    .map(|c| c.id.clone())
+                    .collect();
+                for cu in orphaned {
+                    let c = self.state.cus.get_mut(&cu).unwrap();
+                    if matches!(c.state, CuState::StagingInput | CuState::Running) {
+                        c.transition(CuState::Queued)?;
+                        c.pilot = None;
+                        self.store.rpush(keys::GLOBAL_QUEUE, &cu)?;
+                    }
+                }
+                while let Some(cu) = self.store.lpop(&keys::pilot_queue(&pilot))? {
+                    self.store.rpush(keys::GLOBAL_QUEUE, &cu)?;
+                }
+                self.staging_in_flight.remove(&pilot);
+                self.wake_all_pilots();
+            }
+        }
+        Ok(())
+    }
+
+    fn try_pull(&mut self, now: f64, pilot: &str) -> anyhow::Result<()> {
+        loop {
+            let (can, cores_free) = {
+                let p = &self.state.pilots[pilot];
+                (p.state == PilotState::Active && p.free_slots() > 0, p.free_slots())
+            };
+            if !can {
+                return Ok(());
+            }
+            // Agent-side staging throttle: don't start more concurrent
+            // input stagings than the agent can drive.
+            if *self.staging_in_flight.get(pilot).unwrap_or(&0) >= self.max_concurrent_staging {
+                return Ok(());
+            }
+            let Some(cu_id) = agent_pull(&self.store, pilot)? else {
+                return Ok(());
+            };
+            let cu = &self.state.cus[&cu_id];
+            let cores = cu.description.cores.max(1);
+            if cores > cores_free {
+                // Not enough room: push back to own queue and stop.
+                self.store.rpush(&keys::pilot_queue(pilot), &cu_id)?;
+                return Ok(());
+            }
+            self.begin_staging(now, pilot, &cu_id)?;
+        }
+    }
+
+    /// Start input staging for a pulled CU.
+    fn begin_staging(&mut self, now: f64, pilot: &str, cu_id: &str) -> anyhow::Result<()> {
+        let (machine, scratch) = self.pilot_home[pilot].clone();
+        let pilot_label = self.tb.batch.machine(&machine)?.label.clone();
+        let cores = self.state.cus[&cu_id.to_string()].description.cores.max(1);
+        self.state.pilots.get_mut(pilot).unwrap().busy_slots += cores;
+        {
+            let c = self.state.cus.get_mut(cu_id).unwrap();
+            c.pilot = Some(pilot.to_string());
+            c.t_started_staging = now;
+            c.transition(CuState::StagingInput)?;
+        }
+
+        // Compute total staging time across input DUs.
+        let inputs = self.state.cus[cu_id].description.input_data.clone();
+        let mut total = 0.0f64;
+        let mut ok = true;
+        let mut flow: Option<FlowHandle> = None;
+        let mut remote = false;
+        for du in &inputs {
+            let Some(src) = self.tb.store.closest_replica(&self.tb.topo, du, &pilot_label) else {
+                // Input not materialized anywhere yet — treat as
+                // failure; CU re-queues and waits for DuStaged wakeups.
+                ok = false;
+                continue;
+            };
+            let src_name = src.name.clone();
+            let src_label = src.endpoint.label.clone();
+            if src_label == pilot_label {
+                // Co-located: logical filesystem link.
+                total += 1.0;
+            } else {
+                remote = true;
+                let cost: TransferCost = self.tb.store.staging_cost(
+                    &self.tb.net,
+                    du,
+                    &src_name,
+                    &scratch,
+                    None,
+                )?;
+                // Staging is sequential-read + one protocol stream:
+                // the per-flow cap inside `transfer_cost` (e.g. ~20
+                // MiB/s scp) is the binding constraint, matching the
+                // paper's ~450 s per 9 GB task move.
+                let params = self.tb.store.pd(&src_name)?.endpoint.params.clone();
+                let outcome =
+                    attempt_transfer(&mut self.rng, params.failure_rate, cost.wire_s, self.retry);
+                ok &= outcome.succeeded;
+                total += cost.total() + outcome.wasted_s;
+                if flow.is_none() {
+                    flow = Some(self.tb.net.begin_flow(&src_label, &pilot_label));
+                }
+            }
+        }
+        self.staged_remote.insert(cu_id.to_string(), remote);
+        if remote {
+            // Only remote stagings consume agent staging slots; local
+            // links are effectively free.
+            *self.staging_in_flight.entry(pilot.to_string()).or_insert(0) += 1;
+        }
+        self.sim.schedule(total, Ev::CuStaged { cu: cu_id.to_string(), flow, ok });
+        Ok(())
+    }
+
+    /// Makespan of the executed workload.
+    pub fn makespan(&self) -> f64 {
+        self.metrics.makespan()
+    }
+
+    /// Concurrent I/O sharers on a machine: the larger of the batch
+    /// I/O counter and the cores-busy estimate across its pilots
+    /// (tasks that started in the same event batch all contend even
+    /// though the counter ramps sequentially).
+    fn machine_sharers(&self, machine: &str, cu_cores: u32) -> f64 {
+        let io = self.tb.batch.io_active(machine) as f64;
+        let busy: f64 = self
+            .pilot_home
+            .iter()
+            .filter(|(_, (m, _))| m == machine)
+            .filter_map(|(p, _)| self.state.pilots.get(p))
+            .map(|p| p.busy_slots as f64 / cu_cores.max(1) as f64)
+            .sum();
+        io.max(busy).max(1.0)
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_testbed;
+    use crate::util::Bytes;
+    use crate::workload::bwa_ensemble;
+
+    fn small_ensemble() -> crate::workload::BwaEnsemble {
+        bwa_ensemble(4, Bytes::gb(1), Bytes::gb(8))
+    }
+
+    #[test]
+    fn pilot_becomes_active_after_queue_wait() {
+        let mut sys = SimSystem::new(paper_testbed(), 1);
+        let p = sys.submit_pilot("lonestar", 64, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        assert_eq!(sys.state.pilots[&p].state, PilotState::Active);
+        assert!(sys.sim.now() > 0.0, "queue wait must advance time");
+    }
+
+    #[test]
+    fn du_upload_places_replica_and_records_ts() {
+        let mut sys = SimSystem::new(paper_testbed(), 2);
+        let ens = small_ensemble();
+        let du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        assert!(sys.tb.store.has_replica(&du, "lonestar-scratch"));
+        let t = sys.metrics.scalar(&format!("staged:{du}:lonestar-scratch"));
+        assert!(t > 10.0, "8GB upload should take real time, got {t}");
+    }
+
+    #[test]
+    fn full_bwa_run_completes_all_cus() {
+        let mut sys = SimSystem::new(paper_testbed(), 3);
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        let mut chunk_ids = Vec::new();
+        for c in &ens.read_chunks {
+            chunk_ids.push(sys.upload_du(c, "lonestar-scratch").unwrap());
+        }
+        sys.run().unwrap(); // land the data
+        sys.submit_pilot("lonestar", 64, "lonestar-scratch").unwrap();
+        for chunk in &chunk_ids {
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk.clone()];
+            sys.submit_cu(cud).unwrap();
+        }
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(sys.state.count_cu_state(CuState::Done), 4);
+        assert!(sys.makespan() > 0.0);
+        // Data-local staging: every CU should have tiny staging time.
+        for r in &sys.metrics.cu_records {
+            assert!(r.staging_s < 30.0, "co-located staging was {}", r.staging_s);
+        }
+    }
+
+    #[test]
+    fn remote_input_pays_wire_time() {
+        let mut sys = SimSystem::new(paper_testbed(), 4);
+        let ens = small_ensemble();
+        // Data on OSG SRM; pilot on Lonestar: staging must be remote.
+        let ref_du = sys.upload_du(&ens.reference, "osg-srm").unwrap();
+        sys.run().unwrap();
+        sys.submit_pilot("lonestar", 64, "lonestar-scratch").unwrap();
+        let mut cud = ens.cu_template.clone();
+        cud.input_data = vec![ref_du];
+        sys.submit_cu(cud).unwrap();
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        let rec = &sys.metrics.cu_records[0];
+        assert!(rec.staging_s > 30.0, "remote staging was only {}s", rec.staging_s);
+    }
+
+    #[test]
+    fn group_replication_is_mostly_complete_under_failures() {
+        let mut sys = SimSystem::new(paper_testbed(), 5);
+        sys.retry = RetryPolicy::none(); // Fig. 8 has no retries
+        let ens = small_ensemble();
+        let du = sys.upload_du(&ens.reference, "irods-fnal").unwrap();
+        sys.run().unwrap();
+        sys.replicate_group(&du, "osgGridFtpGroup").unwrap();
+        sys.run().unwrap();
+        let n = sys.tb.store.replicas(&du).len();
+        assert!((5..=9).contains(&n), "replicas={n}");
+    }
+
+    #[test]
+    fn pilot_walltime_requeues_running_cus() {
+        let mut sys = SimSystem::new(paper_testbed(), 21);
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        // Two pilots; kill the first early so its CUs re-queue and
+        // finish on the second.
+        let p1 = sys.submit_pilot("lonestar", 16, "lonestar-scratch").unwrap();
+        sys.submit_pilot("stampede", 16, "stampede-scratch").unwrap();
+        for chunk_descr in &ens.read_chunks {
+            let chunk = sys.upload_du(chunk_descr, "lonestar-scratch").unwrap();
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk];
+            sys.submit_cu(cud).unwrap();
+        }
+        // Kill p1 shortly after it activates (well before task end).
+        sys.kill_pilot_at(&p1, 3000.0);
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(sys.state.count_cu_state(CuState::Done), 4);
+        assert_eq!(sys.state.pilots[&p1].state, PilotState::Done);
+        // At least one CU must have ended up on the surviving pilot.
+        let on_stampede = sys
+            .metrics
+            .cu_records
+            .iter()
+            .filter(|r| r.machine == "stampede")
+            .count();
+        assert!(on_stampede >= 1, "records={:?}", sys.metrics.distribution());
+    }
+
+    #[test]
+    fn expired_pilot_releases_cores() {
+        let mut sys = SimSystem::new(paper_testbed(), 22);
+        let p = sys.submit_pilot("lonestar", 64, "lonestar-scratch").unwrap();
+        assert_eq!(sys.tb.batch.used("lonestar"), 64);
+        sys.kill_pilot_at(&p, 10_000.0);
+        sys.run().unwrap();
+        assert_eq!(sys.tb.batch.used("lonestar"), 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed| {
+            let mut sys = SimSystem::new(paper_testbed(), seed);
+            let ens = small_ensemble();
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+            sys.run().unwrap();
+            sys.submit_pilot("lonestar", 16, "lonestar-scratch").unwrap();
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du];
+            sys.submit_cu(cud).unwrap();
+            sys.run().unwrap();
+            sys.makespan()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+}

@@ -1,0 +1,38 @@
+//! Table 1: the data-cyberinfrastructure capability matrix, generated
+//! from the adaptor registry (so the table can never drift from the
+//! implementation).
+
+use crate::metrics::Table;
+use crate::storage::capability_matrix;
+
+pub fn run() -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 1: Data-Cyberinfrastructure (from adaptor registry)",
+        &["backend", "scheme", "namespace", "replication", "3rd-party", "infrastructures"],
+    );
+    for cap in capability_matrix() {
+        t.row(vec![
+            cap.kind.to_string(),
+            cap.scheme.to_string(),
+            cap.namespace.to_string(),
+            if cap.replication { "yes" } else { "no" }.into(),
+            if cap.third_party { "yes" } else { "no" }.into(),
+            cap.infrastructures.join(", "),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_lists_every_backend() {
+        let tables = super::run().unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].rows.len(), 6);
+        let rendered = tables[0].render();
+        for backend in ["SSH", "SRM/GridFTP", "iRODS", "Globus Online", "S3"] {
+            assert!(rendered.contains(backend), "missing {backend}");
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Failure injection.
+//!
+//! The paper reports that failures are routine at scale: "the frequency
+//! of failures was very high … while the osgGridFtpGroup group consisted
+//! of 9 nodes, the average number of resources that actually received a
+//! replica was ∼7.5" (Fig. 8), and Fig. 11/13 runs saw wall-time limits
+//! and transfer errors. This module centralizes the knobs for injecting
+//! those faults deterministically.
+
+use crate::rng::Rng;
+
+/// Retry policy for transfers ("Globus Online e.g. automatically
+/// restarts failed transfers").
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    /// Base backoff in seconds, doubled per attempt.
+    pub backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_s: 5.0 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, backoff_s: 0.0 }
+    }
+
+    pub fn backoff_for(&self, attempt: u32) -> f64 {
+        self.backoff_s * 2f64.powi(attempt as i32)
+    }
+}
+
+/// Outcome of a transfer attempt sequence under a failure rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttemptOutcome {
+    pub succeeded: bool,
+    pub attempts: u32,
+    /// Extra seconds spent on failed attempts + backoff.
+    pub wasted_s: f64,
+}
+
+/// Roll a sequence of attempts: each fails independently with
+/// `failure_rate`; a failed attempt wastes a fraction of the nominal
+/// transfer time (we model failures as detected mid-flight, on average
+/// halfway) plus backoff.
+pub fn attempt_transfer(
+    rng: &mut Rng,
+    failure_rate: f64,
+    nominal_s: f64,
+    policy: RetryPolicy,
+) -> AttemptOutcome {
+    let mut wasted = 0.0;
+    for attempt in 0..policy.max_attempts {
+        if !rng.chance(failure_rate) {
+            return AttemptOutcome { succeeded: true, attempts: attempt + 1, wasted_s: wasted };
+        }
+        wasted += nominal_s * rng.range_f64(0.1, 0.9) + policy.backoff_for(attempt);
+    }
+    AttemptOutcome { succeeded: false, attempts: policy.max_attempts, wasted_s: wasted }
+}
+
+/// Scheduled coordination-store outages (start, duration) in sim time.
+#[derive(Debug, Clone, Default)]
+pub struct OutagePlan {
+    pub windows: Vec<(f64, f64)>,
+}
+
+impl OutagePlan {
+    pub fn is_down_at(&self, t: f64) -> bool {
+        self.windows.iter().any(|(s, d)| t >= *s && t < s + d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_always_succeeds_first_try() {
+        let mut rng = Rng::new(1);
+        let o = attempt_transfer(&mut rng, 0.0, 100.0, RetryPolicy::default());
+        assert_eq!(o, AttemptOutcome { succeeded: true, attempts: 1, wasted_s: 0.0 });
+    }
+
+    #[test]
+    fn certain_failure_exhausts_attempts() {
+        let mut rng = Rng::new(2);
+        let o = attempt_transfer(&mut rng, 1.0, 100.0, RetryPolicy::default());
+        assert!(!o.succeeded);
+        assert_eq!(o.attempts, 3);
+        assert!(o.wasted_s > 0.0);
+    }
+
+    #[test]
+    fn failure_rate_matches_fig8_partial_replication() {
+        // With per-attempt failure 0.17 and no retries, a 9-node group
+        // should succeed on ≈7.5 nodes on average.
+        let mut rng = Rng::new(3);
+        let trials = 20_000;
+        let mut successes = 0u32;
+        for _ in 0..trials {
+            if attempt_transfer(&mut rng, 0.17, 60.0, RetryPolicy::none()).succeeded {
+                successes += 1;
+            }
+        }
+        let per_group = 9.0 * successes as f64 / trials as f64;
+        assert!((per_group - 7.5).abs() < 0.2, "per_group={per_group}");
+    }
+
+    #[test]
+    fn backoff_doubles() {
+        let p = RetryPolicy { max_attempts: 4, backoff_s: 2.0 };
+        assert_eq!(p.backoff_for(0), 2.0);
+        assert_eq!(p.backoff_for(2), 8.0);
+    }
+
+    #[test]
+    fn outage_windows() {
+        let plan = OutagePlan { windows: vec![(10.0, 5.0), (100.0, 1.0)] };
+        assert!(!plan.is_down_at(9.9));
+        assert!(plan.is_down_at(10.0));
+        assert!(plan.is_down_at(14.9));
+        assert!(!plan.is_down_at(15.0));
+        assert!(plan.is_down_at(100.5));
+    }
+}

@@ -1,0 +1,74 @@
+//! # Pilot-Data: An Abstraction for Distributed Data
+//!
+//! A full reimplementation of the Pilot-Data system (Luckow, Santcroos,
+//! Zebrowski, Jha — 2013): a unified abstraction for distributed **data**
+//! management in conjunction with Pilot-Jobs, including
+//!
+//! * the Pilot-API (`service`): [`service::PilotComputeService`],
+//!   [`service::PilotDataService`], [`service::ComputeDataService`];
+//! * Pilot-Computes and Pilot-Data (`pilot`) with pull-based agents
+//!   coordinated through a from-scratch Redis-equivalent (`coordination`);
+//! * Data-Units / Compute-Units (`unit`) and the affinity-aware
+//!   scheduler of §5 (`scheduler`) over a hierarchical resource topology
+//!   (`topology`);
+//! * storage adaptors for the paper's backends — SSH, SRM/GridFTP, iRODS,
+//!   Globus Online, S3, local filesystem (`storage`);
+//! * a deterministic discrete-event simulation of production DCI
+//!   (machines, batch queues, shared networks: `simtime`, `batch`, `net`)
+//!   substituting for XSEDE/OSG;
+//! * a PJRT runtime (`runtime`) executing the AOT-compiled JAX/Pallas
+//!   alignment pipeline (`python/compile`) so Compute-Units run *real*
+//!   compute in local mode — python never on the task path;
+//! * experiment drivers regenerating every figure and table of the
+//!   paper's evaluation (`experiments`).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod util;
+pub mod json;
+pub mod rng;
+pub mod prop;
+pub mod simtime;
+pub mod topology;
+pub mod net;
+pub mod batch;
+pub mod storage;
+pub mod coordination;
+pub mod faults;
+pub mod unit;
+pub mod pilot;
+pub mod scheduler;
+pub mod service;
+pub mod runtime;
+pub mod workload;
+pub mod metrics;
+pub mod config;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Convenience constructor: a `file://` Pilot-Data-Description rooted
+/// under `dir/name` with the given affinity label (local mode).
+pub fn pd_desc(
+    dir: &std::path::Path,
+    name: &str,
+    affinity: &str,
+) -> pilot::PilotDataDescription {
+    pilot::PilotDataDescription {
+        service_url: format!("file://localhost{}/{name}", dir.display()),
+        size: util::Bytes::gb(1),
+        affinity: Some(topology::Label::new(affinity)),
+    }
+}
+
+/// Convenience constructor: a local (`fork://`) Pilot-Compute-Description.
+pub fn pilot_desc(affinity: &str) -> pilot::PilotComputeDescription {
+    pilot::PilotComputeDescription {
+        service_url: "fork://localhost".into(),
+        cores: 2,
+        walltime_s: 3600.0,
+        affinity: Some(topology::Label::new(affinity)),
+    }
+}

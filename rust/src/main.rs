@@ -1,0 +1,155 @@
+//! pilot-data CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   exp <id|all> [--seed N] [--results DIR]   regenerate a paper table/figure
+//!   align [--artifacts DIR] [--reads N]       run the local alignment demo
+//!   capabilities                              print the adaptor registry
+//!
+//! Examples:
+//!   pilot-data exp fig9 --seed 42
+//!   pilot-data exp all
+//!   pilot-data align --reads 256
+
+use pilot_data::experiments;
+use pilot_data::util::cli::Args;
+use std::path::PathBuf;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: pilot-data <command>\n\
+         \n\
+         commands:\n\
+           exp <id|all> [--seed N] [--results DIR]   regenerate table1 / fig7..fig13\n\
+           align [--artifacts DIR] [--reads N] [--pilots N]  local-mode alignment demo\n\
+           capabilities                               print storage adaptor registry\n"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["verbose"])?;
+    match args.positional.first().map(String::as_str) {
+        Some("exp") => cmd_exp(&args),
+        Some("align") => cmd_align(&args),
+        Some("capabilities") => {
+            for t in experiments::table1::run()? {
+                println!("{}", t.render());
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let Some(id) = args.positional.get(1).map(String::as_str) else {
+        eprintln!("exp: missing experiment id");
+        usage()
+    };
+    let seed: u64 = args.opt_parse_or("seed", 42)?;
+    let results = PathBuf::from(args.opt_or("results", "results"));
+    let ids: Vec<&str> = if id == "all" { experiments::ALL.to_vec() } else { vec![id] };
+    for id in ids {
+        eprintln!("== running {id} (seed {seed}) ==");
+        let t0 = std::time::Instant::now();
+        let tables = experiments::run(id, seed)?;
+        experiments::report(id, &tables, &results)?;
+        eprintln!("   ({id} took {:.2}s wall)", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+/// Local-mode end-to-end alignment: real pilots (threads), real files,
+/// real PJRT compute. A compact version of examples/genome_pipeline.rs.
+fn cmd_align(args: &Args) -> anyhow::Result<()> {
+    use pilot_data::rng::Rng;
+    use pilot_data::runtime::{payload, AlignExecutor, RuntimeServer};
+    use pilot_data::service::PilotSystem;
+    use pilot_data::workload;
+    use std::sync::Arc;
+
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    let n_reads: usize = args.opt_parse_or("reads", 256)?;
+    let n_pilots: u32 = args.opt_parse_or("pilots", 2)?;
+
+    let server = RuntimeServer::spawn(&artifacts)?;
+    let info = server.handle().info("model.hlo.txt")?;
+    let workdir = std::env::temp_dir().join(format!("pd-align-{}", std::process::id()));
+    let sys = PilotSystem::new(&workdir, Arc::new(AlignExecutor::new(&server, "model.hlo.txt")));
+
+    // Synthetic genome + reads; windows tile the genome with overlap
+    // Lw - L so every read is fully contained in some window, and
+    // reads start on the seed kernel's 4-base shift lattice.
+    let mut rng = Rng::new(args.opt_parse_or("seed", 7)?);
+    let stride = info.lw - info.l;
+    let genome_len = (info.w - 1) * stride + info.lw;
+    let genome = workload::synth_genome(&mut rng, genome_len);
+    let windows = workload::extract_windows(&genome, info.lw, stride);
+    let windows = &windows[..info.w];
+    let (reads, positions) =
+        workload::sample_reads_lattice(&mut rng, &genome, n_reads, info.l, 0.02, 4);
+
+    let pds = sys.data_service();
+    let cds = sys.compute_data_service();
+    let pcs = sys.compute_service();
+    let pd = pds.create_pilot_data(pilot_data::pd_desc(&workdir, "pd0", "local/site-a"))?;
+    for i in 0..n_pilots {
+        pcs.create_pilot(pilot_data::pilot_desc(&format!("local/p{i}")))?;
+    }
+
+    let windows_payload =
+        payload::encode(info.w as u32, info.lw as u32, &workload::encode_f32(windows));
+    let t0 = std::time::Instant::now();
+    let chunk = (n_reads / n_pilots.max(1) as usize).max(1);
+    let mut outs = Vec::new();
+    for (i, reads_chunk) in reads.chunks(chunk).enumerate() {
+        let reads_payload = payload::encode(
+            reads_chunk.len() as u32,
+            info.l as u32,
+            &workload::encode_f32(reads_chunk),
+        );
+        let input = cds.put_data_unit(
+            &format!("chunk{i}"),
+            &[("reads.pd1", &reads_payload), ("windows.pd1", &windows_payload)],
+            &pd,
+        )?;
+        let output = cds.submit_data_unit(
+            pilot_data::unit::DataUnitDescription {
+                name: format!("out{i}"),
+                files: vec![],
+                affinity: None,
+            },
+            &pd,
+        )?;
+        outs.push(output.clone());
+        cds.submit_compute_unit(pilot_data::unit::ComputeUnitDescription {
+            executable: "pjrt:align".into(),
+            cores: 1,
+            input_data: vec![input],
+            output_data: vec![output],
+            ..Default::default()
+        })?;
+    }
+    sys.wait_all(std::time::Duration::from_secs(600))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Gather and score.
+    let mut best_windows = Vec::new();
+    for out in &outs {
+        let csv = String::from_utf8(cds.fetch(out, "scores.csv")?)?;
+        for line in csv.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            best_windows.push(cols[1].parse::<f32>()?);
+        }
+    }
+    let hit = workload::window_hit_rate(&positions, &best_windows, info.lw, stride, info.l);
+    println!(
+        "aligned {n_reads} reads across {n_pilots} pilots in {wall:.2}s \
+         ({:.0} reads/s), window hit rate {:.1}%",
+        n_reads as f64 / wall,
+        hit * 100.0
+    );
+    sys.shutdown();
+    let _ = std::fs::remove_dir_all(workdir);
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! Metrics collection and reporting: the paper's timing decomposition
+//! (T_Q, T_S, T_X, T_R, T_C, T_D — §6.1), per-CU records, run
+//! timelines (Fig. 13), plain-text tables, and CSV output.
+
+use crate::util::{fmt_secs, mean, stddev};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Per-Compute-Unit record backing Figs. 10, 12, 13.
+#[derive(Debug, Clone, Default)]
+pub struct CuRecord {
+    pub cu: String,
+    pub machine: String,
+    pub t_submitted: f64,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub staging_s: f64,
+    pub compute_s: f64,
+}
+
+impl CuRecord {
+    pub fn total_s(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// Timeline event kinds for the Fig. 13 time series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimelineEvent {
+    PilotActive,
+    CuStarted,
+    CuFinished,
+}
+
+/// An experiment run's recorded facts.
+#[derive(Debug, Default, Clone)]
+pub struct RunMetrics {
+    pub cu_records: Vec<CuRecord>,
+    pub timeline: Vec<(f64, String, TimelineEvent)>,
+    /// Named scalar results (T_D, T_R, makespan, …).
+    pub scalars: BTreeMap<String, f64>,
+}
+
+impl RunMetrics {
+    pub fn record_cu(&mut self, rec: CuRecord) {
+        self.cu_records.push(rec);
+    }
+
+    pub fn mark(&mut self, t: f64, who: &str, ev: TimelineEvent) {
+        self.timeline.push((t, who.to_string(), ev));
+    }
+
+    pub fn set_scalar(&mut self, name: &str, value: f64) {
+        self.scalars.insert(name.to_string(), value);
+    }
+
+    pub fn scalar(&self, name: &str) -> f64 {
+        *self.scalars.get(name).unwrap_or(&f64::NAN)
+    }
+
+    /// Makespan across CU records (first submission to last finish).
+    pub fn makespan(&self) -> f64 {
+        let start = self
+            .cu_records
+            .iter()
+            .map(|r| r.t_submitted)
+            .fold(f64::INFINITY, f64::min);
+        let end = self.cu_records.iter().map(|r| r.t_end).fold(0.0, f64::max);
+        if start.is_finite() {
+            (end - start).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// CUs per machine (Fig. 12 lower panel).
+    pub fn distribution(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for r in &self.cu_records {
+            *m.entry(r.machine.clone()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Mean ± std of CU compute times per machine.
+    pub fn runtime_stats(&self) -> BTreeMap<String, (f64, f64)> {
+        let mut per: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for r in &self.cu_records {
+            per.entry(r.machine.clone()).or_default().push(r.compute_s);
+        }
+        per.into_iter().map(|(k, v)| (k, (mean(&v), stddev(&v)))).collect()
+    }
+
+    /// Sampled "active CUs" curve: at each event timestamp, how many
+    /// CUs are running (Fig. 13's Active CUs series).
+    pub fn active_curve(&self) -> Vec<(f64, i64)> {
+        let mut deltas: Vec<(f64, i64)> = Vec::new();
+        for (t, _, ev) in &self.timeline {
+            match ev {
+                TimelineEvent::CuStarted => deltas.push((*t, 1)),
+                TimelineEvent::CuFinished => deltas.push((*t, -1)),
+                _ => {}
+            }
+        }
+        deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out = Vec::new();
+        let mut level = 0i64;
+        for (t, d) in deltas {
+            level += d;
+            out.push((t, level));
+        }
+        out
+    }
+
+    /// Cumulative finished-CU curve per machine (Fig. 13 series).
+    pub fn finished_curve(&self, machine: &str) -> Vec<(f64, u64)> {
+        let mut ts: Vec<f64> = self
+            .timeline
+            .iter()
+            .filter(|(_, who, ev)| *ev == TimelineEvent::CuFinished && who == machine)
+            .map(|(t, _, _)| *t)
+            .collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts.into_iter().enumerate().map(|(i, t)| (t, i as u64 + 1)).collect()
+    }
+}
+
+/// Fixed-width plain-text table (the "prints the same rows the paper
+/// reports" output device).
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// CSV form (same cells, comma-joined with quoting).
+    pub fn to_csv(&self) -> String {
+        fn esc(s: &str) -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write the CSV next to the experiment outputs.
+    pub fn save_csv(&self, dir: &std::path::Path, name: &str) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Convenience: seconds cell.
+pub fn secs_cell(s: f64) -> String {
+    format!("{} ({s:.0}s)", fmt_secs(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(machine: &str, sub: f64, start: f64, end: f64, staging: f64) -> CuRecord {
+        CuRecord {
+            cu: crate::util::next_id("cu"),
+            machine: machine.into(),
+            t_submitted: sub,
+            t_start: start,
+            t_end: end,
+            staging_s: staging,
+            compute_s: end - start - staging,
+        }
+    }
+
+    #[test]
+    fn makespan_and_distribution() {
+        let mut m = RunMetrics::default();
+        m.record_cu(rec("lonestar", 0.0, 10.0, 110.0, 20.0));
+        m.record_cu(rec("lonestar", 0.0, 15.0, 95.0, 10.0));
+        m.record_cu(rec("stampede", 5.0, 50.0, 300.0, 100.0));
+        assert_eq!(m.makespan(), 300.0);
+        let d = m.distribution();
+        assert_eq!(d["lonestar"], 2);
+        assert_eq!(d["stampede"], 1);
+        let stats = m.runtime_stats();
+        assert!((stats["lonestar"].0 - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.makespan(), 0.0);
+        assert!(m.distribution().is_empty());
+        assert!(m.scalar("absent").is_nan());
+    }
+
+    #[test]
+    fn active_curve_tracks_concurrency() {
+        let mut m = RunMetrics::default();
+        m.mark(1.0, "a", TimelineEvent::CuStarted);
+        m.mark(2.0, "b", TimelineEvent::CuStarted);
+        m.mark(3.0, "a", TimelineEvent::CuFinished);
+        m.mark(4.0, "b", TimelineEvent::CuFinished);
+        let curve = m.active_curve();
+        assert_eq!(curve, vec![(1.0, 1), (2.0, 2), (3.0, 1), (4.0, 0)]);
+    }
+
+    #[test]
+    fn finished_curve_is_cumulative_per_machine() {
+        let mut m = RunMetrics::default();
+        m.mark(5.0, "lonestar", TimelineEvent::CuFinished);
+        m.mark(9.0, "lonestar", TimelineEvent::CuFinished);
+        m.mark(7.0, "stampede", TimelineEvent::CuFinished);
+        assert_eq!(m.finished_curve("lonestar"), vec![(5.0, 1), (9.0, 2)]);
+        assert_eq!(m.finished_curve("stampede"), vec![(7.0, 1)]);
+        assert!(m.finished_curve("trestles").is_empty());
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv_quotes() {
+        let mut t = Table::new("Fig 7", &["backend", "T_S (s)"]);
+        t.row(vec!["SRM/GridFTP".into(), "12.5".into()]);
+        t.row(vec!["a,b".into(), "1".into()]);
+        let rendered = t.render();
+        assert!(rendered.contains("== Fig 7 =="));
+        assert!(rendered.contains("SRM/GridFTP"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_saves_to_disk() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into()]);
+        let dir = std::env::temp_dir().join(format!("pd-metrics-{}", std::process::id()));
+        let p = t.save_csv(&dir, "test").unwrap();
+        assert!(std::fs::read_to_string(p).unwrap().contains("1"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,266 @@
+//! Shared-network bandwidth model for the DCI simulation.
+//!
+//! Transfers between two topology labels traverse the tree path between
+//! them (up to the lowest common ancestor and back down). Every node has
+//! an *uplink* with finite capacity; concurrent flows crossing a link
+//! share its capacity equally (a coarse max–min model, in the spirit of
+//! OptorSim-class grid simulators). The paper observes that "network
+//! bandwidth within cluster and even more in WAN settings are
+//! oversubscribed by a significant factor" — captured here by giving
+//! WAN-level uplinks much lower capacity than intra-site links.
+//!
+//! Effective bandwidth is sampled when a flow starts (fixed for the flow
+//! lifetime), which keeps the event count linear in the number of
+//! transfers while preserving the contention *shape*: many concurrent
+//! wide-area transfers slow each other down.
+
+use crate::topology::Label;
+use crate::util::Bytes;
+use std::collections::BTreeMap;
+
+/// Bandwidth in bytes/second.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Bandwidth(pub f64);
+
+impl Bandwidth {
+    /// Megabytes per second.
+    pub fn mbps(mb: f64) -> Bandwidth {
+        Bandwidth(mb * 1024.0 * 1024.0)
+    }
+    /// Gigabits per second (network convention).
+    pub fn gbit(g: f64) -> Bandwidth {
+        Bandwidth(g * 1e9 / 8.0)
+    }
+    pub fn bytes_per_sec(self) -> f64 {
+        self.0
+    }
+}
+
+/// The network: per-uplink capacity and live flow counts.
+#[derive(Debug)]
+pub struct Network {
+    /// Capacity of the uplink above each node (keyed by full label path).
+    uplink: BTreeMap<String, Bandwidth>,
+    /// Default capacity for unlisted uplinks.
+    default_uplink: Option<Bandwidth>,
+    /// Live flows per link.
+    flows: BTreeMap<String, u32>,
+    /// Loopback bandwidth when src == dst (shared-FS copy / local link).
+    loopback: Bandwidth,
+}
+
+/// Handle for a started flow; pass back to [`Network::end_flow`].
+#[derive(Debug, Clone)]
+pub struct FlowHandle {
+    links: Vec<String>,
+}
+
+impl Network {
+    pub fn new() -> Network {
+        Network {
+            uplink: BTreeMap::new(),
+            default_uplink: Some(Bandwidth::mbps(100.0)),
+            flows: BTreeMap::new(),
+            loopback: Bandwidth::mbps(400.0),
+        }
+    }
+
+    pub fn set_uplink(&mut self, label: &str, bw: Bandwidth) {
+        self.uplink.insert(Label::new(label).0, bw);
+    }
+
+    pub fn set_default_uplink(&mut self, bw: Bandwidth) {
+        self.default_uplink = Some(bw);
+    }
+
+    pub fn set_loopback(&mut self, bw: Bandwidth) {
+        self.loopback = bw;
+    }
+
+    fn capacity(&self, link: &str) -> Bandwidth {
+        self.uplink
+            .get(link)
+            .copied()
+            .or(self.default_uplink)
+            .unwrap_or(Bandwidth::mbps(100.0))
+    }
+
+    /// Links (child-label keyed) crossed between `a` and `b`.
+    pub fn path(&self, a: &Label, b: &Label) -> Vec<String> {
+        let ac = a.components();
+        let bc = b.components();
+        let common = a.common_prefix_len(b);
+        let mut links = Vec::new();
+        for depth in common..ac.len() {
+            links.push(ac[..=depth].join("/"));
+        }
+        for depth in common..bc.len() {
+            links.push(bc[..=depth].join("/"));
+        }
+        links
+    }
+
+    /// Effective bandwidth a new flow from `a` to `b` would get right
+    /// now: the bottleneck link's fair share.
+    pub fn effective_bandwidth(&self, a: &Label, b: &Label) -> Bandwidth {
+        let links = self.path(a, b);
+        if links.is_empty() {
+            return self.loopback;
+        }
+        let mut bw = f64::INFINITY;
+        for link in &links {
+            let cap = self.capacity(link).0;
+            let sharers = (*self.flows.get(link).unwrap_or(&0) + 1) as f64;
+            bw = bw.min(cap / sharers);
+        }
+        Bandwidth(bw)
+    }
+
+    /// Register a flow on the path; returns its handle.
+    pub fn begin_flow(&mut self, a: &Label, b: &Label) -> FlowHandle {
+        let links = self.path(a, b);
+        for link in &links {
+            *self.flows.entry(link.clone()).or_insert(0) += 1;
+        }
+        FlowHandle { links }
+    }
+
+    pub fn end_flow(&mut self, h: &FlowHandle) {
+        for link in &h.links {
+            if let Some(n) = self.flows.get_mut(link) {
+                *n = n.saturating_sub(1);
+                if *n == 0 {
+                    self.flows.remove(link);
+                }
+            }
+        }
+    }
+
+    /// Live flow count on the busiest link of the path (diagnostics).
+    pub fn congestion(&self, a: &Label, b: &Label) -> u32 {
+        self.path(a, b)
+            .iter()
+            .map(|l| *self.flows.get(l).unwrap_or(&0))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Transfer duration for `size` at the *current* effective bandwidth
+    /// (excluding protocol overheads, which the storage adaptor adds).
+    pub fn transfer_secs(&self, a: &Label, b: &Label, size: Bytes) -> f64 {
+        let bw = self.effective_bandwidth(a, b).0;
+        if bw <= 0.0 {
+            return f64::INFINITY;
+        }
+        size.as_f64() / bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(s: &str) -> Label {
+        Label::new(s)
+    }
+
+    #[test]
+    fn bandwidth_units() {
+        assert_eq!(Bandwidth::mbps(1.0).0, 1024.0 * 1024.0);
+        assert!((Bandwidth::gbit(8.0).0 - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn loopback_when_same_label() {
+        let net = Network::new();
+        let a = l("xsede/tacc/lonestar");
+        assert!(net.path(&a, &a).is_empty());
+        assert_eq!(net.effective_bandwidth(&a, &a).0, net.loopback.0);
+    }
+
+    #[test]
+    fn path_crosses_expected_links() {
+        let net = Network::new();
+        let p = net.path(&l("xsede/tacc/lonestar"), &l("osg/purdue"));
+        assert_eq!(
+            p,
+            vec!["xsede", "xsede/tacc", "xsede/tacc/lonestar", "osg", "osg/purdue"]
+        );
+    }
+
+    #[test]
+    fn bottleneck_is_min_capacity() {
+        let mut net = Network::new();
+        net.set_uplink("xsede", Bandwidth::mbps(1000.0));
+        net.set_uplink("xsede/tacc", Bandwidth::mbps(1000.0));
+        net.set_uplink("xsede/tacc/lonestar", Bandwidth::mbps(1000.0));
+        net.set_uplink("osg", Bandwidth::mbps(10.0)); // WAN bottleneck
+        net.set_uplink("osg/purdue", Bandwidth::mbps(1000.0));
+        let bw = net.effective_bandwidth(&l("xsede/tacc/lonestar"), &l("osg/purdue"));
+        assert_eq!(bw.0, Bandwidth::mbps(10.0).0);
+    }
+
+    #[test]
+    fn concurrent_flows_share_fairly() {
+        let mut net = Network::new();
+        net.set_default_uplink(Bandwidth::mbps(100.0));
+        let a = l("site-a/m1");
+        let b = l("site-b/m2");
+        let solo = net.effective_bandwidth(&a, &b).0;
+        let h1 = net.begin_flow(&a, &b);
+        let with_one = net.effective_bandwidth(&a, &b).0;
+        let _h2 = net.begin_flow(&a, &b);
+        let with_two = net.effective_bandwidth(&a, &b).0;
+        assert!((with_one - solo / 2.0).abs() < 1.0);
+        assert!((with_two - solo / 3.0).abs() < 1.0);
+        net.end_flow(&h1);
+        assert!((net.effective_bandwidth(&a, &b).0 - solo / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn transfer_secs_scales_linearly() {
+        let mut net = Network::new();
+        net.set_default_uplink(Bandwidth::mbps(100.0));
+        let a = l("x/m1");
+        let b = l("y/m2");
+        let t1 = net.transfer_secs(&a, &b, Bytes::gb(1));
+        let t2 = net.transfer_secs(&a, &b, Bytes::gb(2));
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        // 1 GiB at 100 MiB/s ≈ 10.24 s.
+        assert!((t1 - 10.24).abs() < 0.1, "t1={t1}");
+    }
+
+    #[test]
+    fn flow_counts_never_negative_property() {
+        crate::prop::check_default(
+            |rng| {
+                // Random interleaving of begin/end operations.
+                (0..crate::prop::gen::usize_in(rng, 1, 40))
+                    .map(|_| rng.chance(0.6))
+                    .collect::<Vec<bool>>()
+            },
+            |ops| {
+                let mut net = Network::new();
+                let a = l("p/q");
+                let b = l("r/s");
+                let mut handles = Vec::new();
+                for begin in ops {
+                    if *begin {
+                        handles.push(net.begin_flow(&a, &b));
+                    } else if let Some(h) = handles.pop() {
+                        net.end_flow(&h);
+                    }
+                }
+                // Draining all handles must restore zero congestion.
+                for h in handles.drain(..) {
+                    net.end_flow(&h);
+                }
+                if net.congestion(&a, &b) == 0 {
+                    Ok(())
+                } else {
+                    Err("residual flows".into())
+                }
+            },
+        );
+    }
+}

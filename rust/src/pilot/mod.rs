@@ -1,0 +1,419 @@
+//! Pilot-Computes, Pilot-Data, and the Pilot-Manager state.
+//!
+//! A **Pilot-Compute** marshals a set of resource slots acquired from a
+//! local resource manager; a **Pilot-Data** represents a physical
+//! storage resource used as a logical container for dynamic data
+//! placement (paper §4.3.1). The **Pilot-Manager** is the central
+//! coordinator orchestrating a set of decentral **Pilot-Agents**
+//! (Fig. 1); all shared state lives in the coordination store so that
+//! managers and applications can disconnect and re-connect.
+
+use crate::coordination::{keys, Store};
+use crate::storage::PdUrl;
+use crate::topology::Label;
+use crate::unit::{ComputeUnit, CuState, DataUnit};
+use crate::util::Bytes;
+use std::collections::BTreeMap;
+
+/// Pilot lifecycle (both compute and data pilots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PilotState {
+    New,
+    /// Submitted to the resource manager, waiting in the batch queue.
+    Queued,
+    /// Agent is up and pulling work / storage is provisioned.
+    Active,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl PilotState {
+    pub fn can_transition(self, to: PilotState) -> bool {
+        use PilotState::*;
+        matches!(
+            (self, to),
+            (New, Queued)
+                | (New, Failed)
+                | (Queued, Active)
+                | (Queued, Failed)
+                | (Queued, Canceled)
+                | (Active, Done)
+                | (Active, Failed)
+                | (Active, Canceled)
+        )
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, PilotState::Done | PilotState::Failed | PilotState::Canceled)
+    }
+}
+
+/// Pilot-Compute-Description: resource-manager URL, slot count,
+/// walltime, and the user-assigned affinity label that maps the pilot
+/// into the logical resource topology (§5).
+#[derive(Debug, Clone, Default)]
+pub struct PilotComputeDescription {
+    /// Resource manager endpoint, e.g. `batch://lonestar` in sim mode
+    /// or `fork://localhost` in local mode.
+    pub service_url: String,
+    pub cores: u32,
+    pub walltime_s: f64,
+    pub affinity: Option<Label>,
+}
+
+impl PilotComputeDescription {
+    pub fn machine(&self) -> anyhow::Result<String> {
+        let (_, rest) = self
+            .service_url
+            .split_once("://")
+            .ok_or_else(|| anyhow::anyhow!("bad service url '{}'", self.service_url))?;
+        Ok(rest.split('/').next().unwrap_or(rest).to_string())
+    }
+}
+
+/// A Pilot-Compute instance.
+#[derive(Debug, Clone)]
+pub struct PilotCompute {
+    pub id: String,
+    pub description: PilotComputeDescription,
+    pub state: PilotState,
+    /// Slots currently occupied by running CUs.
+    pub busy_slots: u32,
+    /// Time the pilot became Active (for walltime accounting).
+    pub t_active: f64,
+}
+
+impl PilotCompute {
+    pub fn new(description: PilotComputeDescription) -> PilotCompute {
+        PilotCompute {
+            id: crate::util::next_id("pilot"),
+            description,
+            state: PilotState::New,
+            busy_slots: 0,
+            t_active: 0.0,
+        }
+    }
+
+    pub fn affinity(&self) -> Label {
+        self.description.affinity.clone().unwrap_or_else(|| Label::new(""))
+    }
+
+    pub fn free_slots(&self) -> u32 {
+        self.description.cores.saturating_sub(self.busy_slots)
+    }
+
+    pub fn has_free_slot(&self, cores: u32) -> bool {
+        self.state == PilotState::Active && self.free_slots() >= cores.max(1)
+    }
+
+    pub fn transition(&mut self, to: PilotState) -> anyhow::Result<()> {
+        if self.state == to {
+            return Ok(());
+        }
+        if !self.state.can_transition(to) {
+            anyhow::bail!("pilot {}: illegal transition {:?} -> {to:?}", self.id, self.state);
+        }
+        self.state = to;
+        Ok(())
+    }
+}
+
+/// Pilot-Data-Description: backend URL (scheme selects the adaptor),
+/// capacity, and affinity label.
+#[derive(Debug, Clone, Default)]
+pub struct PilotDataDescription {
+    pub service_url: String,
+    pub size: Bytes,
+    pub affinity: Option<Label>,
+}
+
+/// A Pilot-Data instance: a storage allocation acting as a logical
+/// container for Data-Unit replicas.
+#[derive(Debug, Clone)]
+pub struct PilotData {
+    pub id: String,
+    pub description: PilotDataDescription,
+    pub state: PilotState,
+    pub url: PdUrl,
+}
+
+impl PilotData {
+    pub fn new(description: PilotDataDescription) -> anyhow::Result<PilotData> {
+        let url = PdUrl::parse(&description.service_url)?;
+        Ok(PilotData {
+            id: crate::util::next_id("pd"),
+            description,
+            state: PilotState::New,
+            url,
+        })
+    }
+
+    pub fn affinity(&self) -> Label {
+        self.description.affinity.clone().unwrap_or_else(|| Label::new(""))
+    }
+
+    pub fn transition(&mut self, to: PilotState) -> anyhow::Result<()> {
+        if self.state == to {
+            return Ok(());
+        }
+        if !self.state.can_transition(to) {
+            anyhow::bail!("pd {}: illegal transition {:?} -> {to:?}", self.id, self.state);
+        }
+        self.state = to;
+        Ok(())
+    }
+}
+
+/// The Pilot-Manager's in-memory view of the world. Mirrors the
+/// coordination store; [`ManagerState::checkpoint`] writes the durable
+/// copy and [`ManagerState::reconnect`] rebuilds entity state from it.
+#[derive(Default)]
+pub struct ManagerState {
+    pub pilots: BTreeMap<String, PilotCompute>,
+    pub pilot_datas: BTreeMap<String, PilotData>,
+    pub cus: BTreeMap<String, ComputeUnit>,
+    pub dus: BTreeMap<String, DataUnit>,
+}
+
+impl ManagerState {
+    pub fn new() -> ManagerState {
+        ManagerState::default()
+    }
+
+    pub fn add_pilot(&mut self, p: PilotCompute) -> String {
+        let id = p.id.clone();
+        self.pilots.insert(id.clone(), p);
+        id
+    }
+
+    pub fn add_pd(&mut self, pd: PilotData) -> String {
+        let id = pd.id.clone();
+        self.pilot_datas.insert(id.clone(), pd);
+        id
+    }
+
+    pub fn add_cu(&mut self, cu: ComputeUnit) -> String {
+        let id = cu.id.clone();
+        self.cus.insert(id.clone(), cu);
+        id
+    }
+
+    pub fn add_du(&mut self, du: DataUnit) -> String {
+        let id = du.id.clone();
+        self.dus.insert(id.clone(), du);
+        id
+    }
+
+    pub fn active_pilots(&self) -> impl Iterator<Item = &PilotCompute> {
+        self.pilots.values().filter(|p| p.state == PilotState::Active)
+    }
+
+    /// All CUs in a terminal state?
+    pub fn workload_finished(&self) -> bool {
+        self.cus.values().all(|c| c.state.is_terminal())
+    }
+
+    pub fn count_cu_state(&self, state: CuState) -> usize {
+        self.cus.values().filter(|c| c.state == state).count()
+    }
+
+    /// Write pilot/CU/DU state to the coordination store (the paper's
+    /// "complete state of BigJob is maintained in Redis").
+    pub fn checkpoint(&self, store: &Store) -> anyhow::Result<()> {
+        for p in self.pilots.values() {
+            let k = keys::pilot(&p.id);
+            store.hset(&k, "state", &format!("{:?}", p.state))?;
+            store.hset(&k, "cores", &p.description.cores.to_string())?;
+            store.hset(&k, "affinity", &p.affinity().0)?;
+            store.hset(&k, "busy", &p.busy_slots.to_string())?;
+        }
+        for c in self.cus.values() {
+            let k = keys::cu(&c.id);
+            store.hset(&k, "state", c.state.name())?;
+            store.hset(&k, "pilot", c.pilot.as_deref().unwrap_or(""))?;
+            store.hset(&k, "descr", &c.description.to_json().to_string_compact())?;
+        }
+        for d in self.dus.values() {
+            let k = keys::du(&d.id);
+            store.hset(&k, "state", d.state.name())?;
+            store.hset(&k, "descr", &d.description.to_json().to_string_compact())?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild CU descriptions and states from the store after a
+    /// manager restart ("re-connect to a Pilot and Compute-Unit via a
+    /// unique URL").
+    pub fn reconnect(store: &Store) -> anyhow::Result<ManagerState> {
+        let mut st = ManagerState::new();
+        for key in store.keys_with_prefix("pd:cu:")? {
+            let h = store.hgetall(&key)?;
+            let id = key.trim_start_matches("pd:cu:").to_string();
+            let descr = h
+                .get("descr")
+                .ok_or_else(|| anyhow::anyhow!("cu {id} missing descr"))?;
+            let description =
+                crate::unit::ComputeUnitDescription::from_json(&crate::json::parse(descr)?)?;
+            let mut cu = ComputeUnit::new(description);
+            cu.id = id.clone();
+            cu.state = match h.get("state").map(String::as_str) {
+                Some("Queued") => CuState::Queued,
+                Some("StagingInput") => CuState::StagingInput,
+                Some("Running") => CuState::Running,
+                Some("StagingOutput") => CuState::StagingOutput,
+                Some("Done") => CuState::Done,
+                Some("Failed") => CuState::Failed,
+                Some("Unschedulable") => CuState::Unschedulable,
+                _ => CuState::New,
+            };
+            cu.pilot = h.get("pilot").filter(|s| !s.is_empty()).cloned();
+            st.cus.insert(cu.id.clone(), cu);
+        }
+        for key in store.keys_with_prefix("pd:du:")? {
+            let h = store.hgetall(&key)?;
+            let id = key.trim_start_matches("pd:du:").to_string();
+            if let Some(descr) = h.get("descr") {
+                let description =
+                    crate::unit::DataUnitDescription::from_json(&crate::json::parse(descr)?)?;
+                let mut du = DataUnit::new(description);
+                du.id = id.clone();
+                st.dus.insert(id, du);
+            }
+        }
+        Ok(st)
+    }
+}
+
+/// Pure agent-side pull policy: which queue to poll, in order. Each
+/// Pilot-Agent "generally pulls from two queues: its agent-specific
+/// queue and a global queue" (§4.2).
+pub fn agent_pull(store: &Store, pilot_id: &str) -> Result<Option<String>, crate::coordination::StoreError> {
+    if let Some(cu) = store.lpop(&keys::pilot_queue(pilot_id))? {
+        return Ok(Some(cu));
+    }
+    store.lpop(keys::GLOBAL_QUEUE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unit::ComputeUnitDescription;
+
+    fn pcd(machine: &str, cores: u32, affinity: &str) -> PilotComputeDescription {
+        PilotComputeDescription {
+            service_url: format!("batch://{machine}"),
+            cores,
+            walltime_s: 3600.0,
+            affinity: Some(Label::new(affinity)),
+        }
+    }
+
+    #[test]
+    fn pilot_lifecycle() {
+        let mut p = PilotCompute::new(pcd("lonestar", 24, "xsede/tacc/lonestar"));
+        assert_eq!(p.state, PilotState::New);
+        p.transition(PilotState::Queued).unwrap();
+        p.transition(PilotState::Active).unwrap();
+        assert!(p.has_free_slot(1));
+        p.transition(PilotState::Done).unwrap();
+        assert!(p.transition(PilotState::Active).is_err());
+    }
+
+    #[test]
+    fn machine_extracted_from_service_url() {
+        assert_eq!(pcd("stampede", 1, "x").machine().unwrap(), "stampede");
+        let bad = PilotComputeDescription { service_url: "nope".into(), ..Default::default() };
+        assert!(bad.machine().is_err());
+    }
+
+    #[test]
+    fn slot_accounting() {
+        let mut p = PilotCompute::new(pcd("lonestar", 4, "x"));
+        p.state = PilotState::Active;
+        assert_eq!(p.free_slots(), 4);
+        p.busy_slots = 3;
+        assert!(p.has_free_slot(1));
+        assert!(!p.has_free_slot(2));
+        p.busy_slots = 4;
+        assert!(!p.has_free_slot(1));
+    }
+
+    #[test]
+    fn inactive_pilot_has_no_slots() {
+        let mut p = PilotCompute::new(pcd("lonestar", 4, "x"));
+        assert!(!p.has_free_slot(1)); // New
+        p.state = PilotState::Queued;
+        assert!(!p.has_free_slot(1));
+    }
+
+    #[test]
+    fn pilot_data_from_url() {
+        let pd = PilotData::new(PilotDataDescription {
+            service_url: "irods://fermilab/osgGridFtpGroup".into(),
+            size: Bytes::gb(100),
+            affinity: Some(Label::new("osg/fermilab")),
+        })
+        .unwrap();
+        assert_eq!(pd.url.kind, crate::storage::BackendKind::Irods);
+        assert!(PilotData::new(PilotDataDescription {
+            service_url: "???".into(),
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn agent_prefers_own_queue_then_global() {
+        let store = Store::new();
+        store.rpush(keys::GLOBAL_QUEUE, "cu-g").unwrap();
+        store.rpush(&keys::pilot_queue("p1"), "cu-own").unwrap();
+        assert_eq!(agent_pull(&store, "p1").unwrap(), Some("cu-own".into()));
+        assert_eq!(agent_pull(&store, "p1").unwrap(), Some("cu-g".into()));
+        assert_eq!(agent_pull(&store, "p1").unwrap(), None);
+    }
+
+    #[test]
+    fn checkpoint_reconnect_roundtrip() {
+        let mut st = ManagerState::new();
+        let cu = ComputeUnit::new(ComputeUnitDescription {
+            executable: "/bin/bwa".into(),
+            cores: 2,
+            input_data: vec!["du-9".into()],
+            ..Default::default()
+        });
+        let cu_id = cu.id.clone();
+        st.add_cu(cu);
+        st.cus.get_mut(&cu_id).unwrap().transition(CuState::Queued).unwrap();
+        let du = DataUnit::new(crate::unit::DataUnitDescription {
+            name: "d".into(),
+            files: vec![crate::unit::FileRef::sized("f", Bytes::mb(1))],
+            affinity: None,
+        });
+        st.add_du(du);
+        st.add_pilot(PilotCompute::new(pcd("lonestar", 8, "xsede")));
+
+        let store = Store::new();
+        st.checkpoint(&store).unwrap();
+
+        let back = ManagerState::reconnect(&store).unwrap();
+        assert_eq!(back.cus.len(), 1);
+        let cu2 = &back.cus[&cu_id];
+        assert_eq!(cu2.state, CuState::Queued);
+        assert_eq!(cu2.description.executable, "/bin/bwa");
+        assert_eq!(back.dus.len(), 1);
+    }
+
+    #[test]
+    fn workload_finished_logic() {
+        let mut st = ManagerState::new();
+        assert!(st.workload_finished()); // vacuous
+        let cu = ComputeUnit::new(Default::default());
+        let id = st.add_cu(cu);
+        assert!(!st.workload_finished());
+        let c = st.cus.get_mut(&id).unwrap();
+        c.state = CuState::Done;
+        assert!(st.workload_finished());
+        assert_eq!(st.count_cu_state(CuState::Done), 1);
+    }
+}

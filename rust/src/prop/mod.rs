@@ -1,0 +1,131 @@
+//! Minimal property-based testing harness (proptest is unavailable
+//! offline).
+//!
+//! [`check`] runs a property over many seeded random cases; on failure it
+//! reports the case index and seed so the failure is exactly
+//! reproducible (`Rng::new(seed)` regenerates the input). Generators are
+//! plain closures over [`Rng`], composed with ordinary Rust.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xB16_B00B5 }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the
+/// reproducing seed on the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {case_seed:#x}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Shorthand: run with default config.
+pub fn check_default<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(Config::default(), gen, prop)
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo).max(1) as u64) as usize
+    }
+
+    pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn ident(rng: &mut Rng, prefix: &str) -> String {
+        format!("{prefix}{}", rng.below(1_000_000))
+    }
+
+    /// Random ASCII string (printable subset including escapes-relevant
+    /// chars) — used e.g. by the JSON roundtrip property.
+    pub fn ascii_string(rng: &mut Rng, max_len: usize) -> String {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                let c = rng.below(96) as u8 + 0x20;
+                c as char
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default(
+            |rng| gen::vec_f64(rng, 10, -5.0, 5.0),
+            |v| {
+                if v.len() == 10 {
+                    Ok(())
+                } else {
+                    Err("len".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check_default(
+            |rng| rng.below(100),
+            |n| if *n < 1000 { Err(format!("forced failure n={n}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_property() {
+        use crate::json::{parse, Json};
+        check_default(
+            |rng| {
+                let mut obj = Json::obj();
+                for i in 0..gen::usize_in(rng, 0, 6) {
+                    obj = obj.set(
+                        &format!("k{i}"),
+                        Json::Str(gen::ascii_string(rng, 24)),
+                    );
+                }
+                obj
+            },
+            |v| {
+                let back = parse(&v.to_string_compact()).map_err(|e| e.to_string())?;
+                if &back == v {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip mismatch: {back}"))
+                }
+            },
+        );
+    }
+}

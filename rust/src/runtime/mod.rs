@@ -1,0 +1,422 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and
+//! executes them from the rust hot path.
+//!
+//! `make artifacts` runs python once at build time; afterwards the rust
+//! binary is self-contained: `HloModuleProto::from_text_file` parses
+//! the HLO text, the PJRT CPU client compiles it, and Compute-Units
+//! execute the alignment pipeline through [`Runtime::align`] with no
+//! python anywhere on the task path.
+
+use crate::json::Json;
+use crate::service::{ExecResult, Executor};
+use crate::unit::ComputeUnitDescription;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shape info for one artifact, from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub entry: String,
+    /// (B, L, W, Lw) for align artifacts.
+    pub b: usize,
+    pub l: usize,
+    pub w: usize,
+    pub lw: usize,
+}
+
+/// A loaded, compiled artifact set.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: Mutex<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open an artifact directory (compiles lazily on first use).
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Runtime> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first: {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = crate::json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(arts)) = manifest.get("artifacts") {
+            for (file, info) in arts {
+                let shapes = info.get("shapes").cloned().unwrap_or(Json::obj());
+                artifacts.insert(
+                    file.clone(),
+                    ArtifactInfo {
+                        file: file.clone(),
+                        entry: info.str_field("entry").unwrap_or("?").to_string(),
+                        b: shapes.u64_field_or("B", 0) as usize,
+                        l: shapes.u64_field_or("L", 0) as usize,
+                        w: shapes.u64_field_or("W", 0) as usize,
+                        lw: shapes.u64_field_or("Lw", 0) as usize,
+                    },
+                );
+            }
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        Ok(Runtime { client, exes: Mutex::new(BTreeMap::new()), artifacts, dir })
+    }
+
+    /// Artifact info by file name.
+    pub fn info(&self, name: &str) -> anyhow::Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))
+    }
+
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an align artifact: `reads` is row-major (B, L) f32 base
+    /// codes, `windows` (W, Lw). Returns (scores, best_window), each of
+    /// length B.
+    pub fn align(
+        &self,
+        name: &str,
+        reads: &[f32],
+        windows: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let info = self.info(name)?.clone();
+        anyhow::ensure!(
+            reads.len() == info.b * info.l,
+            "reads len {} != B*L {}",
+            reads.len(),
+            info.b * info.l
+        );
+        anyhow::ensure!(
+            windows.len() == info.w * info.lw,
+            "windows len {} != W*Lw {}",
+            windows.len(),
+            info.w * info.lw
+        );
+        self.ensure_compiled(name)?;
+        let exes = self.exes.lock().unwrap();
+        let exe = &exes[name];
+        let x = xla::Literal::vec1(reads).reshape(&[info.b as i64, info.l as i64])?;
+        let y = xla::Literal::vec1(windows).reshape(&[info.w as i64, info.lw as i64])?;
+        let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
+        let (scores, best) = result.to_tuple2()?;
+        Ok((scores.to_vec::<f32>()?, best.to_vec::<f32>()?))
+    }
+
+    /// Execute the seed artifact: one-hot inputs, (B, W) output.
+    pub fn seed(
+        &self,
+        name: &str,
+        reads_oh: &[f32],
+        windows_oh: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let info = self.info(name)?.clone();
+        self.ensure_compiled(name)?;
+        let exes = self.exes.lock().unwrap();
+        let exe = &exes[name];
+        let x = xla::Literal::vec1(reads_oh).reshape(&[info.b as i64, info.l as i64, 4])?;
+        let y = xla::Literal::vec1(windows_oh).reshape(&[info.w as i64, info.l as i64, 4])?;
+        let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// File format helpers for read/window payloads inside Data-Units:
+/// little-endian f32 arrays with a 16-byte header (magic, rows, cols).
+pub mod payload {
+    pub const MAGIC: u32 = 0x50443146; // "PD1F"
+
+    pub fn encode(rows: u32, cols: u32, data: &[f32]) -> Vec<u8> {
+        assert_eq!(data.len(), rows as usize * cols as usize);
+        let mut out = Vec::with_capacity(16 + data.len() * 4);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&rows.to_le_bytes());
+        out.extend_from_slice(&cols.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<(u32, u32, Vec<f32>)> {
+        anyhow::ensure!(bytes.len() >= 16, "payload too short");
+        let word = |i: usize| u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+        anyhow::ensure!(word(0) == MAGIC, "bad payload magic");
+        let (rows, cols) = (word(4), word(8));
+        let n = rows as usize * cols as usize;
+        anyhow::ensure!(bytes.len() == 16 + n * 4, "payload size mismatch");
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(f32::from_le_bytes(bytes[16 + i * 4..20 + i * 4].try_into().unwrap()));
+        }
+        Ok((rows, cols, data))
+    }
+}
+
+/// PJRT handles are `Rc`-based and must stay on one thread; the
+/// [`RuntimeServer`] owns the [`Runtime`] on a dedicated inference
+/// thread and serves align requests over a channel. [`RuntimeHandle`]
+/// is the `Send + Sync` client the pilot agents use — one compiled
+/// executable per model variant, shared by every Compute-Unit.
+enum RtReq {
+    Align {
+        name: String,
+        reads: Vec<f32>,
+        windows: Vec<f32>,
+        resp: std::sync::mpsc::Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Info {
+        name: String,
+        resp: std::sync::mpsc::Sender<anyhow::Result<ArtifactInfo>>,
+    },
+    Shutdown,
+}
+
+/// Client handle to the runtime server thread (cloneable, Send+Sync).
+pub struct RuntimeHandle {
+    tx: Mutex<std::sync::mpsc::Sender<RtReq>>,
+}
+
+/// The server: owns the PJRT client + executables on its own thread.
+pub struct RuntimeServer {
+    join: Option<std::thread::JoinHandle<()>>,
+    tx: std::sync::mpsc::Sender<RtReq>,
+}
+
+impl RuntimeServer {
+    /// Spawn the inference thread; fails fast if the artifact dir is
+    /// missing.
+    pub fn spawn(dir: impl Into<PathBuf>) -> anyhow::Result<RuntimeServer> {
+        let dir = dir.into();
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        let (tx, rx) = std::sync::mpsc::channel::<RtReq>();
+        let join = std::thread::Builder::new().name("pjrt-runtime".into()).spawn(move || {
+            let rt = match Runtime::open(&dir) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    // Fail every request with the open error.
+                    while let Ok(req) = rx.recv() {
+                        match req {
+                            RtReq::Align { resp, .. } => {
+                                let _ = resp.send(Err(anyhow::anyhow!("runtime open failed: {e}")));
+                            }
+                            RtReq::Info { resp, .. } => {
+                                let _ = resp.send(Err(anyhow::anyhow!("runtime open failed: {e}")));
+                            }
+                            RtReq::Shutdown => break,
+                        }
+                    }
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    RtReq::Align { name, reads, windows, resp } => {
+                        let _ = resp.send(rt.align(&name, &reads, &windows));
+                    }
+                    RtReq::Info { name, resp } => {
+                        let _ = resp.send(rt.info(&name).cloned());
+                    }
+                    RtReq::Shutdown => break,
+                }
+            }
+        })?;
+        Ok(RuntimeServer { join: Some(join), tx })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle { tx: Mutex::new(self.tx.clone()) }
+    }
+}
+
+impl Drop for RuntimeServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RtReq::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    pub fn align(
+        &self,
+        name: &str,
+        reads: Vec<f32>,
+        windows: Vec<f32>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (resp, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(RtReq::Align { name: name.to_string(), reads, windows, resp })
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime thread dropped request"))?
+    }
+
+    pub fn info(&self, name: &str) -> anyhow::Result<ArtifactInfo> {
+        let (resp, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(RtReq::Info { name: name.to_string(), resp })
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime thread dropped request"))?
+    }
+}
+
+/// The local-mode CU executor: reads `reads.pd1` and `windows.pd1`
+/// from the sandbox, batches through the align artifact, writes
+/// `scores.csv` (read_index, best_window, score).
+pub struct AlignExecutor {
+    handle: RuntimeHandle,
+    artifact: String,
+}
+
+impl AlignExecutor {
+    pub fn new(server: &RuntimeServer, artifact: &str) -> AlignExecutor {
+        AlignExecutor { handle: server.handle(), artifact: artifact.to_string() }
+    }
+}
+
+impl Executor for AlignExecutor {
+    fn execute(&self, _cu: &ComputeUnitDescription, sandbox: &Path) -> anyhow::Result<ExecResult> {
+        let t0 = Instant::now();
+        let reads_bytes = std::fs::read(sandbox.join("reads.pd1"))?;
+        let windows_bytes = std::fs::read(sandbox.join("windows.pd1"))?;
+        let (n_reads, l, reads) = payload::decode(&reads_bytes)?;
+        let (w, lw, windows) = payload::decode(&windows_bytes)?;
+        let info = self.handle.info(&self.artifact)?;
+        anyhow::ensure!(l as usize == info.l, "read length {l} != artifact L {}", info.l);
+        anyhow::ensure!(w as usize == info.w && lw as usize == info.lw, "window shape mismatch");
+
+        let mut csv = String::from("read,best_window,score\n");
+        let bl = info.b * info.l;
+        let mut idx = 0usize;
+        while idx < n_reads as usize {
+            // Assemble one batch, padding the tail with the last read.
+            let mut batch = vec![0f32; bl];
+            for r in 0..info.b {
+                let src = (idx + r).min(n_reads as usize - 1);
+                batch[r * info.l..(r + 1) * info.l]
+                    .copy_from_slice(&reads[src * info.l..(src + 1) * info.l]);
+            }
+            let (scores, best) = self.handle.align(&self.artifact, batch, windows.clone())?;
+            for r in 0..info.b {
+                let global = idx + r;
+                if global >= n_reads as usize {
+                    break;
+                }
+                csv.push_str(&format!("{global},{},{}\n", best[r] as i64, scores[r]));
+            }
+            idx += info.b;
+        }
+        std::fs::write(sandbox.join("scores.csv"), &csv)?;
+        Ok(ExecResult { stdout: format!("aligned {n_reads} reads"), compute_s: t0.elapsed().as_secs_f64() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let bytes = payload::encode(3, 4, &data);
+        let (r, c, back) = payload::decode(&bytes).unwrap();
+        assert_eq!((r, c), (3, 4));
+        assert_eq!(back, data);
+        assert!(payload::decode(&bytes[..10]).is_err());
+        let mut corrupt = bytes.clone();
+        corrupt[0] ^= 0xFF;
+        assert!(payload::decode(&corrupt).is_err());
+    }
+
+    #[test]
+    fn runtime_loads_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let info = rt.info("align_small.hlo.txt").unwrap();
+        assert_eq!((info.b, info.l, info.w, info.lw), (8, 32, 8, 64));
+        assert!(rt.info("nope.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn align_small_executes_and_finds_planted_read() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let info = rt.info("align_small.hlo.txt").unwrap().clone();
+        let mut rng = crate::rng::Rng::new(11);
+        let reads: Vec<f32> =
+            (0..info.b * info.l).map(|_| rng.below(4) as f32).collect();
+        let mut windows: Vec<f32> =
+            (0..info.w * info.lw).map(|_| rng.below(4) as f32).collect();
+        // Plant read r into window r's prefix.
+        for r in 0..info.b.min(info.w) {
+            for i in 0..info.l {
+                windows[r * info.lw + i] = reads[r * info.l + i];
+            }
+        }
+        let (scores, best) = rt.align("align_small.hlo.txt", &reads, &windows).unwrap();
+        for r in 0..info.b {
+            assert_eq!(best[r] as usize, r, "read {r} picked window {}", best[r]);
+            // Perfect match: MATCH * L = 2 * 32.
+            assert!((scores[r] - 64.0).abs() < 1e-3, "score {}", scores[r]);
+        }
+    }
+
+    #[test]
+    fn align_rejects_bad_shapes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        assert!(rt.align("align_small.hlo.txt", &[0.0; 10], &[0.0; 10]).is_err());
+    }
+}

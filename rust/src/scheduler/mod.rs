@@ -1,0 +1,502 @@
+//! Workload scheduling — the affinity-aware data/compute co-placement
+//! scheduler of paper §5, plus baseline strategies used by the ablation
+//! benches.
+//!
+//! The affinity scheduler implements the paper's algorithm verbatim:
+//!
+//! 1. find the Pilot that best fulfils the CU's requested affinity and
+//!    the location of its input data;
+//! 2. if such a Pilot exists and has an empty slot, place the CU in
+//!    that pilot's queue;
+//! 3. if delayed scheduling is active, wait `n` seconds and re-check
+//!    whether the preferred Pilot has a free slot;
+//! 4. otherwise place the CU in the global queue, to be pulled by the
+//!    first Pilot with an available slot.
+//!
+//! The scheduler is a plug-able component ([`Scheduler`] trait) "and
+//! can be replaced if desired".
+
+use crate::pilot::ManagerState;
+use crate::topology::{Label, Topology};
+use crate::unit::ComputeUnit;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Where the scheduler decided to put a CU.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Placement {
+    /// Enqueue on a specific pilot's agent queue.
+    Pilot(String),
+    /// Enqueue on the global queue (any agent may pull it).
+    Global,
+    /// Delayed scheduling: re-evaluate after this many seconds, hoping
+    /// the preferred (data-local) pilot frees a slot.
+    Delay(f64),
+    /// No pilot can ever satisfy the CU's constraints.
+    Unschedulable(String),
+}
+
+/// Read-only context handed to the scheduler: the manager state, the
+/// physical location labels of every DU's replicas, and current
+/// per-pilot queue depths (so placement accounts for work already
+/// bound to a pilot, not just its busy slots).
+pub struct SchedContext<'a> {
+    pub topo: &'a Topology,
+    pub state: &'a ManagerState,
+    /// DU id -> labels of Pilot-Data currently holding a full replica.
+    pub du_locations: &'a BTreeMap<String, Vec<Label>>,
+    /// Pilot id -> CUs waiting in its agent-specific queue.
+    pub queue_depth: &'a BTreeMap<String, usize>,
+}
+
+impl<'a> SchedContext<'a> {
+    /// Effective open capacity of a pilot in cores: free slots minus
+    /// cores spoken for by CUs already queued on it (approximated with
+    /// the current CU's core count).
+    fn effective_slots(&self, p: &crate::pilot::PilotCompute, cu_cores: u32) -> i64 {
+        let queued = *self.queue_depth.get(&p.id).unwrap_or(&0) as i64;
+        p.free_slots() as i64 - queued * cu_cores.max(1) as i64
+    }
+
+    /// Pilots eligible for this CU: alive (not terminal) and within the
+    /// CU's affinity constraint, with enough total cores.
+    fn eligible_pilots(&self, cu: &ComputeUnit) -> Vec<&crate::pilot::PilotCompute> {
+        self.state
+            .pilots
+            .values()
+            .filter(|p| !p.state.is_terminal())
+            .filter(|p| p.description.cores >= cu.description.cores.max(1))
+            .filter(|p| match &cu.description.affinity {
+                Some(constraint) => p.affinity().within(constraint),
+                None => true,
+            })
+            .collect()
+    }
+
+    /// Data-affinity score of running `cu` on a pilot at `label`:
+    /// size-weighted affinity to the closest replica of each input DU.
+    /// Higher is better; DUs with no replica yet contribute 0.
+    pub fn data_score(&self, cu: &ComputeUnit, label: &Label) -> f64 {
+        let mut score = 0.0;
+        for du in &cu.description.input_data {
+            let Some(locs) = self.du_locations.get(du) else { continue };
+            let best = locs
+                .iter()
+                .map(|l| self.topo.affinity(label, l))
+                .fold(0.0, f64::max);
+            let size = self
+                .state
+                .dus
+                .get(du)
+                .map(|d| d.size().as_f64())
+                .unwrap_or(1.0)
+                .max(1.0);
+            score += best * size.ln_1p();
+        }
+        score
+    }
+}
+
+/// Pluggable scheduling strategy.
+pub trait Scheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn place(&self, cu: &ComputeUnit, ctx: &SchedContext) -> Placement;
+}
+
+/// The paper's affinity-aware scheduler (§5) with optional delayed
+/// scheduling.
+pub struct AffinityScheduler {
+    /// Seconds to wait for a slot on the preferred pilot before falling
+    /// back to the global queue. `None` disables delayed scheduling.
+    pub delay_s: Option<f64>,
+    /// Consecutive delays already spent per CU (so delay is bounded).
+    delays_spent: Mutex<BTreeMap<String, u32>>,
+    /// Max delay rounds before giving up on locality.
+    pub max_delay_rounds: u32,
+}
+
+impl AffinityScheduler {
+    pub fn new(delay_s: Option<f64>) -> AffinityScheduler {
+        AffinityScheduler { delay_s, delays_spent: Mutex::new(BTreeMap::new()), max_delay_rounds: 3 }
+    }
+}
+
+impl Scheduler for AffinityScheduler {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn place(&self, cu: &ComputeUnit, ctx: &SchedContext) -> Placement {
+        let eligible = ctx.eligible_pilots(cu);
+        if eligible.is_empty() {
+            return match &cu.description.affinity {
+                Some(c) => Placement::Unschedulable(format!(
+                    "no pilot within affinity constraint '{c}' can fit {} cores",
+                    cu.description.cores
+                )),
+                None => Placement::Unschedulable(format!(
+                    "no pilot can fit {} cores",
+                    cu.description.cores
+                )),
+            };
+        }
+
+        // Step 1: rank by data score, tie-break by effective open
+        // capacity (free slots minus queued work) then id for
+        // determinism.
+        let mut ranked: Vec<_> = eligible
+            .iter()
+            .map(|p| (ctx.data_score(cu, &p.affinity()), *p))
+            .collect();
+        let cores = cu.description.cores.max(1);
+        ranked.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap()
+                .then(ctx.effective_slots(b.1, cores).cmp(&ctx.effective_slots(a.1, cores)))
+                .then(a.1.id.cmp(&b.1.id))
+        });
+        let (best_score, best) = (&ranked[0].0, ranked[0].1);
+
+        // No data affinity anywhere and no constraint: let the global
+        // queue load-balance (step 4 fast path).
+        if *best_score <= 0.0 && cu.description.affinity.is_none() {
+            return Placement::Global;
+        }
+
+        // Step 2: preferred pilot is active with an open slot that is
+        // not already spoken for by queued work.
+        if best.has_free_slot(cu.description.cores)
+            && ctx.effective_slots(best, cores) >= cores as i64
+        {
+            self.delays_spent.lock().unwrap().remove(&cu.id);
+            return Placement::Pilot(best.id.clone());
+        }
+
+        // Step 3: delayed scheduling.
+        if let Some(d) = self.delay_s {
+            let mut spent = self.delays_spent.lock().unwrap();
+            let n = spent.entry(cu.id.clone()).or_insert(0);
+            if *n < self.max_delay_rounds {
+                *n += 1;
+                return Placement::Delay(d);
+            }
+        }
+
+        // Step 4: global queue (or pin to the constrained subtree's
+        // least-loaded pilot when a constraint exists — the global
+        // queue is unconstrained).
+        if cu.description.affinity.is_some() {
+            return Placement::Pilot(best.id.clone());
+        }
+        Placement::Global
+    }
+}
+
+/// Baseline: ignore data locality entirely; first pilot with a free
+/// slot, else the global queue.
+pub struct DataUnawareScheduler;
+
+impl Scheduler for DataUnawareScheduler {
+    fn name(&self) -> &'static str {
+        "data-unaware"
+    }
+
+    fn place(&self, cu: &ComputeUnit, ctx: &SchedContext) -> Placement {
+        for p in ctx.eligible_pilots(cu) {
+            if p.has_free_slot(cu.description.cores) {
+                return Placement::Pilot(p.id.clone());
+            }
+        }
+        if ctx.eligible_pilots(cu).is_empty() {
+            return Placement::Unschedulable("no eligible pilot".into());
+        }
+        Placement::Global
+    }
+}
+
+/// Baseline: cycle through eligible pilots regardless of load or data.
+pub struct RoundRobinScheduler {
+    counter: AtomicUsize,
+}
+
+impl Default for RoundRobinScheduler {
+    fn default() -> Self {
+        RoundRobinScheduler { counter: AtomicUsize::new(0) }
+    }
+}
+
+impl Scheduler for RoundRobinScheduler {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&self, cu: &ComputeUnit, ctx: &SchedContext) -> Placement {
+        let eligible = ctx.eligible_pilots(cu);
+        if eligible.is_empty() {
+            return Placement::Unschedulable("no eligible pilot".into());
+        }
+        let i = self.counter.fetch_add(1, Ordering::Relaxed) % eligible.len();
+        Placement::Pilot(eligible[i].id.clone())
+    }
+}
+
+/// Baseline: uniformly random eligible pilot (seeded, deterministic).
+pub struct RandomScheduler {
+    rng: Mutex<crate::rng::Rng>,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> RandomScheduler {
+        RandomScheduler { rng: Mutex::new(crate::rng::Rng::new(seed)) }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn place(&self, cu: &ComputeUnit, ctx: &SchedContext) -> Placement {
+        let eligible = ctx.eligible_pilots(cu);
+        if eligible.is_empty() {
+            return Placement::Unschedulable("no eligible pilot".into());
+        }
+        let i = self.rng.lock().unwrap().below(eligible.len() as u64) as usize;
+        Placement::Pilot(eligible[i].id.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pilot::{PilotCompute, PilotComputeDescription, PilotState};
+    use crate::unit::{ComputeUnit, ComputeUnitDescription, DataUnit, DataUnitDescription, FileRef};
+    use crate::util::Bytes;
+
+    fn mk_pilot(st: &mut ManagerState, cores: u32, affinity: &str, state: PilotState) -> String {
+        let mut p = PilotCompute::new(PilotComputeDescription {
+            service_url: "batch://m".into(),
+            cores,
+            walltime_s: 1e6,
+            affinity: Some(Label::new(affinity)),
+        });
+        p.state = state;
+        st.add_pilot(p)
+    }
+
+    fn mk_du(st: &mut ManagerState, size: Bytes) -> String {
+        st.add_du(DataUnit::new(DataUnitDescription {
+            name: "d".into(),
+            files: vec![FileRef::sized("f", size)],
+            affinity: None,
+        }))
+    }
+
+    fn mk_cu(input: Vec<String>, affinity: Option<&str>) -> ComputeUnit {
+        ComputeUnit::new(ComputeUnitDescription {
+            executable: "x".into(),
+            cores: 1,
+            input_data: input,
+            affinity: affinity.map(Label::new),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn affinity_scheduler_prefers_data_local_pilot() {
+        let mut st = ManagerState::new();
+        let p_far = mk_pilot(&mut st, 8, "osg/cornell", PilotState::Active);
+        let p_near = mk_pilot(&mut st, 8, "xsede/tacc/lonestar", PilotState::Active);
+        let du = mk_du(&mut st, Bytes::gb(8));
+        let mut locs = BTreeMap::new();
+        locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let cu = mk_cu(vec![du], None);
+        let sched = AffinityScheduler::new(None);
+        assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(p_near.clone()));
+        let _ = p_far;
+    }
+
+    #[test]
+    fn no_data_no_constraint_goes_global() {
+        let mut st = ManagerState::new();
+        mk_pilot(&mut st, 8, "osg/cornell", PilotState::Active);
+        let topo = Topology::new();
+        let locs = BTreeMap::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let sched = AffinityScheduler::new(None);
+        assert_eq!(sched.place(&mk_cu(vec![], None), &ctx), Placement::Global);
+    }
+
+    #[test]
+    fn constraint_filters_pilots() {
+        let mut st = ManagerState::new();
+        mk_pilot(&mut st, 8, "osg/cornell", PilotState::Active);
+        let p_x = mk_pilot(&mut st, 8, "xsede/tacc/lonestar", PilotState::Active);
+        let topo = Topology::new();
+        let locs = BTreeMap::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let sched = AffinityScheduler::new(None);
+        let cu = mk_cu(vec![], Some("xsede"));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(p_x));
+        let impossible = mk_cu(vec![], Some("ec2/us-west"));
+        assert!(matches!(sched.place(&impossible, &ctx), Placement::Unschedulable(_)));
+    }
+
+    #[test]
+    fn oversized_cu_is_unschedulable() {
+        let mut st = ManagerState::new();
+        mk_pilot(&mut st, 2, "x", PilotState::Active);
+        let topo = Topology::new();
+        let locs = BTreeMap::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let mut cu = mk_cu(vec![], None);
+        cu.description.cores = 16;
+        assert!(matches!(
+            AffinityScheduler::new(None).place(&cu, &ctx),
+            Placement::Unschedulable(_)
+        ));
+    }
+
+    #[test]
+    fn delayed_scheduling_waits_then_gives_up() {
+        let mut st = ManagerState::new();
+        let near = mk_pilot(&mut st, 1, "xsede/tacc/lonestar", PilotState::Active);
+        st.pilots.get_mut(&near).unwrap().busy_slots = 1; // full
+        mk_pilot(&mut st, 8, "osg/cornell", PilotState::Active);
+        let du = mk_du(&mut st, Bytes::gb(4));
+        let mut locs = BTreeMap::new();
+        locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let sched = AffinityScheduler::new(Some(30.0));
+        let cu = mk_cu(vec![du], None);
+        // max_delay_rounds delays, then fall back to global.
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(30.0));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(30.0));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(30.0));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Global);
+    }
+
+    #[test]
+    fn data_unaware_takes_first_free() {
+        let mut st = ManagerState::new();
+        let a = mk_pilot(&mut st, 2, "a", PilotState::Active);
+        mk_pilot(&mut st, 2, "b", PilotState::Active);
+        let topo = Topology::new();
+        let locs = BTreeMap::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let cu = mk_cu(vec![], None);
+        assert_eq!(DataUnawareScheduler.place(&cu, &ctx), Placement::Pilot(a));
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut st = ManagerState::new();
+        let a = mk_pilot(&mut st, 2, "a", PilotState::Active);
+        let b = mk_pilot(&mut st, 2, "b", PilotState::Active);
+        let topo = Topology::new();
+        let locs = BTreeMap::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let sched = RoundRobinScheduler::default();
+        let cu = mk_cu(vec![], None);
+        let p1 = sched.place(&cu, &ctx);
+        let p2 = sched.place(&cu, &ctx);
+        let p3 = sched.place(&cu, &ctx);
+        assert_ne!(p1, p2);
+        assert_eq!(p1, p3);
+        assert!(matches!(p1, Placement::Pilot(ref x) if *x == a || *x == b));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let mut st = ManagerState::new();
+        for i in 0..5 {
+            mk_pilot(&mut st, 2, &format!("site{i}"), PilotState::Active);
+        }
+        let topo = Topology::new();
+        let locs = BTreeMap::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let cu = mk_cu(vec![], None);
+        let seq = |seed| {
+            let s = RandomScheduler::new(seed);
+            (0..10).map(|_| s.place(&cu, &ctx)).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(9), seq(9));
+        assert_ne!(seq(9), seq(10));
+    }
+
+    #[test]
+    fn scheduler_placement_property_every_cu_gets_decision() {
+        crate::prop::check_default(
+            |rng| {
+                // Random pilots + random CUs; property: place() never
+                // panics and returns Pilot only for existing pilots.
+                let n_pilots = crate::prop::gen::usize_in(rng, 1, 6);
+                let n_cus = crate::prop::gen::usize_in(rng, 1, 10);
+                let sites = ["osg/a", "osg/b", "xsede/tacc/ls", "ec2/east"];
+                let pilots: Vec<(u32, String, bool)> = (0..n_pilots)
+                    .map(|_| {
+                        (
+                            1 + rng.below(16) as u32,
+                            rng.choose(&sites).to_string(),
+                            rng.chance(0.8),
+                        )
+                    })
+                    .collect();
+                let cus: Vec<(u32, Option<String>)> = (0..n_cus)
+                    .map(|_| {
+                        (
+                            1 + rng.below(4) as u32,
+                            if rng.chance(0.3) {
+                                Some(rng.choose(&sites).to_string())
+                            } else {
+                                None
+                            },
+                        )
+                    })
+                    .collect();
+                (pilots, cus)
+            },
+            |(pilots, cus)| {
+                let mut st = ManagerState::new();
+                for (cores, site, active) in pilots {
+                    mk_pilot(
+                        &mut st,
+                        *cores,
+                        site,
+                        if *active { PilotState::Active } else { PilotState::Queued },
+                    );
+                }
+                let topo = Topology::new();
+                let locs = BTreeMap::new();
+                let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+                let sched = AffinityScheduler::new(None);
+                for (cores, aff) in cus {
+                    let mut cu = mk_cu(vec![], aff.as_deref());
+                    cu.description.cores = *cores;
+                    match sched.place(&cu, &ctx) {
+                        Placement::Pilot(id) => {
+                            if !st.pilots.contains_key(&id) {
+                                return Err(format!("placed on unknown pilot {id}"));
+                            }
+                        }
+                        Placement::Global | Placement::Delay(_) | Placement::Unschedulable(_) => {}
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,808 @@
+//! The Pilot-API (paper §4.3): `PilotComputeService`,
+//! `PilotDataService`, and the `ComputeDataService` workload manager.
+//!
+//! This is the *local execution mode* of the system: Pilot-Computes are
+//! real agent threads on this host pulling Compute-Units from the
+//! coordination store's queues, Pilot-Data are real directories managed
+//! through the `file://` adaptor, and Compute-Units execute real work
+//! through a pluggable [`Executor`] — either a shell command or the
+//! PJRT-compiled alignment pipeline (`runtime::AlignExecutor`). Python
+//! is never on this path.
+//!
+//! The sim driver in [`crate::experiments`] reuses the same scheduler,
+//! state machines, and store against simulated time; this module is the
+//! wall-clock counterpart, which is exactly the paper's
+//! interoperability claim: one abstraction, several infrastructures.
+
+use crate::coordination::{keys, Store};
+use crate::pilot::{
+    agent_pull, ManagerState, PilotCompute, PilotComputeDescription, PilotData,
+    PilotDataDescription, PilotState,
+};
+use crate::scheduler::{AffinityScheduler, Placement, SchedContext, Scheduler};
+use crate::storage::localfs::LocalFs;
+use crate::storage::BackendKind;
+use crate::topology::{Label, Topology};
+use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUnitDescription, DuState};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Result of executing one Compute-Unit.
+#[derive(Debug, Clone, Default)]
+pub struct ExecResult {
+    pub stdout: String,
+    /// Seconds of pure execution (excluding staging).
+    pub compute_s: f64,
+}
+
+/// Pluggable CU execution engine.
+pub trait Executor: Send + Sync {
+    fn execute(&self, cu: &ComputeUnitDescription, sandbox: &Path) -> anyhow::Result<ExecResult>;
+}
+
+/// Runs the CU's executable as a real subprocess in the sandbox.
+pub struct ShellExecutor;
+
+impl Executor for ShellExecutor {
+    fn execute(&self, cu: &ComputeUnitDescription, sandbox: &Path) -> anyhow::Result<ExecResult> {
+        let t0 = Instant::now();
+        let out = std::process::Command::new(&cu.executable)
+            .args(&cu.arguments)
+            .current_dir(sandbox)
+            .output()
+            .map_err(|e| anyhow::anyhow!("spawn {}: {e}", cu.executable))?;
+        if !out.status.success() {
+            anyhow::bail!(
+                "{} exited with {}: {}",
+                cu.executable,
+                out.status,
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        Ok(ExecResult {
+            stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+            compute_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Shared system context behind the three API facades.
+pub struct PilotSystem {
+    pub store: Store,
+    pub topo: Topology,
+    state: Mutex<ManagerState>,
+    /// DU id -> (pd id, label) of each replica.
+    locations: Mutex<BTreeMap<String, Vec<(String, Label)>>>,
+    /// PD id -> local filesystem store.
+    pd_fs: Mutex<BTreeMap<String, LocalFs>>,
+    scheduler: Box<dyn Scheduler>,
+    executor: Arc<dyn Executor>,
+    workdir: PathBuf,
+    shutdown: AtomicBool,
+    agents: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PilotSystem {
+    /// Create a system with the default affinity scheduler and a given
+    /// executor. `workdir` hosts CU sandboxes.
+    pub fn new(workdir: impl Into<PathBuf>, executor: Arc<dyn Executor>) -> Arc<PilotSystem> {
+        Arc::new(PilotSystem {
+            store: Store::new(),
+            topo: Topology::new(),
+            state: Mutex::new(ManagerState::new()),
+            locations: Mutex::new(BTreeMap::new()),
+            pd_fs: Mutex::new(BTreeMap::new()),
+            scheduler: Box::new(AffinityScheduler::new(None)),
+            executor,
+            workdir: workdir.into(),
+            shutdown: AtomicBool::new(false),
+            agents: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn compute_service(self: &Arc<Self>) -> PilotComputeService {
+        PilotComputeService { sys: self.clone() }
+    }
+
+    pub fn data_service(self: &Arc<Self>) -> PilotDataService {
+        PilotDataService { sys: self.clone() }
+    }
+
+    pub fn compute_data_service(self: &Arc<Self>) -> ComputeDataService {
+        ComputeDataService { sys: self.clone() }
+    }
+
+    /// Stop all agents and join their threads.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let mut agents = self.agents.lock().unwrap();
+        for h in agents.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn cu_state(&self, cu_id: &str) -> Option<CuState> {
+        self.state.lock().unwrap().cus.get(cu_id).map(|c| c.state)
+    }
+
+    pub fn du_state(&self, du_id: &str) -> Option<DuState> {
+        self.state.lock().unwrap().dus.get(du_id).map(|d| d.state)
+    }
+
+    pub fn cu_error(&self, cu_id: &str) -> Option<String> {
+        self.state.lock().unwrap().cus.get(cu_id).and_then(|c| c.error.clone())
+    }
+
+    /// Snapshot of per-CU records (for reporting).
+    pub fn cu_records(&self) -> Vec<crate::metrics::CuRecord> {
+        let st = self.state.lock().unwrap();
+        st.cus
+            .values()
+            .map(|c| crate::metrics::CuRecord {
+                cu: c.id.clone(),
+                machine: c.pilot.clone().unwrap_or_default(),
+                t_submitted: c.t_submitted,
+                t_start: c.t_started_staging,
+                t_end: c.t_finished,
+                staging_s: c.staging_s,
+                compute_s: c.run_s(),
+            })
+            .collect()
+    }
+
+    /// Block until every submitted CU is terminal or `timeout` expires.
+    pub fn wait_all(&self, timeout: Duration) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        loop {
+            if self.state.lock().unwrap().workload_finished() {
+                return Ok(());
+            }
+            if t0.elapsed() > timeout {
+                let st = self.state.lock().unwrap();
+                let pending: Vec<String> = st
+                    .cus
+                    .values()
+                    .filter(|c| !c.state.is_terminal())
+                    .map(|c| format!("{}:{}", c.id, c.state.name()))
+                    .collect();
+                anyhow::bail!("wait_all timed out; pending: {pending:?}");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn now_s() -> f64 {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_secs_f64()
+    }
+
+    /// Stage input DUs into the sandbox; returns staged file count.
+    fn stage_inputs(&self, cu: &ComputeUnitDescription, sandbox: &Path) -> anyhow::Result<usize> {
+        let locations = self.locations.lock().unwrap();
+        let pd_fs = self.pd_fs.lock().unwrap();
+        let mut n = 0;
+        for du in &cu.input_data {
+            let locs = locations
+                .get(du)
+                .ok_or_else(|| anyhow::anyhow!("input DU '{du}' has no replica"))?;
+            let (pd_id, _) = locs
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("input DU '{du}' replica list empty"))?;
+            let fs = pd_fs
+                .get(pd_id)
+                .ok_or_else(|| anyhow::anyhow!("pd '{pd_id}' has no filesystem"))?;
+            n += fs.stage_into_sandbox(du, sandbox)?;
+        }
+        Ok(n)
+    }
+
+    /// Collect files created by the CU (anything not staged in) into
+    /// its output DUs.
+    fn stage_outputs(
+        &self,
+        cu: &ComputeUnitDescription,
+        sandbox: &Path,
+        staged: &[String],
+    ) -> anyhow::Result<()> {
+        if cu.output_data.is_empty() {
+            return Ok(());
+        }
+        let locations = self.locations.lock().unwrap();
+        let pd_fs = self.pd_fs.lock().unwrap();
+        for entry in std::fs::read_dir(sandbox)? {
+            let entry = entry?;
+            if !entry.path().is_file() {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().to_string();
+            if staged.contains(&name) {
+                continue;
+            }
+            for du in &cu.output_data {
+                let Some(locs) = locations.get(du) else { continue };
+                for (pd_id, _) in locs {
+                    if let Some(fs) = pd_fs.get(pd_id) {
+                        fs.put_file(du, &name, &entry.path())?;
+                    }
+                }
+            }
+        }
+        // Output DUs now hold at least one replica.
+        drop(locations);
+        drop(pd_fs);
+        let mut st = self.state.lock().unwrap();
+        for du in &cu.output_data {
+            if let Some(d) = st.dus.get_mut(du) {
+                if d.state == DuState::Pending {
+                    let _ = d.transition(DuState::Running);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One agent's handling of one CU id pulled from a queue.
+    fn run_cu(&self, pilot_id: &str, cu_id: &str) {
+        let descr = {
+            let mut st = self.state.lock().unwrap();
+            let Some(cu) = st.cus.get_mut(cu_id) else { return };
+            cu.pilot = Some(pilot_id.to_string());
+            cu.t_started_staging = Self::now_s();
+            let _ = cu.transition(CuState::StagingInput);
+            cu.description.clone()
+        };
+        let sandbox = self.workdir.join("sandbox").join(cu_id);
+        let result: anyhow::Result<ExecResult> = (|| {
+            std::fs::create_dir_all(&sandbox)?;
+            let t0 = Instant::now();
+            self.stage_inputs(&descr, &sandbox)?;
+            let staged: Vec<String> = std::fs::read_dir(&sandbox)?
+                .filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().to_string())
+                .collect();
+            let staging_s = t0.elapsed().as_secs_f64();
+            {
+                let mut st = self.state.lock().unwrap();
+                if let Some(cu) = st.cus.get_mut(cu_id) {
+                    cu.staging_s = staging_s;
+                    cu.t_started_run = Self::now_s();
+                    cu.transition(CuState::Running)?;
+                }
+            }
+            let res = self.executor.execute(&descr, &sandbox)?;
+            {
+                let mut st = self.state.lock().unwrap();
+                if let Some(cu) = st.cus.get_mut(cu_id) {
+                    cu.transition(CuState::StagingOutput)?;
+                }
+            }
+            self.stage_outputs(&descr, &sandbox, &staged)?;
+            Ok(res)
+        })();
+
+        let mut st = self.state.lock().unwrap();
+        if let Some(p) = st.pilots.get_mut(pilot_id) {
+            p.busy_slots = p.busy_slots.saturating_sub(descr.cores.max(1));
+        }
+        if let Some(cu) = st.cus.get_mut(cu_id) {
+            cu.t_finished = Self::now_s();
+            match result {
+                Ok(_) => {
+                    let _ = cu.transition(CuState::Done);
+                }
+                Err(e) => {
+                    cu.error = Some(e.to_string());
+                    // Force-fail regardless of intermediate state.
+                    cu.state = CuState::Failed;
+                }
+            }
+        }
+        let _ = self
+            .store
+            .publish(keys::STATE_CHANNEL, &format!("{cu_id}:{:?}", st.cus[cu_id].state));
+    }
+
+    /// Agent main loop for one pilot: pull own queue, then global.
+    fn agent_loop(self: Arc<Self>, pilot_id: String) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            // Respect slot limits.
+            let can_pull = {
+                let st = self.state.lock().unwrap();
+                st.pilots.get(&pilot_id).map(|p| p.free_slots() > 0).unwrap_or(false)
+            };
+            if !can_pull {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            match agent_pull(&self.store, &pilot_id) {
+                Ok(Some(cu_id)) => {
+                    let cores = {
+                        let mut st = self.state.lock().unwrap();
+                        let cores =
+                            st.cus.get(&cu_id).map(|c| c.description.cores.max(1)).unwrap_or(1);
+                        if let Some(p) = st.pilots.get_mut(&pilot_id) {
+                            p.busy_slots += cores;
+                        }
+                        cores
+                    };
+                    let _ = cores;
+                    self.run_cu(&pilot_id, &cu_id);
+                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(2)),
+                Err(_) => std::thread::sleep(Duration::from_millis(10)), // store outage: retry
+            }
+        }
+    }
+}
+
+/// Factory for Pilot-Computes (paper: "instantiation of Pilot-Computes
+/// are done via a factory class, the Pilot-Compute Service").
+pub struct PilotComputeService {
+    sys: Arc<PilotSystem>,
+}
+
+impl PilotComputeService {
+    /// Start a pilot: registers it, marks it Active, and spawns its
+    /// agent thread.
+    pub fn create_pilot(&self, descr: PilotComputeDescription) -> anyhow::Result<String> {
+        if descr.cores == 0 {
+            anyhow::bail!("pilot must have at least one core");
+        }
+        let mut pilot = PilotCompute::new(descr);
+        pilot.transition(PilotState::Queued)?;
+        pilot.transition(PilotState::Active)?;
+        pilot.t_active = PilotSystem::now_s();
+        let id = pilot.id.clone();
+        self.sys.state.lock().unwrap().add_pilot(pilot);
+        let sys = self.sys.clone();
+        let tid = id.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("agent-{id}"))
+            .spawn(move || sys.agent_loop(tid))?;
+        self.sys.agents.lock().unwrap().push(handle);
+        Ok(id)
+    }
+
+    pub fn cancel(&self, pilot_id: &str) -> anyhow::Result<()> {
+        let mut st = self.sys.state.lock().unwrap();
+        let p = st
+            .pilots
+            .get_mut(pilot_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown pilot '{pilot_id}'"))?;
+        p.transition(PilotState::Canceled)
+    }
+}
+
+/// Factory for Pilot-Data.
+pub struct PilotDataService {
+    sys: Arc<PilotSystem>,
+}
+
+impl PilotDataService {
+    /// Provision a Pilot-Data. Local mode accepts `file://` URLs; the
+    /// path component is the storage root.
+    pub fn create_pilot_data(&self, descr: PilotDataDescription) -> anyhow::Result<String> {
+        let pd = PilotData::new(descr)?;
+        if pd.url.kind != BackendKind::LocalFs {
+            anyhow::bail!(
+                "local execution mode supports file:// Pilot-Data (got {})",
+                pd.url.kind.scheme()
+            );
+        }
+        let fs = LocalFs::open(&pd.url.path)?;
+        let id = pd.id.clone();
+        let mut pd = pd;
+        pd.transition(PilotState::Queued)?;
+        pd.transition(PilotState::Active)?;
+        self.sys.pd_fs.lock().unwrap().insert(id.clone(), fs);
+        self.sys.state.lock().unwrap().add_pd(pd);
+        Ok(id)
+    }
+
+    /// Label of a PD (for affinity-aware DU placement).
+    pub fn affinity_of(&self, pd_id: &str) -> Option<Label> {
+        self.sys.state.lock().unwrap().pilot_datas.get(pd_id).map(|p| p.affinity())
+    }
+}
+
+/// The workload manager: applications submit CU/DU descriptions; the
+/// service schedules them onto pilots ("the application can continue
+/// without needing to wait for BigJob to finish the placement").
+pub struct ComputeDataService {
+    sys: Arc<PilotSystem>,
+}
+
+impl ComputeDataService {
+    /// Submit a Data-Unit into a specific Pilot-Data, ingesting file
+    /// content from `FileRef::src` paths (or creating empty DUs for
+    /// outputs).
+    pub fn submit_data_unit(
+        &self,
+        descr: DataUnitDescription,
+        pd_id: &str,
+    ) -> anyhow::Result<String> {
+        let label = {
+            let st = self.sys.state.lock().unwrap();
+            st.pilot_datas
+                .get(pd_id)
+                .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{pd_id}'"))?
+                .affinity()
+        };
+        let mut du = DataUnit::new(descr);
+        du.transition(DuState::Pending)?;
+        {
+            let pd_fs = self.sys.pd_fs.lock().unwrap();
+            let fs = pd_fs
+                .get(pd_id)
+                .ok_or_else(|| anyhow::anyhow!("pd '{pd_id}' has no filesystem"))?;
+            for f in &du.description.files {
+                match &f.src {
+                    Some(src) => fs.put_file(&du.id, &f.name, Path::new(src))?,
+                    None => {} // declared-only (output container)
+                }
+            }
+        }
+        if du.description.files.iter().any(|f| f.src.is_some()) {
+            du.transition(DuState::Running)?;
+        }
+        let id = du.id.clone();
+        self.sys
+            .locations
+            .lock()
+            .unwrap()
+            .entry(id.clone())
+            .or_default()
+            .push((pd_id.to_string(), label));
+        self.sys.state.lock().unwrap().add_du(du);
+        Ok(id)
+    }
+
+    /// In-memory convenience: create a DU from byte blobs.
+    pub fn put_data_unit(
+        &self,
+        name: &str,
+        files: &[(&str, &[u8])],
+        pd_id: &str,
+    ) -> anyhow::Result<String> {
+        let descr = DataUnitDescription {
+            name: name.to_string(),
+            files: files
+                .iter()
+                .map(|(n, bytes)| crate::unit::FileRef::sized(n, crate::util::Bytes::b(bytes.len() as u64)))
+                .collect(),
+            affinity: None,
+        };
+        let du = self.submit_data_unit(descr, pd_id)?;
+        {
+            let pd_fs = self.sys.pd_fs.lock().unwrap();
+            let fs = pd_fs.get(pd_id).unwrap();
+            for (n, bytes) in files {
+                fs.put(&du, n, bytes)?;
+            }
+        }
+        if let Some(d) = self.sys.state.lock().unwrap().dus.get_mut(&du) {
+            if d.state == DuState::Pending {
+                let _ = d.transition(DuState::Running);
+            }
+        }
+        Ok(du)
+    }
+
+    /// Replicate a DU into another Pilot-Data (local copy).
+    pub fn replicate(&self, du_id: &str, dst_pd: &str) -> anyhow::Result<()> {
+        let (src_pd, label) = {
+            let locations = self.sys.locations.lock().unwrap();
+            let locs = locations
+                .get(du_id)
+                .ok_or_else(|| anyhow::anyhow!("unknown DU '{du_id}'"))?;
+            let (src, _) = locs.first().ok_or_else(|| anyhow::anyhow!("DU has no replica"))?;
+            let st = self.sys.state.lock().unwrap();
+            let label = st
+                .pilot_datas
+                .get(dst_pd)
+                .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{dst_pd}'"))?
+                .affinity();
+            (src.clone(), label)
+        };
+        {
+            let pd_fs = self.sys.pd_fs.lock().unwrap();
+            let src_fs = pd_fs.get(&src_pd).unwrap();
+            let dst_fs = pd_fs
+                .get(dst_pd)
+                .ok_or_else(|| anyhow::anyhow!("pd '{dst_pd}' has no filesystem"))?;
+            for (name, _) in src_fs.list(du_id)? {
+                let content = src_fs.get(du_id, &name)?;
+                dst_fs.put(du_id, &name, &content)?;
+            }
+        }
+        self.sys
+            .locations
+            .lock()
+            .unwrap()
+            .get_mut(du_id)
+            .unwrap()
+            .push((dst_pd.to_string(), label));
+        Ok(())
+    }
+
+    /// Read one file out of a DU (first replica).
+    pub fn fetch(&self, du_id: &str, name: &str) -> anyhow::Result<Vec<u8>> {
+        let locations = self.sys.locations.lock().unwrap();
+        let locs = locations
+            .get(du_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown DU '{du_id}'"))?;
+        let (pd, _) = locs.first().ok_or_else(|| anyhow::anyhow!("DU has no replica"))?;
+        let pd_fs = self.sys.pd_fs.lock().unwrap();
+        pd_fs.get(pd).unwrap().get(du_id, name)
+    }
+
+    pub fn list(&self, du_id: &str) -> anyhow::Result<Vec<(String, crate::util::Bytes)>> {
+        let locations = self.sys.locations.lock().unwrap();
+        let locs = locations
+            .get(du_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown DU '{du_id}'"))?;
+        let (pd, _) = locs.first().ok_or_else(|| anyhow::anyhow!("DU has no replica"))?;
+        let pd_fs = self.sys.pd_fs.lock().unwrap();
+        pd_fs.get(pd).unwrap().list(du_id)
+    }
+
+    /// Submit a Compute-Unit: run it through the scheduler and enqueue.
+    pub fn submit_compute_unit(&self, descr: ComputeUnitDescription) -> anyhow::Result<String> {
+        let mut cu = ComputeUnit::new(descr);
+        cu.t_submitted = PilotSystem::now_s();
+        let id = cu.id.clone();
+
+        let placement = {
+            let st = self.sys.state.lock().unwrap();
+            let locations = self.sys.locations.lock().unwrap();
+            let du_locations: BTreeMap<String, Vec<Label>> = locations
+                .iter()
+                .map(|(du, locs)| (du.clone(), locs.iter().map(|(_, l)| l.clone()).collect()))
+                .collect();
+            let queue_depth: BTreeMap<String, usize> = st
+                .pilots
+                .keys()
+                .map(|p| (p.clone(), self.sys.store.llen(&keys::pilot_queue(p)).unwrap_or(0)))
+                .collect();
+            let ctx = SchedContext {
+                topo: &self.sys.topo,
+                state: &st,
+                du_locations: &du_locations,
+                queue_depth: &queue_depth,
+            };
+            self.sys.scheduler.place(&cu, &ctx)
+        };
+
+        let enqueue = |queue: &str, cu: ComputeUnit| -> anyhow::Result<()> {
+            let mut cu = cu;
+            cu.transition(CuState::Queued)?;
+            self.sys.state.lock().unwrap().add_cu(cu);
+            if let Err(e) = self.sys.store.rpush(queue, &id) {
+                // Store unavailable: the CU can never be pulled — mark
+                // it Failed so waiters don't hang, and surface the
+                // error to the caller (who may retry once the store
+                // recovers, as BigJob clients do).
+                let mut st = self.sys.state.lock().unwrap();
+                if let Some(c) = st.cus.get_mut(&id) {
+                    c.state = CuState::Failed;
+                    c.error = Some(format!("enqueue failed: {e}"));
+                }
+                anyhow::bail!("enqueue failed: {e}");
+            }
+            Ok(())
+        };
+        match placement {
+            Placement::Pilot(pilot_id) => enqueue(&keys::pilot_queue(&pilot_id), cu)?,
+            Placement::Global | Placement::Delay(_) => enqueue(keys::GLOBAL_QUEUE, cu)?,
+            Placement::Unschedulable(reason) => {
+                cu.transition(CuState::Unschedulable)?;
+                cu.error = Some(reason.clone());
+                self.sys.state.lock().unwrap().add_cu(cu);
+                anyhow::bail!("CU unschedulable: {reason}");
+            }
+        }
+        Ok(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("pd-svc-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn local_pd(dir: &Path, name: &str, affinity: &str) -> PilotDataDescription {
+        PilotDataDescription {
+            service_url: format!("file://localhost{}/{name}", dir.display()),
+            size: crate::util::Bytes::gb(1),
+            affinity: Some(Label::new(affinity)),
+        }
+    }
+
+    fn one_core_pilot(affinity: &str) -> PilotComputeDescription {
+        PilotComputeDescription {
+            service_url: "fork://localhost".into(),
+            cores: 2,
+            walltime_s: 600.0,
+            affinity: Some(Label::new(affinity)),
+        }
+    }
+
+    /// Executor that reads `in.txt` and writes `out.txt` uppercased.
+    struct UppercaseExecutor;
+    impl Executor for UppercaseExecutor {
+        fn execute(&self, _cu: &ComputeUnitDescription, sandbox: &Path) -> anyhow::Result<ExecResult> {
+            let input = std::fs::read_to_string(sandbox.join("in.txt"))?;
+            std::fs::write(sandbox.join("out.txt"), input.to_uppercase())?;
+            Ok(ExecResult { stdout: String::new(), compute_s: 0.0 })
+        }
+    }
+
+    #[test]
+    fn end_to_end_du_cu_pipeline() {
+        let dir = tmpdir("e2e");
+        let sys = PilotSystem::new(&dir, Arc::new(UppercaseExecutor));
+        let pcs = sys.compute_service();
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+
+        let pd = pds.create_pilot_data(local_pd(&dir, "pd0", "local/here")).unwrap();
+        pcs.create_pilot(one_core_pilot("local/here")).unwrap();
+
+        let input = cds.put_data_unit("in", &[("in.txt", b"hello pilot-data")], &pd).unwrap();
+        let output = cds
+            .submit_data_unit(
+                DataUnitDescription { name: "out".into(), files: vec![], affinity: None },
+                &pd,
+            )
+            .unwrap();
+        let cu = cds
+            .submit_compute_unit(ComputeUnitDescription {
+                executable: "builtin:uppercase".into(),
+                cores: 1,
+                input_data: vec![input],
+                output_data: vec![output.clone()],
+                ..Default::default()
+            })
+            .unwrap();
+
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&cu), Some(CuState::Done), "err={:?}", sys.cu_error(&cu));
+        let out = cds.fetch(&output, "out.txt").unwrap();
+        assert_eq!(out, b"HELLO PILOT-DATA");
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn shell_executor_runs_real_commands() {
+        let dir = tmpdir("shell");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        let pcs = sys.compute_service();
+        let cds = sys.compute_data_service();
+        pcs.create_pilot(one_core_pilot("x")).unwrap();
+        let cu = cds
+            .submit_compute_unit(ComputeUnitDescription {
+                executable: "/bin/sh".into(),
+                arguments: vec!["-c".into(), "echo ok > shell-out.txt".into()],
+                cores: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&cu), Some(CuState::Done), "err={:?}", sys.cu_error(&cu));
+        assert!(dir.join("sandbox").join(&cu).join("shell-out.txt").exists());
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn failing_cu_is_marked_failed_with_error() {
+        let dir = tmpdir("fail");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        sys.compute_service().create_pilot(one_core_pilot("x")).unwrap();
+        let cu = sys
+            .compute_data_service()
+            .submit_compute_unit(ComputeUnitDescription {
+                executable: "/bin/sh".into(),
+                arguments: vec!["-c".into(), "exit 3".into()],
+                cores: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&cu), Some(CuState::Failed));
+        assert!(sys.cu_error(&cu).unwrap().contains("exit"));
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_input_du_fails_cu() {
+        let dir = tmpdir("noinput");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        sys.compute_service().create_pilot(one_core_pilot("x")).unwrap();
+        let cu = sys
+            .compute_data_service()
+            .submit_compute_unit(ComputeUnitDescription {
+                executable: "/bin/true".into(),
+                cores: 1,
+                input_data: vec!["du-does-not-exist".into()],
+                ..Default::default()
+            })
+            .unwrap();
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&cu), Some(CuState::Failed));
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn unschedulable_constraint_is_rejected_at_submit() {
+        let dir = tmpdir("unsched");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        sys.compute_service().create_pilot(one_core_pilot("osg/purdue")).unwrap();
+        let res = sys.compute_data_service().submit_compute_unit(ComputeUnitDescription {
+            executable: "/bin/true".into(),
+            cores: 1,
+            affinity: Some(Label::new("xsede/tacc")),
+            ..Default::default()
+        });
+        assert!(res.is_err());
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn replication_copies_du_between_pds() {
+        let dir = tmpdir("repl");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+        let a = pds.create_pilot_data(local_pd(&dir, "a", "site/a")).unwrap();
+        let b = pds.create_pilot_data(local_pd(&dir, "b", "site/b")).unwrap();
+        let du = cds.put_data_unit("d", &[("f.bin", b"payload")], &a).unwrap();
+        cds.replicate(&du, &b).unwrap();
+        // Both PDs now hold the file; fetch still works after dropping A.
+        let locs = sys.locations.lock().unwrap().get(&du).unwrap().len();
+        assert_eq!(locs, 2);
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn many_cus_distribute_across_pilot_slots() {
+        let dir = tmpdir("many");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        let pcs = sys.compute_service();
+        pcs.create_pilot(one_core_pilot("x")).unwrap();
+        pcs.create_pilot(one_core_pilot("y")).unwrap();
+        let cds = sys.compute_data_service();
+        let mut ids = Vec::new();
+        for i in 0..12 {
+            ids.push(
+                cds.submit_compute_unit(ComputeUnitDescription {
+                    executable: "/bin/sh".into(),
+                    arguments: vec!["-c".into(), format!("echo {i} > o.txt")],
+                    cores: 1,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+        }
+        sys.wait_all(Duration::from_secs(30)).unwrap();
+        for id in &ids {
+            assert_eq!(sys.cu_state(id), Some(CuState::Done));
+        }
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,263 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper's experiments run on production DCI where the dominant time
+//! scales are batch-queue waits (minutes–hours) and WAN transfers
+//! (minutes). We reproduce those experiments inside a deterministic
+//! discrete-event simulation: [`Sim`] owns a priority queue of timed
+//! events; the world advances by popping the earliest event and handing
+//! it to the caller's handler, which may schedule further events.
+//!
+//! Ties are broken FIFO (by insertion sequence) so runs are fully
+//! deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds since experiment start.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct SimTime(pub f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+    pub fn after(self, delay: f64) -> SimTime {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        SimTime(self.0 + delay)
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t={}", crate::util::fmt_secs(self.0))
+    }
+}
+
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first, then
+        // FIFO on the sequence number.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event engine. `E` is the caller's event type.
+pub struct Sim<E> {
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<E>>,
+    processed: u64,
+}
+
+impl<E> Default for Sim<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Sim<E> {
+    pub fn new() -> Sim<E> {
+        Sim { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn time(&self) -> SimTime {
+        SimTime(self.now)
+    }
+
+    /// Number of events processed so far (debugging / budget guards).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `event` to fire `delay` seconds from now.
+    pub fn schedule(&mut self, delay: f64, event: E) {
+        assert!(delay >= 0.0 && delay.is_finite(), "bad delay {delay}");
+        self.seq += 1;
+        self.queue.push(Scheduled { time: self.now + delay, seq: self.seq, event });
+    }
+
+    /// Schedule at an absolute time (must not be in the past).
+    pub fn schedule_at(&mut self, time: f64, event: E) {
+        assert!(time >= self.now, "schedule_at past time {time} < now {}", self.now);
+        self.seq += 1;
+        self.queue.push(Scheduled { time, seq: self.seq, event });
+    }
+
+    /// Pop the next event, advancing the clock. Returns `None` when the
+    /// queue is empty.
+    pub fn next_event(&mut self) -> Option<(SimTime, E)> {
+        let s = self.queue.pop()?;
+        debug_assert!(s.time >= self.now, "time went backwards");
+        self.now = s.time;
+        self.processed += 1;
+        Some((SimTime(s.time), s.event))
+    }
+
+    /// Drive the simulation until the queue drains or `handler` returns
+    /// `false` (stop requested). The handler receives `(self, time,
+    /// event)` and may schedule more events.
+    pub fn run(&mut self, mut handler: impl FnMut(&mut Sim<E>, SimTime, E) -> bool) {
+        while let Some(s) = self.queue.pop() {
+            self.now = s.time;
+            self.processed += 1;
+            if !handler(self, SimTime(s.time), s.event) {
+                break;
+            }
+        }
+    }
+
+    /// Like [`Sim::run`] but with a hard event budget — guards against
+    /// accidental infinite self-rescheduling in tests.
+    pub fn run_bounded(
+        &mut self,
+        max_events: u64,
+        mut handler: impl FnMut(&mut Sim<E>, SimTime, E) -> bool,
+    ) -> anyhow::Result<()> {
+        let start = self.processed;
+        while let Some(s) = self.queue.pop() {
+            self.now = s.time;
+            self.processed += 1;
+            if self.processed - start > max_events {
+                anyhow::bail!("event budget {max_events} exceeded at t={}", self.now);
+            }
+            if !handler(self, SimTime(s.time), s.event) {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<u32> = Sim::new();
+        sim.schedule(5.0, 2);
+        sim.schedule(1.0, 1);
+        sim.schedule(9.0, 3);
+        let mut seen = Vec::new();
+        sim.run(|_, t, e| {
+            seen.push((t.secs(), e));
+            true
+        });
+        assert_eq!(seen, vec![(1.0, 1), (5.0, 2), (9.0, 3)]);
+    }
+
+    #[test]
+    fn ties_are_fifo() {
+        let mut sim: Sim<u32> = Sim::new();
+        for i in 0..10 {
+            sim.schedule(1.0, i);
+        }
+        let mut seen = Vec::new();
+        sim.run(|_, _, e| {
+            seen.push(e);
+            true
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handler_can_schedule_more() {
+        let mut sim: Sim<&'static str> = Sim::new();
+        sim.schedule(1.0, "start");
+        let mut log = Vec::new();
+        sim.run(|sim, t, e| {
+            log.push((t.secs(), e));
+            if e == "start" {
+                sim.schedule(2.0, "follow-up");
+            }
+            true
+        });
+        assert_eq!(log, vec![(1.0, "start"), (3.0, "follow-up")]);
+    }
+
+    #[test]
+    fn stop_early() {
+        let mut sim: Sim<u32> = Sim::new();
+        for i in 0..5 {
+            sim.schedule(i as f64, i);
+        }
+        let mut n = 0;
+        sim.run(|_, _, _| {
+            n += 1;
+            n < 3
+        });
+        assert_eq!(n, 3);
+        assert_eq!(sim.pending(), 2);
+    }
+
+    #[test]
+    fn budget_guard_trips() {
+        let mut sim: Sim<u8> = Sim::new();
+        sim.schedule(0.0, 0);
+        let res = sim.run_bounded(100, |sim, _, _| {
+            sim.schedule(1.0, 0); // infinite self-reschedule
+            true
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn clock_monotonic_property() {
+        crate::prop::check_default(
+            |rng| {
+                (0..crate::prop::gen::usize_in(rng, 1, 50))
+                    .map(|_| rng.range_f64(0.0, 100.0))
+                    .collect::<Vec<f64>>()
+            },
+            |delays| {
+                let mut sim: Sim<()> = Sim::new();
+                for d in delays {
+                    sim.schedule(*d, ());
+                }
+                let mut last = -1.0;
+                let mut ok = true;
+                sim.run(|_, t, _| {
+                    ok &= t.secs() >= last;
+                    last = t.secs();
+                    true
+                });
+                if ok {
+                    Ok(())
+                } else {
+                    Err("time went backwards".into())
+                }
+            },
+        );
+    }
+}

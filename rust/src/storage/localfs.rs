@@ -1,0 +1,202 @@
+//! Real local-filesystem adaptor (`file://` scheme) — the backend used
+//! in *local execution mode*, where Pilot-Data directories are real
+//! directories, Data-Unit files are real files, and Compute-Units run
+//! real alignment compute through the PJRT runtime.
+//!
+//! Layout mirrors BigJob's sandboxes: each Pilot-Data gets a root
+//! directory; each Data-Unit a subdirectory (`<root>/<du-id>/…`);
+//! Compute-Unit sandboxes link or copy DU files in.
+
+use crate::util::Bytes;
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// A real directory acting as a Pilot-Data store.
+#[derive(Debug, Clone)]
+pub struct LocalFs {
+    root: PathBuf,
+}
+
+impl LocalFs {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<LocalFs> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(LocalFs { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn resolve(&self, du: &str, name: &str) -> anyhow::Result<PathBuf> {
+        // Two-level namespace: DU id, then an application-level relative
+        // path inside the DU (paper §4 capability 2/3). Reject escapes.
+        if du.contains("..") || name.contains("..") || name.starts_with('/') {
+            anyhow::bail!("path escape rejected: {du}/{name}");
+        }
+        Ok(self.root.join(du).join(name))
+    }
+
+    /// Store file content under `du/name`.
+    pub fn put(&self, du: &str, name: &str, content: &[u8]) -> anyhow::Result<()> {
+        let path = self.resolve(du, name)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&path)?;
+        f.write_all(content)?;
+        Ok(())
+    }
+
+    /// Copy a file from the real filesystem into the store.
+    pub fn put_file(&self, du: &str, name: &str, src: &Path) -> anyhow::Result<()> {
+        let path = self.resolve(du, name)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::copy(src, &path)?;
+        Ok(())
+    }
+
+    pub fn get(&self, du: &str, name: &str) -> anyhow::Result<Vec<u8>> {
+        let path = self.resolve(du, name)?;
+        let mut buf = Vec::new();
+        fs::File::open(&path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?
+            .read_to_end(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Absolute path of a stored file (for linking into CU sandboxes —
+    /// "the data can be directly accessed via a logical filesystem
+    /// link").
+    pub fn path_of(&self, du: &str, name: &str) -> anyhow::Result<PathBuf> {
+        self.resolve(du, name)
+    }
+
+    /// List `(name, size)` of files within a DU, sorted by name.
+    pub fn list(&self, du: &str) -> anyhow::Result<Vec<(String, Bytes)>> {
+        let dir = self.root.join(du);
+        let mut out = Vec::new();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        fn walk(base: &Path, dir: &Path, out: &mut Vec<(String, Bytes)>) -> anyhow::Result<()> {
+            for entry in fs::read_dir(dir)? {
+                let entry = entry?;
+                let p = entry.path();
+                if p.is_dir() {
+                    walk(base, &p, out)?;
+                } else {
+                    let rel = p.strip_prefix(base)?.to_string_lossy().to_string();
+                    out.push((rel, Bytes::b(entry.metadata()?.len())));
+                }
+            }
+            Ok(())
+        }
+        walk(&dir, &dir, &mut out)?;
+        out.sort();
+        Ok(out)
+    }
+
+    /// Remove a whole DU (transient intermediate data teardown).
+    pub fn remove_du(&self, du: &str) -> anyhow::Result<()> {
+        let dir = self.root.join(du);
+        if dir.exists() {
+            fs::remove_dir_all(dir)?;
+        }
+        Ok(())
+    }
+
+    /// Total bytes stored in a DU.
+    pub fn du_size(&self, du: &str) -> anyhow::Result<Bytes> {
+        Ok(self.list(du)?.into_iter().map(|(_, s)| s).sum())
+    }
+
+    /// Link (or copy if linking fails) a DU's files into `sandbox`,
+    /// implementing the CU input-staging contract of §4.3.2.
+    pub fn stage_into_sandbox(&self, du: &str, sandbox: &Path) -> anyhow::Result<usize> {
+        fs::create_dir_all(sandbox)?;
+        let mut n = 0;
+        for (name, _) in self.list(du)? {
+            let src = self.path_of(du, &name)?;
+            let dst = sandbox.join(&name);
+            if let Some(parent) = dst.parent() {
+                fs::create_dir_all(parent)?;
+            }
+            if dst.exists() {
+                fs::remove_file(&dst)?;
+            }
+            // Hard link is the "logical filesystem link" fast path.
+            if fs::hard_link(&src, &dst).is_err() {
+                fs::copy(&src, &dst)?;
+            }
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("pd-localfs-test-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let fs_ = LocalFs::open(tmp("rt")).unwrap();
+        fs_.put("du-1", "reads/chunk0.fq", b"ACGT").unwrap();
+        assert_eq!(fs_.get("du-1", "reads/chunk0.fq").unwrap(), b"ACGT");
+    }
+
+    #[test]
+    fn list_reports_sizes_and_nested_paths() {
+        let fs_ = LocalFs::open(tmp("list")).unwrap();
+        fs_.put("du-2", "a.txt", b"12345").unwrap();
+        fs_.put("du-2", "sub/b.txt", b"1").unwrap();
+        let l = fs_.list("du-2").unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[0], ("a.txt".to_string(), Bytes::b(5)));
+        assert_eq!(l[1], ("sub/b.txt".to_string(), Bytes::b(1)));
+        assert_eq!(fs_.du_size("du-2").unwrap(), Bytes::b(6));
+        assert!(fs_.list("du-nope").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_path_escapes() {
+        let fs_ = LocalFs::open(tmp("esc")).unwrap();
+        assert!(fs_.put("du-3", "../evil", b"x").is_err());
+        assert!(fs_.put("../du", "f", b"x").is_err());
+        assert!(fs_.put("du-3", "/abs", b"x").is_err());
+    }
+
+    #[test]
+    fn sandbox_staging_links_all_files() {
+        let fs_ = LocalFs::open(tmp("stage")).unwrap();
+        fs_.put("du-4", "x", b"1").unwrap();
+        fs_.put("du-4", "y", b"22").unwrap();
+        let sandbox = tmp("stage-sb");
+        let n = fs_.stage_into_sandbox("du-4", &sandbox).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(fs::read(sandbox.join("x")).unwrap(), b"1");
+        assert_eq!(fs::read(sandbox.join("y")).unwrap(), b"22");
+        // Re-staging is idempotent.
+        assert_eq!(fs_.stage_into_sandbox("du-4", &sandbox).unwrap(), 2);
+    }
+
+    #[test]
+    fn remove_du_cleans_up() {
+        let fs_ = LocalFs::open(tmp("rm")).unwrap();
+        fs_.put("du-5", "f", b"x").unwrap();
+        fs_.remove_du("du-5").unwrap();
+        assert!(fs_.list("du-5").unwrap().is_empty());
+        fs_.remove_du("du-5").unwrap(); // idempotent
+    }
+}

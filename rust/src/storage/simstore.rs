@@ -1,0 +1,299 @@
+//! Simulated storage state: which Data-Unit replicas reside on which
+//! Pilot-Data endpoints, plus the transfer cost model combining the
+//! protocol parameters with the shared network.
+//!
+//! Transfers that involve a protocol without third-party support are
+//! routed through the submission machine (the paper stages via GW68,
+//! the XSEDE gateway at Indiana University), doubling the path: this is
+//! exactly why naive data management in Fig. 9 scenarios 1–2 is slow.
+
+use super::{Endpoint, ProtocolParams};
+use crate::net::Network;
+use crate::topology::Label;
+use crate::util::Bytes;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Cost breakdown of one transfer (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferCost {
+    pub setup_s: f64,
+    pub wire_s: f64,
+    pub register_s: f64,
+}
+
+impl TransferCost {
+    pub fn total(&self) -> f64 {
+        self.setup_s + self.wire_s + self.register_s
+    }
+}
+
+/// Compute the cost of moving `size` bytes in `files` files from
+/// `src` to `dst` with protocol `params`, at current network
+/// congestion. `via` is the submission host used when the protocol
+/// cannot do third-party transfers and neither endpoint is the
+/// submission host itself.
+pub fn transfer_cost(
+    net: &Network,
+    src: &Label,
+    dst: &Label,
+    via: Option<&Label>,
+    params: &ProtocolParams,
+    size: Bytes,
+    files: u32,
+) -> TransferCost {
+    let setup_s = params.setup_s + params.per_file_s * files as f64;
+    let eff = params.efficiency.max(1e-6);
+    // One leg: effective rate = min(fair network share x protocol
+    // efficiency, the protocol's single-flow ceiling).
+    let leg = |a: &Label, b: &Label| {
+        let net_rate = net.effective_bandwidth(a, b).bytes_per_sec() * eff;
+        size.as_f64() / net_rate.min(params.per_flow_cap).max(1e-6)
+    };
+    let wire_s = match via {
+        Some(gw) if !params.third_party && src != gw && dst != gw && src != dst => {
+            // Two legs through the gateway.
+            leg(src, gw) + leg(gw, dst)
+        }
+        _ => leg(src, dst),
+    };
+    TransferCost { setup_s, wire_s, register_s: params.register_s }
+}
+
+/// A named Pilot-Data location in the simulation with its endpoint.
+#[derive(Debug, Clone)]
+pub struct SimPd {
+    pub name: String,
+    pub endpoint: Endpoint,
+}
+
+/// Registry of endpoints, DU replica placement, and iRODS-style
+/// server-side replication groups.
+#[derive(Debug, Default)]
+pub struct SimStore {
+    pds: BTreeMap<String, SimPd>,
+    /// du id -> set of pd names holding a full replica.
+    replicas: BTreeMap<String, BTreeSet<String>>,
+    /// du id -> (size, file count).
+    du_meta: BTreeMap<String, (Bytes, u32)>,
+    /// replication group name -> member pd names (iRODS resource groups).
+    groups: BTreeMap<String, Vec<String>>,
+}
+
+impl SimStore {
+    pub fn new() -> SimStore {
+        SimStore::default()
+    }
+
+    pub fn add_pd(&mut self, name: &str, endpoint: Endpoint) {
+        self.pds.insert(name.to_string(), SimPd { name: name.to_string(), endpoint });
+    }
+
+    pub fn pd(&self, name: &str) -> anyhow::Result<&SimPd> {
+        self.pds
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{name}'"))
+    }
+
+    pub fn pds(&self) -> impl Iterator<Item = &SimPd> {
+        self.pds.values()
+    }
+
+    pub fn define_group(&mut self, group: &str, members: &[&str]) -> anyhow::Result<()> {
+        for m in members {
+            self.pd(m)?;
+        }
+        self.groups
+            .insert(group.to_string(), members.iter().map(|s| s.to_string()).collect());
+        Ok(())
+    }
+
+    pub fn group_members(&self, group: &str) -> anyhow::Result<&[String]> {
+        self.groups
+            .get(group)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("unknown replication group '{group}'"))
+    }
+
+    /// Record DU metadata on first placement.
+    pub fn register_du(&mut self, du: &str, size: Bytes, files: u32) {
+        self.du_meta.insert(du.to_string(), (size, files));
+    }
+
+    pub fn du_meta(&self, du: &str) -> anyhow::Result<(Bytes, u32)> {
+        self.du_meta
+            .get(du)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown data-unit '{du}'"))
+    }
+
+    /// Mark `pd` as holding a full replica of `du`.
+    pub fn place(&mut self, du: &str, pd: &str) -> anyhow::Result<()> {
+        self.pd(pd)?;
+        if !self.du_meta.contains_key(du) {
+            anyhow::bail!("register_du('{du}') before place");
+        }
+        self.replicas.entry(du.to_string()).or_default().insert(pd.to_string());
+        Ok(())
+    }
+
+    pub fn evict(&mut self, du: &str, pd: &str) {
+        if let Some(set) = self.replicas.get_mut(du) {
+            set.remove(pd);
+        }
+    }
+
+    pub fn replicas(&self, du: &str) -> Vec<&SimPd> {
+        self.replicas
+            .get(du)
+            .map(|set| set.iter().filter_map(|n| self.pds.get(n)).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has_replica(&self, du: &str, pd: &str) -> bool {
+        self.replicas.get(du).map(|s| s.contains(pd)).unwrap_or(false)
+    }
+
+    /// The replica of `du` closest (max affinity) to `target`, if any —
+    /// this is the paper's "optimized replication mechanism, which
+    /// utilizes the replica closest to the target site".
+    pub fn closest_replica(
+        &self,
+        topo: &crate::topology::Topology,
+        du: &str,
+        target: &Label,
+    ) -> Option<&SimPd> {
+        self.replicas(du)
+            .into_iter()
+            .max_by(|a, b| {
+                topo.affinity(target, &a.endpoint.label)
+                    .partial_cmp(&topo.affinity(target, &b.endpoint.label))
+                    .unwrap()
+            })
+    }
+
+    /// Cost of staging `du` from `src_pd` into `dst_pd` right now.
+    pub fn staging_cost(
+        &self,
+        net: &Network,
+        du: &str,
+        src_pd: &str,
+        dst_pd: &str,
+        via: Option<&Label>,
+    ) -> anyhow::Result<TransferCost> {
+        let (size, files) = self.du_meta(du)?;
+        let src = self.pd(src_pd)?;
+        let dst = self.pd(dst_pd)?;
+        // The destination's protocol governs the transfer mechanics.
+        Ok(transfer_cost(
+            net,
+            &src.endpoint.label,
+            &dst.endpoint.label,
+            via,
+            &dst.endpoint.params,
+            size,
+            files,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Bandwidth;
+    use crate::storage::BackendKind;
+    use crate::topology::Topology;
+
+    fn store_with(names: &[(&str, &str, &str)]) -> SimStore {
+        let mut s = SimStore::new();
+        for (name, url, label) in names {
+            s.add_pd(name, Endpoint::new(url, label).unwrap());
+        }
+        s
+    }
+
+    #[test]
+    fn place_and_lookup_replicas() {
+        let mut s = store_with(&[
+            ("pd-ls", "ssh://lonestar/scratch", "xsede/tacc/lonestar"),
+            ("pd-osg", "irods://fermilab/coll", "osg/fermilab"),
+        ]);
+        s.register_du("du-1", Bytes::gb(2), 8);
+        s.place("du-1", "pd-ls").unwrap();
+        s.place("du-1", "pd-osg").unwrap();
+        assert_eq!(s.replicas("du-1").len(), 2);
+        assert!(s.has_replica("du-1", "pd-ls"));
+        s.evict("du-1", "pd-ls");
+        assert!(!s.has_replica("du-1", "pd-ls"));
+        assert!(s.place("du-unregistered", "pd-ls").is_err());
+        assert!(s.place("du-1", "pd-nope").is_err());
+    }
+
+    #[test]
+    fn closest_replica_uses_affinity() {
+        let mut s = store_with(&[
+            ("pd-ls", "ssh://lonestar/scratch", "xsede/tacc/lonestar"),
+            ("pd-eu", "srm://surfsara/pool", "egi/surfsara"),
+        ]);
+        s.register_du("du-1", Bytes::gb(1), 1);
+        s.place("du-1", "pd-ls").unwrap();
+        s.place("du-1", "pd-eu").unwrap();
+        let topo = Topology::new();
+        let near = s
+            .closest_replica(&topo, "du-1", &Label::new("xsede/tacc/stampede"))
+            .unwrap();
+        assert_eq!(near.name, "pd-ls");
+    }
+
+    #[test]
+    fn third_party_vs_gateway_routing() {
+        let mut net = Network::new();
+        net.set_default_uplink(Bandwidth::mbps(100.0));
+        let src = Label::new("osg/purdue");
+        let dst = Label::new("xsede/tacc/lonestar");
+        let gw = Label::new("xsede/iu/gw68");
+        let srm = ProtocolParams::defaults(BackendKind::Srm);
+        let ssh = ProtocolParams::defaults(BackendKind::Ssh);
+        let direct = transfer_cost(&net, &src, &dst, Some(&gw), &srm, Bytes::gb(1), 1);
+        let routed = transfer_cost(&net, &src, &dst, Some(&gw), &ssh, Bytes::gb(1), 1);
+        // SSH (no third-party) pays two WAN legs; SRM one.
+        assert!(routed.wire_s > 1.8 * direct.wire_s * (srm.efficiency / ssh.efficiency));
+    }
+
+    #[test]
+    fn gateway_not_used_when_endpoint_is_gateway() {
+        let net = Network::new();
+        let gw = Label::new("xsede/iu/gw68");
+        let dst = Label::new("osg/purdue");
+        let ssh = ProtocolParams::defaults(BackendKind::Ssh);
+        let c1 = transfer_cost(&net, &gw, &dst, Some(&gw), &ssh, Bytes::gb(1), 1);
+        let c2 = transfer_cost(&net, &gw, &dst, None, &ssh, Bytes::gb(1), 1);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn staging_cost_uses_destination_protocol() {
+        let mut s = store_with(&[
+            ("pd-gw", "ssh://gw68/staging", "xsede/iu/gw68"),
+            ("pd-srm", "srm://osg-pool/x", "osg/fermilab"),
+        ]);
+        s.register_du("du-1", Bytes::gb(4), 16);
+        s.place("du-1", "pd-gw").unwrap();
+        let net = Network::new();
+        let c = s.staging_cost(&net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        let srm = ProtocolParams::defaults(BackendKind::Srm);
+        assert_eq!(c.setup_s, srm.setup_s + 16.0 * srm.per_file_s);
+        assert!(c.wire_s > 0.0);
+    }
+
+    #[test]
+    fn groups_validate_members() {
+        let mut s = store_with(&[
+            ("a", "irods://a/c", "osg/a"),
+            ("b", "irods://b/c", "osg/b"),
+        ]);
+        assert!(s.define_group("osgGridFtpGroup", &["a", "b"]).is_ok());
+        assert!(s.define_group("bad", &["a", "missing"]).is_err());
+        assert_eq!(s.group_members("osgGridFtpGroup").unwrap().len(), 2);
+        assert!(s.group_members("nope").is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Resource topology and the affinity model (paper §5, Fig. 6).
+//!
+//! Data centers and machines are organized in a logical topology tree;
+//! the further the distance between two resources, the smaller their
+//! affinity. Resources are named by slash-separated *affinity labels*
+//! exactly as in the Pilot-Description (e.g.
+//! `us-east/tacc/lonestar`), and the tree is built implicitly from the
+//! labels in use. Edges may carry weights to reflect dynamic
+//! connectivity differences (the paper's proposed enhancement).
+
+use std::collections::BTreeMap;
+
+/// An affinity label: a path in the logical topology tree.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Label(pub String);
+
+impl Label {
+    pub fn new(s: &str) -> Label {
+        Label(s.trim_matches('/').to_string())
+    }
+
+    pub fn components(&self) -> Vec<&str> {
+        if self.0.is_empty() {
+            vec![]
+        } else {
+            self.0.split('/').collect()
+        }
+    }
+
+    /// Depth of the deepest shared ancestor with `other`.
+    pub fn common_prefix_len(&self, other: &Label) -> usize {
+        self.components()
+            .iter()
+            .zip(other.components().iter())
+            .take_while(|(a, b)| a == b)
+            .count()
+    }
+
+    /// True if `self` lies in the subtree rooted at `prefix` — used for
+    /// affinity *constraints* ("run only under `xsede/tacc`").
+    pub fn within(&self, prefix: &Label) -> bool {
+        let pc = prefix.components();
+        let sc = self.components();
+        pc.len() <= sc.len() && pc.iter().zip(sc.iter()).all(|(a, b)| a == b)
+    }
+}
+
+impl std::fmt::Display for Label {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for Label {
+    fn from(s: &str) -> Label {
+        Label::new(s)
+    }
+}
+
+/// The topology tree with per-edge weights. An edge is identified by the
+/// label of its *child* endpoint; unlisted edges weigh
+/// `default_edge_weight`.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    default_edge_weight: f64,
+    edge_weights: BTreeMap<String, f64>,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { default_edge_weight: 1.0, edge_weights: BTreeMap::new() }
+    }
+}
+
+impl Topology {
+    pub fn new() -> Topology {
+        Topology::default()
+    }
+
+    /// Override the weight of the edge above the node named by `label`.
+    pub fn set_edge_weight(&mut self, label: &str, weight: f64) {
+        assert!(weight >= 0.0);
+        self.edge_weights.insert(Label::new(label).0, weight);
+    }
+
+    fn edge_weight(&self, path: &[&str]) -> f64 {
+        let key = path.join("/");
+        *self.edge_weights.get(&key).unwrap_or(&self.default_edge_weight)
+    }
+
+    /// Tree distance between two labels: the weighted number of hops up
+    /// from each label to their lowest common ancestor.
+    pub fn distance(&self, a: &Label, b: &Label) -> f64 {
+        let ac = a.components();
+        let bc = b.components();
+        let common = a.common_prefix_len(b);
+        let mut d = 0.0;
+        for depth in common..ac.len() {
+            d += self.edge_weight(&ac[..=depth]);
+        }
+        for depth in common..bc.len() {
+            d += self.edge_weight(&bc[..=depth]);
+        }
+        d
+    }
+
+    /// Affinity in (0, 1]: 1 for identical labels, decreasing with
+    /// distance. The paper: "the smaller the distance between two
+    /// resources, the larger the affinity".
+    pub fn affinity(&self, a: &Label, b: &Label) -> f64 {
+        1.0 / (1.0 + self.distance(a, b))
+    }
+
+    /// Of `candidates`, those with maximal affinity to `target`.
+    pub fn closest<'a>(&self, target: &Label, candidates: &'a [Label]) -> Vec<&'a Label> {
+        if candidates.is_empty() {
+            return vec![];
+        }
+        let best = candidates
+            .iter()
+            .map(|c| self.affinity(target, c))
+            .fold(f64::MIN, f64::max);
+        candidates
+            .iter()
+            .filter(|c| (self.affinity(target, c) - best).abs() < 1e-12)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(s: &str) -> Label {
+        Label::new(s)
+    }
+
+    #[test]
+    fn label_components_and_prefix() {
+        let a = l("us-east/tacc/lonestar");
+        assert_eq!(a.components(), vec!["us-east", "tacc", "lonestar"]);
+        assert_eq!(a.common_prefix_len(&l("us-east/tacc/stampede")), 2);
+        assert_eq!(a.common_prefix_len(&l("eu/surfsara")), 0);
+        assert!(a.within(&l("us-east/tacc")));
+        assert!(a.within(&a));
+        assert!(!a.within(&l("us-east/purdue")));
+        assert!(l("").within(&l("")));
+    }
+
+    #[test]
+    fn distance_is_symmetric_zero_on_self() {
+        let t = Topology::new();
+        let a = l("us-east/tacc/lonestar");
+        let b = l("us-east/purdue/condor");
+        assert_eq!(t.distance(&a, &a), 0.0);
+        assert_eq!(t.distance(&a, &b), t.distance(&b, &a));
+        // lonestar->tacc->us-east (2 edges) + us-east->purdue->condor (2)
+        assert_eq!(t.distance(&a, &b), 4.0);
+        // Same site, different machine: 1 up + 1 down.
+        assert_eq!(t.distance(&a, &l("us-east/tacc/stampede")), 2.0);
+    }
+
+    #[test]
+    fn affinity_ordering_matches_paper_model() {
+        let t = Topology::new();
+        let lonestar = l("us-east/tacc/lonestar");
+        let same = t.affinity(&lonestar, &lonestar);
+        let same_site = t.affinity(&lonestar, &l("us-east/tacc/stampede"));
+        let same_region = t.affinity(&lonestar, &l("us-east/purdue/condor"));
+        let far = t.affinity(&lonestar, &l("eu/surfsara/grid"));
+        assert!(same > same_site && same_site > same_region && same_region > far);
+        assert_eq!(same, 1.0);
+    }
+
+    #[test]
+    fn weighted_edges_change_distance() {
+        let mut t = Topology::new();
+        // Make the WAN hop to EU expensive.
+        t.set_edge_weight("eu", 10.0);
+        let a = l("us-east/tacc/lonestar");
+        let eu = l("eu/surfsara");
+        // 3 edges up from lonestar (weight 1 each) + down: "eu" (10) + "eu/surfsara" (1).
+        assert_eq!(t.distance(&a, &eu), 3.0 + 10.0 + 1.0);
+    }
+
+    #[test]
+    fn closest_picks_max_affinity() {
+        let t = Topology::new();
+        let target = l("osg/purdue");
+        let cands = vec![l("osg/purdue"), l("osg/cornell"), l("xsede/tacc/lonestar")];
+        let best = t.closest(&target, &cands);
+        assert_eq!(best, vec![&cands[0]]);
+        // Ties: two equally-far candidates are both returned.
+        let cands2 = vec![l("osg/cornell"), l("osg/tacc")];
+        assert_eq!(t.closest(&target, &cands2).len(), 2);
+    }
+
+    #[test]
+    fn triangle_inequality_property() {
+        crate::prop::check_default(
+            |rng| {
+                let mk = |rng: &mut crate::rng::Rng| {
+                    let depth = crate::prop::gen::usize_in(rng, 1, 4);
+                    let parts: Vec<String> =
+                        (0..depth).map(|d| format!("n{}", rng.below(3 + d as u64))).collect();
+                    Label::new(&parts.join("/"))
+                };
+                (mk(rng), mk(rng), mk(rng))
+            },
+            |(a, b, c)| {
+                let t = Topology::new();
+                let ab = t.distance(a, b);
+                let bc = t.distance(b, c);
+                let ac = t.distance(a, c);
+                if ac <= ab + bc + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("triangle violated: d({a},{c})={ac} > {ab}+{bc}"))
+                }
+            },
+        );
+    }
+}

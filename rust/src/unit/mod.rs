@@ -1,0 +1,469 @@
+//! Data-Units and Compute-Units — the primary abstractions for
+//! expressing and managing application workloads (paper §4.3.2).
+//!
+//! A **Data-Unit (DU)** is an immutable container for a logical group of
+//! "affine" files, completely decoupled from its physical location;
+//! replicas of a DU can reside in different Pilot-Data. A **Compute-Unit
+//! (CU)** encapsulates an application task — an executable with
+//! parameters — with `input_data` / `output_data` dependencies on DUs.
+//! Both are described by JSON description objects (CUD / DUD).
+
+use crate::json::Json;
+use crate::topology::Label;
+use crate::util::Bytes;
+
+/// One logical file inside a Data-Unit. In sim mode only `size`
+/// matters; in local mode `src` points at real content to ingest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileRef {
+    /// Application-level relative path inside the DU namespace.
+    pub name: String,
+    pub size: Bytes,
+    /// Optional real source path (local execution mode).
+    pub src: Option<String>,
+}
+
+impl FileRef {
+    pub fn sized(name: &str, size: Bytes) -> FileRef {
+        FileRef { name: name.to_string(), size, src: None }
+    }
+
+    pub fn local(name: &str, src: &str, size: Bytes) -> FileRef {
+        FileRef { name: name.to_string(), size, src: Some(src.to_string()) }
+    }
+}
+
+/// Data-Unit-Description: the JSON document submitted to the
+/// Compute-Data Service (paper: "A DUD contains all references to the
+/// input files that should be used to initially populate the DU").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataUnitDescription {
+    pub name: String,
+    pub files: Vec<FileRef>,
+    /// Affinity label constraining/hinting placement.
+    pub affinity: Option<Label>,
+}
+
+impl DataUnitDescription {
+    pub fn total_size(&self) -> Bytes {
+        self.files.iter().map(|f| f.size).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let files: Vec<Json> = self
+            .files
+            .iter()
+            .map(|f| {
+                let mut j = Json::obj().set("name", f.name.as_str()).set("size", f.size.0);
+                if let Some(src) = &f.src {
+                    j = j.set("src", src.as_str());
+                }
+                j
+            })
+            .collect();
+        let mut j = Json::obj().set("name", self.name.as_str()).set("files", Json::Arr(files));
+        if let Some(a) = &self.affinity {
+            j = j.set("affinity", a.0.as_str());
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DataUnitDescription> {
+        let files = j
+            .get("files")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|f| {
+                Ok(FileRef {
+                    name: f.str_field("name")?.to_string(),
+                    size: Bytes::b(f.u64_field_or("size", 0)),
+                    src: f.get("src").and_then(Json::as_str).map(str::to_string),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(DataUnitDescription {
+            name: j.str_field("name").unwrap_or("").to_string(),
+            files,
+            affinity: j.get("affinity").and_then(Json::as_str).map(Label::new),
+        })
+    }
+}
+
+/// Data-Unit lifecycle (BigJob state model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DuState {
+    /// Described, not yet materialized anywhere.
+    New,
+    /// Files are being transferred into a Pilot-Data.
+    Pending,
+    /// At least one complete replica exists.
+    Running,
+    /// All requested placements/replications finished.
+    Done,
+    Failed,
+}
+
+impl DuState {
+    /// Legal transitions of the DU state machine.
+    pub fn can_transition(self, to: DuState) -> bool {
+        use DuState::*;
+        matches!(
+            (self, to),
+            (New, Pending)
+                | (Pending, Running)
+                | (Pending, Failed)
+                | (Running, Done)
+                | (Running, Pending) // additional replication started
+                | (Running, Failed)
+                | (Done, Pending) // re-replication of a finished DU
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DuState::New => "New",
+            DuState::Pending => "Pending",
+            DuState::Running => "Running",
+            DuState::Done => "Done",
+            DuState::Failed => "Failed",
+        }
+    }
+}
+
+/// A Data-Unit instance: immutable description + mutable state. The
+/// DU's id doubles as its location-independent logical URL
+/// (paper: "The Data-Unit URL serves as a single level namespace
+/// independent of the actual physical location").
+#[derive(Debug, Clone)]
+pub struct DataUnit {
+    pub id: String,
+    pub description: DataUnitDescription,
+    pub state: DuState,
+}
+
+impl DataUnit {
+    pub fn new(description: DataUnitDescription) -> DataUnit {
+        DataUnit { id: crate::util::next_id("du"), description, state: DuState::New }
+    }
+
+    pub fn logical_url(&self) -> String {
+        format!("du://{}", self.id)
+    }
+
+    pub fn size(&self) -> Bytes {
+        self.description.total_size()
+    }
+
+    pub fn file_count(&self) -> u32 {
+        self.description.files.len() as u32
+    }
+
+    pub fn transition(&mut self, to: DuState) -> anyhow::Result<()> {
+        if self.state == to {
+            return Ok(());
+        }
+        if !self.state.can_transition(to) {
+            anyhow::bail!("DU {}: illegal transition {:?} -> {to:?}", self.id, self.state);
+        }
+        self.state = to;
+        Ok(())
+    }
+}
+
+/// Compute-Unit lifecycle. `Unschedulable` is entered when affinity
+/// constraints can never be met (no matching pilot) so the workload
+/// manager can surface the error instead of spinning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CuState {
+    New,
+    /// Placed in a queue (global or pilot-specific).
+    Queued,
+    /// Input DUs are being staged to the execution sandbox.
+    StagingInput,
+    Running,
+    /// Output is being written back to output DUs.
+    StagingOutput,
+    Done,
+    Failed,
+    Unschedulable,
+}
+
+impl CuState {
+    pub fn can_transition(self, to: CuState) -> bool {
+        use CuState::*;
+        matches!(
+            (self, to),
+            (New, Queued)
+                | (New, Unschedulable)
+                | (Queued, StagingInput)
+                | (Queued, Queued) // re-queue (delayed scheduling / agent death)
+                | (Queued, Unschedulable)
+                | (StagingInput, Running)
+                | (StagingInput, Failed)
+                | (StagingInput, Queued) // staging failed, retry elsewhere
+                | (Running, StagingOutput)
+                | (Running, Failed)
+                | (Running, Queued) // pilot died mid-run, re-queue
+                | (StagingOutput, Done)
+                | (StagingOutput, Failed)
+        )
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, CuState::Done | CuState::Failed | CuState::Unschedulable)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CuState::New => "New",
+            CuState::Queued => "Queued",
+            CuState::StagingInput => "StagingInput",
+            CuState::Running => "Running",
+            CuState::StagingOutput => "StagingOutput",
+            CuState::Done => "Done",
+            CuState::Failed => "Failed",
+            CuState::Unschedulable => "Unschedulable",
+        }
+    }
+}
+
+/// Compute-Unit-Description (CUD). `cpu_secs_hint`/`io_bytes_hint`
+/// carry the workload's cost-model inputs for sim mode (CPU-seconds at
+/// reference speed, bytes scanned from shared FS); local mode ignores
+/// them and runs the real executable/kernel.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ComputeUnitDescription {
+    pub executable: String,
+    pub arguments: Vec<String>,
+    pub cores: u32,
+    pub input_data: Vec<String>,
+    pub output_data: Vec<String>,
+    /// Constrain execution to a subtree of the topology.
+    pub affinity: Option<Label>,
+    /// Sim-mode cost model: pure CPU seconds on the reference machine.
+    pub cpu_secs_hint: f64,
+    /// Sim-mode cost model: bytes scanned from the shared filesystem
+    /// during execution (drives the Fig. 11 I/O-saturation effect).
+    pub io_bytes_hint: Bytes,
+}
+
+impl ComputeUnitDescription {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("executable", self.executable.as_str())
+            .set("arguments", self.arguments.clone())
+            .set("cores", self.cores as u64)
+            .set("input_data", self.input_data.clone())
+            .set("output_data", self.output_data.clone())
+            .set("cpu_secs_hint", self.cpu_secs_hint)
+            .set("io_bytes_hint", self.io_bytes_hint.0);
+        if let Some(a) = &self.affinity {
+            j = j.set("affinity", a.0.as_str());
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ComputeUnitDescription> {
+        let strings = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect()
+        };
+        Ok(ComputeUnitDescription {
+            executable: j.str_field("executable")?.to_string(),
+            arguments: strings("arguments"),
+            cores: j.u64_field_or("cores", 1) as u32,
+            input_data: strings("input_data"),
+            output_data: strings("output_data"),
+            affinity: j.get("affinity").and_then(Json::as_str).map(Label::new),
+            cpu_secs_hint: j.f64_field_or("cpu_secs_hint", 0.0),
+            io_bytes_hint: Bytes::b(j.u64_field_or("io_bytes_hint", 0)),
+        })
+    }
+}
+
+/// A Compute-Unit instance with execution bookkeeping (the per-task
+/// timings behind Figs. 10, 12, 13).
+#[derive(Debug, Clone)]
+pub struct ComputeUnit {
+    pub id: String,
+    pub description: ComputeUnitDescription,
+    pub state: CuState,
+    /// Pilot the CU was bound to, once scheduled.
+    pub pilot: Option<String>,
+    /// Timestamps (sim seconds or unix seconds) per phase.
+    pub t_submitted: f64,
+    pub t_started_staging: f64,
+    pub t_started_run: f64,
+    pub t_finished: f64,
+    /// Seconds spent downloading input (Fig. 10 "Download").
+    pub staging_s: f64,
+    pub error: Option<String>,
+}
+
+impl ComputeUnit {
+    pub fn new(description: ComputeUnitDescription) -> ComputeUnit {
+        ComputeUnit {
+            id: crate::util::next_id("cu"),
+            description,
+            state: CuState::New,
+            pilot: None,
+            t_submitted: 0.0,
+            t_started_staging: 0.0,
+            t_started_run: 0.0,
+            t_finished: 0.0,
+            staging_s: 0.0,
+            error: None,
+        }
+    }
+
+    pub fn transition(&mut self, to: CuState) -> anyhow::Result<()> {
+        if self.state == to && to != CuState::Queued {
+            return Ok(());
+        }
+        if !self.state.can_transition(to) {
+            anyhow::bail!("CU {}: illegal transition {:?} -> {to:?}", self.id, self.state);
+        }
+        self.state = to;
+        Ok(())
+    }
+
+    /// Pilot-internal queueing time T_Q_task (paper §6.1).
+    pub fn queue_wait_s(&self) -> f64 {
+        (self.t_started_staging - self.t_submitted).max(0.0)
+    }
+
+    /// Wall time from run start to completion (Fig. 10 "Runtime").
+    pub fn run_s(&self) -> f64 {
+        (self.t_finished - self.t_started_run).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dud() -> DataUnitDescription {
+        DataUnitDescription {
+            name: "bwa-input".into(),
+            files: vec![
+                FileRef::sized("ref/genome.fa", Bytes::gb(8)),
+                FileRef::sized("reads/chunk0.fq", Bytes::mb(256)),
+            ],
+            affinity: Some(Label::new("xsede/tacc/lonestar")),
+        }
+    }
+
+    #[test]
+    fn dud_json_roundtrip() {
+        let d = dud();
+        let j = d.to_json();
+        let back = DataUnitDescription::from_json(&j).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.total_size(), Bytes::gb(8) + Bytes::mb(256));
+    }
+
+    #[test]
+    fn cud_json_roundtrip() {
+        let c = ComputeUnitDescription {
+            executable: "/bin/bwa".into(),
+            arguments: vec!["aln".into(), "-t".into(), "2".into()],
+            cores: 2,
+            input_data: vec!["du-1".into(), "du-2".into()],
+            output_data: vec!["du-3".into()],
+            affinity: Some(Label::new("osg")),
+            cpu_secs_hint: 1200.0,
+            io_bytes_hint: Bytes::gb(9),
+        };
+        let back = ComputeUnitDescription::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn cud_from_json_requires_executable() {
+        assert!(ComputeUnitDescription::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn du_state_machine_accepts_legal_path() {
+        let mut du = DataUnit::new(dud());
+        assert_eq!(du.state, DuState::New);
+        du.transition(DuState::Pending).unwrap();
+        du.transition(DuState::Running).unwrap();
+        du.transition(DuState::Pending).unwrap(); // replication
+        du.transition(DuState::Running).unwrap();
+        du.transition(DuState::Done).unwrap();
+    }
+
+    #[test]
+    fn du_state_machine_rejects_illegal() {
+        let mut du = DataUnit::new(dud());
+        assert!(du.transition(DuState::Done).is_err());
+        du.transition(DuState::Pending).unwrap();
+        assert!(du.transition(DuState::New).is_err());
+    }
+
+    #[test]
+    fn cu_state_machine_full_lifecycle() {
+        let mut cu = ComputeUnit::new(ComputeUnitDescription {
+            executable: "x".into(),
+            ..Default::default()
+        });
+        for s in [
+            CuState::Queued,
+            CuState::StagingInput,
+            CuState::Running,
+            CuState::StagingOutput,
+            CuState::Done,
+        ] {
+            cu.transition(s).unwrap();
+        }
+        assert!(cu.state.is_terminal());
+        assert!(cu.transition(CuState::Running).is_err());
+    }
+
+    #[test]
+    fn cu_requeue_on_failure_paths() {
+        let mut cu = ComputeUnit::new(Default::default());
+        cu.transition(CuState::Queued).unwrap();
+        cu.transition(CuState::StagingInput).unwrap();
+        cu.transition(CuState::Queued).unwrap(); // staging failed -> retry
+        cu.transition(CuState::StagingInput).unwrap();
+        cu.transition(CuState::Running).unwrap();
+        cu.transition(CuState::Queued).unwrap(); // pilot died -> retry
+    }
+
+    #[test]
+    fn cu_timing_accessors() {
+        let mut cu = ComputeUnit::new(Default::default());
+        cu.t_submitted = 10.0;
+        cu.t_started_staging = 25.0;
+        cu.t_started_run = 40.0;
+        cu.t_finished = 100.0;
+        assert_eq!(cu.queue_wait_s(), 15.0);
+        assert_eq!(cu.run_s(), 60.0);
+    }
+
+    #[test]
+    fn du_logical_url_is_location_independent() {
+        let du = DataUnit::new(dud());
+        assert!(du.logical_url().starts_with("du://du-"));
+    }
+
+    #[test]
+    fn state_machine_no_terminal_escape() {
+        use CuState::*;
+        let all = [New, Queued, StagingInput, Running, StagingOutput, Done, Failed, Unschedulable];
+        for from in all {
+            for to in all {
+                if from.is_terminal() {
+                    assert!(!from.can_transition(to), "{from:?} -> {to:?} must be illegal");
+                }
+            }
+        }
+    }
+}

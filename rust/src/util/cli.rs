@@ -1,0 +1,107 @@
+//! Dependency-free CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; unknown flags are errors so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order, options by name.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `flag_names` lists boolean flags (take no
+    /// value); everything else starting `--` consumes a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("option --{rest} requires a value")
+                    })?;
+                    out.options.insert(rest.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid value for --{name}: {e}")),
+        }
+    }
+
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positionals_options_flags() {
+        let a = Args::parse(sv(&["exp", "fig7", "--seed", "42", "--verbose", "--out=o.csv"]), &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["exp", "fig7"]);
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("out"), Some("o.csv"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(sv(&["--seed"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = Args::parse(sv(&["--n", "8"]), &[]).unwrap();
+        assert_eq!(a.opt_parse_or::<u64>("n", 1).unwrap(), 8);
+        assert_eq!(a.opt_parse_or::<u64>("m", 5).unwrap(), 5);
+        let bad = Args::parse(sv(&["--n", "x"]), &[]).unwrap();
+        assert!(bad.opt_parse::<u64>("n").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Small shared utilities: unique ids, byte/size formatting, duration
+//! formatting, and a dependency-free CLI argument parser.
+
+pub mod cli;
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic process-wide counter used to mint unique entity ids.
+static ID_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a unique id with the given prefix, e.g. `du-17`, `cu-42`,
+/// `pilot-3`. Mirrors the paper's URL-style unique entity names
+/// (`redis://host/bigjob:pd:<uuid>` etc.) without requiring a live
+/// coordination server at construction time.
+pub fn next_id(prefix: &str) -> String {
+    let n = ID_COUNTER.fetch_add(1, Ordering::Relaxed);
+    format!("{prefix}-{n}")
+}
+
+/// Reset the id counter (test determinism only).
+pub fn reset_ids_for_test() {
+    ID_COUNTER.store(1, Ordering::Relaxed);
+}
+
+/// Bytes, with human-friendly construction and display.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Bytes(pub u64);
+
+impl Bytes {
+    pub const fn b(n: u64) -> Self {
+        Bytes(n)
+    }
+    pub const fn kb(n: u64) -> Self {
+        Bytes(n * 1024)
+    }
+    pub const fn mb(n: u64) -> Self {
+        Bytes(n * 1024 * 1024)
+    }
+    pub const fn gb(n: u64) -> Self {
+        Bytes(n * 1024 * 1024 * 1024)
+    }
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+    /// Gigabytes as a float (for rate math).
+    pub fn gib(self) -> f64 {
+        self.0 as f64 / (1024.0 * 1024.0 * 1024.0)
+    }
+    /// Megabytes as a float.
+    pub fn mib(self) -> f64 {
+        self.0 as f64 / (1024.0 * 1024.0)
+    }
+    pub fn saturating_sub(self, other: Bytes) -> Bytes {
+        Bytes(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+
+impl std::iter::Sum for Bytes {
+    fn sum<I: Iterator<Item = Bytes>>(iter: I) -> Bytes {
+        Bytes(iter.map(|b| b.0).sum())
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0 as f64;
+        if self.0 >= 1024 * 1024 * 1024 {
+            write!(f, "{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+        } else if self.0 >= 1024 * 1024 {
+            write!(f, "{:.2} MiB", b / (1024.0 * 1024.0))
+        } else if self.0 >= 1024 {
+            write!(f, "{:.2} KiB", b / 1024.0)
+        } else {
+            write!(f, "{} B", self.0)
+        }
+    }
+}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+/// Format a duration given in (possibly simulated) seconds as `1h02m03s`.
+pub fn fmt_secs(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let total = secs.round().max(0.0) as u64;
+    let (h, m, s) = (total / 3600, (total % 3600) / 60, total % 60);
+    if h > 0 {
+        format!("{h}h{m:02}m{s:02}s")
+    } else if m > 0 {
+        format!("{m}m{s:02}s")
+    } else if secs < 10.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{s}s")
+    }
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation of a slice (0.0 for len < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_prefixed() {
+        let a = next_id("du");
+        let b = next_id("du");
+        assert_ne!(a, b);
+        assert!(a.starts_with("du-"));
+    }
+
+    #[test]
+    fn bytes_display_scales() {
+        assert_eq!(format!("{}", Bytes::b(10)), "10 B");
+        assert_eq!(format!("{}", Bytes::kb(2)), "2.00 KiB");
+        assert_eq!(format!("{}", Bytes::mb(3)), "3.00 MiB");
+        assert_eq!(format!("{}", Bytes::gb(4)), "4.00 GiB");
+    }
+
+    #[test]
+    fn bytes_arith() {
+        assert_eq!(Bytes::kb(1) + Bytes::kb(1), Bytes::kb(2));
+        assert_eq!(Bytes::kb(1).saturating_sub(Bytes::mb(1)), Bytes::b(0));
+        let total: Bytes = vec![Bytes::b(1), Bytes::b(2)].into_iter().sum();
+        assert_eq!(total, Bytes::b(3));
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(3.5), "3.50s");
+        assert_eq!(fmt_secs(75.0), "1m15s");
+        assert_eq!(fmt_secs(3723.0), "1h02m03s");
+    }
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 3.0);
+        assert_eq!(percentile(&[5.0], 99.0), 5.0);
+    }
+}

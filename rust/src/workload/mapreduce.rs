@@ -1,0 +1,288 @@
+//! Pilot-MapReduce: the MapReduce pattern on top of the Pilot-API
+//! (paper §7: "we also successfully showed that Pilot-Data efficiently
+//! supports other application patterns, e.g. dynamic workflows or
+//! MapReduce", citing Pilot-MapReduce [48]).
+//!
+//! The framework is deliberately thin — exactly the paper's point: the
+//! Pilot abstraction supplies resource management, data movement and
+//! co-placement; MapReduce is ~200 lines of orchestration on top:
+//!
+//!  1. partition the input Data-Unit into M map-input DUs;
+//!  2. submit M map CUs; each emits `(key, value)` lines, hashed into
+//!     R intermediate partition files;
+//!  3. group intermediates per partition into transient DUs (the
+//!     "dynamic data" usage mode);
+//!  4. submit R reduce CUs; gather their outputs into the result DU.
+
+use crate::service::{ComputeDataService, ExecResult, Executor, PilotSystem};
+use crate::unit::{ComputeUnitDescription, DataUnitDescription};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A user-defined map function: input line -> list of (key, value).
+pub type MapFn = dyn Fn(&str) -> Vec<(String, String)> + Send + Sync;
+/// A user-defined reduce function: key + all values -> output value.
+pub type ReduceFn = dyn Fn(&str, &[String]) -> String + Send + Sync;
+
+/// Executor that runs registered rust functions by name — the
+/// local-mode analogue of shipping a python callable with the CU.
+/// Executables named `fn:<name>` dispatch to the registry; anything
+/// else is an error (compose with ShellExecutor if needed).
+pub struct FnExecutor {
+    fns: BTreeMap<String, Box<dyn Fn(&Path) -> anyhow::Result<()> + Send + Sync>>,
+}
+
+impl FnExecutor {
+    pub fn new() -> FnExecutor {
+        FnExecutor { fns: BTreeMap::new() }
+    }
+
+    pub fn register(
+        mut self,
+        name: &str,
+        f: impl Fn(&Path) -> anyhow::Result<()> + Send + Sync + 'static,
+    ) -> FnExecutor {
+        self.fns.insert(name.to_string(), Box::new(f));
+        self
+    }
+}
+
+impl Default for FnExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Executor for FnExecutor {
+    fn execute(&self, cu: &ComputeUnitDescription, sandbox: &Path) -> anyhow::Result<ExecResult> {
+        let name = cu
+            .executable
+            .strip_prefix("fn:")
+            .ok_or_else(|| anyhow::anyhow!("FnExecutor expects fn:<name>, got '{}'", cu.executable))?;
+        let f = self
+            .fns
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no registered function '{name}'"))?;
+        let t0 = std::time::Instant::now();
+        f(sandbox)?;
+        Ok(ExecResult { stdout: String::new(), compute_s: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// Deterministic partition hash (FNV-1a) — stable across runs.
+pub fn partition_of(key: &str, partitions: usize) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % partitions as u64) as usize
+}
+
+/// Configuration of a MapReduce job.
+pub struct MapReduceJob {
+    pub maps: usize,
+    pub reduces: usize,
+    pub map_fn: Arc<MapFn>,
+    pub reduce_fn: Arc<ReduceFn>,
+}
+
+/// Build the executor for a job (register `fn:map` / `fn:reduce`).
+pub fn job_executor(job: &MapReduceJob) -> FnExecutor {
+    let map_fn = job.map_fn.clone();
+    let reduces = job.reduces;
+    let reduce_fn = job.reduce_fn.clone();
+    FnExecutor::new()
+        .register("map", move |sandbox| {
+            let input = std::fs::read_to_string(sandbox.join("input.txt"))?;
+            let mut parts: Vec<String> = vec![String::new(); reduces];
+            for line in input.lines() {
+                for (k, v) in map_fn(line) {
+                    parts[partition_of(&k, reduces)].push_str(&format!("{k}\t{v}\n"));
+                }
+            }
+            for (r, content) in parts.iter().enumerate() {
+                std::fs::write(sandbox.join(format!("part-{r:03}.txt")), content)?;
+            }
+            Ok(())
+        })
+        .register("reduce", move |sandbox| {
+            // All staged files matching merged-*.txt belong to this
+            // partition.
+            let mut grouped: BTreeMap<String, Vec<String>> = BTreeMap::new();
+            for entry in std::fs::read_dir(sandbox)? {
+                let entry = entry?;
+                let name = entry.file_name().to_string_lossy().to_string();
+                if !name.starts_with("merged-") {
+                    continue;
+                }
+                for line in std::fs::read_to_string(entry.path())?.lines() {
+                    if let Some((k, v)) = line.split_once('\t') {
+                        grouped.entry(k.to_string()).or_default().push(v.to_string());
+                    }
+                }
+            }
+            let mut out = String::new();
+            for (k, vs) in &grouped {
+                out.push_str(&format!("{k}\t{}\n", reduce_fn(k, vs)));
+            }
+            std::fs::write(sandbox.join("reduced.txt"), out)?;
+            Ok(())
+        })
+}
+
+/// Run a MapReduce job over `input` text on an existing Pilot system
+/// (whose executor must come from [`job_executor`]). Returns the
+/// final key -> value map.
+pub fn run(
+    sys: &Arc<PilotSystem>,
+    cds: &ComputeDataService,
+    pd: &str,
+    job: &MapReduceJob,
+    input: &str,
+) -> anyhow::Result<BTreeMap<String, String>> {
+    // ---- Phase 1: partition input into M map DUs ----
+    let lines: Vec<&str> = input.lines().collect();
+    let per_map = lines.len().div_ceil(job.maps.max(1)).max(1);
+    let mut map_outputs = Vec::new();
+    for (i, chunk) in lines.chunks(per_map).enumerate() {
+        let text = chunk.join("\n");
+        let in_du = cds.put_data_unit(
+            &format!("mr-map-in-{i}"),
+            &[("input.txt", text.as_bytes())],
+            pd,
+        )?;
+        let out_du = cds.submit_data_unit(
+            DataUnitDescription { name: format!("mr-map-out-{i}"), ..Default::default() },
+            pd,
+        )?;
+        cds.submit_compute_unit(ComputeUnitDescription {
+            executable: "fn:map".into(),
+            cores: 1,
+            input_data: vec![in_du],
+            output_data: vec![out_du.clone()],
+            ..Default::default()
+        })?;
+        map_outputs.push(out_du);
+    }
+    sys.wait_all(Duration::from_secs(120))?;
+
+    // ---- Phase 2: shuffle — group per reduce partition ----
+    // (transient intermediate DUs: created here, dropped after reduce)
+    let mut reduce_inputs = Vec::new();
+    for r in 0..job.reduces {
+        let mut files: Vec<(String, Vec<u8>)> = Vec::new();
+        for (m, out_du) in map_outputs.iter().enumerate() {
+            let content = cds.fetch(out_du, &format!("part-{r:03}.txt"))?;
+            files.push((format!("merged-{m:03}.txt"), content));
+        }
+        let refs: Vec<(&str, &[u8])> =
+            files.iter().map(|(n, c)| (n.as_str(), c.as_slice())).collect();
+        reduce_inputs.push(cds.put_data_unit(&format!("mr-shuffle-{r}"), &refs, pd)?);
+    }
+
+    // ---- Phase 3: R reduce CUs ----
+    let mut reduce_outputs = Vec::new();
+    for (r, in_du) in reduce_inputs.iter().enumerate() {
+        let out_du = cds.submit_data_unit(
+            DataUnitDescription { name: format!("mr-reduce-out-{r}"), ..Default::default() },
+            pd,
+        )?;
+        cds.submit_compute_unit(ComputeUnitDescription {
+            executable: "fn:reduce".into(),
+            cores: 1,
+            input_data: vec![in_du.clone()],
+            output_data: vec![out_du.clone()],
+            ..Default::default()
+        })?;
+        reduce_outputs.push(out_du);
+    }
+    sys.wait_all(Duration::from_secs(120))?;
+
+    // ---- Phase 4: gather ----
+    let mut result = BTreeMap::new();
+    for out_du in &reduce_outputs {
+        let text = String::from_utf8(cds.fetch(out_du, "reduced.txt")?)?;
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('\t') {
+                result.insert(k.to_string(), v.to_string());
+            }
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wordcount_job(maps: usize, reduces: usize) -> MapReduceJob {
+        MapReduceJob {
+            maps,
+            reduces,
+            map_fn: Arc::new(|line: &str| {
+                line.split_whitespace().map(|w| (w.to_lowercase(), "1".to_string())).collect()
+            }),
+            reduce_fn: Arc::new(|_k: &str, vs: &[String]| vs.len().to_string()),
+        }
+    }
+
+    fn run_wordcount(maps: usize, reduces: usize, pilots: u32) -> BTreeMap<String, String> {
+        let dir = std::env::temp_dir().join(format!(
+            "pd-mr-{maps}-{reduces}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let job = wordcount_job(maps, reduces);
+        let sys = PilotSystem::new(&dir, Arc::new(job_executor(&job)));
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+        let pd = pds.create_pilot_data(crate::pd_desc(&dir, "mr", "local/a")).unwrap();
+        for i in 0..pilots {
+            sys.compute_service()
+                .create_pilot(crate::pilot_desc(&format!("local/p{i}")))
+                .unwrap();
+        }
+        let input = "the pilot flies the plane\nthe data follows the pilot\npilot data pilot";
+        let out = run(&sys, &cds, &pd, &job, input).unwrap();
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+        out
+    }
+
+    #[test]
+    fn wordcount_is_correct() {
+        let out = run_wordcount(2, 2, 2);
+        assert_eq!(out["the"], "4");
+        assert_eq!(out["pilot"], "4");
+        assert_eq!(out["data"], "2");
+        assert_eq!(out["plane"], "1");
+    }
+
+    #[test]
+    fn results_invariant_to_partitioning() {
+        let a = run_wordcount(1, 1, 1);
+        let b = run_wordcount(3, 4, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partition_hash_is_stable_and_in_range() {
+        for key in ["alpha", "beta", "gamma", ""] {
+            let p = partition_of(key, 7);
+            assert!(p < 7);
+            assert_eq!(p, partition_of(key, 7));
+        }
+    }
+
+    #[test]
+    fn fn_executor_rejects_unknown() {
+        let ex = FnExecutor::new();
+        let cu = ComputeUnitDescription { executable: "fn:nope".into(), ..Default::default() };
+        assert!(ex.execute(&cu, Path::new("/tmp")).is_err());
+        let cu2 = ComputeUnitDescription { executable: "/bin/true".into(), ..Default::default() };
+        assert!(ex.execute(&cu2, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! The evaluation workload: BWA-style genome read alignment.
+//!
+//! The paper evaluates Pilot-Data with BWA over (i) an 8 GB reference
+//! genome + index shared by all tasks and (ii) partitioned read files
+//! (Fig. 9: 2 GB reads → 8 tasks × 256 MB; Fig. 11: 1024 tasks × 1 GB
+//! reads, 9 GB consumed per task). This module provides
+//!
+//! * real small-scale data: synthetic genome + sampled reads with
+//!   errors, encoded as `runtime::payload` files for the local
+//!   execution mode (the end-to-end example);
+//! * sim-scale workload builders producing the DU/CU ensembles of the
+//!   Fig. 9 and Fig. 11 experiments with the paper's data footprints;
+//! * the task cost model used by the sim driver.
+
+pub mod mapreduce;
+
+use crate::rng::Rng;
+use crate::unit::{ComputeUnitDescription, DataUnitDescription, FileRef};
+use crate::util::Bytes;
+
+/// Synthetic genome: `len` base codes in {0,1,2,3}.
+pub fn synth_genome(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(4) as u8).collect()
+}
+
+/// Sample `n` reads of length `read_len` uniformly from the genome,
+/// flipping each base with probability `err_rate`. Returns (reads,
+/// true_positions).
+pub fn sample_reads(
+    rng: &mut Rng,
+    genome: &[u8],
+    n: usize,
+    read_len: usize,
+    err_rate: f64,
+) -> (Vec<Vec<u8>>, Vec<usize>) {
+    sample_reads_lattice(rng, genome, n, read_len, err_rate, 1)
+}
+
+/// Like [`sample_reads`] but with start positions restricted to a
+/// `lattice`-base grid — pairs with the seed kernel's shift lattice
+/// (`SHIFT_STRIDE` in `python/compile/kernels/ref.py`) so an exact
+/// shifted placement always exists.
+pub fn sample_reads_lattice(
+    rng: &mut Rng,
+    genome: &[u8],
+    n: usize,
+    read_len: usize,
+    err_rate: f64,
+    lattice: usize,
+) -> (Vec<Vec<u8>>, Vec<usize>) {
+    assert!(genome.len() >= read_len, "genome shorter than read");
+    assert!(lattice >= 1);
+    let mut reads = Vec::with_capacity(n);
+    let mut positions = Vec::with_capacity(n);
+    let slots = (genome.len() - read_len) / lattice + 1;
+    for _ in 0..n {
+        let pos = rng.below(slots as u64) as usize * lattice;
+        let mut read: Vec<u8> = genome[pos..pos + read_len].to_vec();
+        for b in read.iter_mut() {
+            if rng.chance(err_rate) {
+                *b = ((*b + 1 + rng.below(3) as u8) % 4) as u8;
+            }
+        }
+        reads.push(read);
+        positions.push(pos);
+    }
+    (reads, positions)
+}
+
+/// Tile the genome into overlapping windows of `win_len` at `stride`.
+pub fn extract_windows(genome: &[u8], win_len: usize, stride: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start + win_len <= genome.len() {
+        out.push(genome[start..start + win_len].to_vec());
+        start += stride;
+    }
+    out
+}
+
+/// Encode base codes as the f32 row-major payload the runtime expects.
+pub fn encode_f32(rows: &[Vec<u8>]) -> Vec<f32> {
+    rows.iter().flat_map(|r| r.iter().map(|&b| b as f32)).collect()
+}
+
+/// Compute the fraction of reads whose best window contains their true
+/// sampling position (the end-to-end accuracy metric).
+pub fn window_hit_rate(
+    positions: &[usize],
+    best_windows: &[f32],
+    win_len: usize,
+    stride: usize,
+    read_len: usize,
+) -> f64 {
+    let mut hits = 0usize;
+    for (i, &pos) in positions.iter().enumerate() {
+        let w = best_windows[i] as usize;
+        let (ws, we) = (w * stride, w * stride + win_len);
+        if pos >= ws && pos + read_len <= we {
+            hits += 1;
+        }
+    }
+    hits as f64 / positions.len().max(1) as f64
+}
+
+/// The BWA ensemble of Fig. 9: one shared reference DU (genome +
+/// index) and `tasks` read-chunk DUs with per-task CUs.
+pub struct BwaEnsemble {
+    pub reference: DataUnitDescription,
+    pub read_chunks: Vec<DataUnitDescription>,
+    pub cu_template: ComputeUnitDescription,
+}
+
+/// Build the Fig. 9-scale ensemble: `tasks` tasks, `reads_total` of
+/// read data partitioned evenly, reference of `ref_size`.
+pub fn bwa_ensemble(tasks: usize, reads_total: Bytes, ref_size: Bytes) -> BwaEnsemble {
+    let chunk = Bytes(reads_total.0 / tasks as u64);
+    let reference = DataUnitDescription {
+        name: "bwa-reference".into(),
+        files: vec![
+            FileRef::sized("genome.fa", Bytes(ref_size.0 * 3 / 4)),
+            FileRef::sized("genome.bwt", Bytes(ref_size.0 / 8)),
+            FileRef::sized("genome.sa", Bytes(ref_size.0 / 8)),
+        ],
+        affinity: None,
+    };
+    let read_chunks = (0..tasks)
+        .map(|i| DataUnitDescription {
+            name: format!("reads-{i:04}"),
+            files: vec![FileRef::sized(&format!("chunk{i:04}.fq"), chunk)],
+            affinity: None,
+        })
+        .collect();
+    // Per-task: scan the reference (+ its chunk) once -> I/O bytes;
+    // CPU scales with chunk size relative to the 256 MiB reference
+    // chunk of Fig. 9.
+    let cpu = crate::config::bwa_cpu_secs_per_chunk() * chunk.as_f64()
+        / Bytes::mb(256).as_f64();
+    let cu_template = ComputeUnitDescription {
+        executable: "bwa".into(),
+        arguments: vec!["aln".into()],
+        cores: 2,
+        cpu_secs_hint: cpu,
+        io_bytes_hint: ref_size + chunk,
+        ..Default::default()
+    };
+    BwaEnsemble { reference, read_chunks, cu_template }
+}
+
+/// Task cost model (sim mode): pure CPU time scaled by machine speed +
+/// shared-FS scan time at the task's current bandwidth share.
+pub fn task_runtime_s(
+    cpu_secs_hint: f64,
+    io_bytes_hint: Bytes,
+    speed_factor: f64,
+    fs_share_bytes_per_s: f64,
+) -> f64 {
+    let io = if fs_share_bytes_per_s > 0.0 {
+        io_bytes_hint.as_f64() / fs_share_bytes_per_s
+    } else {
+        f64::INFINITY
+    };
+    cpu_secs_hint * speed_factor + io
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn genome_and_reads_are_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(synth_genome(&mut r1, 100), synth_genome(&mut r2, 100));
+    }
+
+    #[test]
+    fn reads_come_from_genome_when_error_free() {
+        let mut rng = Rng::new(6);
+        let genome = synth_genome(&mut rng, 1000);
+        let (reads, pos) = sample_reads(&mut rng, &genome, 20, 50, 0.0);
+        for (read, p) in reads.iter().zip(&pos) {
+            assert_eq!(read.as_slice(), &genome[*p..*p + 50]);
+        }
+    }
+
+    #[test]
+    fn error_rate_perturbs_reads() {
+        let mut rng = Rng::new(7);
+        let genome = synth_genome(&mut rng, 2000);
+        let (reads, pos) = sample_reads(&mut rng, &genome, 50, 100, 0.1);
+        let mut mismatches = 0usize;
+        for (read, p) in reads.iter().zip(&pos) {
+            mismatches += read
+                .iter()
+                .zip(&genome[*p..*p + 100])
+                .filter(|(a, b)| a != b)
+                .count();
+        }
+        let rate = mismatches as f64 / (50.0 * 100.0);
+        assert!((rate - 0.1).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn windows_tile_the_genome() {
+        let genome: Vec<u8> = (0..100).map(|i| (i % 4) as u8).collect();
+        let w = extract_windows(&genome, 20, 10);
+        assert_eq!(w.len(), 9);
+        assert_eq!(w[0].as_slice(), &genome[0..20]);
+        assert_eq!(w[8].as_slice(), &genome[80..100]);
+    }
+
+    #[test]
+    fn encode_f32_flattens_row_major() {
+        let rows = vec![vec![0u8, 1], vec![2, 3]];
+        assert_eq!(encode_f32(&rows), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn hit_rate_full_and_zero() {
+        // Window 0 covers [0, 20); read at pos 2 len 10 fits.
+        assert_eq!(window_hit_rate(&[2], &[0.0], 20, 10, 10), 1.0);
+        // Wrong window.
+        assert_eq!(window_hit_rate(&[50], &[0.0], 20, 10, 10), 0.0);
+    }
+
+    #[test]
+    fn ensemble_matches_paper_fig9_footprint() {
+        let e = bwa_ensemble(8, Bytes::gb(2), Bytes::gb(8));
+        assert_eq!(e.read_chunks.len(), 8);
+        assert_eq!(e.read_chunks[0].total_size(), Bytes::mb(256));
+        let ref_total = e.reference.total_size();
+        assert_eq!(ref_total, Bytes::gb(8));
+        // Per-task consumption ≈ 8.25 GiB (ref + chunk).
+        let per_task = e.cu_template.io_bytes_hint;
+        assert_eq!(per_task, Bytes::gb(8) + Bytes::mb(256));
+        assert!((e.cu_template.cpu_secs_hint - crate::config::bwa_cpu_secs_per_chunk()).abs() < 1.0);
+    }
+
+    #[test]
+    fn ensemble_matches_paper_fig11_footprint() {
+        // 1024 tasks x 1 GB reads; 9 GB consumed per task.
+        let e = bwa_ensemble(1024, Bytes::gb(1024), Bytes::gb(8));
+        assert_eq!(e.read_chunks.len(), 1024);
+        assert_eq!(e.read_chunks[0].total_size(), Bytes::gb(1));
+        assert_eq!(e.cu_template.io_bytes_hint, Bytes::gb(9));
+        assert_eq!(e.cu_template.cores, 2); // "For each tasks two cores"
+    }
+
+    #[test]
+    fn cost_model_io_dominates_when_share_small() {
+        let fast = task_runtime_s(100.0, Bytes::gb(9), 1.0, 1e9);
+        let slow = task_runtime_s(100.0, Bytes::gb(9), 1.0, 16e6);
+        assert!(slow > 5.0 * fast, "fast={fast} slow={slow}");
+        assert!(task_runtime_s(1.0, Bytes::gb(1), 1.0, 0.0).is_infinite());
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration tests of the PJRT runtime inside the full local-mode
+//! pilot system: real Data-Units carrying read payloads, real agents,
+//! real XLA execution of the AOT JAX/Pallas artifact.
+//!
+//! Skipped gracefully when artifacts are missing (`make artifacts`).
+
+use pilot_data::rng::Rng;
+use pilot_data::runtime::{payload, AlignExecutor, RuntimeServer};
+use pilot_data::service::PilotSystem;
+use pilot_data::unit::{ComputeUnitDescription, CuState, DataUnitDescription};
+use pilot_data::workload;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn align_cu_runs_real_xla_through_pilot_system() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let server = RuntimeServer::spawn(&dir).unwrap();
+    let info = server.handle().info("align_small.hlo.txt").unwrap();
+
+    let workdir =
+        std::env::temp_dir().join(format!("pd-it-runtime-{}", std::process::id()));
+    let sys = PilotSystem::new(
+        &workdir,
+        Arc::new(AlignExecutor::new(&server, "align_small.hlo.txt")),
+    );
+    let pds = sys.data_service();
+    let cds = sys.compute_data_service();
+    sys.compute_service().create_pilot(pilot_data::pilot_desc("local/a")).unwrap();
+    let pd = pds.create_pilot_data(pilot_data::pd_desc(&workdir, "pd", "local/a")).unwrap();
+
+    // Deterministic workload where every read is planted on the shift
+    // lattice of some window.
+    let mut rng = Rng::new(5);
+    let stride = info.lw - info.l;
+    let genome = workload::synth_genome(&mut rng, (info.w - 1) * stride + info.lw);
+    let windows = workload::extract_windows(&genome, info.lw, stride);
+    let windows = &windows[..info.w];
+    let (reads, positions) =
+        workload::sample_reads_lattice(&mut rng, &genome, 24, info.l, 0.0, 4);
+
+    let reads_payload =
+        payload::encode(reads.len() as u32, info.l as u32, &workload::encode_f32(&reads));
+    let windows_payload =
+        payload::encode(info.w as u32, info.lw as u32, &workload::encode_f32(windows));
+    let input = cds
+        .put_data_unit(
+            "reads",
+            &[("reads.pd1", &reads_payload), ("windows.pd1", &windows_payload)],
+            &pd,
+        )
+        .unwrap();
+    let output = cds
+        .submit_data_unit(DataUnitDescription { name: "out".into(), ..Default::default() }, &pd)
+        .unwrap();
+    let cu = cds
+        .submit_compute_unit(ComputeUnitDescription {
+            executable: "pjrt:align".into(),
+            cores: 1,
+            input_data: vec![input],
+            output_data: vec![output.clone()],
+            ..Default::default()
+        })
+        .unwrap();
+    sys.wait_all(Duration::from_secs(120)).unwrap();
+    assert_eq!(sys.cu_state(&cu), Some(CuState::Done), "err={:?}", sys.cu_error(&cu));
+
+    let csv = String::from_utf8(cds.fetch(&output, "scores.csv").unwrap()).unwrap();
+    let mut best = Vec::new();
+    let mut scores = Vec::new();
+    for line in csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        best.push(cols[1].parse::<f32>().unwrap());
+        scores.push(cols[2].parse::<f32>().unwrap());
+    }
+    assert_eq!(best.len(), 24);
+    // Error-free lattice reads must align perfectly: score = 2 * L and
+    // the chosen window contains the read.
+    let hit = workload::window_hit_rate(&positions, &best, info.lw, stride, info.l);
+    assert!(hit > 0.99, "hit={hit}");
+    for s in &scores {
+        assert!((s - 2.0 * info.l as f32).abs() < 1e-3, "score {s}");
+    }
+
+    sys.shutdown();
+    let _ = std::fs::remove_dir_all(workdir);
+}
+
+#[test]
+fn runtime_server_handles_concurrent_clients() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let server = RuntimeServer::spawn(&dir).unwrap();
+    let info = server.handle().info("align_small.hlo.txt").unwrap();
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let handle = server.handle();
+        let (b, l, w, lw) = (info.b, info.l, info.w, info.lw);
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for _ in 0..5 {
+                let reads: Vec<f32> = (0..b * l).map(|_| rng.below(4) as f32).collect();
+                let windows: Vec<f32> = (0..w * lw).map(|_| rng.below(4) as f32).collect();
+                let (scores, best) =
+                    handle.align("align_small.hlo.txt", reads, windows).unwrap();
+                assert_eq!(scores.len(), b);
+                assert_eq!(best.len(), b);
+            }
+        }));
+    }
+    for th in threads {
+        th.join().unwrap();
+    }
+}
+
+#[test]
+fn runtime_server_reports_errors_not_panics() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let server = RuntimeServer::spawn(&dir).unwrap();
+    let handle = server.handle();
+    assert!(handle.info("missing.hlo.txt").is_err());
+    assert!(handle.align("align_small.hlo.txt", vec![1.0; 3], vec![1.0; 3]).is_err());
+    // Server still alive after errors.
+    assert!(handle.info("align_small.hlo.txt").is_ok());
+}
