@@ -2,6 +2,12 @@
 //! coordination-store operations, JSON parsing, and raw discrete-event
 //! throughput. These are the §Perf numbers for the coordinator layer.
 //!
+//! Besides the human-readable table, the run emits
+//! `BENCH_perf_micro.json` (bench name → ns/op, plus end-to-end wall
+//! seconds) so successive PRs have a machine-readable perf trajectory.
+//! Set `PD_BENCH_OUT` to change the output path and `PD_BENCH_QUICK=1`
+//! to cut iteration counts by 10× (CI smoke runs).
+//!
 //! Run with: `cargo bench --bench perf_micro`
 
 use pilot_data::coordination::{keys, Store};
@@ -13,7 +19,17 @@ use pilot_data::unit::{ComputeUnit, ComputeUnitDescription};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+fn quick() -> u64 {
+    if std::env::var("PD_BENCH_QUICK").is_ok() {
+        10
+    } else {
+        1
+    }
+}
+
+/// Run a benchmark, print its row, and return ns/op.
+fn bench<F: FnMut()>(results: &mut Vec<(String, f64)>, name: &str, iters: u64, mut f: F) -> f64 {
+    let iters = (iters / quick()).max(1);
     // Warmup.
     for _ in 0..iters / 10 + 1 {
         f();
@@ -23,15 +39,19 @@ fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
         f();
     }
     let dt = t0.elapsed().as_secs_f64();
+    let ns_per_op = 1e9 * dt / iters as f64;
     println!(
-        "{name:<34}{:>12.0} ops/s   ({:.2} us/op)",
+        "{name:<40}{:>12.0} ops/s   ({:.2} us/op)",
         iters as f64 / dt,
-        1e6 * dt / iters as f64
+        ns_per_op / 1e3
     );
+    results.push((name.to_string(), ns_per_op));
+    ns_per_op
 }
 
 fn main() {
     println!("# L3 micro-benchmarks");
+    let mut results: Vec<(String, f64)> = Vec::new();
 
     // --- scheduler placement over a realistic pilot fleet ---
     let mut st = ManagerState::new();
@@ -62,34 +82,72 @@ fn main() {
         input_data: vec!["du-3".into(), "du-17".into()],
         ..Default::default()
     });
-    bench("scheduler.place (16 pilots, 2 DUs)", 200_000, || {
+    bench(&mut results, "scheduler.place (16 pilots, 2 DUs)", 200_000, || {
+        std::hint::black_box(sched.place(&cu, &ctx));
+    });
+
+    // Same decision but with the context assembled per call from the
+    // manager's incremental indexes — the shape every submit takes.
+    let mut st2 = ManagerState::new();
+    for i in 0..16 {
+        let mut p = PilotCompute::new(PilotComputeDescription {
+            service_url: "batch://m".into(),
+            cores: 64,
+            walltime_s: 1e6,
+            affinity: Some(Label::new(&format!("osg/site{}", i % 8))),
+        });
+        p.state = PilotState::Active;
+        st2.add_pilot(p);
+    }
+    for d in 0..64 {
+        st2.note_replica(&format!("du-{d}"), &Label::new(&format!("osg/site{}", d % 8)));
+    }
+    bench(&mut results, "sched context assemble + place (indexed)", 200_000, || {
+        let ctx = SchedContext::from_state(&topo, &st2);
         std::hint::black_box(sched.place(&cu, &ctx));
     });
 
     // --- coordination store ---
     let store = Store::new();
-    let mut i = 0u64;
-    bench("store hset+hget", 500_000, || {
-        i += 1;
+    let k = keys::cu_key("cu-bench");
+    bench(&mut results, "store hset+hget", 500_000, || {
+        store.hset_k(&k, "state", "Running").unwrap();
+        std::hint::black_box(store.hget_k(&k, "state").unwrap());
+    });
+    bench(&mut results, "store hset+hget (string keys)", 500_000, || {
         let k = keys::cu("cu-bench");
         store.hset(&k, "state", "Running").unwrap();
         std::hint::black_box(store.hget(&k, "state").unwrap());
     });
-    bench("store queue rpush+lpop", 500_000, || {
-        store.rpush(keys::GLOBAL_QUEUE, "cu-1").unwrap();
-        std::hint::black_box(store.lpop(keys::GLOBAL_QUEUE).unwrap());
+    let gq = keys::global_queue_key();
+    bench(&mut results, "store queue rpush+lpop", 500_000, || {
+        store.rpush_k(gq, "cu-1").unwrap();
+        std::hint::black_box(store.lpop_k(gq).unwrap());
     });
 
-    // --- JSON ---
+    // --- JSON / typed record cache ---
     let doc = r#"{"executable":"/bin/bwa","arguments":["aln","-t","4"],"cores":2,
                   "input_data":["du-1","du-2"],"output_data":["du-3"],
                   "affinity":"osg/purdue","cpu_secs_hint":2200.0,"io_bytes_hint":9663676416}"#;
-    bench("json parse CUD", 200_000, || {
+    bench(&mut results, "json parse CUD", 200_000, || {
         std::hint::black_box(pilot_data::json::parse(doc).unwrap());
+    });
+    let cud = ComputeUnitDescription {
+        executable: "/bin/bwa".into(),
+        arguments: vec!["aln".into(), "-t".into(), "4".into()],
+        cores: 2,
+        input_data: vec!["du-1".into(), "du-2".into()],
+        ..Default::default()
+    };
+    store
+        .hset(&keys::cu("cu-cached"), "descr", &cud.to_json().to_string_compact())
+        .unwrap();
+    bench(&mut results, "CUD via typed record cache", 200_000, || {
+        std::hint::black_box(store.cu_description("cu-cached").unwrap());
     });
 
     // --- discrete-event engine ---
-    bench("DES schedule+pop (1k events)", 2_000, || {
+    bench(&mut results, "DES schedule+pop (1k events)", 2_000, || {
         let mut sim: Sim<u32> = Sim::new();
         for i in 0..1000u32 {
             sim.schedule((i % 97) as f64, i);
@@ -103,13 +161,27 @@ fn main() {
     });
 
     // --- end-to-end sim throughput ---
+    let tasks = (1024 / quick() as usize).max(64);
     let t0 = Instant::now();
-    let r = pilot_data::experiments::fig11::run_scenario(3, 42, 1024).unwrap();
+    let r = pilot_data::experiments::fig11::run_scenario(3, 42, tasks).unwrap();
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "{:<34}{:>12.0} tasks/s   (1024-task fig11 sc3 in {dt:.3}s, T={:.0}s simulated)",
+        "{:<40}{:>12.0} tasks/s   ({tasks}-task fig11 sc3 in {dt:.3}s, T={:.0}s simulated)",
         "sim end-to-end",
-        1024.0 / dt,
+        tasks as f64 / dt,
         r.t_total
     );
+    results.push(("sim end-to-end fig11 sc3 (ns/task)".to_string(), 1e9 * dt / tasks as f64));
+    results.push(("fig11 sc3 wall_s".to_string(), dt));
+
+    // --- machine-readable trajectory ---
+    let out = std::env::var("PD_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf_micro.json".into());
+    let mut obj = pilot_data::json::Json::obj();
+    for (name, v) in &results {
+        obj = obj.set(name.as_str(), *v);
+    }
+    match std::fs::write(&out, obj.to_string_pretty()) {
+        Ok(()) => println!("\n[json] {out}"),
+        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
+    }
 }

@@ -7,27 +7,144 @@
 //! (paper §4.2) — agent resource info, CU queues (one global + one per
 //! pilot), and entity state. The store persists snapshots so both the
 //! application and the Pilot-Manager can disconnect and re-connect, and
-//! both survive transient store failures.
+//! both survive transient store failures. The P* model paper makes the
+//! coordination layer an explicit first-class element whose overhead
+//! bounds pilot throughput — which is why this module is engineered as
+//! a hot path, not a toy KV map.
 //!
-//! This module is a from-scratch implementation of exactly that service
-//! surface: string KV, hashes, list-queues, pub/sub, key scans,
-//! JSON snapshots, and injectable transient failure for fault-tolerance
-//! tests.
+//! # Architecture (sharding + interning + record cache)
+//!
+//! The store is split into [`SHARDS`] independent lock stripes; a key's
+//! stripe is chosen by a fast FxHash of its bytes, so unrelated keys
+//! (different pilots' queues, different entities' hashes) never contend
+//! on one mutex. Within a stripe the data lives in a `HashMap` with the
+//! same FxHash — O(1) per op instead of the former global
+//! `Mutex<BTreeMap>`'s O(log n) under one lock.
+//!
+//! Callers on the hot path intern their keys once into [`Key`] handles
+//! (an `Arc<str>` plus the precomputed stripe index) via [`Key::new`]
+//! or the `keys::*_key` helpers; the `*_k` method variants then avoid
+//! the per-operation `format!`/`to_string` allocations the old API
+//! forced. The plain `&str` API is kept as a thin compatibility layer
+//! over the same stripes.
+//!
+//! CU/DU descriptions are written once and read many times, so the
+//! store also keeps a **typed record cache**: [`Store::cu_description`]
+//! / [`Store::du_description`] parse the JSON `descr` field once,
+//! memoize the typed value behind an `Arc`, and invalidate on any write
+//! to that record ([`Store::hset`] of `descr`, [`Store::del`],
+//! [`Store::restore`]). Cold-path operations (snapshots, prefix scans)
+//! stay deterministic by collecting into ordered maps.
+//!
+//! The service surface is unchanged: string KV, hashes, list-queues,
+//! pub/sub, key scans, JSON snapshots, and injectable transient failure
+//! for fault-tolerance tests.
 
 use crate::json::Json;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Number of independent lock stripes (power of two).
+pub const SHARDS: usize = 16;
 
 /// Errors surfaced by store operations.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum StoreError {
     /// The store is unreachable (injected transient failure) — callers
     /// are expected to retry, as BigJob agents do.
-    #[error("coordination store unavailable")]
     Unavailable,
-    #[error("wrong type for key '{0}'")]
     WrongType(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Unavailable => f.write_str("coordination store unavailable"),
+            StoreError::WrongType(k) => write!(f, "wrong type for key '{k}'"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// FxHash (Firefox/rustc hash): multiply-xor, very fast on the short
+/// `pd:*` keys this store sees. Not DoS-resistant — irrelevant here.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            let v = u64::from_le_bytes(c.try_into().unwrap());
+            self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(FX_SEED);
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut v = 0u64;
+            for (i, &b) in rem.iter().enumerate() {
+                v |= (b as u64) << (8 * i);
+            }
+            self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(FX_SEED);
+        }
+    }
+
+    fn write_u8(&mut self, b: u8) {
+        self.hash = (self.hash.rotate_left(5) ^ b as u64).wrapping_mul(FX_SEED);
+    }
+
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// `HashMap` wired to [`FxHasher`].
+pub type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+fn stripe_of(key: &str) -> usize {
+    let mut h = FxHasher::default();
+    h.write(key.as_bytes());
+    // Use the high bits: Fx mixes poorly in the low bits for short keys.
+    (h.finish() >> 56) as usize & (SHARDS - 1)
+}
+
+/// An interned store key: the text plus its precomputed lock stripe.
+/// Clone is an `Arc` refcount bump; producing one per entity (not per
+/// operation) removes the `format!` traffic from the coordination hot
+/// path.
+#[derive(Clone, Debug)]
+pub struct Key {
+    text: Arc<str>,
+    stripe: usize,
+}
+
+impl Key {
+    pub fn new(text: &str) -> Key {
+        Key { text: Arc::from(text), stripe: stripe_of(text) }
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.text
+    }
+}
+
+impl From<&str> for Key {
+    fn from(s: &str) -> Key {
+        Key::new(s)
+    }
+}
+
+impl std::fmt::Display for Key {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.text)
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -38,17 +155,33 @@ enum Value {
 }
 
 #[derive(Default)]
+struct Shard {
+    data: FxMap<Arc<str>, Value>,
+}
+
+/// Typed, parse-once cache of CU/DU description records. `generation`
+/// advances on every invalidation; a miss that parsed under an older
+/// generation must not populate the cache (its source text may have
+/// been superseded while it was parsing outside the lock).
+#[derive(Default)]
+struct DescrCache {
+    generation: u64,
+    cus: FxMap<String, Arc<crate::unit::ComputeUnitDescription>>,
+    dus: FxMap<String, Arc<crate::unit::DataUnitDescription>>,
+}
+
 struct Inner {
-    data: BTreeMap<String, Value>,
-    subs: BTreeMap<String, Vec<Sender<String>>>,
-    down: bool,
-    ops: u64,
+    shards: Vec<Mutex<Shard>>,
+    subs: Mutex<BTreeMap<String, Vec<Sender<String>>>>,
+    descr: Mutex<DescrCache>,
+    down: AtomicBool,
+    ops: AtomicU64,
 }
 
 /// Cloneable handle to the shared store (the "connection").
 #[derive(Clone)]
 pub struct Store {
-    inner: Arc<Mutex<Inner>>,
+    inner: Arc<Inner>,
 }
 
 impl Default for Store {
@@ -59,48 +192,75 @@ impl Default for Store {
 
 impl Store {
     pub fn new() -> Store {
-        Store { inner: Arc::new(Mutex::new(Inner::default())) }
+        Store {
+            inner: Arc::new(Inner {
+                shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+                subs: Mutex::new(BTreeMap::new()),
+                descr: Mutex::new(DescrCache::default()),
+                down: AtomicBool::new(false),
+                ops: AtomicU64::new(0),
+            }),
+        }
     }
 
-    fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
-    fn check_up(inner: &mut Inner) -> Result<(), StoreError> {
-        inner.ops += 1;
-        if inner.down {
+    /// Count the op and fail if a transient outage is injected.
+    fn begin(&self) -> Result<(), StoreError> {
+        self.inner.ops.fetch_add(1, Ordering::Relaxed);
+        if self.inner.down.load(Ordering::Relaxed) {
             Err(StoreError::Unavailable)
         } else {
             Ok(())
         }
     }
 
+    fn stripe(&self, idx: usize) -> MutexGuard<'_, Shard> {
+        self.inner.shards[idx].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Inject / clear a transient outage.
     pub fn set_down(&self, down: bool) {
-        self.guard().down = down;
+        self.inner.down.store(down, Ordering::Relaxed);
     }
 
     pub fn is_down(&self) -> bool {
-        self.guard().down
+        self.inner.down.load(Ordering::Relaxed)
     }
 
     /// Total operations served (metrics / perf assertions).
     pub fn op_count(&self) -> u64 {
-        self.guard().ops
+        self.inner.ops.load(Ordering::Relaxed)
     }
 
     // ---- string KV ----
 
-    pub fn set(&self, key: &str, value: &str) -> Result<(), StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
-        g.data.insert(key.to_string(), Value::Str(value.to_string()));
+    fn set_at(&self, idx: usize, key: &str, value: &str) -> Result<(), StoreError> {
+        self.begin()?;
+        {
+            let mut g = self.stripe(idx);
+            match g.data.get_mut(key) {
+                Some(v) => *v = Value::Str(value.to_string()),
+                None => {
+                    g.data.insert(Arc::from(key), Value::Str(value.to_string()));
+                }
+            }
+        }
+        // A whole-value overwrite of an entity record drops any cached
+        // typed description for it.
+        self.invalidate_descr(key);
         Ok(())
     }
 
-    pub fn get(&self, key: &str) -> Result<Option<String>, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
+    pub fn set(&self, key: &str, value: &str) -> Result<(), StoreError> {
+        self.set_at(stripe_of(key), key, value)
+    }
+
+    pub fn set_k(&self, key: &Key, value: &str) -> Result<(), StoreError> {
+        self.set_at(key.stripe, &key.text, value)
+    }
+
+    fn get_at(&self, idx: usize, key: &str) -> Result<Option<String>, StoreError> {
+        self.begin()?;
+        let g = self.stripe(idx);
         match g.data.get(key) {
             None => Ok(None),
             Some(Value::Str(s)) => Ok(Some(s.clone())),
@@ -108,37 +268,101 @@ impl Store {
         }
     }
 
+    pub fn get(&self, key: &str) -> Result<Option<String>, StoreError> {
+        self.get_at(stripe_of(key), key)
+    }
+
+    pub fn get_k(&self, key: &Key) -> Result<Option<String>, StoreError> {
+        self.get_at(key.stripe, &key.text)
+    }
+
     pub fn del(&self, key: &str) -> Result<bool, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
-        Ok(g.data.remove(key).is_some())
+        self.begin()?;
+        let removed = self.stripe(stripe_of(key)).data.remove(key).is_some();
+        if removed {
+            self.invalidate_descr(key);
+        }
+        Ok(removed)
     }
 
     /// Keys with the given prefix (BigJob scans `bigjob:pilot:*`-style
-    /// namespaces on re-connect).
+    /// namespaces on re-connect). Sorted for deterministic iteration.
     pub fn keys_with_prefix(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
-        Ok(g.data.keys().filter(|k| k.starts_with(prefix)).cloned().collect())
+        self.begin()?;
+        let mut out = Vec::new();
+        for idx in 0..SHARDS {
+            let g = self.stripe(idx);
+            out.extend(g.data.keys().filter(|k| k.starts_with(prefix)).map(|k| k.to_string()));
+        }
+        out.sort();
+        Ok(out)
     }
 
     // ---- hashes (entity state: pilots, CUs, DUs) ----
 
-    pub fn hset(&self, key: &str, field: &str, value: &str) -> Result<(), StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
-        match g.data.entry(key.to_string()).or_insert_with(|| Value::Hash(BTreeMap::new())) {
-            Value::Hash(h) => {
-                h.insert(field.to_string(), value.to_string());
-                Ok(())
+    fn hset_at(&self, idx: usize, key: &str, field: &str, value: &str) -> Result<(), StoreError> {
+        self.begin()?;
+        {
+            let mut g = self.stripe(idx);
+            match g.data.get_mut(key) {
+                Some(Value::Hash(h)) => {
+                    h.insert(field.to_string(), value.to_string());
+                }
+                Some(_) => return Err(StoreError::WrongType(key.to_string())),
+                None => {
+                    let mut h = BTreeMap::new();
+                    h.insert(field.to_string(), value.to_string());
+                    g.data.insert(Arc::from(key), Value::Hash(h));
+                }
             }
-            _ => Err(StoreError::WrongType(key.to_string())),
+        }
+        if field == "descr" {
+            self.invalidate_descr(key);
+        }
+        Ok(())
+    }
+
+    pub fn hset(&self, key: &str, field: &str, value: &str) -> Result<(), StoreError> {
+        self.hset_at(stripe_of(key), key, field, value)
+    }
+
+    pub fn hset_k(&self, key: &Key, field: &str, value: &str) -> Result<(), StoreError> {
+        self.hset_at(key.stripe, &key.text, field, value)
+    }
+
+    /// Redis HSETNX: write only if the field is absent; returns whether
+    /// a write happened. Lets immutable records (e.g. `descr`) be
+    /// checkpointed repeatedly without re-serializing churn.
+    pub fn hset_if_absent(
+        &self,
+        key: &str,
+        field: &str,
+        value: impl FnOnce() -> String,
+    ) -> Result<bool, StoreError> {
+        self.begin()?;
+        let mut g = self.stripe(stripe_of(key));
+        match g.data.get_mut(key) {
+            Some(Value::Hash(h)) => {
+                if h.contains_key(field) {
+                    Ok(false)
+                } else {
+                    h.insert(field.to_string(), value());
+                    Ok(true)
+                }
+            }
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+            None => {
+                let mut h = BTreeMap::new();
+                h.insert(field.to_string(), value());
+                g.data.insert(Arc::from(key), Value::Hash(h));
+                Ok(true)
+            }
         }
     }
 
-    pub fn hget(&self, key: &str, field: &str) -> Result<Option<String>, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
+    fn hget_at(&self, idx: usize, key: &str, field: &str) -> Result<Option<String>, StoreError> {
+        self.begin()?;
+        let g = self.stripe(idx);
         match g.data.get(key) {
             None => Ok(None),
             Some(Value::Hash(h)) => Ok(h.get(field).cloned()),
@@ -146,9 +370,17 @@ impl Store {
         }
     }
 
+    pub fn hget(&self, key: &str, field: &str) -> Result<Option<String>, StoreError> {
+        self.hget_at(stripe_of(key), key, field)
+    }
+
+    pub fn hget_k(&self, key: &Key, field: &str) -> Result<Option<String>, StoreError> {
+        self.hget_at(key.stripe, &key.text, field)
+    }
+
     pub fn hgetall(&self, key: &str) -> Result<BTreeMap<String, String>, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
+        self.begin()?;
+        let g = self.stripe(stripe_of(key));
         match g.data.get(key) {
             None => Ok(BTreeMap::new()),
             Some(Value::Hash(h)) => Ok(h.clone()),
@@ -158,21 +390,35 @@ impl Store {
 
     // ---- list queues (global CU queue + per-pilot queues) ----
 
-    pub fn rpush(&self, key: &str, value: &str) -> Result<usize, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
-        match g.data.entry(key.to_string()).or_insert_with(|| Value::List(VecDeque::new())) {
-            Value::List(l) => {
+    fn rpush_at(&self, idx: usize, key: &str, value: &str) -> Result<usize, StoreError> {
+        self.begin()?;
+        let mut g = self.stripe(idx);
+        match g.data.get_mut(key) {
+            Some(Value::List(l)) => {
                 l.push_back(value.to_string());
                 Ok(l.len())
             }
-            _ => Err(StoreError::WrongType(key.to_string())),
+            Some(_) => Err(StoreError::WrongType(key.to_string())),
+            None => {
+                let mut l = VecDeque::new();
+                l.push_back(value.to_string());
+                g.data.insert(Arc::from(key), Value::List(l));
+                Ok(1)
+            }
         }
     }
 
-    pub fn lpop(&self, key: &str) -> Result<Option<String>, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
+    pub fn rpush(&self, key: &str, value: &str) -> Result<usize, StoreError> {
+        self.rpush_at(stripe_of(key), key, value)
+    }
+
+    pub fn rpush_k(&self, key: &Key, value: &str) -> Result<usize, StoreError> {
+        self.rpush_at(key.stripe, &key.text, value)
+    }
+
+    fn lpop_at(&self, idx: usize, key: &str) -> Result<Option<String>, StoreError> {
+        self.begin()?;
+        let mut g = self.stripe(idx);
         match g.data.get_mut(key) {
             None => Ok(None),
             Some(Value::List(l)) => Ok(l.pop_front()),
@@ -180,9 +426,17 @@ impl Store {
         }
     }
 
-    pub fn llen(&self, key: &str) -> Result<usize, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
+    pub fn lpop(&self, key: &str) -> Result<Option<String>, StoreError> {
+        self.lpop_at(stripe_of(key), key)
+    }
+
+    pub fn lpop_k(&self, key: &Key) -> Result<Option<String>, StoreError> {
+        self.lpop_at(key.stripe, &key.text)
+    }
+
+    fn llen_at(&self, idx: usize, key: &str) -> Result<usize, StoreError> {
+        self.begin()?;
+        let g = self.stripe(idx);
         match g.data.get(key) {
             None => Ok(0),
             Some(Value::List(l)) => Ok(l.len()),
@@ -190,21 +444,108 @@ impl Store {
         }
     }
 
+    pub fn llen(&self, key: &str) -> Result<usize, StoreError> {
+        self.llen_at(stripe_of(key), key)
+    }
+
+    pub fn llen_k(&self, key: &Key) -> Result<usize, StoreError> {
+        self.llen_at(key.stripe, &key.text)
+    }
+
+    // ---- typed record cache ----
+
+    fn invalidate_descr(&self, key: &str) {
+        if let Some(id) = key.strip_prefix("pd:cu:") {
+            let mut c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+            c.generation = c.generation.wrapping_add(1);
+            c.cus.remove(id);
+        } else if let Some(id) = key.strip_prefix("pd:du:") {
+            let mut c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+            c.generation = c.generation.wrapping_add(1);
+            c.dus.remove(id);
+        }
+    }
+
+    /// The typed Compute-Unit-Description stored under `pd:cu:<id>`,
+    /// parsed from JSON at most once per write ("json parse CUD" leaves
+    /// the hot path). Returns `None` when the record or its `descr`
+    /// field is absent.
+    pub fn cu_description(
+        &self,
+        cu_id: &str,
+    ) -> anyhow::Result<Option<Arc<crate::unit::ComputeUnitDescription>>> {
+        // Cache hits are still store operations: count them and honor
+        // injected outages so fault-tolerance behavior is uniform.
+        self.begin()?;
+        let gen_at_read = {
+            let c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(d) = c.cus.get(cu_id) {
+                return Ok(Some(d.clone()));
+            }
+            c.generation
+        };
+        let Some(text) = self.hget(&keys::cu(cu_id), "descr")? else {
+            return Ok(None);
+        };
+        let parsed = crate::unit::ComputeUnitDescription::from_json(&crate::json::parse(&text)?)?;
+        let d = Arc::new(parsed);
+        let mut c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+        // Populate only if no invalidation raced our out-of-lock read;
+        // a superseded parse is still fine to *return* (point-in-time
+        // value), just not to memoize.
+        if c.generation == gen_at_read {
+            c.cus.insert(cu_id.to_string(), d.clone());
+        }
+        Ok(Some(d))
+    }
+
+    /// The typed Data-Unit-Description stored under `pd:du:<id>`
+    /// (see [`Store::cu_description`]).
+    pub fn du_description(
+        &self,
+        du_id: &str,
+    ) -> anyhow::Result<Option<Arc<crate::unit::DataUnitDescription>>> {
+        self.begin()?;
+        let gen_at_read = {
+            let c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(d) = c.dus.get(du_id) {
+                return Ok(Some(d.clone()));
+            }
+            c.generation
+        };
+        let Some(text) = self.hget(&keys::du(du_id), "descr")? else {
+            return Ok(None);
+        };
+        let parsed = crate::unit::DataUnitDescription::from_json(&crate::json::parse(&text)?)?;
+        let d = Arc::new(parsed);
+        let mut c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+        if c.generation == gen_at_read {
+            c.dus.insert(du_id.to_string(), d.clone());
+        }
+        Ok(Some(d))
+    }
+
     // ---- pub/sub (state-change notifications) ----
 
     pub fn subscribe(&self, channel: &str) -> Receiver<String> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.guard().subs.entry(channel.to_string()).or_default().push(tx);
+        self.inner
+            .subs
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(channel.to_string())
+            .or_default()
+            .push(tx);
         rx
     }
 
     pub fn publish(&self, channel: &str, message: &str) -> Result<usize, StoreError> {
-        let mut g = self.guard();
-        Self::check_up(&mut g)?;
+        self.begin()?;
+        let mut subs = self.inner.subs.lock().unwrap_or_else(|e| e.into_inner());
         let mut delivered = 0;
-        if let Some(subs) = g.subs.get_mut(channel) {
-            subs.retain(|tx| tx.send(message.to_string()).is_ok());
-            delivered = subs.len();
+        if let Some(list) = subs.get_mut(channel) {
+            list.retain(|tx| tx.send(message.to_string()).is_ok());
+            delivered = list.len();
         }
         Ok(delivered)
     }
@@ -212,28 +553,31 @@ impl Store {
     // ---- durability ----
 
     /// Serialize the full store state to JSON (Redis RDB-equivalent).
+    /// Deterministic: keys are emitted in sorted order regardless of
+    /// stripe layout. Atomic: every stripe is locked (in index order —
+    /// the only multi-stripe acquisition path, so no lock-order
+    /// inversion) before any is read, so concurrent writers cannot
+    /// tear the image.
     pub fn snapshot(&self) -> Json {
-        let g = self.guard();
+        let guards: Vec<MutexGuard<'_, Shard>> = (0..SHARDS).map(|i| self.stripe(i)).collect();
         let mut obj = std::collections::BTreeMap::new();
-        for (k, v) in &g.data {
-            let jv = match v {
-                Value::Str(s) => Json::obj().set("t", "s").set("v", s.as_str()),
-                Value::Hash(h) => {
-                    let mut hm = std::collections::BTreeMap::new();
-                    for (f, val) in h {
-                        hm.insert(f.clone(), Json::Str(val.clone()));
+        for g in &guards {
+            for (k, v) in &g.data {
+                let jv = match v {
+                    Value::Str(s) => Json::obj().set("t", "s").set("v", s.as_str()),
+                    Value::Hash(h) => {
+                        let mut hm = std::collections::BTreeMap::new();
+                        for (f, val) in h {
+                            hm.insert(f.clone(), Json::Str(val.clone()));
+                        }
+                        Json::obj().set("t", "h").set("v", Json::Obj(hm))
                     }
-                    Json::obj().set("t", "h").set("v", Json::Obj(hm))
-                }
-                Value::List(l) => Json::obj().set(
-                    "t",
-                    "l",
-                ).set(
-                    "v",
-                    Json::Arr(l.iter().map(|s| Json::Str(s.clone())).collect()),
-                ),
-            };
-            obj.insert(k.clone(), jv);
+                    Value::List(l) => Json::obj()
+                        .set("t", "l")
+                        .set("v", Json::Arr(l.iter().map(|s| Json::Str(s.clone())).collect())),
+                };
+                obj.insert(k.to_string(), jv);
+            }
         }
         Json::Obj(obj)
     }
@@ -245,7 +589,8 @@ impl Store {
         let Json::Obj(map) = snap else {
             anyhow::bail!("snapshot must be an object");
         };
-        let mut data = BTreeMap::new();
+        let mut shards: Vec<FxMap<Arc<str>, Value>> =
+            (0..SHARDS).map(|_| FxMap::default()).collect();
         for (k, entry) in map {
             let t = entry.str_field("t")?;
             let v = entry
@@ -272,11 +617,27 @@ impl Store {
                 ),
                 other => anyhow::bail!("unknown snapshot type '{other}'"),
             };
-            data.insert(k.clone(), value);
+            shards[stripe_of(k)].insert(Arc::from(k.as_str()), value);
         }
-        let mut g = self.guard();
-        g.data = data;
-        g.down = false;
+        // Swap all stripes in under one all-stripe acquisition so no
+        // reader observes a half-restored store. The typed cache is
+        // cleared while the stripe guards are still held — otherwise a
+        // reader could hit a stale pre-restore description against
+        // post-restore data. (Stripe→descr is the only nested lock
+        // order in this module; no path holds descr while taking a
+        // stripe.)
+        {
+            let mut guards: Vec<MutexGuard<'_, Shard>> =
+                (0..SHARDS).map(|i| self.stripe(i)).collect();
+            for (idx, data) in shards.into_iter().enumerate() {
+                guards[idx].data = data;
+            }
+            let mut c = self.inner.descr.lock().unwrap_or_else(|e| e.into_inner());
+            c.generation = c.generation.wrapping_add(1);
+            c.cus.clear();
+            c.dus.clear();
+        }
+        self.inner.down.store(false, Ordering::Relaxed);
         Ok(())
     }
 
@@ -293,8 +654,13 @@ impl Store {
     }
 }
 
-/// Well-known key-space layout (mirrors BigJob's Redis schema).
+/// Well-known key-space layout (mirrors BigJob's Redis schema). The
+/// `*_key` variants return interned [`Key`] handles for hot-path
+/// callers that reuse them across operations.
 pub mod keys {
+    use super::Key;
+    use std::sync::OnceLock;
+
     pub fn pilot(id: &str) -> String {
         format!("pd:pilot:{id}")
     }
@@ -311,6 +677,22 @@ pub mod keys {
         format!("pd:queue:pilot:{pilot_id}")
     }
     pub const STATE_CHANNEL: &str = "pd:events";
+
+    /// Interned handle for [`GLOBAL_QUEUE`].
+    pub fn global_queue_key() -> &'static Key {
+        static K: OnceLock<Key> = OnceLock::new();
+        K.get_or_init(|| Key::new(GLOBAL_QUEUE))
+    }
+
+    /// Interned handle for a pilot's agent queue — mint once per pilot.
+    pub fn pilot_queue_key(pilot_id: &str) -> Key {
+        Key::new(&pilot_queue(pilot_id))
+    }
+
+    /// Interned handle for a CU record — mint once per CU.
+    pub fn cu_key(id: &str) -> Key {
+        Key::new(&cu(id))
+    }
 }
 
 #[cfg(test)]
@@ -359,6 +741,88 @@ mod tests {
         assert_eq!(s.lpop(keys::GLOBAL_QUEUE).unwrap(), Some("cu-0".to_string()));
         assert_eq!(s.lpop(keys::GLOBAL_QUEUE).unwrap(), Some("cu-1".to_string()));
         assert_eq!(s.lpop("empty").unwrap(), None);
+    }
+
+    #[test]
+    fn interned_and_string_keys_are_interchangeable() {
+        let s = Store::new();
+        let k = Key::new("pd:cu:x");
+        s.hset_k(&k, "state", "Running").unwrap();
+        assert_eq!(s.hget("pd:cu:x", "state").unwrap(), Some("Running".to_string()));
+        s.set("plain", "v").unwrap();
+        assert_eq!(s.get_k(&Key::new("plain")).unwrap(), Some("v".to_string()));
+        let q = keys::pilot_queue_key("p1");
+        s.rpush_k(&q, "cu-1").unwrap();
+        s.rpush(&keys::pilot_queue("p1"), "cu-2").unwrap();
+        assert_eq!(s.llen_k(&q).unwrap(), 2);
+        assert_eq!(s.lpop(&keys::pilot_queue("p1")).unwrap(), Some("cu-1".to_string()));
+        assert_eq!(s.lpop_k(&q).unwrap(), Some("cu-2".to_string()));
+        assert_eq!(keys::global_queue_key().as_str(), keys::GLOBAL_QUEUE);
+    }
+
+    #[test]
+    fn hset_if_absent_writes_once() {
+        let s = Store::new();
+        assert!(s.hset_if_absent("h", "f", || "first".into()).unwrap());
+        assert!(!s.hset_if_absent("h", "f", || "second".into()).unwrap());
+        assert_eq!(s.hget("h", "f").unwrap(), Some("first".to_string()));
+        s.set("str", "v").unwrap();
+        assert!(s.hset_if_absent("str", "f", || "x".into()).is_err());
+    }
+
+    #[test]
+    fn descr_cache_parses_once_and_invalidates_on_write() {
+        let s = Store::new();
+        let cud = crate::unit::ComputeUnitDescription {
+            executable: "/bin/bwa".into(),
+            cores: 2,
+            ..Default::default()
+        };
+        s.hset(&keys::cu("c1"), "descr", &cud.to_json().to_string_compact()).unwrap();
+        let d1 = s.cu_description("c1").unwrap().unwrap();
+        let d2 = s.cu_description("c1").unwrap().unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2), "second read must hit the cache");
+        assert_eq!(d1.executable, "/bin/bwa");
+
+        // Overwrite invalidates.
+        let cud2 = crate::unit::ComputeUnitDescription {
+            executable: "/bin/sort".into(),
+            ..Default::default()
+        };
+        s.hset(&keys::cu("c1"), "descr", &cud2.to_json().to_string_compact()).unwrap();
+        let d3 = s.cu_description("c1").unwrap().unwrap();
+        assert_eq!(d3.executable, "/bin/sort");
+
+        // Unrelated fields leave the cache alone.
+        s.hset(&keys::cu("c1"), "state", "Running").unwrap();
+        let d4 = s.cu_description("c1").unwrap().unwrap();
+        assert!(Arc::ptr_eq(&d3, &d4));
+
+        // del invalidates; absent record reads as None.
+        s.del(&keys::cu("c1")).unwrap();
+        assert!(s.cu_description("c1").unwrap().is_none());
+        assert!(s.du_description("nope").unwrap().is_none());
+    }
+
+    #[test]
+    fn du_descr_cache_roundtrip() {
+        let s = Store::new();
+        let dud = crate::unit::DataUnitDescription {
+            name: "ref".into(),
+            files: vec![crate::unit::FileRef::sized("genome.fa", crate::util::Bytes::gb(8))],
+            affinity: None,
+        };
+        s.hset(&keys::du("d1"), "descr", &dud.to_json().to_string_compact()).unwrap();
+        let d1 = s.du_description("d1").unwrap().unwrap();
+        let d2 = s.du_description("d1").unwrap().unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2));
+        assert_eq!(d1.name, "ref");
+        assert_eq!(d1.total_size(), crate::util::Bytes::gb(8));
+        // Cache hits are store ops: they honor injected outages.
+        s.set_down(true);
+        assert!(s.du_description("d1").is_err());
+        s.set_down(false);
+        assert!(s.du_description("d1").is_ok());
     }
 
     #[test]
@@ -431,6 +895,8 @@ mod tests {
         s.hset(&keys::cu("c1"), "state", "New").unwrap();
         let pilots = s.keys_with_prefix("pd:pilot:").unwrap();
         assert_eq!(pilots.len(), 2);
+        // Deterministic order despite hash sharding.
+        assert_eq!(pilots, vec![keys::pilot("p1"), keys::pilot("p2")]);
     }
 
     #[test]
@@ -456,6 +922,51 @@ mod tests {
         assert_eq!(all.len(), 100, "each item consumed exactly once");
         assert_eq!(all[0], "0");
         assert_eq!(all[99], "99");
+    }
+
+    /// Sharded-store smoke test: N threads hammer disjoint and shared
+    /// keys across stripes; every op must land exactly once and the op
+    /// counter must account for all of them.
+    #[test]
+    fn sharded_store_concurrent_smoke() {
+        const THREADS: u64 = 8;
+        const OPS: u64 = 400;
+        let s = Store::new();
+        let base = s.op_count();
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let own_q = Key::new(&format!("q:{t}"));
+                let own_h = Key::new(&format!("h:{t}"));
+                for i in 0..OPS {
+                    // 3 ops per iteration, spread across stripes.
+                    s.rpush_k(&own_q, &format!("{i}")).unwrap();
+                    s.hset_k(&own_h, &format!("f{}", i % 7), "v").unwrap();
+                    s.rpush(keys::GLOBAL_QUEUE, &format!("{t}:{i}")).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.op_count() - base, THREADS * OPS * 3, "every op counted exactly once");
+        // Per-thread invariants.
+        for t in 0..THREADS {
+            assert_eq!(s.llen(&format!("q:{t}")).unwrap(), OPS as usize);
+            assert_eq!(s.hgetall(&format!("h:{t}")).unwrap().len(), 7);
+        }
+        // Shared queue took every push from every thread.
+        assert_eq!(s.llen(keys::GLOBAL_QUEUE).unwrap(), (THREADS * OPS) as usize);
+        // FIFO preserved per producer on the shared queue.
+        let mut last_seen: BTreeMap<String, i64> = BTreeMap::new();
+        while let Some(v) = s.lpop(keys::GLOBAL_QUEUE).unwrap() {
+            let (t, i) = v.split_once(':').unwrap();
+            let i: i64 = i.parse().unwrap();
+            let last = last_seen.entry(t.to_string()).or_insert(-1);
+            assert!(i > *last, "producer {t} out of order: {i} after {last}");
+            *last = i;
+        }
     }
 
     #[test]

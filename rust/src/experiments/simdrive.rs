@@ -6,13 +6,23 @@
 //! identical scheduler, state machines and coordination store — driven
 //! by simulated time so the paper's hour-scale production-DCI
 //! experiments replay in milliseconds, deterministically per seed.
+//!
+//! Perf shape: every queue touch goes through per-pilot interned
+//! [`Key`] handles (no `format!` per event), the scheduler context is
+//! assembled in O(1) from [`ManagerState`]'s incremental indexes, and
+//! agent wakeups are *targeted* — instead of broadcasting a `TryPull`
+//! to every pilot on every state change (the O(pilots × events) hot
+//! path), only pilots that could actually act (active, free slot,
+//! staging headroom — and on data arrival, pilots whose label matches
+//! the freed DU unless global work is waiting) are woken. Pilots
+//! skipped this way would have processed their wakeup as a no-op.
 
 use crate::config::Testbed;
-use crate::coordination::{keys, Store};
+use crate::coordination::{keys, Key, Store};
 use crate::faults::{attempt_transfer, RetryPolicy};
 use crate::metrics::{CuRecord, RunMetrics, TimelineEvent};
 use crate::net::FlowHandle;
-use crate::pilot::{agent_pull, ManagerState, PilotCompute, PilotComputeDescription, PilotState};
+use crate::pilot::{agent_pull_tracked, ManagerState, PilotCompute, PilotComputeDescription, PilotState};
 use crate::rng::Rng;
 use crate::scheduler::{AffinityScheduler, Placement, SchedContext, Scheduler};
 use crate::simtime::Sim;
@@ -21,6 +31,7 @@ use crate::topology::Label;
 use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUnitDescription, DuState};
 use crate::workload::task_runtime_s;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Events of the simulated pilot system.
 #[derive(Debug)]
@@ -41,6 +52,13 @@ pub enum Ev {
     PilotExpired { pilot: String },
 }
 
+/// Where a pilot's agent runs: its machine and scratch Pilot-Data.
+/// Shared behind an `Arc` so per-event lookups don't clone two strings.
+pub struct PilotHome {
+    pub machine: String,
+    pub scratch: String,
+}
+
 /// The simulated pilot system.
 pub struct SimSystem {
     pub sim: Sim<Ev>,
@@ -51,8 +69,12 @@ pub struct SimSystem {
     pub rng: Rng,
     pub metrics: RunMetrics,
     pub retry: RetryPolicy,
-    /// pilot id -> (machine name, scratch pd name).
-    pilot_home: BTreeMap<String, (String, String)>,
+    /// pilot id -> where its agent runs.
+    pilot_home: BTreeMap<String, Arc<PilotHome>>,
+    /// pilot id -> interned agent-queue key (minted once per pilot).
+    qkeys: BTreeMap<String, Key>,
+    /// Interned global-queue key.
+    global_q: Key,
     /// Remote staging time already paid per (cu): avoids double I/O.
     staged_remote: BTreeMap<String, bool>,
     /// Count of CUs that failed staging permanently.
@@ -66,10 +88,6 @@ pub struct SimSystem {
     /// Staging re-queues per CU; bounded to avoid spinning forever on
     /// inputs that can never materialize.
     requeues: BTreeMap<String, u32>,
-    /// Cached DU-id -> replica labels, maintained incrementally on
-    /// placement events instead of being rebuilt per submit (perf:
-    /// the scheduler context is on the submit hot path).
-    du_location_cache: BTreeMap<String, Vec<Label>>,
     /// Max staging retries before a CU is failed permanently.
     pub max_requeues: u32,
     /// Schedule automatic PilotExpired events at each machine's
@@ -90,6 +108,8 @@ impl SimSystem {
             metrics: RunMetrics::default(),
             retry: RetryPolicy::default(),
             pilot_home: BTreeMap::new(),
+            qkeys: BTreeMap::new(),
+            global_q: keys::global_queue_key().clone(),
             staged_remote: BTreeMap::new(),
             staging_failures: 0,
             max_concurrent_staging: 4,
@@ -97,7 +117,6 @@ impl SimSystem {
             requeues: BTreeMap::new(),
             max_requeues: 24,
             enforce_walltime: false,
-            du_location_cache: BTreeMap::new(),
         }
     }
 
@@ -127,7 +146,11 @@ impl SimSystem {
         pilot.transition(PilotState::Queued)?;
         let id = pilot.id.clone();
         self.state.add_pilot(pilot);
-        self.pilot_home.insert(id.clone(), (machine.to_string(), scratch_pd.to_string()));
+        self.pilot_home.insert(
+            id.clone(),
+            Arc::new(PilotHome { machine: machine.to_string(), scratch: scratch_pd.to_string() }),
+        );
+        self.qkeys.insert(id.clone(), keys::pilot_queue_key(&id));
         self.metrics.set_scalar(&format!("tq:{id}"), wait);
         self.sim.schedule(wait, Ev::PilotActive { pilot: id.clone() });
         if self.enforce_walltime && m.walltime_limit.is_finite() {
@@ -186,7 +209,7 @@ impl SimSystem {
         let id = du.id.clone();
         self.tb.store.register_du(&id, du.size(), du.file_count());
         self.tb.store.place(&id, pd)?;
-        self.cache_location(&id, pd);
+        self.note_replica_pd(&id, pd);
         self.state.add_du(du);
         Ok(id)
     }
@@ -261,51 +284,39 @@ impl SimSystem {
         Ok(id)
     }
 
-    /// Record a new replica location in the scheduler-facing cache.
-    fn cache_location(&mut self, du: &str, pd: &str) {
+    /// Record a new replica location in the manager's scheduler-facing
+    /// index (incremental: no per-placement rebuild).
+    fn note_replica_pd(&mut self, du: &str, pd: &str) {
         if let Ok(p) = self.tb.store.pd(pd) {
             let label = p.endpoint.label.clone();
-            let entry = self.du_location_cache.entry(du.to_string()).or_default();
-            if !entry.contains(&label) {
-                entry.push(label);
-            }
+            self.state.note_replica(du, &label);
         }
     }
 
     fn place_cu(&mut self, cu_id: &str) -> anyhow::Result<()> {
         let placement = {
-            let depth: BTreeMap<String, usize> = self
-                .state
-                .pilots
-                .keys()
-                .map(|p| (p.clone(), self.store.llen(&keys::pilot_queue(p)).unwrap_or(0)))
-                .collect();
             let cu = &self.state.cus[cu_id];
-            let ctx = SchedContext {
-                topo: &self.tb.topo,
-                state: &self.state,
-                du_locations: &self.du_location_cache,
-                queue_depth: &depth,
-            };
+            let ctx = SchedContext::from_state(&self.tb.topo, &self.state);
             self.scheduler.place(cu, &ctx)
         };
-        let cu = self.state.cus.get_mut(cu_id).unwrap();
         match placement {
             Placement::Pilot(pilot) => {
-                cu.transition(CuState::Queued)?;
-                self.store.rpush(&keys::pilot_queue(&pilot), cu_id)?;
+                self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
+                self.store.rpush_k(&self.qkeys[&pilot], cu_id)?;
+                self.state.note_queue_push(&pilot);
                 self.sim.schedule(0.0, Ev::TryPull { pilot });
             }
             Placement::Global => {
-                cu.transition(CuState::Queued)?;
-                self.store.rpush(keys::GLOBAL_QUEUE, cu_id)?;
-                self.wake_all_pilots();
+                self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
+                self.store.rpush_k(&self.global_q, cu_id)?;
+                self.wake_ready_pilots();
             }
             Placement::Delay(d) => {
-                cu.transition(CuState::Queued)?;
+                self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
                 self.sim.schedule(d, Ev::Reschedule { cu: cu_id.to_string() });
             }
             Placement::Unschedulable(reason) => {
+                let cu = self.state.cus.get_mut(cu_id).unwrap();
                 cu.transition(CuState::Unschedulable)?;
                 cu.error = Some(reason);
             }
@@ -313,13 +324,46 @@ impl SimSystem {
         Ok(())
     }
 
-    fn wake_all_pilots(&mut self) {
+    /// Can this pilot act on a wakeup right now? (Active, a free slot,
+    /// and staging headroom — the exact preconditions `try_pull` checks
+    /// before touching any queue.)
+    fn pilot_ready(&self, p: &PilotCompute) -> bool {
+        p.state == PilotState::Active
+            && p.free_slots() > 0
+            && self.staging_in_flight.get(&p.id).copied().unwrap_or(0) < self.max_concurrent_staging
+    }
+
+    /// Targeted replacement for the old all-pilots broadcast: wake only
+    /// pilots whose `TryPull` would not be an immediate no-op.
+    fn wake_ready_pilots(&mut self) {
         let ids: Vec<String> = self
             .state
             .pilots
             .values()
-            .filter(|p| p.state == PilotState::Active)
+            .filter(|p| self.pilot_ready(p))
             .map(|p| p.id.clone())
+            .collect();
+        for pilot in ids {
+            self.sim.schedule(0.0, Ev::TryPull { pilot });
+        }
+    }
+
+    /// A replica of some DU just landed at `label`. If global work is
+    /// waiting, any ready pilot might legitimately grab it — wake them
+    /// all. Otherwise only pilots at the matching label can gain from
+    /// the new replica (everyone else's wakeup would no-op), so use the
+    /// per-label pilot index.
+    fn wake_pilots_for_du(&mut self, label: &Label) {
+        if self.store.llen_k(&self.global_q).unwrap_or(0) > 0 {
+            self.wake_ready_pilots();
+            return;
+        }
+        let ids: Vec<String> = self
+            .state
+            .pilots_at_label(label)
+            .iter()
+            .filter(|id| self.state.pilots.get(*id).map_or(false, |p| self.pilot_ready(p)))
+            .cloned()
             .collect();
         for pilot in ids {
             self.sim.schedule(0.0, Ev::TryPull { pilot });
@@ -342,11 +386,11 @@ impl SimSystem {
     fn handle(&mut self, now: f64, ev: Ev) -> anyhow::Result<()> {
         match ev {
             Ev::PilotActive { pilot } => {
-                let (machine, _) = self.pilot_home[&pilot].clone();
+                let home = Arc::clone(&self.pilot_home[&pilot]);
                 let p = self.state.pilots.get_mut(&pilot).unwrap();
                 p.transition(PilotState::Active)?;
                 p.t_active = now;
-                self.metrics.mark(now, &machine, TimelineEvent::PilotActive);
+                self.metrics.mark(now, &home.machine, TimelineEvent::PilotActive);
                 self.sim.schedule(0.0, Ev::TryPull { pilot });
             }
 
@@ -356,20 +400,27 @@ impl SimSystem {
                 }
                 if ok {
                     self.tb.store.place(&du, &pd)?;
-                    self.cache_location(&du, &pd);
+                    self.note_replica_pd(&du, &pd);
                     if let Some(d) = self.state.dus.get_mut(&du) {
                         if d.state == DuState::Pending {
                             d.transition(DuState::Running)?;
                         }
                     }
                     self.metrics.set_scalar(&format!("staged:{du}:{pd}"), now);
-                } else if let Some(d) = self.state.dus.get_mut(&du) {
+                    // New data may unlock data-local work: wake pilots
+                    // at the replica's label (plus everyone ready if
+                    // the global queue holds work).
+                    if let Ok(p) = self.tb.store.pd(&pd) {
+                        let label = p.endpoint.label.clone();
+                        self.wake_pilots_for_du(&label);
+                    }
+                } else {
                     // Partial replication (Fig. 8's ~7.5 of 9): the DU
-                    // stays usable from other replicas.
-                    let _ = d;
+                    // stays usable from other replicas. A failed
+                    // transfer changed no schedulable state, but keep
+                    // the seed's conservative re-poll of ready agents.
+                    self.wake_ready_pilots();
                 }
-                // New data may unlock data-local work.
-                self.wake_all_pilots();
             }
 
             Ev::TryPull { pilot } => {
@@ -377,12 +428,12 @@ impl SimSystem {
                     let p = &self.state.pilots[&pilot];
                     eprintln!(
                         "DBGPULL t={now:.0} pilot={pilot} machine={} state={:?} free={} inflight={} own={} global={}",
-                        self.pilot_home[&pilot].0,
+                        self.pilot_home[&pilot].machine,
                         p.state,
                         p.free_slots(),
                         self.staging_in_flight.get(&pilot).unwrap_or(&0),
-                        self.store.llen(&keys::pilot_queue(&pilot)).unwrap_or(0),
-                        self.store.llen(keys::GLOBAL_QUEUE).unwrap_or(0),
+                        self.store.llen_k(&self.qkeys[&pilot]).unwrap_or(0),
+                        self.store.llen_k(&self.global_q).unwrap_or(0),
                     );
                 }
                 self.try_pull(now, &pilot)?;
@@ -398,7 +449,7 @@ impl SimSystem {
                     return Ok(());
                 }
                 let pilot_id = self.state.cus[&cu].pilot.clone().unwrap();
-                let (machine, _) = self.pilot_home[&pilot_id].clone();
+                let home = Arc::clone(&self.pilot_home[&pilot_id]);
                 if self.staged_remote.get(&cu).copied().unwrap_or(false) {
                     if let Some(n) = self.staging_in_flight.get_mut(&pilot_id) {
                         *n = n.saturating_sub(1);
@@ -422,19 +473,20 @@ impl SimSystem {
                         c.state = CuState::Failed;
                     } else {
                         c.transition(CuState::Queued)?;
-                        self.store.rpush(keys::GLOBAL_QUEUE, &cu)?;
-                        self.wake_all_pilots();
+                        self.store.rpush_k(&self.global_q, &cu)?;
+                        self.wake_ready_pilots();
                     }
                     return Ok(());
                 }
-                let m = self.tb.batch.machine(&machine)?.clone();
-                self.tb.batch.io_begin(&machine);
+                let m = self.tb.batch.machine(&home.machine)?.clone();
+                self.tb.batch.io_begin(&home.machine);
                 let cu_cores = self.state.cus[&cu].description.cores.max(1);
-                let sharers = self.machine_sharers(&machine, cu_cores);
+                let sharers = self.machine_sharers(&home.machine, cu_cores);
                 let fs_share = m.fs_bandwidth.0 / sharers;
                 if std::env::var("PD_DEBUG_IO").is_ok() {
                     eprintln!(
-                        "DBG t={now:.1} cu={cu} machine={machine} sharers={sharers:.0} share={:.1}MiB/s",
+                        "DBG t={now:.1} cu={cu} machine={} sharers={sharers:.0} share={:.1}MiB/s",
+                        home.machine,
                         fs_share / 1048576.0
                     );
                 }
@@ -450,7 +502,7 @@ impl SimSystem {
                     m.speed_factor,
                     fs_share,
                 ) * self.rng.range_f64(0.75, 1.40); // BWA runtime variance (paper Fig. 12 error bars)
-                self.metrics.mark(now, &machine, TimelineEvent::CuStarted);
+                self.metrics.mark(now, &home.machine, TimelineEvent::CuStarted);
                 self.sim.schedule(runtime, Ev::CuDone { cu });
             }
 
@@ -460,15 +512,15 @@ impl SimSystem {
                     return Ok(());
                 }
                 let pilot_id = self.state.cus[&cu].pilot.clone().unwrap();
-                let (machine, _) = self.pilot_home[&pilot_id].clone();
-                self.tb.batch.io_end(&machine);
+                let home = Arc::clone(&self.pilot_home[&pilot_id]);
+                self.tb.batch.io_end(&home.machine);
                 let c = self.state.cus.get_mut(&cu).unwrap();
                 c.transition(CuState::StagingOutput)?;
                 c.transition(CuState::Done)?;
                 c.t_finished = now;
                 let rec = CuRecord {
                     cu: cu.clone(),
-                    machine: machine.clone(),
+                    machine: home.machine.clone(),
                     t_submitted: c.t_submitted,
                     t_start: c.t_started_staging,
                     t_end: now,
@@ -477,7 +529,7 @@ impl SimSystem {
                 };
                 let cores = c.description.cores.max(1);
                 self.metrics.record_cu(rec);
-                self.metrics.mark(now, &machine, TimelineEvent::CuFinished);
+                self.metrics.mark(now, &home.machine, TimelineEvent::CuFinished);
                 self.state.pilots.get_mut(&pilot_id).unwrap().busy_slots -= cores;
                 self.sim.schedule(0.0, Ev::TryPull { pilot: pilot_id });
             }
@@ -496,10 +548,10 @@ impl SimSystem {
                 let was_active = p.state == crate::pilot::PilotState::Active;
                 p.state = crate::pilot::PilotState::Done;
                 p.busy_slots = 0;
-                let (machine, _) = self.pilot_home[&pilot].clone();
+                let home = Arc::clone(&self.pilot_home[&pilot]);
                 if was_active {
                     let cores = self.state.pilots[&pilot].description.cores;
-                    self.tb.batch.release(&machine, cores);
+                    self.tb.batch.release(&home.machine, cores);
                 }
                 // Re-queue this pilot's in-flight CUs and drain its
                 // agent queue back to the global queue.
@@ -517,14 +569,15 @@ impl SimSystem {
                     if matches!(c.state, CuState::StagingInput | CuState::Running) {
                         c.transition(CuState::Queued)?;
                         c.pilot = None;
-                        self.store.rpush(keys::GLOBAL_QUEUE, &cu)?;
+                        self.store.rpush_k(&self.global_q, &cu)?;
                     }
                 }
-                while let Some(cu) = self.store.lpop(&keys::pilot_queue(&pilot))? {
-                    self.store.rpush(keys::GLOBAL_QUEUE, &cu)?;
+                while let Some(cu) = self.store.lpop_k(&self.qkeys[&pilot])? {
+                    self.store.rpush_k(&self.global_q, &cu)?;
                 }
+                self.state.reset_queue_depth(&pilot);
                 self.staging_in_flight.remove(&pilot);
-                self.wake_all_pilots();
+                self.wake_ready_pilots();
             }
         }
         Ok(())
@@ -544,14 +597,21 @@ impl SimSystem {
             if *self.staging_in_flight.get(pilot).unwrap_or(&0) >= self.max_concurrent_staging {
                 return Ok(());
             }
-            let Some(cu_id) = agent_pull(&self.store, pilot)? else {
+            // Two-queue pull protocol (§4.2), with the queue-depth
+            // counter kept in lockstep with the store.
+            let Some((cu_id, from_own)) = agent_pull_tracked(&self.store, &self.qkeys[pilot])?
+            else {
                 return Ok(());
             };
+            if from_own {
+                self.state.note_queue_pop(pilot);
+            }
             let cu = &self.state.cus[&cu_id];
             let cores = cu.description.cores.max(1);
             if cores > cores_free {
                 // Not enough room: push back to own queue and stop.
-                self.store.rpush(&keys::pilot_queue(pilot), &cu_id)?;
+                self.store.rpush_k(&self.qkeys[pilot], &cu_id)?;
+                self.state.note_queue_push(pilot);
                 return Ok(());
             }
             self.begin_staging(now, pilot, &cu_id)?;
@@ -560,9 +620,9 @@ impl SimSystem {
 
     /// Start input staging for a pulled CU.
     fn begin_staging(&mut self, now: f64, pilot: &str, cu_id: &str) -> anyhow::Result<()> {
-        let (machine, scratch) = self.pilot_home[pilot].clone();
-        let pilot_label = self.tb.batch.machine(&machine)?.label.clone();
-        let cores = self.state.cus[&cu_id.to_string()].description.cores.max(1);
+        let home = Arc::clone(&self.pilot_home[pilot]);
+        let pilot_label = self.tb.batch.machine(&home.machine)?.label.clone();
+        let cores = self.state.cus[cu_id].description.cores.max(1);
         self.state.pilots.get_mut(pilot).unwrap().busy_slots += cores;
         {
             let c = self.state.cus.get_mut(cu_id).unwrap();
@@ -595,7 +655,7 @@ impl SimSystem {
                     &self.tb.net,
                     du,
                     &src_name,
-                    &scratch,
+                    &home.scratch,
                     None,
                 )?;
                 // Staging is sequential-read + one protocol stream:
@@ -636,7 +696,7 @@ impl SimSystem {
         let busy: f64 = self
             .pilot_home
             .iter()
-            .filter(|(_, (m, _))| m == machine)
+            .filter(|(_, h)| h.machine == machine)
             .filter_map(|(p, _)| self.state.pilots.get(p))
             .map(|p| p.busy_slots as f64 / cu_cores.max(1) as f64)
             .sum();
@@ -790,5 +850,39 @@ mod tests {
         };
         assert_eq!(run(42), run(42));
         assert_ne!(run(42), run(43));
+    }
+
+    /// The incrementally maintained queue-depth counters must stay in
+    /// lockstep with the coordination store's actual queue lengths.
+    #[test]
+    fn queue_depth_counters_match_store() {
+        let mut sys = SimSystem::new(paper_testbed(), 7);
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        let mut chunks = Vec::new();
+        for c in &ens.read_chunks {
+            chunks.push(sys.upload_du(c, "lonestar-scratch").unwrap());
+        }
+        sys.run().unwrap();
+        let p = sys.submit_pilot("lonestar", 4, "lonestar-scratch").unwrap();
+        sys.run().unwrap(); // pilot reaches Active so placement binds to it
+        for chunk in &chunks {
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk.clone()];
+            sys.submit_cu(cud).unwrap();
+        }
+        // 4-core pilot, 2-core CUs: two CUs bind to the agent queue
+        // (effective slots), the rest overflow to the global queue.
+        let counter = sys.state.queue_depths().get(&p).copied().unwrap_or(0);
+        let actual = sys.store.llen(&keys::pilot_queue(&p)).unwrap();
+        assert_eq!(counter, actual, "mid-run counter drift");
+        assert_eq!(counter, 2, "effective-slot binding changed");
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        let counter = sys.state.queue_depths().get(&p).copied().unwrap_or(0);
+        let actual = sys.store.llen(&keys::pilot_queue(&p)).unwrap();
+        assert_eq!(counter, actual, "post-run counter drift");
+        assert_eq!(actual, 0);
+        assert_eq!(sys.store.llen(keys::GLOBAL_QUEUE).unwrap(), 0);
     }
 }

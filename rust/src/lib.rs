@@ -16,9 +16,10 @@
 //! * a deterministic discrete-event simulation of production DCI
 //!   (machines, batch queues, shared networks: `simtime`, `batch`, `net`)
 //!   substituting for XSEDE/OSG;
-//! * a PJRT runtime (`runtime`) executing the AOT-compiled JAX/Pallas
-//!   alignment pipeline (`python/compile`) so Compute-Units run *real*
-//!   compute in local mode — python never on the task path;
+//! * an alignment runtime (`runtime`) executing the JAX/Pallas
+//!   pipeline's reference semantics (`python/compile`) as native
+//!   kernels, so Compute-Units run *real* compute in local mode —
+//!   python never on the task path;
 //! * experiment drivers regenerating every figure and table of the
 //!   paper's evaluation (`experiments`).
 //!

@@ -14,6 +14,7 @@ use crate::topology::Label;
 use crate::unit::{ComputeUnit, CuState, DataUnit};
 use crate::util::Bytes;
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 /// Pilot lifecycle (both compute and data pilots).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,7 +97,18 @@ impl PilotCompute {
     }
 
     pub fn affinity(&self) -> Label {
-        self.description.affinity.clone().unwrap_or_else(|| Label::new(""))
+        self.affinity_ref().clone()
+    }
+
+    /// Borrowed affinity label — the scheduler scores every eligible
+    /// pilot per placement, so this avoids a `String` clone per pilot
+    /// per decision.
+    pub fn affinity_ref(&self) -> &Label {
+        static EMPTY: OnceLock<Label> = OnceLock::new();
+        self.description
+            .affinity
+            .as_ref()
+            .unwrap_or_else(|| EMPTY.get_or_init(|| Label::new("")))
     }
 
     pub fn free_slots(&self) -> u32 {
@@ -168,12 +180,31 @@ impl PilotData {
 /// The Pilot-Manager's in-memory view of the world. Mirrors the
 /// coordination store; [`ManagerState::checkpoint`] writes the durable
 /// copy and [`ManagerState::reconnect`] rebuilds entity state from it.
+///
+/// Besides the entity maps, the state maintains three **incremental
+/// indexes** consumed by the scheduler, so a `SchedContext` assembles
+/// in O(1) instead of being rebuilt in O(pilots + DUs·replicas) per
+/// placement decision:
+///
+/// * `du_locations` — DU id → affinity labels holding a replica,
+///   appended by [`ManagerState::note_replica`] when a transfer lands;
+/// * `queue_depth` — pilot id → CUs waiting in its agent queue, bumped
+///   by [`ManagerState::note_queue_push`] / `note_queue_pop` at the
+///   same call sites that rpush/lpop the coordination store;
+/// * `pilots_by_label` — affinity label → pilot ids, for targeted
+///   agent wakeups (only pilots that gained data-local work).
 #[derive(Default)]
 pub struct ManagerState {
     pub pilots: BTreeMap<String, PilotCompute>,
     pub pilot_datas: BTreeMap<String, PilotData>,
     pub cus: BTreeMap<String, ComputeUnit>,
     pub dus: BTreeMap<String, DataUnit>,
+    /// DU id -> labels of Pilot-Data currently holding a full replica.
+    du_locations: BTreeMap<String, Vec<Label>>,
+    /// Pilot id -> CUs waiting in its agent-specific queue.
+    queue_depth: BTreeMap<String, usize>,
+    /// Affinity label -> pilots registered at that label.
+    pilots_by_label: BTreeMap<String, Vec<String>>,
 }
 
 impl ManagerState {
@@ -183,8 +214,50 @@ impl ManagerState {
 
     pub fn add_pilot(&mut self, p: PilotCompute) -> String {
         let id = p.id.clone();
+        self.pilots_by_label.entry(p.affinity_ref().0.clone()).or_default().push(id.clone());
         self.pilots.insert(id.clone(), p);
         id
+    }
+
+    /// Record that `du` now has a replica at `label` (idempotent).
+    pub fn note_replica(&mut self, du: &str, label: &Label) {
+        let entry = self.du_locations.entry(du.to_string()).or_default();
+        if !entry.contains(label) {
+            entry.push(label.clone());
+        }
+    }
+
+    /// One CU was pushed onto `pilot`'s agent queue.
+    pub fn note_queue_push(&mut self, pilot: &str) {
+        *self.queue_depth.entry(pilot.to_string()).or_insert(0) += 1;
+    }
+
+    /// One CU was popped off `pilot`'s agent queue.
+    pub fn note_queue_pop(&mut self, pilot: &str) {
+        if let Some(d) = self.queue_depth.get_mut(pilot) {
+            *d = d.saturating_sub(1);
+        }
+    }
+
+    /// Forget `pilot`'s queue depth (its queue was drained wholesale,
+    /// e.g. on walltime expiry).
+    pub fn reset_queue_depth(&mut self, pilot: &str) {
+        self.queue_depth.remove(pilot);
+    }
+
+    /// Live DU-replica-location index (see [`crate::scheduler::SchedContext`]).
+    pub fn du_locations(&self) -> &BTreeMap<String, Vec<Label>> {
+        &self.du_locations
+    }
+
+    /// Live per-pilot queue-depth counters.
+    pub fn queue_depths(&self) -> &BTreeMap<String, usize> {
+        &self.queue_depth
+    }
+
+    /// Pilots registered at exactly this affinity label.
+    pub fn pilots_at_label(&self, label: &Label) -> &[String] {
+        self.pilots_by_label.get(&label.0).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn add_pd(&mut self, pd: PilotData) -> String {
@@ -219,43 +292,44 @@ impl ManagerState {
     }
 
     /// Write pilot/CU/DU state to the coordination store (the paper's
-    /// "complete state of BigJob is maintained in Redis").
+    /// "complete state of BigJob is maintained in Redis"). Immutable
+    /// `descr` records are written with HSETNX semantics so repeated
+    /// checkpoints do not re-serialize every description.
     pub fn checkpoint(&self, store: &Store) -> anyhow::Result<()> {
         for p in self.pilots.values() {
             let k = keys::pilot(&p.id);
             store.hset(&k, "state", &format!("{:?}", p.state))?;
             store.hset(&k, "cores", &p.description.cores.to_string())?;
-            store.hset(&k, "affinity", &p.affinity().0)?;
+            store.hset(&k, "affinity", &p.affinity_ref().0)?;
             store.hset(&k, "busy", &p.busy_slots.to_string())?;
         }
         for c in self.cus.values() {
             let k = keys::cu(&c.id);
             store.hset(&k, "state", c.state.name())?;
             store.hset(&k, "pilot", c.pilot.as_deref().unwrap_or(""))?;
-            store.hset(&k, "descr", &c.description.to_json().to_string_compact())?;
+            store.hset_if_absent(&k, "descr", || c.description.to_json().to_string_compact())?;
         }
         for d in self.dus.values() {
             let k = keys::du(&d.id);
             store.hset(&k, "state", d.state.name())?;
-            store.hset(&k, "descr", &d.description.to_json().to_string_compact())?;
+            store.hset_if_absent(&k, "descr", || d.description.to_json().to_string_compact())?;
         }
         Ok(())
     }
 
     /// Rebuild CU descriptions and states from the store after a
     /// manager restart ("re-connect to a Pilot and Compute-Unit via a
-    /// unique URL").
+    /// unique URL"). Descriptions come through the store's typed record
+    /// cache, so each JSON document is parsed at most once.
     pub fn reconnect(store: &Store) -> anyhow::Result<ManagerState> {
         let mut st = ManagerState::new();
         for key in store.keys_with_prefix("pd:cu:")? {
             let h = store.hgetall(&key)?;
             let id = key.trim_start_matches("pd:cu:").to_string();
-            let descr = h
-                .get("descr")
+            let description = store
+                .cu_description(&id)?
                 .ok_or_else(|| anyhow::anyhow!("cu {id} missing descr"))?;
-            let description =
-                crate::unit::ComputeUnitDescription::from_json(&crate::json::parse(descr)?)?;
-            let mut cu = ComputeUnit::new(description);
+            let mut cu = ComputeUnit::new((*description).clone());
             cu.id = id.clone();
             cu.state = match h.get("state").map(String::as_str) {
                 Some("Queued") => CuState::Queued,
@@ -271,14 +345,23 @@ impl ManagerState {
             st.cus.insert(cu.id.clone(), cu);
         }
         for key in store.keys_with_prefix("pd:du:")? {
-            let h = store.hgetall(&key)?;
             let id = key.trim_start_matches("pd:du:").to_string();
-            if let Some(descr) = h.get("descr") {
-                let description =
-                    crate::unit::DataUnitDescription::from_json(&crate::json::parse(descr)?)?;
-                let mut du = DataUnit::new(description);
+            if let Some(description) = store.du_description(&id)? {
+                let mut du = DataUnit::new((*description).clone());
                 du.id = id.clone();
                 st.dus.insert(id, du);
+            }
+        }
+        // Rebuild the live queue-depth counters from the store's agent
+        // queues so a reconnected manager schedules against real
+        // backlog, not empty indexes. (The replica-location index
+        // cannot be rebuilt — replica labels are not checkpointed —
+        // so data-affinity scoring warms up as new transfers land.)
+        for key in store.keys_with_prefix("pd:queue:pilot:")? {
+            let pilot = key.trim_start_matches("pd:queue:pilot:").to_string();
+            let depth = store.llen(&key)?;
+            if depth > 0 {
+                st.queue_depth.insert(pilot, depth);
             }
         }
         Ok(st)
@@ -287,12 +370,24 @@ impl ManagerState {
 
 /// Pure agent-side pull policy: which queue to poll, in order. Each
 /// Pilot-Agent "generally pulls from two queues: its agent-specific
-/// queue and a global queue" (§4.2).
-pub fn agent_pull(store: &Store, pilot_id: &str) -> Result<Option<String>, crate::coordination::StoreError> {
-    if let Some(cu) = store.lpop(&keys::pilot_queue(pilot_id))? {
-        return Ok(Some(cu));
+/// queue and a global queue" (§4.2). This is the single home of that
+/// protocol — the sim driver and the local-mode agent loop both call
+/// it. The `bool` says whether the CU came off the agent-specific
+/// queue, so callers can decrement their queue-depth counter in
+/// lockstep.
+pub fn agent_pull_tracked(
+    store: &Store,
+    own_queue: &crate::coordination::Key,
+) -> Result<Option<(String, bool)>, crate::coordination::StoreError> {
+    if let Some(cu) = store.lpop_k(own_queue)? {
+        return Ok(Some((cu, true)));
     }
-    store.lpop(keys::GLOBAL_QUEUE)
+    Ok(store.lpop_k(keys::global_queue_key())?.map(|cu| (cu, false)))
+}
+
+/// String-key convenience wrapper around [`agent_pull_tracked`].
+pub fn agent_pull(store: &Store, pilot_id: &str) -> Result<Option<String>, crate::coordination::StoreError> {
+    Ok(agent_pull_tracked(store, &keys::pilot_queue_key(pilot_id))?.map(|(cu, _)| cu))
 }
 
 #[cfg(test)]
@@ -402,6 +497,49 @@ mod tests {
         assert_eq!(cu2.state, CuState::Queued);
         assert_eq!(cu2.description.executable, "/bin/bwa");
         assert_eq!(back.dus.len(), 1);
+    }
+
+    #[test]
+    fn queue_depth_counters_are_incremental() {
+        let mut st = ManagerState::new();
+        let p = st.add_pilot(PilotCompute::new(pcd("lonestar", 8, "xsede")));
+        assert_eq!(st.queue_depths().get(&p), None);
+        st.note_queue_push(&p);
+        st.note_queue_push(&p);
+        assert_eq!(st.queue_depths()[&p], 2);
+        st.note_queue_pop(&p);
+        assert_eq!(st.queue_depths()[&p], 1);
+        // Popping below zero saturates instead of wrapping.
+        st.note_queue_pop(&p);
+        st.note_queue_pop(&p);
+        assert_eq!(st.queue_depths()[&p], 0);
+        st.note_queue_push(&p);
+        st.reset_queue_depth(&p);
+        assert_eq!(st.queue_depths().get(&p), None);
+    }
+
+    #[test]
+    fn replica_index_dedups_labels() {
+        let mut st = ManagerState::new();
+        let l1 = Label::new("xsede/tacc/lonestar");
+        let l2 = Label::new("osg/fnal");
+        st.note_replica("du-1", &l1);
+        st.note_replica("du-1", &l1); // duplicate
+        st.note_replica("du-1", &l2);
+        assert_eq!(st.du_locations()["du-1"], vec![l1.clone(), l2]);
+        assert!(st.du_locations().get("du-2").is_none());
+    }
+
+    #[test]
+    fn pilots_by_label_index_tracks_additions() {
+        let mut st = ManagerState::new();
+        let a = st.add_pilot(PilotCompute::new(pcd("lonestar", 8, "xsede/tacc/lonestar")));
+        let b = st.add_pilot(PilotCompute::new(pcd("lonestar2", 8, "xsede/tacc/lonestar")));
+        let c = st.add_pilot(PilotCompute::new(pcd("fnal", 8, "osg/fnal")));
+        let tacc = Label::new("xsede/tacc/lonestar");
+        assert_eq!(st.pilots_at_label(&tacc), &[a, b]);
+        assert_eq!(st.pilots_at_label(&Label::new("osg/fnal")), &[c]);
+        assert!(st.pilots_at_label(&Label::new("nowhere")).is_empty());
     }
 
     #[test]

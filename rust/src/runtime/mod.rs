@@ -1,18 +1,31 @@
-//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and
-//! executes them from the rust hot path.
+//! Alignment runtime — executes the AOT-lowered alignment pipeline
+//! from the rust hot path.
 //!
-//! `make artifacts` runs python once at build time; afterwards the rust
-//! binary is self-contained: `HloModuleProto::from_text_file` parses
-//! the HLO text, the PJRT CPU client compiles it, and Compute-Units
-//! execute the alignment pipeline through [`Runtime::align`] with no
-//! python anywhere on the task path.
+//! `make artifacts` runs python once at build time to lower the
+//! JAX/Pallas pipeline and write `artifacts/manifest.json` (shapes per
+//! artifact). At run time the rust binary is self-contained: the
+//! manifest drives batching, and [`Runtime::align`] executes the exact
+//! pipeline semantics of `python/compile/kernels/ref.py` — stride-4
+//! seed-lattice scoring, best-window selection, then a Smith-Waterman
+//! extension (match +2, mismatch −1, linear gap −1, local alignment) —
+//! as a native kernel. Python is never on the task path.
+//!
+//! The previous revision drove these artifacts through a PJRT CPU
+//! client via the `xla` crate; that dependency cannot be vendored into
+//! this offline build, so the native kernel (bit-compatible with the
+//! reference oracle the Pallas kernels are tested against) is the
+//! execution engine. Because it is plain `Send + Sync` data, the old
+//! dedicated-inference-thread plumbing collapses: [`RuntimeServer`] /
+//! [`RuntimeHandle`] keep their public API but are now thin `Arc`
+//! wrappers, and executing a batch no longer copies the window set
+//! (the old channel protocol forced a `windows.clone()` per batch).
 
 use crate::json::Json;
 use crate::service::{ExecResult, Executor};
 use crate::unit::ComputeUnitDescription;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Shape info for one artifact, from `artifacts/manifest.json`.
@@ -27,16 +40,116 @@ pub struct ArtifactInfo {
     pub lw: usize,
 }
 
-/// A loaded, compiled artifact set.
+/// The alignment scoring kernels — a faithful rust port of the
+/// reference oracles in `python/compile/kernels/ref.py` (which are the
+/// correctness ground truth for the Pallas kernels).
+pub mod kernel {
+    /// Match reward (shared by seed counting tie-breaks and SW).
+    pub const MATCH: f32 = 2.0;
+    pub const MISMATCH: f32 = -1.0;
+    /// Linear gap penalty (subtracted).
+    pub const GAP: f32 = 1.0;
+    /// Seed-phase shift lattice stride: candidate placements of the
+    /// read are evaluated every `SHIFT_STRIDE` bases in the window.
+    pub const SHIFT_STRIDE: usize = 4;
+
+    /// Seed scores for one read against one window: the best count of
+    /// positionally matching bases over all stride-lattice placements.
+    pub fn seed_score(read: &[f32], window: &[f32]) -> f32 {
+        let l = read.len();
+        let lw = window.len();
+        debug_assert!(lw >= l);
+        let mut best = f32::NEG_INFINITY;
+        let mut k = 0;
+        while k + l <= lw {
+            let mut matches = 0u32;
+            for i in 0..l {
+                if read[i] == window[k + i] {
+                    matches += 1;
+                }
+            }
+            best = best.max(matches as f32);
+            k += SHIFT_STRIDE;
+        }
+        best
+    }
+
+    /// Index of the best-seeded window for each read (first max wins,
+    /// matching `argmax` in the reference pipeline).
+    pub fn best_windows(
+        reads: &[f32],
+        windows: &[f32],
+        b: usize,
+        l: usize,
+        w: usize,
+        lw: usize,
+    ) -> Vec<usize> {
+        (0..b)
+            .map(|r| {
+                let read = &reads[r * l..(r + 1) * l];
+                let mut best_i = 0;
+                let mut best_s = f32::NEG_INFINITY;
+                for wi in 0..w {
+                    let s = seed_score(read, &windows[wi * lw..(wi + 1) * lw]);
+                    if s > best_s {
+                        best_s = s;
+                        best_i = wi;
+                    }
+                }
+                best_i
+            })
+            .collect()
+    }
+
+    /// Smith-Waterman local-alignment score of one read/window pair
+    /// (two-row DP; scores clamp at 0, result is the matrix maximum).
+    pub fn sw_score(read: &[f32], window: &[f32]) -> f32 {
+        let lw = window.len();
+        let mut prev = vec![0f32; lw + 1];
+        let mut cur = vec![0f32; lw + 1];
+        let mut best = 0f32;
+        for &rb in read {
+            for j in 1..=lw {
+                let s = if rb == window[j - 1] { MATCH } else { MISMATCH };
+                let h = (prev[j - 1] + s).max(prev[j] - GAP).max(cur[j - 1] - GAP).max(0.0);
+                cur[j] = h;
+                if h > best {
+                    best = h;
+                }
+            }
+            std::mem::swap(&mut prev, &mut cur);
+            cur[0] = 0.0;
+        }
+        best
+    }
+
+    /// The full per-batch pipeline: seed → select best window → SW
+    /// extend. Returns `(scores, best_window)` of length `b`, with the
+    /// window index encoded as f32 exactly like the AOT module output.
+    pub fn align_pipeline(
+        reads: &[f32],
+        windows: &[f32],
+        b: usize,
+        l: usize,
+        w: usize,
+        lw: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let best = best_windows(reads, windows, b, l, w, lw);
+        let scores = (0..b)
+            .map(|r| sw_score(&reads[r * l..(r + 1) * l], &windows[best[r] * lw..(best[r] + 1) * lw]))
+            .collect();
+        (scores, best.iter().map(|&i| i as f32).collect())
+    }
+}
+
+/// A loaded artifact set: manifest-driven shapes + the native kernels.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    exes: Mutex<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     pub artifacts: BTreeMap<String, ArtifactInfo>,
     dir: PathBuf,
 }
 
 impl Runtime {
-    /// Open an artifact directory (compiles lazily on first use).
+    /// Open an artifact directory.
     pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Runtime> {
         let dir = dir.into();
         let manifest_path = dir.join("manifest.json");
@@ -64,8 +177,12 @@ impl Runtime {
                 );
             }
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
-        Ok(Runtime { client, exes: Mutex::new(BTreeMap::new()), artifacts, dir })
+        Ok(Runtime { artifacts, dir })
+    }
+
+    /// The artifact directory this runtime was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     /// Artifact info by file name.
@@ -73,25 +190,6 @@ impl Runtime {
         self.artifacts
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))
-    }
-
-    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
-        let mut exes = self.exes.lock().unwrap();
-        if exes.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.dir.join(name);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
-        exes.insert(name.to_string(), exe);
-        Ok(())
     }
 
     /// Execute an align artifact: `reads` is row-major (B, L) f32 base
@@ -103,7 +201,7 @@ impl Runtime {
         reads: &[f32],
         windows: &[f32],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        let info = self.info(name)?.clone();
+        let info = self.info(name)?;
         anyhow::ensure!(
             reads.len() == info.b * info.l,
             "reads len {} != B*L {}",
@@ -116,32 +214,65 @@ impl Runtime {
             windows.len(),
             info.w * info.lw
         );
-        self.ensure_compiled(name)?;
-        let exes = self.exes.lock().unwrap();
-        let exe = &exes[name];
-        let x = xla::Literal::vec1(reads).reshape(&[info.b as i64, info.l as i64])?;
-        let y = xla::Literal::vec1(windows).reshape(&[info.w as i64, info.lw as i64])?;
-        let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
-        let (scores, best) = result.to_tuple2()?;
-        Ok((scores.to_vec::<f32>()?, best.to_vec::<f32>()?))
+        Ok(kernel::align_pipeline(reads, windows, info.b, info.l, info.w, info.lw))
+    }
+}
+
+/// Owner of the shared [`Runtime`]. Retained for API compatibility
+/// with the PJRT revision (which needed a dedicated inference thread);
+/// the native kernels are `Send + Sync`, so this is now a plain `Arc`
+/// owner and [`RuntimeHandle`]s execute on the calling thread.
+pub struct RuntimeServer {
+    rt: Arc<Runtime>,
+}
+
+impl RuntimeServer {
+    /// Load the artifact directory; fails fast if it is missing.
+    pub fn spawn(dir: impl Into<PathBuf>) -> anyhow::Result<RuntimeServer> {
+        let dir = dir.into();
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        Ok(RuntimeServer { rt: Arc::new(Runtime::open(dir)?) })
     }
 
-    /// Execute the seed artifact: one-hot inputs, (B, W) output.
-    pub fn seed(
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle { rt: self.rt.clone() }
+    }
+}
+
+/// Cheap, cloneable, `Send + Sync` client used by the pilot agents —
+/// one shared artifact set for every Compute-Unit.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    rt: Arc<Runtime>,
+}
+
+impl RuntimeHandle {
+    pub fn align(
         &self,
         name: &str,
-        reads_oh: &[f32],
-        windows_oh: &[f32],
-    ) -> anyhow::Result<Vec<f32>> {
-        let info = self.info(name)?.clone();
-        self.ensure_compiled(name)?;
-        let exes = self.exes.lock().unwrap();
-        let exe = &exes[name];
-        let x = xla::Literal::vec1(reads_oh).reshape(&[info.b as i64, info.l as i64, 4])?;
-        let y = xla::Literal::vec1(windows_oh).reshape(&[info.w as i64, info.l as i64, 4])?;
-        let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        reads: Vec<f32>,
+        windows: Vec<f32>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.rt.align(name, &reads, &windows)
+    }
+
+    /// Borrowing variant: lets batch loops reuse one window buffer
+    /// without cloning it per call.
+    pub fn align_ref(
+        &self,
+        name: &str,
+        reads: &[f32],
+        windows: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.rt.align(name, reads, windows)
+    }
+
+    pub fn info(&self, name: &str) -> anyhow::Result<ArtifactInfo> {
+        self.rt.info(name).cloned()
     }
 }
 
@@ -178,122 +309,6 @@ pub mod payload {
     }
 }
 
-/// PJRT handles are `Rc`-based and must stay on one thread; the
-/// [`RuntimeServer`] owns the [`Runtime`] on a dedicated inference
-/// thread and serves align requests over a channel. [`RuntimeHandle`]
-/// is the `Send + Sync` client the pilot agents use — one compiled
-/// executable per model variant, shared by every Compute-Unit.
-enum RtReq {
-    Align {
-        name: String,
-        reads: Vec<f32>,
-        windows: Vec<f32>,
-        resp: std::sync::mpsc::Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
-    },
-    Info {
-        name: String,
-        resp: std::sync::mpsc::Sender<anyhow::Result<ArtifactInfo>>,
-    },
-    Shutdown,
-}
-
-/// Client handle to the runtime server thread (cloneable, Send+Sync).
-pub struct RuntimeHandle {
-    tx: Mutex<std::sync::mpsc::Sender<RtReq>>,
-}
-
-/// The server: owns the PJRT client + executables on its own thread.
-pub struct RuntimeServer {
-    join: Option<std::thread::JoinHandle<()>>,
-    tx: std::sync::mpsc::Sender<RtReq>,
-}
-
-impl RuntimeServer {
-    /// Spawn the inference thread; fails fast if the artifact dir is
-    /// missing.
-    pub fn spawn(dir: impl Into<PathBuf>) -> anyhow::Result<RuntimeServer> {
-        let dir = dir.into();
-        anyhow::ensure!(
-            dir.join("manifest.json").exists(),
-            "no artifacts at {} — run `make artifacts`",
-            dir.display()
-        );
-        let (tx, rx) = std::sync::mpsc::channel::<RtReq>();
-        let join = std::thread::Builder::new().name("pjrt-runtime".into()).spawn(move || {
-            let rt = match Runtime::open(&dir) {
-                Ok(rt) => rt,
-                Err(e) => {
-                    // Fail every request with the open error.
-                    while let Ok(req) = rx.recv() {
-                        match req {
-                            RtReq::Align { resp, .. } => {
-                                let _ = resp.send(Err(anyhow::anyhow!("runtime open failed: {e}")));
-                            }
-                            RtReq::Info { resp, .. } => {
-                                let _ = resp.send(Err(anyhow::anyhow!("runtime open failed: {e}")));
-                            }
-                            RtReq::Shutdown => break,
-                        }
-                    }
-                    return;
-                }
-            };
-            while let Ok(req) = rx.recv() {
-                match req {
-                    RtReq::Align { name, reads, windows, resp } => {
-                        let _ = resp.send(rt.align(&name, &reads, &windows));
-                    }
-                    RtReq::Info { name, resp } => {
-                        let _ = resp.send(rt.info(&name).cloned());
-                    }
-                    RtReq::Shutdown => break,
-                }
-            }
-        })?;
-        Ok(RuntimeServer { join: Some(join), tx })
-    }
-
-    pub fn handle(&self) -> RuntimeHandle {
-        RuntimeHandle { tx: Mutex::new(self.tx.clone()) }
-    }
-}
-
-impl Drop for RuntimeServer {
-    fn drop(&mut self) {
-        let _ = self.tx.send(RtReq::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl RuntimeHandle {
-    pub fn align(
-        &self,
-        name: &str,
-        reads: Vec<f32>,
-        windows: Vec<f32>,
-    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        let (resp, rx) = std::sync::mpsc::channel();
-        self.tx
-            .lock()
-            .unwrap()
-            .send(RtReq::Align { name: name.to_string(), reads, windows, resp })
-            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("runtime thread dropped request"))?
-    }
-
-    pub fn info(&self, name: &str) -> anyhow::Result<ArtifactInfo> {
-        let (resp, rx) = std::sync::mpsc::channel();
-        self.tx
-            .lock()
-            .unwrap()
-            .send(RtReq::Info { name: name.to_string(), resp })
-            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("runtime thread dropped request"))?
-    }
-}
-
 /// The local-mode CU executor: reads `reads.pd1` and `windows.pd1`
 /// from the sandbox, batches through the align artifact, writes
 /// `scores.csv` (read_index, best_window, score).
@@ -321,16 +336,16 @@ impl Executor for AlignExecutor {
 
         let mut csv = String::from("read,best_window,score\n");
         let bl = info.b * info.l;
+        let mut batch = vec![0f32; bl];
         let mut idx = 0usize;
         while idx < n_reads as usize {
             // Assemble one batch, padding the tail with the last read.
-            let mut batch = vec![0f32; bl];
             for r in 0..info.b {
                 let src = (idx + r).min(n_reads as usize - 1);
                 batch[r * info.l..(r + 1) * info.l]
                     .copy_from_slice(&reads[src * info.l..(src + 1) * info.l]);
             }
-            let (scores, best) = self.handle.align(&self.artifact, batch, windows.clone())?;
+            let (scores, best) = self.handle.align_ref(&self.artifact, &batch, &windows)?;
             for r in 0..info.b {
                 let global = idx + r;
                 if global >= n_reads as usize {
@@ -369,6 +384,44 @@ mod tests {
         let mut corrupt = bytes.clone();
         corrupt[0] ^= 0xFF;
         assert!(payload::decode(&corrupt).is_err());
+    }
+
+    #[test]
+    fn sw_kernel_matches_reference_scoring() {
+        // Perfect local match: MATCH * len.
+        let read: Vec<f32> = vec![0.0, 1.0, 2.0, 3.0];
+        assert_eq!(kernel::sw_score(&read, &read), 8.0);
+        // One mismatch in the middle: best local alignment keeps both
+        // flanks: 3 matches + 1 mismatch = 3*2 - 1 = 5.
+        let win: Vec<f32> = vec![0.0, 1.0, 3.0, 3.0];
+        assert_eq!(kernel::sw_score(&read, &win), 5.0);
+        // Disjoint alphabets: nothing aligns locally.
+        let far: Vec<f32> = vec![9.0; 4];
+        assert_eq!(kernel::sw_score(&read, &far), 0.0);
+        // A gap: read planted with one extra base in the window.
+        let gapped: Vec<f32> = vec![0.0, 1.0, 9.0, 2.0, 3.0];
+        // 4 matches - 1 gap = 8 - 1 = 7.
+        assert_eq!(kernel::sw_score(&read, &gapped), 7.0);
+    }
+
+    #[test]
+    fn seed_lattice_finds_planted_read() {
+        let l = 8;
+        let lw = 16;
+        let mut rng = crate::rng::Rng::new(3);
+        let read: Vec<f32> = (0..l).map(|_| rng.below(4) as f32).collect();
+        // Window 1 carries the read at lattice offset 4; window 0 is
+        // noise from a disjoint alphabet.
+        let w0: Vec<f32> = (0..lw).map(|_| 4.0 + rng.below(4) as f32).collect();
+        let mut w1: Vec<f32> = (0..lw).map(|_| 4.0 + rng.below(4) as f32).collect();
+        w1[4..4 + l].copy_from_slice(&read);
+        let mut windows = w0.clone();
+        windows.extend_from_slice(&w1);
+        assert_eq!(kernel::seed_score(&read, &w1), l as f32);
+        assert_eq!(kernel::best_windows(&read, &windows, 1, l, 2, lw), vec![1]);
+        let (scores, best) = kernel::align_pipeline(&read, &windows, 1, l, 2, lw);
+        assert_eq!(best, vec![1.0]);
+        assert_eq!(scores, vec![kernel::MATCH * l as f32]);
     }
 
     #[test]

@@ -15,6 +15,25 @@
 //!
 //! The scheduler is a plug-able component ([`Scheduler`] trait) "and
 //! can be replaced if desired".
+//!
+//! # Incremental context (perf)
+//!
+//! A placement decision needs three views of the world: the pilot
+//! fleet, the DU→replica-location map, and per-pilot queue depths. The
+//! seed implementation rebuilt the latter two from scratch for every
+//! CU — O(pilots + DUs·replicas) per decision, with a coordination
+//! store `llen` (and a `format!`-allocated key) per pilot. Those views
+//! now live *inside* [`ManagerState`] as indexes maintained on each
+//! mutation (`note_replica`, `note_queue_push/pop`), and
+//! [`SchedContext::from_state`] assembles a context in O(1) by
+//! borrowing them. The ranking loop itself computes each candidate's
+//! data score and effective slots exactly once (the seed recomputed
+//! effective slots inside the sort comparator) and borrows affinity
+//! labels instead of cloning them per pilot.
+//!
+//! Decisions are bit-identical to the rebuild-per-decision
+//! implementation; `indexed_context_matches_rebuilt_context` (property
+//! test below) checks that on randomized manager states.
 
 use crate::pilot::ManagerState;
 use crate::topology::{Label, Topology};
@@ -51,6 +70,17 @@ pub struct SchedContext<'a> {
 }
 
 impl<'a> SchedContext<'a> {
+    /// Assemble a context in O(1) from the manager's incrementally
+    /// maintained indexes (replica locations, live queue depths).
+    pub fn from_state(topo: &'a Topology, state: &'a ManagerState) -> SchedContext<'a> {
+        SchedContext {
+            topo,
+            state,
+            du_locations: state.du_locations(),
+            queue_depth: state.queue_depths(),
+        }
+    }
+
     /// Effective open capacity of a pilot in cores: free slots minus
     /// cores spoken for by CUs already queued on it (approximated with
     /// the current CU's core count).
@@ -68,7 +98,7 @@ impl<'a> SchedContext<'a> {
             .filter(|p| !p.state.is_terminal())
             .filter(|p| p.description.cores >= cu.description.cores.max(1))
             .filter(|p| match &cu.description.affinity {
-                Some(constraint) => p.affinity().within(constraint),
+                Some(constraint) => p.affinity_ref().within(constraint),
                 None => true,
             })
             .collect()
@@ -144,31 +174,27 @@ impl Scheduler for AffinityScheduler {
 
         // Step 1: rank by data score, tie-break by effective open
         // capacity (free slots minus queued work) then id for
-        // determinism.
-        let mut ranked: Vec<_> = eligible
-            .iter()
-            .map(|p| (ctx.data_score(cu, &p.affinity()), *p))
-            .collect();
+        // determinism. Score and slots are computed once per candidate,
+        // not inside the comparator.
         let cores = cu.description.cores.max(1);
+        let mut ranked: Vec<(f64, i64, &crate::pilot::PilotCompute)> = eligible
+            .iter()
+            .map(|p| (ctx.data_score(cu, p.affinity_ref()), ctx.effective_slots(p, cores), *p))
+            .collect();
         ranked.sort_by(|a, b| {
-            b.0.partial_cmp(&a.0)
-                .unwrap()
-                .then(ctx.effective_slots(b.1, cores).cmp(&ctx.effective_slots(a.1, cores)))
-                .then(a.1.id.cmp(&b.1.id))
+            b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)).then(a.2.id.cmp(&b.2.id))
         });
-        let (best_score, best) = (&ranked[0].0, ranked[0].1);
+        let (best_score, best_slots, best) = (ranked[0].0, ranked[0].1, ranked[0].2);
 
         // No data affinity anywhere and no constraint: let the global
         // queue load-balance (step 4 fast path).
-        if *best_score <= 0.0 && cu.description.affinity.is_none() {
+        if best_score <= 0.0 && cu.description.affinity.is_none() {
             return Placement::Global;
         }
 
         // Step 2: preferred pilot is active with an open slot that is
         // not already spoken for by queued work.
-        if best.has_free_slot(cu.description.cores)
-            && ctx.effective_slots(best, cores) >= cores as i64
-        {
+        if best.has_free_slot(cu.description.cores) && best_slots >= cores as i64 {
             self.delays_spent.lock().unwrap().remove(&cu.id);
             return Placement::Pilot(best.id.clone());
         }
@@ -203,13 +229,14 @@ impl Scheduler for DataUnawareScheduler {
     }
 
     fn place(&self, cu: &ComputeUnit, ctx: &SchedContext) -> Placement {
-        for p in ctx.eligible_pilots(cu) {
+        let eligible = ctx.eligible_pilots(cu);
+        if eligible.is_empty() {
+            return Placement::Unschedulable("no eligible pilot".into());
+        }
+        for p in eligible {
             if p.has_free_slot(cu.description.cores) {
                 return Placement::Pilot(p.id.clone());
             }
-        }
-        if ctx.eligible_pilots(cu).is_empty() {
-            return Placement::Unschedulable("no eligible pilot".into());
         }
         Placement::Global
     }
@@ -434,6 +461,130 @@ mod tests {
         };
         assert_eq!(seq(9), seq(9));
         assert_ne!(seq(9), seq(10));
+    }
+
+    /// The incremental indexes must be *invisible* to the scheduler:
+    /// placements from a context assembled via `SchedContext::from_state`
+    /// must equal placements from maps rebuilt from scratch out of the
+    /// same mutation log.
+    #[test]
+    fn indexed_context_matches_rebuilt_context() {
+        crate::prop::check_default(
+            |rng| {
+                let sites = ["osg/a", "osg/b", "xsede/tacc/ls", "xsede/tacc/st", "ec2/east"];
+                let n_pilots = crate::prop::gen::usize_in(rng, 1, 6);
+                let pilots: Vec<(u32, String, bool, u32)> = (0..n_pilots)
+                    .map(|_| {
+                        (
+                            1 + rng.below(16) as u32,
+                            rng.choose(&sites).to_string(),
+                            rng.chance(0.8),
+                            rng.below(4) as u32,
+                        )
+                    })
+                    .collect();
+                let n_dus = crate::prop::gen::usize_in(rng, 0, 5);
+                let dus: Vec<(u64, Vec<String>)> = (0..n_dus)
+                    .map(|_| {
+                        let n_repl = rng.below(3);
+                        (
+                            1 + rng.below(64),
+                            (0..n_repl).map(|_| rng.choose(&sites).to_string()).collect(),
+                        )
+                    })
+                    .collect();
+                let n_ops = crate::prop::gen::usize_in(rng, 0, 20);
+                let qops: Vec<(usize, bool)> = (0..n_ops)
+                    .map(|_| (rng.below(n_pilots as u64) as usize, rng.chance(0.7)))
+                    .collect();
+                let n_cus = crate::prop::gen::usize_in(rng, 1, 8);
+                let cus: Vec<(u32, Option<String>, Vec<usize>)> = (0..n_cus)
+                    .map(|_| {
+                        (
+                            1 + rng.below(4) as u32,
+                            if rng.chance(0.3) {
+                                Some(rng.choose(&sites).to_string())
+                            } else {
+                                None
+                            },
+                            if n_dus == 0 {
+                                Vec::new()
+                            } else {
+                                (0..rng.below(3)).map(|_| rng.below(n_dus as u64) as usize).collect()
+                            },
+                        )
+                    })
+                    .collect();
+                let delay = rng.chance(0.5);
+                (pilots, dus, qops, cus, delay)
+            },
+            |(pilots, dus, qops, cus, delay)| {
+                let mut st = ManagerState::new();
+                let mut pilot_ids = Vec::new();
+                for (cores, site, active, busy) in pilots {
+                    let id = mk_pilot(
+                        &mut st,
+                        *cores,
+                        site,
+                        if *active { PilotState::Active } else { PilotState::Queued },
+                    );
+                    st.pilots.get_mut(&id).unwrap().busy_slots = (*busy).min(*cores);
+                    pilot_ids.push(id);
+                }
+                // Apply the mutation log to the live indexes AND to
+                // hand-rebuilt maps (the seed implementation's shape).
+                let mut expected_locs: BTreeMap<String, Vec<Label>> = BTreeMap::new();
+                let mut du_ids = Vec::new();
+                for (gb, labels) in dus {
+                    let id = mk_du(&mut st, Bytes::gb(*gb));
+                    for l in labels {
+                        let lab = Label::new(l);
+                        st.note_replica(&id, &lab);
+                        let e = expected_locs.entry(id.clone()).or_default();
+                        if !e.contains(&lab) {
+                            e.push(lab);
+                        }
+                    }
+                    du_ids.push(id);
+                }
+                let mut expected_depth: BTreeMap<String, usize> = BTreeMap::new();
+                for (pi, push) in qops {
+                    let id = &pilot_ids[*pi];
+                    if *push {
+                        st.note_queue_push(id);
+                        *expected_depth.entry(id.clone()).or_insert(0) += 1;
+                    } else {
+                        st.note_queue_pop(id);
+                        if let Some(d) = expected_depth.get_mut(id) {
+                            *d = d.saturating_sub(1);
+                        }
+                    }
+                }
+                let topo = Topology::new();
+                let delay_s = if *delay { Some(30.0) } else { None };
+                let sched_indexed = AffinityScheduler::new(delay_s);
+                let sched_rebuilt = AffinityScheduler::new(delay_s);
+                for (cores, aff, inputs) in cus {
+                    let input: Vec<String> =
+                        inputs.iter().map(|i| du_ids[*i].clone()).collect();
+                    let mut cu = mk_cu(input, aff.as_deref());
+                    cu.description.cores = *cores;
+                    let ctx_indexed = SchedContext::from_state(&topo, &st);
+                    let ctx_rebuilt = SchedContext {
+                        topo: &topo,
+                        state: &st,
+                        du_locations: &expected_locs,
+                        queue_depth: &expected_depth,
+                    };
+                    let a = sched_indexed.place(&cu, &ctx_indexed);
+                    let b = sched_rebuilt.place(&cu, &ctx_rebuilt);
+                    if a != b {
+                        return Err(format!("indexed {a:?} != rebuilt {b:?} for cu {}", cu.id));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

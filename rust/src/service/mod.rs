@@ -16,7 +16,7 @@
 
 use crate::coordination::{keys, Store};
 use crate::pilot::{
-    agent_pull, ManagerState, PilotCompute, PilotComputeDescription, PilotData,
+    agent_pull_tracked, ManagerState, PilotCompute, PilotComputeDescription, PilotData,
     PilotDataDescription, PilotState,
 };
 use crate::scheduler::{AffinityScheduler, Placement, SchedContext, Scheduler};
@@ -305,8 +305,12 @@ impl PilotSystem {
             .publish(keys::STATE_CHANNEL, &format!("{cu_id}:{:?}", st.cus[cu_id].state));
     }
 
-    /// Agent main loop for one pilot: pull own queue, then global.
+    /// Agent main loop for one pilot: pull own queue, then global
+    /// (§4.2's two-queue protocol). The own-queue key is interned once
+    /// per agent, and the manager's queue-depth counter is decremented
+    /// in lockstep with own-queue pops.
     fn agent_loop(self: Arc<Self>, pilot_id: String) {
+        let own_queue = keys::pilot_queue_key(&pilot_id);
         while !self.shutdown.load(Ordering::SeqCst) {
             // Respect slot limits.
             let can_pull = {
@@ -317,8 +321,11 @@ impl PilotSystem {
                 std::thread::sleep(Duration::from_millis(2));
                 continue;
             }
-            match agent_pull(&self.store, &pilot_id) {
-                Ok(Some(cu_id)) => {
+            match agent_pull_tracked(&self.store, &own_queue) {
+                Ok(Some((cu_id, from_own))) => {
+                    if from_own {
+                        self.state.lock().unwrap().note_queue_pop(&pilot_id);
+                    }
                     let cores = {
                         let mut st = self.state.lock().unwrap();
                         let cores =
@@ -455,8 +462,12 @@ impl ComputeDataService {
             .unwrap()
             .entry(id.clone())
             .or_default()
-            .push((pd_id.to_string(), label));
-        self.sys.state.lock().unwrap().add_du(du);
+            .push((pd_id.to_string(), label.clone()));
+        {
+            let mut st = self.sys.state.lock().unwrap();
+            st.note_replica(&id, &label);
+            st.add_du(du);
+        }
         Ok(id)
     }
 
@@ -524,7 +535,8 @@ impl ComputeDataService {
             .unwrap()
             .get_mut(du_id)
             .unwrap()
-            .push((dst_pd.to_string(), label));
+            .push((dst_pd.to_string(), label.clone()));
+        self.sys.state.lock().unwrap().note_replica(du_id, &label);
         Ok(())
     }
 
@@ -555,24 +567,12 @@ impl ComputeDataService {
         cu.t_submitted = PilotSystem::now_s();
         let id = cu.id.clone();
 
+        // O(1) context assembly from the manager's incremental indexes
+        // (the seed rebuilt the DU-location map and polled a store
+        // `llen` per pilot on every submit).
         let placement = {
             let st = self.sys.state.lock().unwrap();
-            let locations = self.sys.locations.lock().unwrap();
-            let du_locations: BTreeMap<String, Vec<Label>> = locations
-                .iter()
-                .map(|(du, locs)| (du.clone(), locs.iter().map(|(_, l)| l.clone()).collect()))
-                .collect();
-            let queue_depth: BTreeMap<String, usize> = st
-                .pilots
-                .keys()
-                .map(|p| (p.clone(), self.sys.store.llen(&keys::pilot_queue(p)).unwrap_or(0)))
-                .collect();
-            let ctx = SchedContext {
-                topo: &self.sys.topo,
-                state: &st,
-                du_locations: &du_locations,
-                queue_depth: &queue_depth,
-            };
+            let ctx = SchedContext::from_state(&self.sys.topo, &st);
             self.sys.scheduler.place(&cu, &ctx)
         };
 
@@ -595,7 +595,16 @@ impl ComputeDataService {
             Ok(())
         };
         match placement {
-            Placement::Pilot(pilot_id) => enqueue(&keys::pilot_queue(&pilot_id), cu)?,
+            Placement::Pilot(pilot_id) => {
+                // Pre-account the push: the agent thread may pop (and
+                // decrement) the instant the rpush lands, so counting
+                // after the fact could leak the counter upward.
+                self.sys.state.lock().unwrap().note_queue_push(&pilot_id);
+                if let Err(e) = enqueue(&keys::pilot_queue(&pilot_id), cu) {
+                    self.sys.state.lock().unwrap().note_queue_pop(&pilot_id);
+                    return Err(e);
+                }
+            }
             Placement::Global | Placement::Delay(_) => enqueue(keys::GLOBAL_QUEUE, cu)?,
             Placement::Unschedulable(reason) => {
                 cu.transition(CuState::Unschedulable)?;

@@ -27,11 +27,25 @@ impl Label {
         }
     }
 
+    /// Number of components, without allocating.
+    pub fn depth(&self) -> usize {
+        if self.0.is_empty() {
+            0
+        } else {
+            self.0.split('/').count()
+        }
+    }
+
     /// Depth of the deepest shared ancestor with `other`.
+    /// Allocation-free: this sits inside the scheduler's per-pilot
+    /// scoring loop.
     pub fn common_prefix_len(&self, other: &Label) -> usize {
-        self.components()
-            .iter()
-            .zip(other.components().iter())
+        if self.0.is_empty() || other.0.is_empty() {
+            return 0;
+        }
+        self.0
+            .split('/')
+            .zip(other.0.split('/'))
             .take_while(|(a, b)| a == b)
             .count()
     }
@@ -39,9 +53,8 @@ impl Label {
     /// True if `self` lies in the subtree rooted at `prefix` — used for
     /// affinity *constraints* ("run only under `xsede/tacc`").
     pub fn within(&self, prefix: &Label) -> bool {
-        let pc = prefix.components();
-        let sc = self.components();
-        pc.len() <= sc.len() && pc.iter().zip(sc.iter()).all(|(a, b)| a == b)
+        let pc = prefix.depth();
+        pc <= self.depth() && self.common_prefix_len(prefix) == pc
     }
 }
 
@@ -83,25 +96,37 @@ impl Topology {
         self.edge_weights.insert(Label::new(label).0, weight);
     }
 
-    fn edge_weight(&self, path: &[&str]) -> f64 {
-        let key = path.join("/");
-        *self.edge_weights.get(&key).unwrap_or(&self.default_edge_weight)
+    /// Total weight of the edges above `label`'s nodes deeper than
+    /// `from_depth`. Edge keys are label *prefixes*, so lookups slice
+    /// the original string instead of joining components — this path
+    /// runs once per (CU input, pilot, replica) in the scheduler and
+    /// must not allocate.
+    fn suffix_weight(&self, label: &Label, from_depth: usize) -> f64 {
+        let s = label.0.as_str();
+        if s.is_empty() {
+            return 0.0;
+        }
+        if self.edge_weights.is_empty() {
+            // Fast path: every edge weighs the default.
+            return (label.depth() - from_depth) as f64 * self.default_edge_weight;
+        }
+        let mut w = 0.0;
+        let mut depth = 0usize;
+        let ends = s.match_indices('/').map(|(i, _)| i).chain(std::iter::once(s.len()));
+        for end in ends {
+            depth += 1;
+            if depth > from_depth {
+                w += *self.edge_weights.get(&s[..end]).unwrap_or(&self.default_edge_weight);
+            }
+        }
+        w
     }
 
     /// Tree distance between two labels: the weighted number of hops up
     /// from each label to their lowest common ancestor.
     pub fn distance(&self, a: &Label, b: &Label) -> f64 {
-        let ac = a.components();
-        let bc = b.components();
         let common = a.common_prefix_len(b);
-        let mut d = 0.0;
-        for depth in common..ac.len() {
-            d += self.edge_weight(&ac[..=depth]);
-        }
-        for depth in common..bc.len() {
-            d += self.edge_weight(&bc[..=depth]);
-        }
-        d
+        self.suffix_weight(a, common) + self.suffix_weight(b, common)
     }
 
     /// Affinity in (0, 1]: 1 for identical labels, decreasing with

@@ -1,6 +1,6 @@
-//! Integration tests of the PJRT runtime inside the full local-mode
-//! pilot system: real Data-Units carrying read payloads, real agents,
-//! real XLA execution of the AOT JAX/Pallas artifact.
+//! Integration tests of the alignment runtime inside the full
+//! local-mode pilot system: real Data-Units carrying read payloads,
+//! real agents, real execution of the manifest-driven align kernels.
 //!
 //! Skipped gracefully when artifacts are missing (`make artifacts`).
 
@@ -19,7 +19,7 @@ fn artifacts() -> Option<PathBuf> {
 }
 
 #[test]
-fn align_cu_runs_real_xla_through_pilot_system() {
+fn align_cu_runs_real_kernels_through_pilot_system() {
     let Some(dir) = artifacts() else {
         eprintln!("skipping: run `make artifacts`");
         return;

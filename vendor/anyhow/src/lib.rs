@@ -1,0 +1,151 @@
+//! Minimal, offline-vendored subset of the `anyhow` error-handling API.
+//!
+//! This repository builds with no network access, so instead of pulling
+//! `anyhow` from a registry we vendor the small slice of its surface the
+//! codebase actually uses (the same approach the main crate takes with
+//! its from-scratch `json` module replacing serde):
+//!
+//! * [`Error`] — an opaque, `Send + Sync` boxed error value;
+//! * [`Result`] — `std::result::Result` defaulted to that error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that keeps the blanket `From<E: Error>`
+//! conversion (what makes `?` work on any std error) coherent with the
+//! reflexive `From<Error> for Error` from `core`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error value wrapping any `std::error::Error` or message.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Borrow the underlying boxed error.
+    pub fn as_dyn(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.inner
+    }
+}
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn message_and_std_error_conversions() {
+        let e = anyhow!("failed on {}", 42);
+        assert_eq!(e.to_string(), "failed on 42");
+        let io: super::Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert_eq!(io.to_string(), "disk");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> super::Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+    }
+
+    #[test]
+    fn question_mark_propagates_std_errors() {
+        fn parse(s: &str) -> super::Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("x").is_err());
+    }
+}
