@@ -10,7 +10,7 @@
 //!
 //! Run with: `cargo bench --bench perf_micro`
 
-use pilot_data::coordination::{keys, Store};
+use pilot_data::coordination::{keys, Key, Store};
 use pilot_data::pilot::{ManagerState, PilotCompute, PilotComputeDescription, PilotState};
 use pilot_data::scheduler::{AffinityScheduler, SchedContext, Scheduler};
 use pilot_data::simtime::Sim;
@@ -145,6 +145,55 @@ fn main() {
     bench(&mut results, "CUD via typed record cache", 200_000, || {
         std::hint::black_box(store.cu_description("cu-cached").unwrap());
     });
+
+    // --- wakeup latency: fixed-interval poll loop vs event layer ---
+    // The tentpole number: time from work landing on a queue to an
+    // idle agent picking it up. The poll loop is the seed agents' 2 ms
+    // sleep cycle; the blocking pop parks on the store's per-stripe
+    // condvars and is woken by the push itself.
+    for (name, poll) in [
+        ("wakeup latency: 2ms poll loop", Some(std::time::Duration::from_millis(2))),
+        ("wakeup latency: blocking pop", None),
+    ] {
+        let wstore = Store::new();
+        let wq = Key::new("bench:wakeup");
+        let (tx, rx) = std::sync::mpsc::channel::<Instant>();
+        let consumer = std::thread::spawn({
+            let wstore = wstore.clone();
+            let wq = wq.clone();
+            move || loop {
+                let v = match poll {
+                    Some(interval) => loop {
+                        match wstore.lpop_k(&wq).unwrap() {
+                            Some(v) => break v,
+                            None => std::thread::sleep(interval),
+                        }
+                    },
+                    None => wstore.blpop_k(&wq, None).unwrap().unwrap(),
+                };
+                if v == "__stop__" {
+                    break;
+                }
+                tx.send(Instant::now()).unwrap();
+            }
+        });
+        let iters = (200 / quick()).max(20);
+        // Warmup round trip.
+        wstore.rpush_k(&wq, "warm").unwrap();
+        rx.recv().unwrap();
+        let mut total = std::time::Duration::ZERO;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            wstore.rpush_k(&wq, "x").unwrap();
+            let woke = rx.recv().unwrap();
+            total += woke.duration_since(t0);
+        }
+        wstore.rpush_k(&wq, "__stop__").unwrap();
+        consumer.join().unwrap();
+        let ns = total.as_nanos() as f64 / iters as f64;
+        println!("{name:<40}{:>12.2} us/wakeup", ns / 1e3);
+        results.push((name.to_string(), ns));
+    }
 
     // --- discrete-event engine ---
     bench(&mut results, "DES schedule+pop (1k events)", 2_000, || {

@@ -1,0 +1,556 @@
+//! Event layer of the coordination store: per-stripe pub/sub and
+//! BLPOP-style blocking pops.
+//!
+//! BigJob's agents do not poll Redis — they block on `BLPOP` and react
+//! to pub/sub notifications (paper §4.2), which is what keeps the
+//! coordination cost independent of the number of idle agents. This
+//! module gives the in-process store the same two primitives:
+//!
+//! * **Pub/sub on interned [`Key`]s.** Exact-key subscriber registries
+//!   are sharded across the same [`SHARDS`] stripes as the data (a
+//!   publish on one pilot's queue never contends with another's), while
+//!   *pattern* subscriptions on key prefixes (e.g. the
+//!   [`super::keys::QUEUE_PREFIX`] queue namespace) live in one shared
+//!   registry consulted per publish — a prefix spans stripes by
+//!   definition. Every [`Store::rpush`] fans out a keyspace event
+//!   (key = the queue, payload = the pushed value) to both registries;
+//!   explicit [`Store::publish_k`] does the same for arbitrary keys.
+//!
+//! * **Blocking pops.** [`Store::blpop_k`] / [`Store::blpop_any`]
+//!   block the calling thread until an element arrives, built on
+//!   condvar-backed waiter cells in a per-stripe registry: a popper
+//!   that finds
+//!   its queues empty registers a [`WaitCell`] under each queue key
+//!   (then re-checks, closing the classic lost-wakeup window) and
+//!   sleeps; `rpush` drains and notifies the waiters of exactly that
+//!   key. Multi-queue pops implement §4.2's two-queue protocol in one
+//!   call: queues are tried in priority order (agent-specific first,
+//!   global second). [`Store::blpop_any_until`] is the deadline
+//!   variant.
+//!
+//! # Outage semantics
+//!
+//! An injected outage ([`Store::set_down`]) wakes every blocked popper,
+//! which then surfaces [`StoreError::Unavailable`] — exactly what a
+//! dropped Redis connection does to a blocked `BLPOP`. Agents park on
+//! [`Store::wait_available`] (woken by recovery or by their shutdown
+//! flag via [`Store::wake_waiters`]) instead of sleeping in a retry
+//! loop.
+//!
+//! # Deadline semantics under simulated time
+//!
+//! The discrete-event driver ([`crate::experiments::simdrive`]) is
+//! single-threaded: a thread-blocking pop would deadlock it, and
+//! wall-clock deadlines are meaningless at simulated-time scale. Under
+//! simtime, a "blocking pop with deadline" therefore maps to the
+//! non-blocking [`Store::lpop_k`] plus a *scheduled wakeup event*: the
+//! sim driver subscribes to the queue namespace with
+//! [`Store::subscribe_prefix`] and turns each queue event into a
+//! `TryPull` sim event at the current simulated instant, while
+//! `Delay`-style re-evaluation events play the role of the deadline.
+//! The blocking forms in this module are for wall-clock mode (the
+//! local-execution service agents) and the concurrency test suite.
+
+use super::{stripe_of, FxMap, Key, Store, StoreError, SHARDS};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// A message delivered to a subscriber: the key it was published on
+/// (so prefix subscribers can demultiplex) plus the payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub key: String,
+    pub payload: String,
+}
+
+/// One waiter blocked in a pop: a signaled flag under a mutex plus the
+/// condvar the blocked thread sleeps on. Registered under every queue
+/// key the pop covers; a push on any of them notifies the cell.
+struct WaitCell {
+    signaled: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl WaitCell {
+    fn new() -> WaitCell {
+        WaitCell { signaled: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn notify(&self) {
+        let mut g = self.signaled.lock().unwrap_or_else(|e| e.into_inner());
+        *g = true;
+        self.cv.notify_all();
+    }
+
+    /// Sleep until notified or the deadline passes. Returns whether a
+    /// signal was consumed (`false` = timed out).
+    fn wait_until(&self, deadline: Option<Instant>) -> bool {
+        let mut g = self.signaled.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if *g {
+                *g = false;
+                return true;
+            }
+            match deadline {
+                None => g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner()),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return false;
+                    }
+                    let (g2, _) = self
+                        .cv
+                        .wait_timeout(g, d - now)
+                        .unwrap_or_else(|e| e.into_inner());
+                    g = g2;
+                }
+            }
+        }
+    }
+}
+
+/// Per-stripe subscriber + waiter registries (same striping as the
+/// data shards, so unrelated keys never contend on one registry lock).
+#[derive(Default)]
+struct SubStripe {
+    /// Exact-key subscribers.
+    exact: FxMap<Arc<str>, Vec<Sender<Event>>>,
+    /// Blocking-pop waiters per key; drained wholesale on each push
+    /// (losers of the pop race re-register).
+    waiters: FxMap<Arc<str>, Vec<Arc<WaitCell>>>,
+}
+
+/// The store's event hub: sharded exact-key registries, the global
+/// prefix-pattern registry, and the availability condvar.
+pub(super) struct EventHub {
+    stripes: Vec<Mutex<SubStripe>>,
+    prefixes: Mutex<Vec<(String, Sender<Event>)>>,
+    /// Upper bound on live prefix subscriptions (never decremented;
+    /// dead senders are pruned under the lock). Lets the push hot path
+    /// skip the shared `prefixes` mutex entirely when no pattern
+    /// subscriber has ever been registered — the common case in
+    /// wall-clock service mode, where pushes from every agent would
+    /// otherwise contend on this one store-wide lock.
+    prefix_ceiling: std::sync::atomic::AtomicUsize,
+    avail: Mutex<()>,
+    avail_cv: Condvar,
+}
+
+impl EventHub {
+    pub(super) fn new() -> EventHub {
+        EventHub {
+            stripes: (0..SHARDS).map(|_| Mutex::new(SubStripe::default())).collect(),
+            prefixes: Mutex::new(Vec::new()),
+            prefix_ceiling: std::sync::atomic::AtomicUsize::new(0),
+            avail: Mutex::new(()),
+            avail_cv: Condvar::new(),
+        }
+    }
+
+    fn stripe(&self, idx: usize) -> MutexGuard<'_, SubStripe> {
+        self.stripes[idx].lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Store {
+    // ---- pub/sub ----
+
+    /// Subscribe to events published on exactly this key (per-stripe
+    /// registry; no cross-key contention). Dropped receivers are
+    /// pruned on the next publish.
+    pub fn subscribe_key(&self, key: &Key) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.inner
+            .hub
+            .stripe(key.stripe)
+            .exact
+            .entry(key.text.clone())
+            .or_default()
+            .push(tx);
+        rx
+    }
+
+    /// String-keyed convenience wrapper over [`Store::subscribe_key`]
+    /// (the seed's channel API; a channel is just a key).
+    pub fn subscribe(&self, channel: &str) -> Receiver<Event> {
+        self.subscribe_key(&Key::new(channel))
+    }
+
+    /// Pattern subscription on a key prefix — e.g.
+    /// [`super::keys::QUEUE_PREFIX`] to observe every queue push in the
+    /// system. Consulted on each publish regardless of stripe.
+    pub fn subscribe_prefix(&self, prefix: &str) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.inner
+            .hub
+            .prefixes
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((prefix.to_string(), tx));
+        self.inner
+            .hub
+            .prefix_ceiling
+            .fetch_add(1, std::sync::atomic::Ordering::Release);
+        rx
+    }
+
+    /// Deliver to exact-key subscribers of `key` with the stripe
+    /// registry already locked (mpsc sends never block, so sending
+    /// under the guard is safe — and keeps `notify_push` to a single
+    /// stripe-lock acquisition per push).
+    fn deliver_exact(s: &mut SubStripe, key: &str, payload: &str) -> usize {
+        let mut delivered = 0;
+        let mut emptied = false;
+        if let Some(list) = s.exact.get_mut(key) {
+            list.retain(|tx| {
+                tx.send(Event { key: key.to_string(), payload: payload.to_string() }).is_ok()
+            });
+            delivered = list.len();
+            emptied = list.is_empty();
+        }
+        if emptied {
+            s.exact.remove(key);
+        }
+        delivered
+    }
+
+    /// Deliver to prefix (pattern) subscribers matching `key`.
+    fn fanout_prefix(&self, key: &str, payload: &str) -> usize {
+        // Lock-free fast path: no pattern subscriber was ever
+        // registered (service mode) — don't touch the shared mutex.
+        if self.inner.hub.prefix_ceiling.load(std::sync::atomic::Ordering::Acquire) == 0 {
+            return 0;
+        }
+        let mut delivered = 0;
+        let mut pats = self.inner.hub.prefixes.lock().unwrap_or_else(|e| e.into_inner());
+        if !pats.is_empty() {
+            pats.retain(|(p, tx)| {
+                if key.starts_with(p.as_str()) {
+                    tx.send(Event { key: key.to_string(), payload: payload.to_string() }).is_ok()
+                } else {
+                    true
+                }
+            });
+            delivered += pats.iter().filter(|(p, _)| key.starts_with(p.as_str())).count();
+        }
+        delivered
+    }
+
+    /// Deliver an event to exact-key and matching prefix subscribers;
+    /// returns how many subscribers received it.
+    fn fanout(&self, stripe: usize, key: &str, payload: &str) -> usize {
+        let exact = {
+            let mut s = self.inner.hub.stripe(stripe);
+            Self::deliver_exact(&mut s, key, payload)
+        };
+        exact + self.fanout_prefix(key, payload)
+    }
+
+    /// Publish `payload` on an interned key.
+    pub fn publish_k(&self, key: &Key, payload: &str) -> Result<usize, StoreError> {
+        self.begin()?;
+        Ok(self.fanout(key.stripe, &key.text, payload))
+    }
+
+    /// String-keyed publish (the seed's channel API).
+    pub fn publish(&self, channel: &str, message: &str) -> Result<usize, StoreError> {
+        self.begin()?;
+        Ok(self.fanout(stripe_of(channel), channel, message))
+    }
+
+    /// Internal: a value landed on `key` — wake its blocking-pop
+    /// waiters (they consume data, so they go first) and fan the
+    /// keyspace event out to subscribers. Called by `rpush` with the
+    /// data lock already released.
+    ///
+    /// Every waiter on the key is woken (drained) per push: one wins
+    /// the element, the rest re-check and re-park. That is an O(idle
+    /// waiters) herd per *event* — deliberately traded for simplicity
+    /// and loss-freedom over Redis's wake-one handoff, which cannot
+    /// strand an element here either but needs per-waiter delivery
+    /// state to stay correct with multi-queue pops (a single cell can
+    /// be signaled for one queue and consume from another, leaving the
+    /// first's element behind). Idle cost with *no* events remains
+    /// zero regardless of waiter count.
+    pub(super) fn notify_push(&self, stripe: usize, key: &str, payload: &str) {
+        // One stripe-lock acquisition covers both the waiter drain and
+        // the exact-subscriber delivery; cells are notified after the
+        // guard drops (notify takes each cell's own mutex — keep the
+        // lock scopes disjoint).
+        let cells = {
+            let mut s = self.inner.hub.stripe(stripe);
+            let cells = s.waiters.remove(key);
+            Self::deliver_exact(&mut s, key, payload);
+            cells
+        };
+        if let Some(cells) = cells {
+            for c in cells {
+                c.notify();
+            }
+        }
+        self.fanout_prefix(key, payload);
+    }
+
+    // ---- blocking pops ----
+
+    fn register_waiter(&self, key: &Key, cell: &Arc<WaitCell>) {
+        self.inner
+            .hub
+            .stripe(key.stripe)
+            .waiters
+            .entry(key.text.clone())
+            .or_default()
+            .push(cell.clone());
+    }
+
+    fn deregister_waiter(&self, queues: &[&Key], cell: &Arc<WaitCell>) {
+        for k in queues {
+            let mut s = self.inner.hub.stripe(k.stripe);
+            let mut emptied = false;
+            if let Some(v) = s.waiters.get_mut(&*k.text) {
+                v.retain(|c| !Arc::ptr_eq(c, cell));
+                emptied = v.is_empty();
+            }
+            if emptied {
+                s.waiters.remove(&*k.text);
+            }
+        }
+    }
+
+    /// BLPOP over several queues in priority order (first non-empty
+    /// wins — §4.2's agent-specific-then-global protocol in one call),
+    /// blocking until an element arrives or the absolute `deadline`
+    /// passes. Returns `(queue_index, value)`; `None` only on
+    /// deadline. Surfaces [`StoreError::Unavailable`] immediately when
+    /// the store goes down, like a dropped Redis connection.
+    pub fn blpop_any_until(
+        &self,
+        queues: &[&Key],
+        deadline: Option<Instant>,
+    ) -> Result<Option<(usize, String)>, StoreError> {
+        loop {
+            // Fast path: no registration when data is already there.
+            for (i, k) in queues.iter().enumerate() {
+                if let Some(v) = self.lpop_k(k)? {
+                    return Ok(Some((i, v)));
+                }
+            }
+            let cell = Arc::new(WaitCell::new());
+            for k in queues {
+                self.register_waiter(k, &cell);
+            }
+            // Re-check after registering: a push that landed between
+            // the miss above and the registration found no waiter to
+            // notify — this second look closes the lost-wakeup window.
+            let recheck: Result<Option<(usize, String)>, StoreError> = (|| {
+                for (i, k) in queues.iter().enumerate() {
+                    if let Some(v) = self.lpop_k(k)? {
+                        return Ok(Some((i, v)));
+                    }
+                }
+                Ok(None)
+            })();
+            match recheck {
+                Ok(Some(hit)) => {
+                    self.deregister_waiter(queues, &cell);
+                    return Ok(Some(hit));
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    self.deregister_waiter(queues, &cell);
+                    return Err(e);
+                }
+            }
+            let signaled = cell.wait_until(deadline);
+            self.deregister_waiter(queues, &cell);
+            if !signaled {
+                // Deadline passed: one final non-blocking look keeps
+                // the "value or timeout" contract precise.
+                for (i, k) in queues.iter().enumerate() {
+                    if let Some(v) = self.lpop_k(k)? {
+                        return Ok(Some((i, v)));
+                    }
+                }
+                return Ok(None);
+            }
+            // Woken: loop and race for the element; losers re-register.
+        }
+    }
+
+    /// [`Store::blpop_any_until`] with a relative timeout (`None` =
+    /// block indefinitely).
+    pub fn blpop_any(
+        &self,
+        queues: &[&Key],
+        timeout: Option<Duration>,
+    ) -> Result<Option<(usize, String)>, StoreError> {
+        self.blpop_any_until(queues, timeout.map(|t| Instant::now() + t))
+    }
+
+    /// Single-queue blocking pop (`None` timeout = block indefinitely).
+    pub fn blpop_k(
+        &self,
+        key: &Key,
+        timeout: Option<Duration>,
+    ) -> Result<Option<String>, StoreError> {
+        Ok(self.blpop_any(&[key], timeout)?.map(|(_, v)| v))
+    }
+
+    /// Single-queue blocking pop against an absolute deadline.
+    pub fn blpop_until(
+        &self,
+        key: &Key,
+        deadline: Option<Instant>,
+    ) -> Result<Option<String>, StoreError> {
+        Ok(self.blpop_any_until(&[key], deadline)?.map(|(_, v)| v))
+    }
+
+    // ---- availability ----
+
+    /// Block until the store is reachable again or `give_up` returns
+    /// true. Event-driven: woken by [`Store::set_down`]`(false)`,
+    /// [`Store::restore`], or [`Store::wake_waiters`] — never a sleep
+    /// loop. Agents pass their shutdown flag as `give_up`.
+    pub fn wait_available(&self, give_up: impl Fn() -> bool) {
+        let mut g = self.inner.hub.avail.lock().unwrap_or_else(|e| e.into_inner());
+        while self.is_down() && !give_up() {
+            g = self.inner.hub.avail_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Wake every blocked waiter — blocking pops and availability
+    /// waits — without touching any data. Woken parties re-check their
+    /// predicates: poppers re-poll their queues (and surface
+    /// `Unavailable` during an outage), availability waiters re-check
+    /// the down flag and their give-up condition. Called by
+    /// `set_down`, `restore`, and agent shutdown paths.
+    pub fn wake_waiters(&self) {
+        for idx in 0..SHARDS {
+            let cells: Vec<Arc<WaitCell>> = {
+                let mut s = self.inner.hub.stripe(idx);
+                s.waiters.drain().flat_map(|(_, v)| v).collect()
+            };
+            for c in cells {
+                c.notify();
+            }
+        }
+        let _g = self.inner.hub.avail.lock().unwrap_or_else(|e| e.into_inner());
+        self.inner.hub.avail_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::keys;
+    use super::*;
+
+    #[test]
+    fn blpop_returns_existing_element_without_blocking() {
+        let s = Store::new();
+        let q = Key::new("pd:queue:ev1");
+        s.rpush_k(&q, "a").unwrap();
+        assert_eq!(s.blpop_k(&q, None).unwrap(), Some("a".to_string()));
+    }
+
+    #[test]
+    fn blpop_deadline_times_out_empty() {
+        let s = Store::new();
+        let q = Key::new("pd:queue:ev2");
+        let t0 = Instant::now();
+        assert_eq!(s.blpop_k(&q, Some(Duration::from_millis(30))).unwrap(), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn blpop_any_respects_priority_order() {
+        let s = Store::new();
+        let own = Key::new(&keys::pilot_queue("pZ"));
+        let global = keys::global_queue_key();
+        s.rpush_k(global, "g").unwrap();
+        s.rpush_k(&own, "o").unwrap();
+        let first = s.blpop_any(&[&own, global], None).unwrap();
+        assert_eq!(first, Some((0, "o".to_string())));
+        let second = s.blpop_any(&[&own, global], None).unwrap();
+        assert_eq!(second, Some((1, "g".to_string())));
+    }
+
+    #[test]
+    fn push_wakes_blocked_popper() {
+        let s = Store::new();
+        let q = Key::new("pd:queue:ev3");
+        let h = std::thread::spawn({
+            let s = s.clone();
+            let q = q.clone();
+            move || s.blpop_k(&q, Some(Duration::from_secs(20))).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        s.rpush_k(&q, "late").unwrap();
+        assert_eq!(h.join().unwrap(), Some("late".to_string()));
+    }
+
+    #[test]
+    fn outage_unblocks_popper_with_unavailable() {
+        let s = Store::new();
+        let q = Key::new("pd:queue:ev4");
+        let h = std::thread::spawn({
+            let s = s.clone();
+            let q = q.clone();
+            move || s.blpop_k(&q, Some(Duration::from_secs(20)))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        s.set_down(true);
+        assert_eq!(h.join().unwrap(), Err(StoreError::Unavailable));
+        // Recovery wakes availability waiters.
+        let h2 = std::thread::spawn({
+            let s = s.clone();
+            move || {
+                s.wait_available(|| false);
+                s.is_down()
+            }
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        s.set_down(false);
+        assert!(!h2.join().unwrap());
+    }
+
+    #[test]
+    fn requeue_does_not_wake_or_publish() {
+        let s = Store::new();
+        let q = Key::new("pd:queue:ev5");
+        let rx = s.subscribe_prefix("pd:queue:ev5");
+        s.rpush_k(&q, "x").unwrap();
+        assert_eq!(rx.try_iter().count(), 1, "rpush publishes a queue event");
+        let v = s.lpop_k(&q).unwrap().unwrap();
+        s.requeue_k(&q, &v).unwrap();
+        assert_eq!(rx.try_iter().count(), 0, "requeue is silent");
+        // The value is still there for a later (non-blocking) pop.
+        assert_eq!(s.lpop_k(&q).unwrap(), Some("x".to_string()));
+    }
+
+    #[test]
+    fn prefix_subscription_sees_queue_namespace() {
+        let s = Store::new();
+        let rx = s.subscribe_prefix(keys::QUEUE_PREFIX);
+        s.rpush(&keys::pilot_queue("p1"), "cu-1").unwrap();
+        s.rpush(keys::GLOBAL_QUEUE, "cu-2").unwrap();
+        s.set("unrelated", "v").unwrap();
+        let evs: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].key, keys::pilot_queue("p1"));
+        assert_eq!(evs[0].payload, "cu-1");
+        assert_eq!(evs[1].key, keys::GLOBAL_QUEUE);
+    }
+
+    #[test]
+    fn exact_key_subscription_is_per_key() {
+        let s = Store::new();
+        let k1 = Key::new("pd:queue:a");
+        let rx = s.subscribe_key(&k1);
+        s.rpush_k(&k1, "one").unwrap();
+        s.rpush("pd:queue:b", "other").unwrap();
+        let evs: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].payload, "one");
+    }
+}

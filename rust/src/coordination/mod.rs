@@ -36,15 +36,21 @@
 //! [`Store::restore`]). Cold-path operations (snapshots, prefix scans)
 //! stay deterministic by collecting into ordered maps.
 //!
-//! The service surface is unchanged: string KV, hashes, list-queues,
-//! pub/sub, key scans, JSON snapshots, and injectable transient failure
-//! for fault-tolerance tests.
+//! The service surface: string KV, hashes, list-queues, key scans,
+//! JSON snapshots, and injectable transient failure for
+//! fault-tolerance tests. The **event layer** — per-stripe pub/sub on
+//! interned keys, prefix (pattern) subscriptions, and BLPOP-style
+//! blocking pops with deadline support — lives in [`events`]; every
+//! `rpush` fans a keyspace event out to subscribers and wakes blocked
+//! poppers, which is what lets agents react instead of polling.
+
+pub mod events;
 
 use crate::json::Json;
+use events::EventHub;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Number of independent lock stripes (power of two).
@@ -172,7 +178,7 @@ struct DescrCache {
 
 struct Inner {
     shards: Vec<Mutex<Shard>>,
-    subs: Mutex<BTreeMap<String, Vec<Sender<String>>>>,
+    hub: EventHub,
     descr: Mutex<DescrCache>,
     down: AtomicBool,
     ops: AtomicU64,
@@ -195,7 +201,7 @@ impl Store {
         Store {
             inner: Arc::new(Inner {
                 shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
-                subs: Mutex::new(BTreeMap::new()),
+                hub: EventHub::new(),
                 descr: Mutex::new(DescrCache::default()),
                 down: AtomicBool::new(false),
                 ops: AtomicU64::new(0),
@@ -217,9 +223,13 @@ impl Store {
         self.inner.shards[idx].lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Inject / clear a transient outage.
+    /// Inject / clear a transient outage. Either transition wakes
+    /// every blocked waiter: poppers surface [`StoreError::Unavailable`]
+    /// (a dropped connection unblocks a Redis `BLPOP` the same way),
+    /// availability waiters observe the recovery.
     pub fn set_down(&self, down: bool) {
         self.inner.down.store(down, Ordering::Relaxed);
+        self.wake_waiters();
     }
 
     pub fn is_down(&self) -> bool {
@@ -390,30 +400,54 @@ impl Store {
 
     // ---- list queues (global CU queue + per-pilot queues) ----
 
-    fn rpush_at(&self, idx: usize, key: &str, value: &str) -> Result<usize, StoreError> {
+    fn rpush_at(
+        &self,
+        idx: usize,
+        key: &str,
+        value: &str,
+        notify: bool,
+    ) -> Result<usize, StoreError> {
         self.begin()?;
-        let mut g = self.stripe(idx);
-        match g.data.get_mut(key) {
-            Some(Value::List(l)) => {
-                l.push_back(value.to_string());
-                Ok(l.len())
+        let len = {
+            let mut g = self.stripe(idx);
+            match g.data.get_mut(key) {
+                Some(Value::List(l)) => {
+                    l.push_back(value.to_string());
+                    l.len()
+                }
+                Some(_) => return Err(StoreError::WrongType(key.to_string())),
+                None => {
+                    let mut l = VecDeque::new();
+                    l.push_back(value.to_string());
+                    g.data.insert(Arc::from(key), Value::List(l));
+                    1
+                }
             }
-            Some(_) => Err(StoreError::WrongType(key.to_string())),
-            None => {
-                let mut l = VecDeque::new();
-                l.push_back(value.to_string());
-                g.data.insert(Arc::from(key), Value::List(l));
-                Ok(1)
-            }
+        };
+        if notify {
+            // Data lock released above: wake blocking pops on this key
+            // and fan a keyspace event out to subscribers.
+            self.notify_push(idx, key, value);
         }
+        Ok(len)
     }
 
     pub fn rpush(&self, key: &str, value: &str) -> Result<usize, StoreError> {
-        self.rpush_at(stripe_of(key), key, value)
+        self.rpush_at(stripe_of(key), key, value, true)
     }
 
     pub fn rpush_k(&self, key: &Key, value: &str) -> Result<usize, StoreError> {
-        self.rpush_at(key.stripe, &key.text, value)
+        self.rpush_at(key.stripe, &key.text, value, true)
+    }
+
+    /// Push back an element the caller just popped — the agent-side
+    /// "doesn't fit right now" path — **without** waking blocking pops
+    /// or publishing a queue event. Net queue state gained no new
+    /// work, so a wakeup would be a guaranteed no-op; in the sim
+    /// driver it would even livelock (push-back → wake → pop →
+    /// push-back …).
+    pub fn requeue_k(&self, key: &Key, value: &str) -> Result<usize, StoreError> {
+        self.rpush_at(key.stripe, &key.text, value, false)
     }
 
     fn lpop_at(&self, idx: usize, key: &str) -> Result<Option<String>, StoreError> {
@@ -525,30 +559,7 @@ impl Store {
         Ok(Some(d))
     }
 
-    // ---- pub/sub (state-change notifications) ----
-
-    pub fn subscribe(&self, channel: &str) -> Receiver<String> {
-        let (tx, rx) = std::sync::mpsc::channel();
-        self.inner
-            .subs
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .entry(channel.to_string())
-            .or_default()
-            .push(tx);
-        rx
-    }
-
-    pub fn publish(&self, channel: &str, message: &str) -> Result<usize, StoreError> {
-        self.begin()?;
-        let mut subs = self.inner.subs.lock().unwrap_or_else(|e| e.into_inner());
-        let mut delivered = 0;
-        if let Some(list) = subs.get_mut(channel) {
-            list.retain(|tx| tx.send(message.to_string()).is_ok());
-            delivered = list.len();
-        }
-        Ok(delivered)
-    }
+    // ---- pub/sub and blocking pops live in [`events`] ----
 
     // ---- durability ----
 
@@ -638,6 +649,10 @@ impl Store {
             c.dus.clear();
         }
         self.inner.down.store(false, Ordering::Relaxed);
+        // Restored queues may hold data and the store is reachable
+        // again: wake blocked poppers and availability waiters so they
+        // re-check against the new state.
+        self.wake_waiters();
         Ok(())
     }
 
@@ -670,11 +685,16 @@ pub mod keys {
     pub fn du(id: &str) -> String {
         format!("pd:du:{id}")
     }
+    /// Prefix of every queue key — the namespace pattern subscriptions
+    /// ([`super::Store::subscribe_prefix`]) watch for queue activity.
+    pub const QUEUE_PREFIX: &str = "pd:queue:";
+    /// Prefix of the agent-specific pilot queues.
+    pub const PILOT_QUEUE_PREFIX: &str = "pd:queue:pilot:";
     /// The global CU queue any agent may pull from.
     pub const GLOBAL_QUEUE: &str = "pd:queue:global";
     /// The agent-specific queue of one pilot.
     pub fn pilot_queue(pilot_id: &str) -> String {
-        format!("pd:queue:pilot:{pilot_id}")
+        format!("{PILOT_QUEUE_PREFIX}{pilot_id}")
     }
     pub const STATE_CHANNEL: &str = "pd:events";
 
@@ -832,8 +852,10 @@ mod tests {
         let r2 = s.subscribe(keys::STATE_CHANNEL);
         let n = s.publish(keys::STATE_CHANNEL, "cu-1:Running").unwrap();
         assert_eq!(n, 2);
-        assert_eq!(r1.try_recv().unwrap(), "cu-1:Running");
-        assert_eq!(r2.try_recv().unwrap(), "cu-1:Running");
+        assert_eq!(r1.try_recv().unwrap().payload, "cu-1:Running");
+        let ev = r2.try_recv().unwrap();
+        assert_eq!(ev.payload, "cu-1:Running");
+        assert_eq!(ev.key, keys::STATE_CHANNEL);
     }
 
     #[test]

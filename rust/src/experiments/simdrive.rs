@@ -10,14 +10,23 @@
 //! Perf shape: every queue touch goes through per-pilot interned
 //! [`Key`] handles (no `format!` per event), the scheduler context is
 //! assembled in O(1) from [`ManagerState`]'s incremental indexes, and
-//! agent wakeups are *targeted* — instead of broadcasting a `TryPull`
-//! to every pilot on every state change (the O(pilots × events) hot
-//! path), only pilots that could actually act (active, free slot,
-//! staging headroom — and on data arrival, pilots whose label matches
-//! the freed DU unless global work is waiting) are woken. Pilots
-//! skipped this way would have processed their wakeup as a no-op.
+//! agent wakeups are **event-driven**: the driver holds a pattern
+//! subscription on the store's queue namespace
+//! ([`Store::subscribe_prefix`]) and translates each queue event into
+//! a targeted `TryPull` — a push onto one pilot's queue wakes that
+//! pilot, global-queue work wakes only ready pilots (active, free
+//! slot, staging headroom), and a DU arrival wakes exactly the
+//! eligible pilots in the replica label's subtree (via the
+//! `pilots_by_label` index). The single-threaded discrete-event engine
+//! cannot block an OS thread, so the store's wall-clock blocking pops
+//! map here to scheduled wakeup events in simulated time (see
+//! [`crate::coordination::events`] on deadline semantics under
+//! simtime). [`WakeupMode::Broadcast`] keeps the seed's
+//! O(pilots × events) wake-everyone reference semantics alive for the
+//! trace-equivalence property test.
 
 use crate::config::Testbed;
+use crate::coordination::events::Event;
 use crate::coordination::{keys, Key, Store};
 use crate::faults::{attempt_transfer, RetryPolicy};
 use crate::metrics::{CuRecord, RunMetrics, TimelineEvent};
@@ -59,6 +68,21 @@ pub struct PilotHome {
     pub scratch: String,
 }
 
+/// How queue/data events become agent wakeups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeupMode {
+    /// Event-driven (default): queue events wake the targeted pilot
+    /// (own-queue push) or the ready subset (global work); DU arrivals
+    /// wake eligible pilots in the replica label's subtree. Skipped
+    /// pilots would have processed their wakeup as a no-op.
+    Evented,
+    /// Reference semantics: every wake broadcasts `TryPull` to every
+    /// pilot — the seed's O(pilots × events) shape, kept so the
+    /// property suite can assert the evented driver produces
+    /// bit-identical placement traces.
+    Broadcast,
+}
+
 /// The simulated pilot system.
 pub struct SimSystem {
     pub sim: Sim<Ev>,
@@ -94,15 +118,23 @@ pub struct SimSystem {
     /// walltime limit (off by default: most experiments end well
     /// inside the 48 h limits; `kill_pilot_at` is always available).
     pub enforce_walltime: bool,
+    /// How store events become agent wakeups (see [`WakeupMode`]).
+    pub wakeups: WakeupMode,
+    /// Pattern subscription on the queue namespace: every rpush in the
+    /// store lands here and is translated into sim wakeups by
+    /// [`SimSystem::drain_queue_events`].
+    queue_events: std::sync::mpsc::Receiver<Event>,
 }
 
 impl SimSystem {
     pub fn new(tb: Testbed, seed: u64) -> SimSystem {
+        let store = Store::new();
+        let queue_events = store.subscribe_prefix(keys::QUEUE_PREFIX);
         SimSystem {
             sim: Sim::new(),
             tb,
             state: ManagerState::new(),
-            store: Store::new(),
+            store,
             scheduler: Box::new(AffinityScheduler::new(None)),
             rng: Rng::new(seed),
             metrics: RunMetrics::default(),
@@ -117,11 +149,18 @@ impl SimSystem {
             requeues: BTreeMap::new(),
             max_requeues: 24,
             enforce_walltime: false,
+            wakeups: WakeupMode::Evented,
+            queue_events,
         }
     }
 
     pub fn with_scheduler(mut self, s: Box<dyn Scheduler>) -> SimSystem {
         self.scheduler = s;
+        self
+    }
+
+    pub fn with_wakeups(mut self, mode: WakeupMode) -> SimSystem {
+        self.wakeups = mode;
         self
     }
 
@@ -304,12 +343,12 @@ impl SimSystem {
                 self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
                 self.store.rpush_k(&self.qkeys[&pilot], cu_id)?;
                 self.state.note_queue_push(&pilot);
-                self.sim.schedule(0.0, Ev::TryPull { pilot });
+                self.drain_queue_events();
             }
             Placement::Global => {
                 self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
                 self.store.rpush_k(&self.global_q, cu_id)?;
-                self.wake_ready_pilots();
+                self.drain_queue_events();
             }
             Placement::Delay(d) => {
                 self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
@@ -333,9 +372,21 @@ impl SimSystem {
             && self.staging_in_flight.get(&p.id).copied().unwrap_or(0) < self.max_concurrent_staging
     }
 
-    /// Targeted replacement for the old all-pilots broadcast: wake only
+    /// Reference broadcast (see [`WakeupMode::Broadcast`]): every
+    /// pilot gets a `TryPull` regardless of readiness, in id order.
+    fn wake_all_pilots(&mut self) {
+        let ids: Vec<String> = self.state.pilots.keys().cloned().collect();
+        for pilot in ids {
+            self.sim.schedule(0.0, Ev::TryPull { pilot });
+        }
+    }
+
+    /// Targeted replacement for the all-pilots broadcast: wake only
     /// pilots whose `TryPull` would not be an immediate no-op.
     fn wake_ready_pilots(&mut self) {
+        if self.wakeups == WakeupMode::Broadcast {
+            return self.wake_all_pilots();
+        }
         let ids: Vec<String> = self
             .state
             .pilots
@@ -348,22 +399,60 @@ impl SimSystem {
         }
     }
 
+    /// Consume the queue events the coordination store published since
+    /// the last drain (the sim-side stand-in for a blocking pop: the
+    /// single-threaded event engine must not block an OS thread, so
+    /// queue activity becomes scheduled wakeups at the current
+    /// simulated instant). An own-queue push wakes that pilot; global
+    /// work wakes the ready subset. Called at every site that just
+    /// pushed work — the push itself is what wakes agents, exactly as
+    /// in wall-clock mode.
+    fn drain_queue_events(&mut self) {
+        let mut own: Vec<String> = Vec::new();
+        let mut global_work = false;
+        while let Ok(ev) = self.queue_events.try_recv() {
+            if let Some(pilot) = ev.key.strip_prefix(keys::PILOT_QUEUE_PREFIX) {
+                own.push(pilot.to_string());
+            } else if ev.key == keys::GLOBAL_QUEUE {
+                global_work = true;
+            }
+        }
+        if self.wakeups == WakeupMode::Broadcast {
+            if global_work || !own.is_empty() {
+                self.wake_all_pilots();
+            }
+            return;
+        }
+        // Every push site drains immediately, so `own` holds at most
+        // one pilot today; wake in arrival order (dedup would need a
+        // sort first if a future change ever batches pushes).
+        for pilot in own {
+            self.sim.schedule(0.0, Ev::TryPull { pilot });
+        }
+        if global_work {
+            self.wake_ready_pilots();
+        }
+    }
+
     /// A replica of some DU just landed at `label`. If global work is
     /// waiting, any ready pilot might legitimately grab it — wake them
-    /// all. Otherwise only pilots at the matching label can gain from
-    /// the new replica (everyone else's wakeup would no-op), so use the
-    /// per-label pilot index.
+    /// all. Otherwise only pilots inside the replica label's subtree
+    /// can gain from it (everyone else's wakeup would no-op), so prune
+    /// candidates with the `pilots_by_label` subtree index.
     fn wake_pilots_for_du(&mut self, label: &Label) {
+        if self.wakeups == WakeupMode::Broadcast {
+            return self.wake_all_pilots();
+        }
         if self.store.llen_k(&self.global_q).unwrap_or(0) > 0 {
             self.wake_ready_pilots();
             return;
         }
         let ids: Vec<String> = self
             .state
-            .pilots_at_label(label)
-            .iter()
+            .pilots_within(label)
+            .into_iter()
             .filter(|id| self.state.pilots.get(*id).map_or(false, |p| self.pilot_ready(p)))
-            .cloned()
+            .map(str::to_string)
             .collect();
         for pilot in ids {
             self.sim.schedule(0.0, Ev::TryPull { pilot });
@@ -474,7 +563,7 @@ impl SimSystem {
                     } else {
                         c.transition(CuState::Queued)?;
                         self.store.rpush_k(&self.global_q, &cu)?;
-                        self.wake_ready_pilots();
+                        self.drain_queue_events();
                     }
                     return Ok(());
                 }
@@ -577,7 +666,9 @@ impl SimSystem {
                 }
                 self.state.reset_queue_depth(&pilot);
                 self.staging_in_flight.remove(&pilot);
-                self.wake_ready_pilots();
+                // The re-queues above published global-queue events;
+                // turning them into wakeups is the drain's job.
+                self.drain_queue_events();
             }
         }
         Ok(())
@@ -609,9 +700,22 @@ impl SimSystem {
             let cu = &self.state.cus[&cu_id];
             let cores = cu.description.cores.max(1);
             if cores > cores_free {
-                // Not enough room: push back to own queue and stop.
-                self.store.rpush_k(&self.qkeys[pilot], &cu_id)?;
-                self.state.note_queue_push(pilot);
+                // Not enough room. `requeue_k` is the silent push-back
+                // variant — no queue event, no waiter wakeup: nothing
+                // new appeared, and a wake here would livelock
+                // (push-back → wake → pop → …).
+                if !from_own && cores > self.state.pilots[pilot].description.cores {
+                    // A global-queue CU this pilot can never fit (own-
+                    // queue CUs always fit: eligibility filters on
+                    // total cores). Return it to the global queue for
+                    // a big-enough pilot — parking it on our own queue
+                    // would trap it forever, since only we pop that
+                    // queue.
+                    self.store.requeue_k(&self.global_q, &cu_id)?;
+                } else {
+                    self.store.requeue_k(&self.qkeys[pilot], &cu_id)?;
+                    self.state.note_queue_push(pilot);
+                }
                 return Ok(());
             }
             self.begin_staging(now, pilot, &cu_id)?;
@@ -832,6 +936,29 @@ mod tests {
         sys.kill_pilot_at(&p, 10_000.0);
         sys.run().unwrap();
         assert_eq!(sys.tb.batch.used("lonestar"), 0);
+    }
+
+    /// A global-queue CU that a small pilot can never fit must go back
+    /// to the global queue (not be parked on that pilot's own queue,
+    /// which only it pops) so a big-enough pilot can run it.
+    #[test]
+    fn oversized_global_cu_is_not_trapped_by_a_small_pilot() {
+        let mut sys = SimSystem::new(paper_testbed(), 31);
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        // Small pilot and big pilot; the 8-core CU is eligible only
+        // for the big one, but either agent may pull it from the
+        // global queue.
+        sys.submit_pilot("lonestar", 4, "lonestar-scratch").unwrap();
+        sys.submit_pilot("lonestar", 16, "lonestar-scratch").unwrap();
+        let mut cud = ens.cu_template.clone();
+        cud.cores = 8;
+        cud.input_data = vec![ref_du];
+        sys.submit_cu(cud).unwrap();
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished(), "oversized CU trapped on the small pilot");
+        assert_eq!(sys.state.count_cu_state(CuState::Done), 1);
     }
 
     #[test]

@@ -260,6 +260,32 @@ impl ManagerState {
         self.pilots_by_label.get(&label.0).map(Vec::as_slice).unwrap_or(&[])
     }
 
+    /// Pilots whose affinity label lies within the subtree rooted at
+    /// `constraint` (`Label::within` semantics) — label-subtree
+    /// candidate pruning for the scheduler's constraint filter and for
+    /// DU-arrival wakeups. A `BTreeMap` range scan over the label
+    /// index touches only the constrained subtree instead of walking
+    /// the whole fleet. Ids are **borrowed** from the index (this sits
+    /// on the per-placement hot path — no per-candidate clones) and
+    /// come back sorted, so callers iterate in the same order a
+    /// `pilots.values()` scan would.
+    pub fn pilots_within(&self, constraint: &Label) -> Vec<&str> {
+        let root = constraint.0.as_str();
+        let mut ids: Vec<&str> = self
+            .pilots_by_label
+            .range::<str, _>(root..)
+            .take_while(|(l, _)| l.starts_with(root))
+            // String prefix is necessary but not sufficient: `osg2`
+            // starts with `osg` yet is not within it. Labels are
+            // normalized (no stray slashes), so "equal or next byte is
+            // '/'" is exactly component-wise containment.
+            .filter(|(l, _)| root.is_empty() || l.len() == root.len() || l.as_bytes()[root.len()] == b'/')
+            .flat_map(|(_, ids)| ids.iter().map(String::as_str))
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
     pub fn add_pd(&mut self, pd: PilotData) -> String {
         let id = pd.id.clone();
         self.pilot_datas.insert(id.clone(), pd);
@@ -312,7 +338,7 @@ impl ManagerState {
         for d in self.dus.values() {
             let k = keys::du(&d.id);
             store.hset(&k, "state", d.state.name())?;
-            store.hset_if_absent(&k, "descr", || d.description.to_json().to_string_compact())?;
+            store.hset_if_absent(&k, "descr", || d.description().to_json().to_string_compact())?;
         }
         Ok(())
     }
@@ -357,8 +383,8 @@ impl ManagerState {
         // backlog, not empty indexes. (The replica-location index
         // cannot be rebuilt — replica labels are not checkpointed —
         // so data-affinity scoring warms up as new transfers land.)
-        for key in store.keys_with_prefix("pd:queue:pilot:")? {
-            let pilot = key.trim_start_matches("pd:queue:pilot:").to_string();
+        for key in store.keys_with_prefix(keys::PILOT_QUEUE_PREFIX)? {
+            let pilot = key.trim_start_matches(keys::PILOT_QUEUE_PREFIX).to_string();
             let depth = store.llen(&key)?;
             if depth > 0 {
                 st.queue_depth.insert(pilot, depth);
@@ -540,6 +566,40 @@ mod tests {
         assert_eq!(st.pilots_at_label(&tacc), &[a, b]);
         assert_eq!(st.pilots_at_label(&Label::new("osg/fnal")), &[c]);
         assert!(st.pilots_at_label(&Label::new("nowhere")).is_empty());
+    }
+
+    #[test]
+    fn pilots_within_prunes_by_label_subtree() {
+        let mut st = ManagerState::new();
+        let a = st.add_pilot(PilotCompute::new(pcd("ls", 8, "xsede/tacc/lonestar")));
+        let b = st.add_pilot(PilotCompute::new(pcd("st", 8, "xsede/tacc/stampede")));
+        let c = st.add_pilot(PilotCompute::new(pcd("fnal", 8, "osg/fnal")));
+        // Adversarial sibling: shares the string prefix but not the
+        // component prefix.
+        let d = st.add_pilot(PilotCompute::new(pcd("tc2", 8, "xsede/tacc2")));
+        let got = st.pilots_within(&Label::new("xsede/tacc"));
+        let mut want = vec![a.as_str(), b.as_str()];
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert_eq!(st.pilots_within(&Label::new("xsede/tacc/lonestar")), vec![a.as_str()]);
+        assert_eq!(st.pilots_within(&Label::new("osg")), vec![c.as_str()]);
+        assert!(st.pilots_within(&Label::new("nowhere")).is_empty());
+        // Empty constraint = whole fleet, in id order.
+        let mut all = vec![a.as_str(), b.as_str(), c.as_str(), d.as_str()];
+        all.sort_unstable();
+        assert_eq!(st.pilots_within(&Label::new("")), all);
+        // Matches the brute-force definition on every pilot.
+        for constraint in ["", "xsede", "xsede/tacc", "xsede/tacc2", "osg/fnal"] {
+            let constraint = Label::new(constraint);
+            let mut brute: Vec<&str> = st
+                .pilots
+                .values()
+                .filter(|p| p.affinity_ref().within(&constraint))
+                .map(|p| p.id.as_str())
+                .collect();
+            brute.sort_unstable();
+            assert_eq!(st.pilots_within(&constraint), brute, "constraint {constraint}");
+        }
     }
 
     #[test]

@@ -104,6 +104,96 @@ mod tests {
         );
     }
 
+    /// ISSUE 2 satellite: the event-driven sim driver (targeted,
+    /// subtree-pruned wakeups fed by the store's queue-namespace
+    /// subscription) must produce **bit-identical placement traces**
+    /// to the broadcast reference driver ("wake every pilot on every
+    /// event" — the polling-era semantics) on randomized workloads.
+    /// Trace = per-CU (submission index, machine, staging start/end,
+    /// staging and compute seconds) in completion order, plus the
+    /// makespan; every skipped wakeup must therefore have been a
+    /// provable no-op.
+    #[test]
+    fn evented_simdrive_matches_broadcast_traces() {
+        use crate::config::paper_testbed;
+        use crate::experiments::simdrive::{SimSystem, WakeupMode};
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+
+        type Trace = (Vec<(usize, String, f64, f64, f64, f64)>, f64);
+
+        fn run_one(
+            mode: WakeupMode,
+            seed: u64,
+            pilots: &[(&'static str, &'static str, u32)],
+            tasks: usize,
+            chunk_gb: u64,
+        ) -> Result<Trace, String> {
+            let es = |e: anyhow::Error| e.to_string();
+            let mut sys = SimSystem::new(paper_testbed(), seed).with_wakeups(mode);
+            let ens = bwa_ensemble(tasks, Bytes::gb(chunk_gb), Bytes::gb(8));
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            for (machine, scratch, cores) in pilots {
+                sys.submit_pilot(machine, *cores, scratch).map_err(es)?;
+            }
+            let mut submitted = Vec::new();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                submitted.push(sys.submit_cu(cud).map_err(es)?);
+            }
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err(format!("workload not finished under {mode:?}"));
+            }
+            let trace = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| {
+                    let idx = submitted
+                        .iter()
+                        .position(|id| *id == r.cu)
+                        .ok_or_else(|| format!("unknown cu {}", r.cu))?;
+                    Ok((idx, r.machine.clone(), r.t_start, r.t_end, r.staging_s, r.compute_s))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok((trace, sys.makespan()))
+        }
+
+        crate::prop::check(
+            Config { cases: 10, seed: 0xD1CE },
+            |rng| {
+                let mut pilots: Vec<(&'static str, &'static str, u32)> =
+                    vec![("lonestar", "lonestar-scratch", 4 + 4 * rng.below(3) as u32)];
+                if rng.chance(0.6) {
+                    pilots.push(("stampede", "stampede-scratch", 4 + 4 * rng.below(3) as u32));
+                }
+                if rng.chance(0.3) {
+                    pilots.push(("lonestar", "lonestar-scratch", 4));
+                }
+                (rng.next_u64(), pilots, 1 + rng.below(6) as usize, 1 + rng.below(3))
+            },
+            |(seed, pilots, tasks, chunk_gb)| {
+                let evented =
+                    run_one(WakeupMode::Evented, *seed, pilots, *tasks, *chunk_gb)?;
+                let broadcast =
+                    run_one(WakeupMode::Broadcast, *seed, pilots, *tasks, *chunk_gb)?;
+                if evented != broadcast {
+                    return Err(format!(
+                        "placement traces diverge:\n evented:   {evented:?}\n broadcast: {broadcast:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn json_roundtrip_property() {
         use crate::json::{parse, Json};

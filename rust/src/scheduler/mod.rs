@@ -90,18 +90,31 @@ impl<'a> SchedContext<'a> {
     }
 
     /// Pilots eligible for this CU: alive (not terminal) and within the
-    /// CU's affinity constraint, with enough total cores.
+    /// CU's affinity constraint, with enough total cores. When a
+    /// constraint is present, candidates come from the manager's
+    /// `pilots_by_label` index via a label-subtree range scan
+    /// ([`ManagerState::pilots_within`]) instead of a full fleet walk —
+    /// the index returns sorted ids, so the candidate order (and hence
+    /// every tie-break downstream) is identical to the `values()` scan.
     fn eligible_pilots(&self, cu: &ComputeUnit) -> Vec<&crate::pilot::PilotCompute> {
-        self.state
-            .pilots
-            .values()
-            .filter(|p| !p.state.is_terminal())
-            .filter(|p| p.description.cores >= cu.description.cores.max(1))
-            .filter(|p| match &cu.description.affinity {
-                Some(constraint) => p.affinity_ref().within(constraint),
-                None => true,
-            })
-            .collect()
+        let min_cores = cu.description.cores.max(1);
+        match &cu.description.affinity {
+            Some(constraint) => self
+                .state
+                .pilots_within(constraint)
+                .into_iter()
+                .filter_map(|id| self.state.pilots.get(id))
+                .filter(|p| !p.state.is_terminal())
+                .filter(|p| p.description.cores >= min_cores)
+                .collect(),
+            None => self
+                .state
+                .pilots
+                .values()
+                .filter(|p| !p.state.is_terminal())
+                .filter(|p| p.description.cores >= min_cores)
+                .collect(),
+        }
     }
 
     /// Data-affinity score of running `cu` on a pilot at `label`:
@@ -580,6 +593,76 @@ mod tests {
                     let b = sched_rebuilt.place(&cu, &ctx_rebuilt);
                     if a != b {
                         return Err(format!("indexed {a:?} != rebuilt {b:?} for cu {}", cu.id));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Constraint filtering through the `pilots_by_label` subtree index
+    /// must select exactly the pilots (in exactly the order) the
+    /// full-fleet filter would.
+    #[test]
+    fn subtree_pruned_eligibility_matches_full_scan() {
+        crate::prop::check_default(
+            |rng| {
+                let sites = [
+                    "osg", "osg/a", "osg/a/deep", "osg/ab", "xsede/tacc/ls", "xsede/tacc",
+                    "ec2/east", "",
+                ];
+                let n = crate::prop::gen::usize_in(rng, 0, 12);
+                let pilots: Vec<(u32, String, bool)> = (0..n)
+                    .map(|_| {
+                        (
+                            1 + rng.below(8) as u32,
+                            rng.choose(&sites).to_string(),
+                            rng.chance(0.8),
+                        )
+                    })
+                    .collect();
+                let constraints: Vec<(String, u32)> = (0..6)
+                    .map(|_| (rng.choose(&sites).to_string(), 1 + rng.below(8) as u32))
+                    .collect();
+                (pilots, constraints)
+            },
+            |(pilots, constraints)| {
+                let mut st = ManagerState::new();
+                for (cores, site, active) in pilots {
+                    mk_pilot(
+                        &mut st,
+                        *cores,
+                        site,
+                        if *active { PilotState::Active } else { PilotState::Done },
+                    );
+                }
+                let topo = Topology::new();
+                let locs = BTreeMap::new();
+                let depth = BTreeMap::new();
+                let ctx = SchedContext {
+                    topo: &topo,
+                    state: &st,
+                    du_locations: &locs,
+                    queue_depth: &depth,
+                };
+                for (site, cores) in constraints {
+                    let mut cu = mk_cu(vec![], Some(site.as_str()));
+                    cu.description.cores = *cores;
+                    let indexed: Vec<String> =
+                        ctx.eligible_pilots(&cu).iter().map(|p| p.id.clone()).collect();
+                    let constraint = Label::new(site);
+                    let brute: Vec<String> = st
+                        .pilots
+                        .values()
+                        .filter(|p| !p.state.is_terminal())
+                        .filter(|p| p.description.cores >= cu.description.cores.max(1))
+                        .filter(|p| p.affinity_ref().within(&constraint))
+                        .map(|p| p.id.clone())
+                        .collect();
+                    if indexed != brute {
+                        return Err(format!(
+                            "constraint '{site}': index {indexed:?} != brute {brute:?}"
+                        ));
                     }
                 }
                 Ok(())

@@ -13,11 +13,19 @@
 //! state machines, and store against simulated time; this module is the
 //! wall-clock counterpart, which is exactly the paper's
 //! interoperability claim: one abstraction, several infrastructures.
+//!
+//! Coordination is **event-driven** end to end (paper §4.2): agents
+//! park in a blocking two-queue pop
+//! ([`crate::coordination::events`]), store outages park them on the
+//! availability wait, `wait_all` parks on a progress condvar, and
+//! shutdown wakes everyone via queue sentinels + a waiter broadcast.
+//! There is no fixed-interval sleep/poll loop anywhere on this path —
+//! idle cost is zero regardless of agent count.
 
 use crate::coordination::{keys, Store};
 use crate::pilot::{
-    agent_pull_tracked, ManagerState, PilotCompute, PilotComputeDescription, PilotData,
-    PilotDataDescription, PilotState,
+    ManagerState, PilotCompute, PilotComputeDescription, PilotData, PilotDataDescription,
+    PilotState,
 };
 use crate::scheduler::{AffinityScheduler, Placement, SchedContext, Scheduler};
 use crate::storage::localfs::LocalFs;
@@ -27,8 +35,12 @@ use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUn
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Sentinel pushed onto an agent's own queue to wake it without
+/// handing it work (shutdown). Never a valid CU id.
+const AGENT_WAKE: &str = "__agent_wake__";
 
 /// Result of executing one Compute-Unit.
 #[derive(Debug, Clone, Default)]
@@ -74,6 +86,9 @@ pub struct PilotSystem {
     pub store: Store,
     pub topo: Topology,
     state: Mutex<ManagerState>,
+    /// Signaled whenever a CU reaches a terminal state (paired with
+    /// `state`); `wait_all` blocks on it instead of polling.
+    progress: Condvar,
     /// DU id -> (pd id, label) of each replica.
     locations: Mutex<BTreeMap<String, Vec<(String, Label)>>>,
     /// PD id -> local filesystem store.
@@ -93,6 +108,7 @@ impl PilotSystem {
             store: Store::new(),
             topo: Topology::new(),
             state: Mutex::new(ManagerState::new()),
+            progress: Condvar::new(),
             locations: Mutex::new(BTreeMap::new()),
             pd_fs: Mutex::new(BTreeMap::new()),
             scheduler: Box::new(AffinityScheduler::new(None)),
@@ -115,9 +131,20 @@ impl PilotSystem {
         ComputeDataService { sys: self.clone() }
     }
 
-    /// Stop all agents and join their threads.
+    /// Stop all agents and join their threads. Agents block in the
+    /// store (a queue pop, or the availability wait during an outage)
+    /// rather than polling a flag, so shutdown wakes them explicitly:
+    /// a sentinel on each agent's own queue (only that agent pops it)
+    /// plus a waiter broadcast for agents parked on an outage.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        let ids: Vec<String> = self.state.lock().unwrap().pilots.keys().cloned().collect();
+        for id in &ids {
+            // Fails only while the store is down — those agents are in
+            // `wait_available` and get the wake_waiters broadcast.
+            let _ = self.store.rpush(&keys::pilot_queue(id), AGENT_WAKE);
+        }
+        self.store.wake_waiters();
         let mut agents = self.agents.lock().unwrap();
         for h in agents.drain(..) {
             let _ = h.join();
@@ -154,14 +181,17 @@ impl PilotSystem {
     }
 
     /// Block until every submitted CU is terminal or `timeout` expires.
+    /// Event-driven: parks on the `progress` condvar (signaled by every
+    /// terminal CU transition) instead of the seed's 5 ms poll loop.
     pub fn wait_all(&self, timeout: Duration) -> anyhow::Result<()> {
-        let t0 = Instant::now();
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
         loop {
-            if self.state.lock().unwrap().workload_finished() {
+            if st.workload_finished() {
                 return Ok(());
             }
-            if t0.elapsed() > timeout {
-                let st = self.state.lock().unwrap();
+            let now = Instant::now();
+            if now >= deadline {
                 let pending: Vec<String> = st
                     .cus
                     .values()
@@ -170,7 +200,8 @@ impl PilotSystem {
                     .collect();
                 anyhow::bail!("wait_all timed out; pending: {pending:?}");
             }
-            std::thread::sleep(Duration::from_millis(5));
+            let (g, _) = self.progress.wait_timeout(st, deadline - now).unwrap();
+            st = g;
         }
     }
 
@@ -300,46 +331,63 @@ impl PilotSystem {
                 }
             }
         }
-        let _ = self
-            .store
-            .publish(keys::STATE_CHANNEL, &format!("{cu_id}:{:?}", st.cus[cu_id].state));
+        let final_state = st.cus.get(cu_id).map(|c| c.state);
+        drop(st);
+        // Terminal transition: wake `wait_all` waiters and notify
+        // subscribers — a per-CU key event plus the legacy broadcast
+        // channel.
+        self.progress.notify_all();
+        if let Some(state) = final_state {
+            let _ = self.store.publish_k(&keys::cu_key(cu_id), state.name());
+            let _ = self.store.publish(keys::STATE_CHANNEL, &format!("{cu_id}:{state:?}"));
+        }
     }
 
-    /// Agent main loop for one pilot: pull own queue, then global
-    /// (§4.2's two-queue protocol). The own-queue key is interned once
-    /// per agent, and the manager's queue-depth counter is decremented
-    /// in lockstep with own-queue pops.
+    /// Agent main loop for one pilot: §4.2's two-queue pull protocol
+    /// as **one blocking pop** over [own queue, global queue] in
+    /// priority order — the agent parks in the store's event layer
+    /// until work (or a shutdown sentinel) arrives. No fixed-interval
+    /// polling anywhere: empty queues block on a condvar, and a store
+    /// outage parks the agent on the availability wait (woken by
+    /// recovery or shutdown), matching how BigJob agents ride out
+    /// transient Redis failures.
     fn agent_loop(self: Arc<Self>, pilot_id: String) {
         let own_queue = keys::pilot_queue_key(&pilot_id);
+        let global = keys::global_queue_key();
         while !self.shutdown.load(Ordering::SeqCst) {
-            // Respect slot limits.
-            let can_pull = {
-                let st = self.state.lock().unwrap();
-                st.pilots.get(&pilot_id).map(|p| p.free_slots() > 0).unwrap_or(false)
-            };
-            if !can_pull {
-                std::thread::sleep(Duration::from_millis(2));
-                continue;
-            }
-            match agent_pull_tracked(&self.store, &own_queue) {
-                Ok(Some((cu_id, from_own))) => {
-                    if from_own {
+            match self.store.blpop_any(&[&own_queue, global], None) {
+                Ok(Some((queue_idx, cu_id))) => {
+                    if cu_id == AGENT_WAKE {
+                        continue; // loop re-checks the shutdown flag
+                    }
+                    if queue_idx == 0 {
                         self.state.lock().unwrap().note_queue_pop(&pilot_id);
                     }
-                    let cores = {
+                    // Local mode treats `cores` as advisory: a global-
+                    // queue CU larger than this pilot still runs here
+                    // (seed semantics — the host's real resources are
+                    // what execute it, and busy_slots recovers via
+                    // saturating_sub). Only the sim driver enforces
+                    // strict fit, where a silent global requeue cannot
+                    // starve: its wakeup chains re-offer the CU to a
+                    // big-enough pilot. Here a requeue would need a
+                    // waking push, which small pilots could ping-pong.
+                    {
                         let mut st = self.state.lock().unwrap();
                         let cores =
                             st.cus.get(&cu_id).map(|c| c.description.cores.max(1)).unwrap_or(1);
                         if let Some(p) = st.pilots.get_mut(&pilot_id) {
                             p.busy_slots += cores;
                         }
-                        cores
-                    };
-                    let _ = cores;
+                    }
                     self.run_cu(&pilot_id, &cu_id);
                 }
-                Ok(None) => std::thread::sleep(Duration::from_millis(2)),
-                Err(_) => std::thread::sleep(Duration::from_millis(10)), // store outage: retry
+                Ok(None) => {} // unreachable: no deadline was set
+                Err(_) => {
+                    // Store outage: block until it recovers (or we are
+                    // shut down) — event-driven, not a retry sleep.
+                    self.store.wait_available(|| self.shutdown.load(Ordering::SeqCst));
+                }
             }
         }
     }
@@ -445,14 +493,14 @@ impl ComputeDataService {
             let fs = pd_fs
                 .get(pd_id)
                 .ok_or_else(|| anyhow::anyhow!("pd '{pd_id}' has no filesystem"))?;
-            for f in &du.description.files {
+            for f in &du.description().files {
                 match &f.src {
                     Some(src) => fs.put_file(&du.id, &f.name, Path::new(src))?,
                     None => {} // declared-only (output container)
                 }
             }
         }
-        if du.description.files.iter().any(|f| f.src.is_some()) {
+        if du.description().files.iter().any(|f| f.src.is_some()) {
             du.transition(DuState::Running)?;
         }
         let id = du.id.clone();
@@ -585,11 +633,14 @@ impl ComputeDataService {
                 // it Failed so waiters don't hang, and surface the
                 // error to the caller (who may retry once the store
                 // recovers, as BigJob clients do).
-                let mut st = self.sys.state.lock().unwrap();
-                if let Some(c) = st.cus.get_mut(&id) {
-                    c.state = CuState::Failed;
-                    c.error = Some(format!("enqueue failed: {e}"));
+                {
+                    let mut st = self.sys.state.lock().unwrap();
+                    if let Some(c) = st.cus.get_mut(&id) {
+                        c.state = CuState::Failed;
+                        c.error = Some(format!("enqueue failed: {e}"));
+                    }
                 }
+                self.sys.progress.notify_all();
                 anyhow::bail!("enqueue failed: {e}");
             }
             Ok(())
@@ -610,6 +661,7 @@ impl ComputeDataService {
                 cu.transition(CuState::Unschedulable)?;
                 cu.error = Some(reason.clone());
                 self.sys.state.lock().unwrap().add_cu(cu);
+                self.sys.progress.notify_all();
                 anyhow::bail!("CU unschedulable: {reason}");
             }
         }

@@ -135,16 +135,37 @@ impl DuState {
 /// DU's id doubles as its location-independent logical URL
 /// (paper: "The Data-Unit URL serves as a single level namespace
 /// independent of the actual physical location").
+///
+/// The total file size is summed **once at construction** and cached —
+/// [`DataUnit::size`] sits inside the scheduler's per-(CU, pilot)
+/// scoring loop, where re-summing the file list per call was pure
+/// overhead. The description is therefore only reachable through
+/// [`DataUnit::description`] / [`DataUnit::description_mut`]; the
+/// mutable path returns a guard that re-sums the cache on drop, so the
+/// cached value can never go stale.
 #[derive(Debug, Clone)]
 pub struct DataUnit {
     pub id: String,
-    pub description: DataUnitDescription,
+    description: DataUnitDescription,
     pub state: DuState,
+    /// Cached `description.total_size()`.
+    cached_size: Bytes,
 }
 
 impl DataUnit {
     pub fn new(description: DataUnitDescription) -> DataUnit {
-        DataUnit { id: crate::util::next_id("du"), description, state: DuState::New }
+        let cached_size = description.total_size();
+        DataUnit { id: crate::util::next_id("du"), description, state: DuState::New, cached_size }
+    }
+
+    pub fn description(&self) -> &DataUnitDescription {
+        &self.description
+    }
+
+    /// Mutable access to the description. The guard recomputes the
+    /// cached size when dropped.
+    pub fn description_mut(&mut self) -> DuDescrMut<'_> {
+        DuDescrMut { du: self }
     }
 
     pub fn logical_url(&self) -> String {
@@ -152,7 +173,7 @@ impl DataUnit {
     }
 
     pub fn size(&self) -> Bytes {
-        self.description.total_size()
+        self.cached_size
     }
 
     pub fn file_count(&self) -> u32 {
@@ -168,6 +189,32 @@ impl DataUnit {
         }
         self.state = to;
         Ok(())
+    }
+}
+
+/// Write guard over a [`DataUnit`]'s description: derefs to
+/// [`DataUnitDescription`] and re-sums the cached size on drop (see
+/// [`DataUnit::description_mut`]).
+pub struct DuDescrMut<'a> {
+    du: &'a mut DataUnit,
+}
+
+impl std::ops::Deref for DuDescrMut<'_> {
+    type Target = DataUnitDescription;
+    fn deref(&self) -> &DataUnitDescription {
+        &self.du.description
+    }
+}
+
+impl std::ops::DerefMut for DuDescrMut<'_> {
+    fn deref_mut(&mut self) -> &mut DataUnitDescription {
+        &mut self.du.description
+    }
+}
+
+impl Drop for DuDescrMut<'_> {
+    fn drop(&mut self) {
+        self.du.cached_size = self.du.description.total_size();
     }
 }
 
@@ -446,6 +493,31 @@ mod tests {
         cu.t_finished = 100.0;
         assert_eq!(cu.queue_wait_s(), 15.0);
         assert_eq!(cu.run_s(), 60.0);
+    }
+
+    #[test]
+    fn du_size_is_cached_and_mutation_invalidates_it() {
+        let mut du = DataUnit::new(dud());
+        let s0 = du.size();
+        assert_eq!(s0, Bytes::gb(8) + Bytes::mb(256));
+        // Reads leave the cache alone.
+        assert_eq!(du.description().files.len(), 2);
+        assert_eq!(du.size(), s0);
+        // Mutation through the guard re-sums on drop.
+        du.description_mut().files.push(FileRef::sized("extra.bin", Bytes::gb(1)));
+        assert_eq!(
+            du.size(),
+            s0 + Bytes::gb(1),
+            "mutating the description must invalidate the cached size"
+        );
+        {
+            let mut g = du.description_mut();
+            g.files.clear();
+            g.name = "emptied".into();
+        }
+        assert_eq!(du.size(), Bytes(0));
+        assert_eq!(du.file_count(), 0);
+        assert_eq!(du.description().name, "emptied");
     }
 
     #[test]

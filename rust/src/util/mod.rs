@@ -9,13 +9,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Monotonic process-wide counter used to mint unique entity ids.
 static ID_COUNTER: AtomicU64 = AtomicU64::new(1);
 
-/// Mint a unique id with the given prefix, e.g. `du-17`, `cu-42`,
-/// `pilot-3`. Mirrors the paper's URL-style unique entity names
-/// (`redis://host/bigjob:pd:<uuid>` etc.) without requiring a live
-/// coordination server at construction time.
+/// Mint a unique id with the given prefix, e.g. `du-000017`,
+/// `cu-000042`, `pilot-000003`. Mirrors the paper's URL-style unique
+/// entity names (`redis://host/bigjob:pd:<uuid>` etc.) without
+/// requiring a live coordination server at construction time.
+///
+/// The counter is zero-padded so the ids' *lexicographic* order equals
+/// their creation order — scheduler tie-breaks and `BTreeMap`
+/// iteration sort by id, and an unpadded `pilot-10` would sort before
+/// `pilot-9`, making entity ordering (and thus placement traces)
+/// depend on how many ids other tests happened to mint first. The
+/// width covers the first 10^9 ids per process; a counter beyond that
+/// would reintroduce the ordering skew, so it is asserted against.
 pub fn next_id(prefix: &str) -> String {
     let n = ID_COUNTER.fetch_add(1, Ordering::Relaxed);
-    format!("{prefix}-{n}")
+    debug_assert!(n < 1_000_000_000, "id counter exceeded the zero-padded width");
+    format!("{prefix}-{n:09}")
 }
 
 /// Reset the id counter (test determinism only).
@@ -150,6 +159,9 @@ mod tests {
         let b = next_id("du");
         assert_ne!(a, b);
         assert!(a.starts_with("du-"));
+        // Lexicographic order == creation order (zero-padding): the
+        // scheduler's id tie-break depends on this.
+        assert!(a < b, "{a} must sort before {b}");
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Randomized-interleaving concurrency suite for the coordination
+//! event layer (per-stripe pub/sub + blocking pops).
+//!
+//! N producer / M consumer threads hammer sharded queues under seeded
+//! RNG schedules (random queue choice and random yields shuffle the
+//! interleavings between runs while staying reproducible per seed).
+//! The suite asserts the three properties the event layer promises:
+//!
+//! * **no lost wakeups** — consumers park in blocking pops with a
+//!   generous deadline; a lost wakeup surfaces as a loud timeout
+//!   panic, never a hang;
+//! * **no double delivery** — across all consumers, every produced
+//!   item is delivered exactly once;
+//! * **FIFO per queue** — any single consumer observes strictly
+//!   increasing per-producer sequence numbers on each queue (pops are
+//!   atomic head removals, and producers enqueue in sequence order).
+//!
+//! CI runs this suite twice: `RUST_TEST_THREADS=1` and default
+//! parallelism (see `.github/workflows/ci.yml`) — the properties must
+//! hold regardless of how the harness schedules the tests themselves.
+
+use pilot_data::coordination::{keys, Key, Store, StoreError};
+use pilot_data::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Seeds exercised by the randomized schedule (acceptance: ≥ 5 in CI).
+const SEEDS: [u64; 7] = [1, 2, 3, 5, 8, 13, 21];
+
+/// Deadline that converts a lost wakeup into a test failure instead of
+/// a CI hang. Generous: loaded CI runners must not trip it.
+const STALL: Duration = Duration::from_secs(30);
+
+/// One randomized schedule: `producers` threads push `per_producer`
+/// items each across `queues` sharded queues (seeded choice per push),
+/// `consumers` threads drain them via multi-queue blocking pops.
+/// Termination uses a per-consumer stop queue listed *last* in its pop
+/// priority order: the stop marker — pushed only after every producer
+/// joined — can only be delivered once that consumer finds all real
+/// queues empty, so no item can be stranded. Returns each consumer's
+/// delivery stream as `(queue_index, item)`.
+fn run_schedule(
+    seed: u64,
+    producers: usize,
+    consumers: usize,
+    queues: usize,
+    per_producer: usize,
+) -> Vec<Vec<(usize, String)>> {
+    let store = Store::new();
+    let qkeys: Vec<Key> =
+        (0..queues).map(|q| Key::new(&format!("pd:queue:conc:{seed}:{q}"))).collect();
+    let stop_keys: Vec<Key> = (0..consumers)
+        .map(|c| Key::new(&format!("pd:queue:conc:{seed}:stop:{c}")))
+        .collect();
+
+    let mut producer_handles = Vec::new();
+    for p in 0..producers {
+        let store = store.clone();
+        let qkeys = qkeys.clone();
+        producer_handles.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ (p as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            // Per-(producer, queue) sequence numbers: the FIFO oracle.
+            let mut seq = vec![0u64; qkeys.len()];
+            for _ in 0..per_producer {
+                let q = rng.below(qkeys.len() as u64) as usize;
+                store.rpush_k(&qkeys[q], &format!("{p}:{}", seq[q])).unwrap();
+                seq[q] += 1;
+                if rng.chance(0.3) {
+                    thread::yield_now();
+                }
+            }
+        }));
+    }
+
+    let mut consumer_handles = Vec::new();
+    for c in 0..consumers {
+        let store = store.clone();
+        let mut list = qkeys.clone();
+        list.push(stop_keys[c].clone());
+        consumer_handles.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ 0xC0FF_EE00 ^ ((c as u64 + 1) << 7));
+            let refs: Vec<&Key> = list.iter().collect();
+            let stop_idx = refs.len() - 1;
+            let mut got: Vec<(usize, String)> = Vec::new();
+            loop {
+                match store.blpop_any(&refs, Some(STALL)).unwrap() {
+                    Some((qi, _)) if qi == stop_idx => break,
+                    Some((qi, v)) => {
+                        got.push((qi, v));
+                        if rng.chance(0.2) {
+                            thread::yield_now();
+                        }
+                    }
+                    None => panic!(
+                        "blocking pop stalled {STALL:?}: lost wakeup (seed {seed}, consumer {c})"
+                    ),
+                }
+            }
+            got
+        }));
+    }
+
+    for h in producer_handles {
+        h.join().unwrap();
+    }
+    // All items are in the store; release the consumers.
+    for k in &stop_keys {
+        store.rpush_k(k, "stop").unwrap();
+    }
+    let out: Vec<Vec<(usize, String)>> =
+        consumer_handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Nothing stranded in any queue.
+    for k in qkeys.iter().chain(stop_keys.iter()) {
+        assert_eq!(store.llen_k(k).unwrap(), 0, "seed {seed}: residue in {}", k.as_str());
+    }
+    out
+}
+
+#[test]
+fn randomized_interleavings_no_loss_no_dup_fifo() {
+    const PRODUCERS: usize = 4;
+    const CONSUMERS: usize = 3;
+    const QUEUES: usize = 4;
+    const PER_PRODUCER: usize = 200;
+    for &seed in &SEEDS {
+        let out = run_schedule(seed, PRODUCERS, CONSUMERS, QUEUES, PER_PRODUCER);
+
+        // FIFO per queue: each consumer's successive pops from one
+        // queue carry strictly increasing per-producer sequences.
+        for (ci, stream) in out.iter().enumerate() {
+            let mut last: BTreeMap<(usize, usize), i64> = BTreeMap::new();
+            for (qi, item) in stream {
+                let (p, s) = item.split_once(':').unwrap();
+                let p: usize = p.parse().unwrap();
+                let s: i64 = s.parse().unwrap();
+                let prev = last.entry((*qi, p)).or_insert(-1);
+                assert!(
+                    s > *prev,
+                    "seed {seed}: FIFO violation at consumer {ci}, queue {qi}, \
+                     producer {p}: seq {s} after {prev}"
+                );
+                *prev = s;
+            }
+        }
+
+        // Exactly-once: per (queue, producer), the delivered sequences
+        // across all consumers are a permutation of 0..count — a gap
+        // is a lost item, a repeat is a double delivery.
+        let mut seen: BTreeMap<(usize, usize), Vec<i64>> = BTreeMap::new();
+        for stream in &out {
+            for (qi, item) in stream {
+                let (p, s) = item.split_once(':').unwrap();
+                seen.entry((*qi, p.parse().unwrap()))
+                    .or_default()
+                    .push(s.parse().unwrap());
+            }
+        }
+        let mut total = 0;
+        for ((qi, p), mut seqs) in seen {
+            seqs.sort_unstable();
+            for (i, s) in seqs.iter().enumerate() {
+                assert_eq!(
+                    *s, i as i64,
+                    "seed {seed}: queue {qi} producer {p}: lost or duplicated delivery"
+                );
+            }
+            total += seqs.len();
+        }
+        assert_eq!(total, PRODUCERS * PER_PRODUCER, "seed {seed}: delivery count");
+    }
+}
+
+/// A consumer that blocked *before* the push must be woken by it —
+/// the direct no-lost-wakeup probe.
+#[test]
+fn blocked_pop_wakes_on_push() {
+    let store = Store::new();
+    let q = Key::new("pd:queue:conc:wake");
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn({
+        let store = store.clone();
+        let q = q.clone();
+        move || {
+            let v = store.blpop_k(&q, Some(STALL)).unwrap();
+            tx.send(Instant::now()).unwrap();
+            v
+        }
+    });
+    // Give the consumer time to actually park in the condvar.
+    thread::sleep(Duration::from_millis(80));
+    let pushed = Instant::now();
+    store.rpush_k(&q, "x").unwrap();
+    let woke = rx.recv_timeout(STALL).expect("consumer never woke: lost wakeup");
+    assert_eq!(h.join().unwrap(), Some("x".to_string()));
+    assert!(
+        woke.duration_since(pushed) < Duration::from_secs(5),
+        "wakeup took {:?}",
+        woke.duration_since(pushed)
+    );
+}
+
+#[test]
+fn deadline_pop_times_out_on_empty_queue() {
+    let store = Store::new();
+    let q = Key::new("pd:queue:conc:deadline");
+    let t0 = Instant::now();
+    assert_eq!(store.blpop_k(&q, Some(Duration::from_millis(50))).unwrap(), None);
+    assert!(t0.elapsed() >= Duration::from_millis(45), "returned early: {:?}", t0.elapsed());
+}
+
+/// Injected outage must unblock parked poppers with `Unavailable`
+/// (like a dropped Redis connection), and recovery must wake
+/// availability waiters — both without any polling.
+#[test]
+fn outage_unblocks_poppers_and_recovery_wakes_waiters() {
+    let store = Store::new();
+    let q = Key::new("pd:queue:conc:outage");
+    let h = thread::spawn({
+        let store = store.clone();
+        let q = q.clone();
+        move || store.blpop_k(&q, Some(STALL))
+    });
+    thread::sleep(Duration::from_millis(80));
+    store.set_down(true);
+    assert_eq!(h.join().unwrap(), Err(StoreError::Unavailable));
+
+    let h2 = thread::spawn({
+        let store = store.clone();
+        move || {
+            store.wait_available(|| false);
+            store.is_down()
+        }
+    });
+    thread::sleep(Duration::from_millis(80));
+    store.set_down(false);
+    assert!(!h2.join().unwrap(), "waiter resumed while store still down");
+}
+
+/// The agent protocol shape: one blocking pop over [own, global] in
+/// priority order, under concurrent pushes to both.
+#[test]
+fn two_queue_protocol_prefers_own_queue_under_concurrency() {
+    let store = Store::new();
+    let own = Key::new(&keys::pilot_queue("conc-agent"));
+    let global = keys::global_queue_key();
+    let producer = thread::spawn({
+        let store = store.clone();
+        let own = own.clone();
+        move || {
+            let mut rng = Rng::new(7);
+            for i in 0..200 {
+                if rng.chance(0.5) {
+                    store.rpush_k(&own, &format!("own:{i}")).unwrap();
+                } else {
+                    store.rpush_k(global, &format!("glob:{i}")).unwrap();
+                }
+                if rng.chance(0.3) {
+                    thread::yield_now();
+                }
+            }
+        }
+    });
+    let mut own_count = 0;
+    let mut glob_count = 0;
+    let mut drained = 0;
+    while drained < 200 {
+        match store.blpop_any(&[&own, global], Some(STALL)).unwrap() {
+            Some((0, _)) => {
+                own_count += 1;
+                drained += 1;
+            }
+            Some((_, _)) => {
+                glob_count += 1;
+                drained += 1;
+            }
+            None => panic!("stalled with {drained}/200 drained"),
+        }
+    }
+    producer.join().unwrap();
+    assert_eq!(own_count + glob_count, 200);
+    // Priority is per-attempt: whenever both queues held work, the
+    // own-queue item came first — verified structurally by blpop_any's
+    // ordering; here we just confirm both paths were exercised.
+    assert!(own_count > 0 && glob_count > 0, "own={own_count} glob={glob_count}");
+}
+
+/// Pub/sub under concurrency: a prefix (pattern) subscriber on the
+/// queue namespace sees every push exactly once; an exact-key
+/// subscriber sees exactly its key's pushes, in FIFO order per
+/// producer.
+#[test]
+fn prefix_and_key_subscribers_see_all_pushes() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 100;
+    let store = Store::new();
+    let prefix_rx = store.subscribe_prefix("pd:queue:conc:sub:");
+    let k0 = Key::new("pd:queue:conc:sub:0");
+    let key_rx = store.subscribe_key(&k0);
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let store = store.clone();
+        handles.push(thread::spawn(move || {
+            let mut rng = Rng::new(p + 991);
+            for i in 0..PER_PRODUCER {
+                let q = rng.below(3);
+                store.rpush(&format!("pd:queue:conc:sub:{q}"), &format!("{p}:{i}")).unwrap();
+                if rng.chance(0.25) {
+                    thread::yield_now();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let prefix_events: Vec<_> = prefix_rx.try_iter().collect();
+    assert_eq!(
+        prefix_events.len() as u64,
+        PRODUCERS * PER_PRODUCER,
+        "prefix subscriber must see every queue push exactly once"
+    );
+    let key_events: Vec<_> = key_rx.try_iter().collect();
+    assert!(key_events.iter().all(|e| e.key == k0.as_str()));
+    assert_eq!(
+        key_events.len(),
+        prefix_events.iter().filter(|e| e.key == k0.as_str()).count(),
+        "exact-key subscriber must match the prefix view of that key"
+    );
+    // FIFO per producer on the single-key stream.
+    let mut last: BTreeMap<&str, i64> = BTreeMap::new();
+    for ev in &key_events {
+        let (p, i) = ev.payload.split_once(':').unwrap();
+        let i: i64 = i.parse().unwrap();
+        let prev = last.entry(p).or_insert(-1);
+        assert!(i > *prev, "producer {p}: event {i} after {prev}");
+        *prev = i;
+    }
+}
