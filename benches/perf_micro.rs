@@ -17,7 +17,9 @@ use pilot_data::simtime::Sim;
 use pilot_data::topology::{Label, Topology};
 use pilot_data::unit::{ComputeUnit, ComputeUnitDescription};
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn quick() -> u64 {
     if std::env::var("PD_BENCH_QUICK").is_ok() {
@@ -193,6 +195,73 @@ fn main() {
         let ns = total.as_nanos() as f64 / iters as f64;
         println!("{name:<40}{:>12.2} us/wakeup", ns / 1e3);
         results.push((name.to_string(), ns));
+    }
+
+    // --- wake-one vs wake-all herd: 1 push, K parked waiters ---
+    // Queue-namespace keys get the Redis-style wake-one handoff (a
+    // push claims at most one parked waiter); other keys keep the
+    // broadcast wake (every parked waiter races). Two rows per shape:
+    // push->delivery latency and measured wakeups per push — the
+    // wake-one column must stay O(1) as K grows.
+    for &k in &[1usize, 4, 16] {
+        for wake_one in [true, false] {
+            let label = if wake_one { "wake-one" } else { "wake-all" };
+            let hstore = Store::new();
+            let hq = if wake_one {
+                Key::new(&format!("pd:queue:bench:herd-{k}"))
+            } else {
+                Key::new(&format!("bench:herd-{k}"))
+            };
+            let stop = Arc::new(AtomicBool::new(false));
+            let (tx, rx) = std::sync::mpsc::channel::<Instant>();
+            let mut waiters = Vec::new();
+            for _ in 0..k {
+                let hstore = hstore.clone();
+                let hq = hq.clone();
+                let stop = stop.clone();
+                let tx = tx.clone();
+                waiters.push(std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match hstore.blpop_k(&hq, Some(Duration::from_millis(500))) {
+                            Ok(Some(_)) => {
+                                let _ = tx.send(Instant::now());
+                            }
+                            Ok(None) => {} // re-check the stop flag
+                            Err(_) => break,
+                        }
+                    }
+                }));
+            }
+            std::thread::sleep(Duration::from_millis(100)); // park the herd
+            let iters = (300 / quick()).max(30);
+            let w0 = hstore.wake_stats();
+            let mut total = Duration::ZERO;
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                hstore.rpush_k(&hq, "x").unwrap();
+                let woke = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("herd delivery stalled");
+                total += woke.duration_since(t0);
+            }
+            let w1 = hstore.wake_stats();
+            stop.store(true, Ordering::Relaxed);
+            for h in waiters {
+                h.join().unwrap();
+            }
+            let ns = total.as_nanos() as f64 / iters as f64;
+            let wakeups = if wake_one {
+                (w1.push_wakeups - w0.push_wakeups) as f64 / iters as f64
+            } else {
+                (w1.broadcast_wakeups - w0.broadcast_wakeups) as f64 / iters as f64
+            };
+            println!(
+                "herd {label} K={k:<2}{:>25.2} us/push->delivery   ({wakeups:.2} wakeups/push)",
+                ns / 1e3
+            );
+            results.push((format!("herd {label} push->delivery ns (K={k})"), ns));
+            results.push((format!("herd {label} wakeups/push (K={k})"), wakeups));
+        }
     }
 
     // --- discrete-event engine ---

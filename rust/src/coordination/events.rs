@@ -1,5 +1,5 @@
 //! Event layer of the coordination store: per-stripe pub/sub and
-//! BLPOP-style blocking pops.
+//! BLPOP-style blocking pops with a Redis-style wake-one handoff.
 //!
 //! BigJob's agents do not poll Redis — they block on `BLPOP` and react
 //! to pub/sub notifications (paper §4.2), which is what keeps the
@@ -9,24 +9,64 @@
 //! * **Pub/sub on interned [`Key`]s.** Exact-key subscriber registries
 //!   are sharded across the same [`SHARDS`] stripes as the data (a
 //!   publish on one pilot's queue never contends with another's), while
-//!   *pattern* subscriptions on key prefixes (e.g. the
-//!   [`super::keys::QUEUE_PREFIX`] queue namespace) live in one shared
-//!   registry consulted per publish — a prefix spans stripes by
-//!   definition. Every [`Store::rpush`] fans out a keyspace event
-//!   (key = the queue, payload = the pushed value) to both registries;
-//!   explicit [`Store::publish_k`] does the same for arbitrary keys.
+//!   *pattern* subscriptions — plain prefixes
+//!   ([`Store::subscribe_prefix`]) or Redis-style globs with `*`/`?`
+//!   ([`Store::subscribe_pattern`], see [`glob_match`]) — live in one
+//!   shared registry consulted per publish; a pattern spans stripes by
+//!   definition. Pattern subscriptions are tagged with a [`SubId`] and
+//!   can be torn down with [`Store::unsubscribe`]. Every
+//!   [`Store::rpush`] fans out a keyspace event (key = the queue,
+//!   payload = the pushed value) to both registries; explicit
+//!   [`Store::publish_k`] does the same for arbitrary keys.
 //!
 //! * **Blocking pops.** [`Store::blpop_k`] / [`Store::blpop_any`]
 //!   block the calling thread until an element arrives, built on
 //!   condvar-backed waiter cells in a per-stripe registry: a popper
-//!   that finds
-//!   its queues empty registers a [`WaitCell`] under each queue key
-//!   (then re-checks, closing the classic lost-wakeup window) and
-//!   sleeps; `rpush` drains and notifies the waiters of exactly that
-//!   key. Multi-queue pops implement §4.2's two-queue protocol in one
-//!   call: queues are tried in priority order (agent-specific first,
-//!   global second). [`Store::blpop_any_until`] is the deadline
-//!   variant.
+//!   that finds its queues empty registers a [`WaitCell`] under each
+//!   queue key (then re-checks, closing the classic lost-wakeup
+//!   window) and sleeps. Multi-queue pops implement §4.2's two-queue
+//!   protocol in one call: queues are tried in priority order
+//!   (agent-specific first, global second). [`Store::blpop_any_until`]
+//!   is the deadline variant.
+//!
+//! # Wake-one handoff
+//!
+//! A push on a **queue-namespace key** (under
+//! [`super::keys::QUEUE_PREFIX`]) hands its wakeup to *exactly one*
+//! parked waiter, like Redis serving one blocked `BLPOP` client per
+//! `RPUSH` — not a thundering herd of every waiter racing for one
+//! element. With multi-slot pilot agents a queue routinely has N
+//! parked workers, so the herd would cost O(N) wakeups per push; the
+//! handoff costs O(1). The protocol:
+//!
+//! * **Per-waiter delivery state.** Each [`WaitCell`] carries a
+//!   `signaled` claim flag. A push scans the key's waiter list in
+//!   registration order and *claims* the first cell whose flag is
+//!   clear ([`WaitCell::try_claim`]); already-claimed cells are
+//!   skipped, so a cell registered under several queues (a multi-queue
+//!   pop) can absorb at most one pending handoff — a second push on a
+//!   *different* covered queue passes over it and claims the next
+//!   waiter instead of wasting its wakeup.
+//!
+//! * **Re-donation on exit.** A woken waiter pops its queues in
+//!   priority order, which may consume an element from a different
+//!   queue than the one whose push claimed it (or lose the pop race
+//!   entirely and re-park). Whatever signal it absorbed is therefore
+//!   passed on when the pop returns: the exit path re-checks every
+//!   covered queue and, for each that is still non-empty, claims one
+//!   more parked waiter. Each re-donation claims a distinct unclaimed
+//!   cell, so the chain is bounded by the number of parked waiters and
+//!   no element is ever stranded behind a consumed signal.
+//!
+//! * **Broadcast fallback.** Pushes on non-queue keys keep the
+//!   pre-handoff semantics — every parked waiter on the key is drained
+//!   and woken, losers re-register. Outages, recovery, and shutdown
+//!   ([`Store::wake_waiters`]) always broadcast: woken parties
+//!   re-check their own predicates.
+//!
+//! [`Store::wake_stats`] counts handoff claims, re-donations, and
+//! broadcast wakeups so tests and the herd benches can assert the O(1)
+//! shape directly.
 //!
 //! # Outage semantics
 //!
@@ -37,36 +77,76 @@
 //! flag via [`Store::wake_waiters`]) instead of sleeping in a retry
 //! loop.
 //!
-//! # Deadline semantics under simulated time
+//! # Blocking pops under simulated time
 //!
 //! The discrete-event driver ([`crate::experiments::simdrive`]) is
 //! single-threaded: a thread-blocking pop would deadlock it, and
 //! wall-clock deadlines are meaningless at simulated-time scale. Under
-//! simtime, a "blocking pop with deadline" therefore maps to the
-//! non-blocking [`Store::lpop_k`] plus a *scheduled wakeup event*: the
-//! sim driver subscribes to the queue namespace with
-//! [`Store::subscribe_prefix`] and turns each queue event into a
-//! `TryPull` sim event at the current simulated instant, while
-//! `Delay`-style re-evaluation events play the role of the deadline.
-//! The blocking forms in this module are for wall-clock mode (the
-//! local-execution service agents) and the concurrency test suite.
+//! simtime, a "blocking pop" therefore maps to the non-blocking
+//! [`Store::lpop_k`] plus a *scheduled wakeup event*: the sim driver
+//! subscribes to the queue namespace with [`Store::subscribe_prefix`]
+//! and turns each queue event into a `TryPull` sim event at the
+//! current simulated instant, while `Delay`-style re-evaluation events
+//! play the role of the deadline. The wall-clock worker *pool* of a
+//! multi-slot pilot maps the same way: each `TryPull` dispatches one
+//! CU (one slot's pull) and, while free slots remain, front-schedules
+//! the next `TryPull` in the chain (`SlotMode::PerSlot` in the sim
+//! driver) — the deterministic, single-threaded image of N workers
+//! waking one after another. The blocking forms in this module are for
+//! wall-clock mode (the local-execution service agents) and the
+//! concurrency test suite.
 
-use super::{stripe_of, FxMap, Key, Store, StoreError, SHARDS};
+use super::{keys, stripe_of, FxMap, Key, Store, StoreError, SHARDS};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// A message delivered to a subscriber: the key it was published on
-/// (so prefix subscribers can demultiplex) plus the payload.
+/// (so pattern subscribers can demultiplex) plus the payload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Event {
     pub key: String,
     pub payload: String,
 }
 
-/// One waiter blocked in a pop: a signaled flag under a mutex plus the
+/// Redis-style glob match over key bytes: `*` matches any (possibly
+/// empty) sequence, `?` matches exactly one byte, everything else
+/// matches itself. Iterative with single-star backtracking — O(|key|)
+/// amortized for the patterns this store sees.
+pub fn glob_match(pattern: &str, text: &str) -> bool {
+    let p = pattern.as_bytes();
+    let t = text.as_bytes();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let mut star: Option<usize> = None;
+    let mut star_ti = 0usize;
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == b'?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == b'*' {
+            star = Some(pi);
+            star_ti = ti;
+            pi += 1;
+        } else if let Some(s) = star {
+            // Backtrack: let the last `*` swallow one more byte.
+            pi = s + 1;
+            star_ti += 1;
+            ti = star_ti;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// One waiter blocked in a pop: a claim flag under a mutex plus the
 /// condvar the blocked thread sleeps on. Registered under every queue
-/// key the pop covers; a push on any of them notifies the cell.
+/// key the pop covers; the wake-one handoff claims the cell through
+/// exactly one of them per pending signal.
 struct WaitCell {
     signaled: Mutex<bool>,
     cv: Condvar,
@@ -77,10 +157,24 @@ impl WaitCell {
         WaitCell { signaled: Mutex::new(false), cv: Condvar::new() }
     }
 
+    /// Unconditional wake (broadcast paths): set the flag and notify.
     fn notify(&self) {
         let mut g = self.signaled.lock().unwrap_or_else(|e| e.into_inner());
         *g = true;
         self.cv.notify_all();
+    }
+
+    /// Wake-one handoff: claim the cell only if no signal is already
+    /// pending on it. Returns whether this call took the claim.
+    fn try_claim(&self) -> bool {
+        let mut g = self.signaled.lock().unwrap_or_else(|e| e.into_inner());
+        if *g {
+            false
+        } else {
+            *g = true;
+            self.cv.notify_all();
+            true
+        }
     }
 
     /// Sleep until notified or the deadline passes. Returns whether a
@@ -116,23 +210,73 @@ impl WaitCell {
 struct SubStripe {
     /// Exact-key subscribers.
     exact: FxMap<Arc<str>, Vec<Sender<Event>>>,
-    /// Blocking-pop waiters per key; drained wholesale on each push
-    /// (losers of the pop race re-register).
+    /// Blocking-pop waiters per key, in registration order. Queue keys
+    /// hand each push to the first unclaimed cell; non-queue keys
+    /// drain the whole list per push (losers re-register).
     waiters: FxMap<Arc<str>, Vec<Arc<WaitCell>>>,
 }
 
+/// How a pattern subscription matches keys.
+enum PatternKind {
+    /// Literal prefix (the queue-namespace fast form).
+    Prefix(String),
+    /// Redis-style glob (`*`, `?`) over the whole key.
+    Glob(String),
+}
+
+impl PatternKind {
+    fn matches(&self, key: &str) -> bool {
+        match self {
+            PatternKind::Prefix(p) => key.starts_with(p.as_str()),
+            PatternKind::Glob(g) => glob_match(g, key),
+        }
+    }
+}
+
+/// One pattern subscription in the shared registry.
+struct PatternSub {
+    id: u64,
+    kind: PatternKind,
+    tx: Sender<Event>,
+}
+
+/// Handle for tearing down a pattern subscription
+/// ([`Store::unsubscribe`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubId(u64);
+
+/// Wakeup accounting for the blocking-pop layer (see module docs).
+/// Monotonic counters; read with [`Store::wake_stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WakeStats {
+    /// Waiters claimed by queue-key pushes — the wake-one handoff
+    /// wakes **at most one** waiter per push, so this never exceeds
+    /// the number of queue pushes.
+    pub push_wakeups: u64,
+    /// Handoffs passed on by exiting poppers that had absorbed a
+    /// signal for work they did not consume.
+    pub redonations: u64,
+    /// Waiters woken by pushes on non-queue keys (broadcast fallback:
+    /// every parked waiter on the key, per push).
+    pub broadcast_wakeups: u64,
+}
+
 /// The store's event hub: sharded exact-key registries, the global
-/// prefix-pattern registry, and the availability condvar.
+/// pattern registry, wakeup counters, and the availability condvar.
 pub(super) struct EventHub {
     stripes: Vec<Mutex<SubStripe>>,
-    prefixes: Mutex<Vec<(String, Sender<Event>)>>,
-    /// Upper bound on live prefix subscriptions (never decremented;
+    patterns: Mutex<Vec<PatternSub>>,
+    /// Upper bound on live pattern subscriptions (never decremented;
     /// dead senders are pruned under the lock). Lets the push hot path
-    /// skip the shared `prefixes` mutex entirely when no pattern
+    /// skip the shared `patterns` mutex entirely when no pattern
     /// subscriber has ever been registered — the common case in
     /// wall-clock service mode, where pushes from every agent would
     /// otherwise contend on this one store-wide lock.
-    prefix_ceiling: std::sync::atomic::AtomicUsize,
+    pattern_ceiling: AtomicUsize,
+    next_sub: AtomicU64,
+    push_wakeups: AtomicU64,
+    redonations: AtomicU64,
+    broadcast_wakeups: AtomicU64,
     avail: Mutex<()>,
     avail_cv: Condvar,
 }
@@ -141,8 +285,12 @@ impl EventHub {
     pub(super) fn new() -> EventHub {
         EventHub {
             stripes: (0..SHARDS).map(|_| Mutex::new(SubStripe::default())).collect(),
-            prefixes: Mutex::new(Vec::new()),
-            prefix_ceiling: std::sync::atomic::AtomicUsize::new(0),
+            patterns: Mutex::new(Vec::new()),
+            pattern_ceiling: AtomicUsize::new(0),
+            next_sub: AtomicU64::new(0),
+            push_wakeups: AtomicU64::new(0),
+            redonations: AtomicU64::new(0),
+            broadcast_wakeups: AtomicU64::new(0),
             avail: Mutex::new(()),
             avail_cv: Condvar::new(),
         }
@@ -177,22 +325,47 @@ impl Store {
         self.subscribe_key(&Key::new(channel))
     }
 
+    fn subscribe_matcher(&self, kind: PatternKind) -> (SubId, Receiver<Event>) {
+        let (tx, rx) = channel();
+        let id = self.inner.hub.next_sub.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inner
+            .hub
+            .patterns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(PatternSub { id, kind, tx });
+        self.inner.hub.pattern_ceiling.fetch_add(1, Ordering::Release);
+        (SubId(id), rx)
+    }
+
     /// Pattern subscription on a key prefix — e.g.
     /// [`super::keys::QUEUE_PREFIX`] to observe every queue push in the
     /// system. Consulted on each publish regardless of stripe.
     pub fn subscribe_prefix(&self, prefix: &str) -> Receiver<Event> {
-        let (tx, rx) = channel();
-        self.inner
-            .hub
-            .prefixes
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .push((prefix.to_string(), tx));
-        self.inner
-            .hub
-            .prefix_ceiling
-            .fetch_add(1, std::sync::atomic::Ordering::Release);
-        rx
+        self.subscribe_prefix_tagged(prefix).1
+    }
+
+    /// [`Store::subscribe_prefix`] returning the [`SubId`] for a later
+    /// [`Store::unsubscribe`].
+    pub fn subscribe_prefix_tagged(&self, prefix: &str) -> (SubId, Receiver<Event>) {
+        self.subscribe_matcher(PatternKind::Prefix(prefix.to_string()))
+    }
+
+    /// Redis-style glob subscription over the whole key space: `*`
+    /// matches any sequence, `?` exactly one byte (see [`glob_match`]).
+    /// E.g. `pd:queue:pilot:*` for every agent queue, or `pd:?u:*` for
+    /// CU and DU records.
+    pub fn subscribe_pattern(&self, pattern: &str) -> (SubId, Receiver<Event>) {
+        self.subscribe_matcher(PatternKind::Glob(pattern.to_string()))
+    }
+
+    /// Tear down a pattern subscription: the receiver gets no events
+    /// published after this returns. Returns whether the id was live.
+    pub fn unsubscribe(&self, id: SubId) -> bool {
+        let mut pats = self.inner.hub.patterns.lock().unwrap_or_else(|e| e.into_inner());
+        let before = pats.len();
+        pats.retain(|s| s.id != id.0);
+        before != pats.len()
     }
 
     /// Deliver to exact-key subscribers of `key` with the stripe
@@ -215,36 +388,40 @@ impl Store {
         delivered
     }
 
-    /// Deliver to prefix (pattern) subscribers matching `key`.
-    fn fanout_prefix(&self, key: &str, payload: &str) -> usize {
+    /// Deliver to pattern (prefix/glob) subscribers matching `key`.
+    fn fanout_patterns(&self, key: &str, payload: &str) -> usize {
         // Lock-free fast path: no pattern subscriber was ever
         // registered (service mode) — don't touch the shared mutex.
-        if self.inner.hub.prefix_ceiling.load(std::sync::atomic::Ordering::Acquire) == 0 {
+        if self.inner.hub.pattern_ceiling.load(Ordering::Acquire) == 0 {
             return 0;
         }
         let mut delivered = 0;
-        let mut pats = self.inner.hub.prefixes.lock().unwrap_or_else(|e| e.into_inner());
-        if !pats.is_empty() {
-            pats.retain(|(p, tx)| {
-                if key.starts_with(p.as_str()) {
-                    tx.send(Event { key: key.to_string(), payload: payload.to_string() }).is_ok()
-                } else {
-                    true
+        let mut pats = self.inner.hub.patterns.lock().unwrap_or_else(|e| e.into_inner());
+        pats.retain(|sub| {
+            if sub.kind.matches(key) {
+                let ok = sub
+                    .tx
+                    .send(Event { key: key.to_string(), payload: payload.to_string() })
+                    .is_ok();
+                if ok {
+                    delivered += 1;
                 }
-            });
-            delivered += pats.iter().filter(|(p, _)| key.starts_with(p.as_str())).count();
-        }
+                ok
+            } else {
+                true
+            }
+        });
         delivered
     }
 
-    /// Deliver an event to exact-key and matching prefix subscribers;
+    /// Deliver an event to exact-key and matching pattern subscribers;
     /// returns how many subscribers received it.
     fn fanout(&self, stripe: usize, key: &str, payload: &str) -> usize {
         let exact = {
             let mut s = self.inner.hub.stripe(stripe);
             Self::deliver_exact(&mut s, key, payload)
         };
-        exact + self.fanout_prefix(key, payload)
+        exact + self.fanout_patterns(key, payload)
     }
 
     /// Publish `payload` on an interned key.
@@ -259,37 +436,61 @@ impl Store {
         Ok(self.fanout(stripe_of(channel), channel, message))
     }
 
-    /// Internal: a value landed on `key` — wake its blocking-pop
-    /// waiters (they consume data, so they go first) and fan the
-    /// keyspace event out to subscribers. Called by `rpush` with the
-    /// data lock already released.
+    /// Internal: a value landed on `key` — wake blocking-pop waiters
+    /// and fan the keyspace event out to subscribers. Called by
+    /// `rpush` with the data lock already released.
     ///
-    /// Every waiter on the key is woken (drained) per push: one wins
-    /// the element, the rest re-check and re-park. That is an O(idle
-    /// waiters) herd per *event* — deliberately traded for simplicity
-    /// and loss-freedom over Redis's wake-one handoff, which cannot
-    /// strand an element here either but needs per-waiter delivery
-    /// state to stay correct with multi-queue pops (a single cell can
-    /// be signaled for one queue and consume from another, leaving the
-    /// first's element behind). Idle cost with *no* events remains
-    /// zero regardless of waiter count.
+    /// Queue-namespace keys get the **wake-one handoff** (module
+    /// docs): the push claims the first parked waiter whose cell holds
+    /// no pending signal — at most one wakeup per push, O(1) under a
+    /// herd of N parked multi-slot workers. Other keys keep the
+    /// broadcast semantics: every waiter is drained and woken, one
+    /// wins the element, the rest re-check and re-park. Idle cost with
+    /// *no* events remains zero in both shapes.
     pub(super) fn notify_push(&self, stripe: usize, key: &str, payload: &str) {
-        // One stripe-lock acquisition covers both the waiter drain and
-        // the exact-subscriber delivery; cells are notified after the
-        // guard drops (notify takes each cell's own mutex — keep the
-        // lock scopes disjoint).
-        let cells = {
-            let mut s = self.inner.hub.stripe(stripe);
-            let cells = s.waiters.remove(key);
-            Self::deliver_exact(&mut s, key, payload);
-            cells
-        };
-        if let Some(cells) = cells {
-            for c in cells {
-                c.notify();
+        if key.starts_with(keys::QUEUE_PREFIX) {
+            // One stripe-lock acquisition covers the claim scan and the
+            // exact-subscriber delivery. `try_claim` notifies under the
+            // cell's own mutex nested inside the stripe guard — safe:
+            // no path acquires a stripe lock while holding a cell lock.
+            let claimed = {
+                let mut s = self.inner.hub.stripe(stripe);
+                let claimed = Self::claim_first_unclaimed(&s, key);
+                Self::deliver_exact(&mut s, key, payload);
+                claimed
+            };
+            if claimed {
+                self.inner.hub.push_wakeups.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            // Broadcast fallback: drain and wake every waiter; cells
+            // are notified after the guard drops.
+            let cells = {
+                let mut s = self.inner.hub.stripe(stripe);
+                let cells = s.waiters.remove(key);
+                Self::deliver_exact(&mut s, key, payload);
+                cells
+            };
+            if let Some(cells) = cells {
+                self.inner
+                    .hub
+                    .broadcast_wakeups
+                    .fetch_add(cells.len() as u64, Ordering::Relaxed);
+                for c in cells {
+                    c.notify();
+                }
             }
         }
-        self.fanout_prefix(key, payload);
+        self.fanout_patterns(key, payload);
+    }
+
+    /// Wakeup accounting snapshot (tests, herd benches).
+    pub fn wake_stats(&self) -> WakeStats {
+        WakeStats {
+            push_wakeups: self.inner.hub.push_wakeups.load(Ordering::Relaxed),
+            redonations: self.inner.hub.redonations.load(Ordering::Relaxed),
+            broadcast_wakeups: self.inner.hub.broadcast_wakeups.load(Ordering::Relaxed),
+        }
     }
 
     // ---- blocking pops ----
@@ -318,6 +519,47 @@ impl Store {
         }
     }
 
+    /// The single home of the claim policy: scan `key`'s waiter list
+    /// in registration order and claim the first cell with no pending
+    /// signal. Both handoff sites (push-side `notify_push` and the
+    /// exit-side re-donation) go through here, so the loss-freedom
+    /// argument — re-donation replays exactly what a push would have
+    /// done — holds by construction. Caller holds the stripe guard.
+    fn claim_first_unclaimed(s: &SubStripe, key: &str) -> bool {
+        if let Some(cells) = s.waiters.get(key) {
+            for c in cells {
+                if c.try_claim() {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Claim one parked, unclaimed waiter on `key`. Returns whether a
+    /// claim was handed out.
+    fn handoff_one(&self, stripe: usize, key: &str) -> bool {
+        let s = self.inner.hub.stripe(stripe);
+        Self::claim_first_unclaimed(&s, key)
+    }
+
+    /// Exit protocol of the wake-one handoff: this popper may have
+    /// absorbed a signal for work it did not consume (its cell was
+    /// claimed by a push on queue B while it popped queue A, or it
+    /// timed out after a claim landed). For every covered queue that
+    /// still holds work, pass one wakeup on. No-op during an outage
+    /// (`llen` errors are skipped; `set_down` broadcasts anyway).
+    fn redonate_absorbed(&self, queues: &[&Key]) {
+        for k in queues {
+            if !k.text.starts_with(keys::QUEUE_PREFIX) {
+                continue; // non-queue pushes broadcast; nothing absorbed
+            }
+            if matches!(self.llen_k(k), Ok(n) if n > 0) && self.handoff_one(k.stripe, &k.text) {
+                self.inner.hub.redonations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// BLPOP over several queues in priority order (first non-empty
     /// wins — §4.2's agent-specific-then-global protocol in one call),
     /// blocking until an element arrives or the absolute `deadline`
@@ -329,20 +571,33 @@ impl Store {
         queues: &[&Key],
         deadline: Option<Instant>,
     ) -> Result<Option<(usize, String)>, StoreError> {
-        loop {
-            // Fast path: no registration when data is already there.
-            for (i, k) in queues.iter().enumerate() {
-                if let Some(v) = self.lpop_k(k)? {
-                    return Ok(Some((i, v)));
-                }
+        // Fast path: no registration when data is already there.
+        for (i, k) in queues.iter().enumerate() {
+            if let Some(v) = self.lpop_k(k)? {
+                return Ok(Some((i, v)));
             }
+        }
+        let result = self.blpop_parked(queues, deadline);
+        // Wake-one exit protocol: pass on any absorbed signal before
+        // surfacing our own result (see module docs).
+        self.redonate_absorbed(queues);
+        result
+    }
+
+    /// Slow path: park until an element, the deadline, or an outage.
+    fn blpop_parked(
+        &self,
+        queues: &[&Key],
+        deadline: Option<Instant>,
+    ) -> Result<Option<(usize, String)>, StoreError> {
+        loop {
             let cell = Arc::new(WaitCell::new());
             for k in queues {
                 self.register_waiter(k, &cell);
             }
             // Re-check after registering: a push that landed between
-            // the miss above and the registration found no waiter to
-            // notify — this second look closes the lost-wakeup window.
+            // the last miss and the registration found no waiter to
+            // claim — this second look closes the lost-wakeup window.
             let recheck: Result<Option<(usize, String)>, StoreError> = (|| {
                 for (i, k) in queues.iter().enumerate() {
                     if let Some(v) = self.lpop_k(k)? {
@@ -374,7 +629,14 @@ impl Store {
                 }
                 return Ok(None);
             }
-            // Woken: loop and race for the element; losers re-register.
+            // Claimed: race for the element; a loser re-parks (the
+            // next round re-registers and re-checks every queue, so
+            // nothing the loser could have seen is missed).
+            for (i, k) in queues.iter().enumerate() {
+                if let Some(v) = self.lpop_k(k)? {
+                    return Ok(Some((i, v)));
+                }
+            }
         }
     }
 
@@ -420,8 +682,9 @@ impl Store {
     }
 
     /// Wake every blocked waiter — blocking pops and availability
-    /// waits — without touching any data. Woken parties re-check their
-    /// predicates: poppers re-poll their queues (and surface
+    /// waits — without touching any data. Always a broadcast (never
+    /// the wake-one handoff): woken parties re-check their own
+    /// predicates — poppers re-poll their queues (and surface
     /// `Unavailable` during an outage), availability waiters re-check
     /// the down flag and their give-up condition. Called by
     /// `set_down`, `restore`, and agent shutdown paths.
@@ -490,6 +753,70 @@ mod tests {
     }
 
     #[test]
+    fn queue_push_wakes_at_most_one_parked_waiter() {
+        let s = Store::new();
+        let q = Key::new("pd:queue:ev-herd");
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                s.blpop_k(&q, Some(Duration::from_secs(20))).unwrap()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(100)); // park the herd
+        let before = s.wake_stats();
+        s.rpush_k(&q, "one").unwrap();
+        // Exactly one element: exactly one waiter can return with it.
+        // The claim is handed out synchronously inside the push.
+        let after = s.wake_stats();
+        assert!(
+            after.push_wakeups - before.push_wakeups <= 1,
+            "wake-one handoff woke {} waiters for one push",
+            after.push_wakeups - before.push_wakeups
+        );
+        // Release the rest and confirm exactly-once delivery overall.
+        for i in 0..3 {
+            s.rpush_k(&q, &format!("more-{i}")).unwrap();
+        }
+        let got: Vec<Option<String>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(got.iter().all(|v| v.is_some()));
+        assert_eq!(s.llen_k(&q).unwrap(), 0);
+        let end = s.wake_stats();
+        assert!(end.push_wakeups - before.push_wakeups <= 4, "more wakeups than pushes");
+    }
+
+    #[test]
+    fn non_queue_push_broadcasts_to_all_waiters() {
+        let s = Store::new();
+        let q = Key::new("bench:ev-broadcast");
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let s = s.clone();
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                s.blpop_k(&q, Some(Duration::from_secs(20))).unwrap()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        let before = s.wake_stats();
+        s.rpush_k(&q, "x").unwrap();
+        let after = s.wake_stats();
+        assert!(
+            after.broadcast_wakeups - before.broadcast_wakeups >= 2,
+            "non-queue keys must keep the broadcast wake ({} woken)",
+            after.broadcast_wakeups - before.broadcast_wakeups
+        );
+        // One winner; release the two losers that re-parked.
+        s.rpush_k(&q, "y").unwrap();
+        s.rpush_k(&q, "z").unwrap();
+        for h in handles {
+            assert!(h.join().unwrap().is_some());
+        }
+    }
+
+    #[test]
     fn outage_unblocks_popper_with_unavailable() {
         let s = Store::new();
         let q = Key::new("pd:queue:ev4");
@@ -552,5 +879,59 @@ mod tests {
         let evs: Vec<Event> = rx.try_iter().collect();
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].payload, "one");
+    }
+
+    #[test]
+    fn glob_match_cases() {
+        assert!(glob_match("*", ""));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("pd:queue:*", "pd:queue:global"));
+        assert!(glob_match("pd:queue:pilot:*", "pd:queue:pilot:pilot-000001"));
+        assert!(!glob_match("pd:queue:pilot:*", "pd:queue:global"));
+        assert!(glob_match("pd:?u:42", "pd:cu:42"));
+        assert!(glob_match("pd:?u:42", "pd:du:42"));
+        assert!(!glob_match("pd:?u:42", "pd:cpu:42"));
+        assert!(glob_match("*:global", "pd:queue:global"));
+        assert!(glob_match("pd:*:pilot:*", "pd:queue:pilot:p1"));
+        assert!(!glob_match("pd:*:pilot", "pd:queue:pilot:p1"));
+        assert!(glob_match("exact", "exact"));
+        assert!(!glob_match("exact", "exact!"));
+        assert!(!glob_match("exact!", "exact"));
+        assert!(glob_match("a*b*c", "a-xx-b-yy-c"));
+        assert!(!glob_match("a*b*c", "a-xx-c-yy-b"));
+        assert!(glob_match("??", "ab"));
+        assert!(!glob_match("??", "a"));
+        assert!(!glob_match("", "a"));
+        assert!(glob_match("", ""));
+    }
+
+    #[test]
+    fn glob_subscription_filters_keys() {
+        let s = Store::new();
+        let (_id, rx) = s.subscribe_pattern("pd:queue:pilot:*");
+        s.rpush(&keys::pilot_queue("pA"), "cu-1").unwrap();
+        s.rpush(keys::GLOBAL_QUEUE, "cu-2").unwrap();
+        s.publish("pd:queue:pilot:pB", "cu-3").unwrap();
+        let evs: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].key, keys::pilot_queue("pA"));
+        assert_eq!(evs[1].payload, "cu-3");
+    }
+
+    #[test]
+    fn unsubscribed_receiver_gets_no_further_events() {
+        let s = Store::new();
+        let (id, rx) = s.subscribe_pattern("pd:queue:*");
+        let (id2, rx2) = s.subscribe_prefix_tagged(keys::QUEUE_PREFIX);
+        s.rpush(keys::GLOBAL_QUEUE, "before").unwrap();
+        assert!(s.unsubscribe(id));
+        assert!(!s.unsubscribe(id), "second unsubscribe of the same id is a no-op");
+        s.rpush(keys::GLOBAL_QUEUE, "after").unwrap();
+        let evs: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 1, "only the pre-unsubscribe event: {evs:?}");
+        assert_eq!(evs[0].payload, "before");
+        // The other subscription is untouched.
+        assert_eq!(rx2.try_iter().count(), 2);
+        assert!(s.unsubscribe(id2));
     }
 }

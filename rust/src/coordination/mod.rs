@@ -39,10 +39,15 @@
 //! The service surface: string KV, hashes, list-queues, key scans,
 //! JSON snapshots, and injectable transient failure for
 //! fault-tolerance tests. The **event layer** — per-stripe pub/sub on
-//! interned keys, prefix (pattern) subscriptions, and BLPOP-style
-//! blocking pops with deadline support — lives in [`events`]; every
-//! `rpush` fans a keyspace event out to subscribers and wakes blocked
-//! poppers, which is what lets agents react instead of polling.
+//! interned keys, prefix and Redis-style glob pattern subscriptions
+//! (with `unsubscribe`), and BLPOP-style blocking pops with deadline
+//! support — lives in [`events`]; every `rpush` fans a keyspace event
+//! out to subscribers and wakes blocked poppers, which is what lets
+//! agents react instead of polling. Queue-namespace pushes use a
+//! **wake-one handoff** (at most one waiter claimed per push — O(1)
+//! under a parked multi-slot worker pool); see [`events`] for the
+//! per-waiter delivery-state protocol that keeps multi-queue pops
+//! loss-free.
 
 pub mod events;
 

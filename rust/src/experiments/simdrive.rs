@@ -24,6 +24,17 @@
 //! simtime). [`WakeupMode::Broadcast`] keeps the seed's
 //! O(pilots × events) wake-everyone reference semantics alive for the
 //! trace-equivalence property test.
+//!
+//! **Multi-slot agents under simtime:** the wall-clock service runs
+//! one worker thread per pilot slot, all parked in the same blocking
+//! pop. The deterministic image of that pool is
+//! [`SlotMode::PerSlot`] (default): each `TryPull` event is *one
+//! slot's* pull — it dispatches at most one CU and, on success,
+//! front-schedules the next `TryPull` of the chain
+//! ([`crate::simtime::Sim::schedule_front`]), so the whole pool drains
+//! before any other same-time event interleaves, exactly like the
+//! reference [`SlotMode::Batch`] loop (property-tested bit-identical;
+//! see `prop::per_slot_driver_matches_batch_reference_traces`).
 
 use crate::config::Testbed;
 use crate::coordination::events::Event;
@@ -83,6 +94,21 @@ pub enum WakeupMode {
     Broadcast,
 }
 
+/// How a pilot's slots consume `TryPull` events (the simtime mapping
+/// of the multi-slot agent pool; see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotMode {
+    /// One CU dispatched per `TryPull`; a successful dispatch
+    /// front-schedules the chain's next `TryPull` at the same instant
+    /// — one event per worker slot, the DES image of N pool workers
+    /// waking one after another (default).
+    PerSlot,
+    /// Reference: a single `TryPull` drains every free slot in one
+    /// handler loop (the pre-multi-slot shape), kept for the
+    /// trace-equivalence property test.
+    Batch,
+}
+
 /// The simulated pilot system.
 pub struct SimSystem {
     pub sim: Sim<Ev>,
@@ -120,6 +146,16 @@ pub struct SimSystem {
     pub enforce_walltime: bool,
     /// How store events become agent wakeups (see [`WakeupMode`]).
     pub wakeups: WakeupMode,
+    /// How `TryPull` events map to pilot slots (see [`SlotMode`]).
+    pub slots: SlotMode,
+    /// Peak concurrent busy slots ever observed per pilot — the
+    /// multi-slot invariant surface (`max_busy[p] ≤ cores(p)`,
+    /// asserted by the property suite).
+    pub max_busy: BTreeMap<String, u32>,
+    /// Optional pop audit: `(pilot, cu, from_own_queue)` per pull, in
+    /// pull order. `Some` only when a test enables it — per-queue FIFO
+    /// pop-order assertions read this.
+    pub pull_log: Option<Vec<(String, String, bool)>>,
     /// Pattern subscription on the queue namespace: every rpush in the
     /// store lands here and is translated into sim wakeups by
     /// [`SimSystem::drain_queue_events`].
@@ -150,6 +186,9 @@ impl SimSystem {
             max_requeues: 24,
             enforce_walltime: false,
             wakeups: WakeupMode::Evented,
+            slots: SlotMode::PerSlot,
+            max_busy: BTreeMap::new(),
+            pull_log: None,
             queue_events,
         }
     }
@@ -161,6 +200,11 @@ impl SimSystem {
 
     pub fn with_wakeups(mut self, mode: WakeupMode) -> SimSystem {
         self.wakeups = mode;
+        self
+    }
+
+    pub fn with_slot_mode(mut self, mode: SlotMode) -> SimSystem {
+        self.slots = mode;
         self
     }
 
@@ -674,52 +718,76 @@ impl SimSystem {
         Ok(())
     }
 
+    /// Drive one pilot's `TryPull`: in [`SlotMode::Batch`] the handler
+    /// loops over every free slot; in [`SlotMode::PerSlot`] it pulls
+    /// for one slot and front-schedules the chain's next link, so the
+    /// chain drains consecutively (no other same-time event
+    /// interleaves) and the two modes dispatch identically.
     fn try_pull(&mut self, now: f64, pilot: &str) -> anyhow::Result<()> {
-        loop {
-            let (can, cores_free) = {
-                let p = &self.state.pilots[pilot];
-                (p.state == PilotState::Active && p.free_slots() > 0, p.free_slots())
-            };
-            if !can {
-                return Ok(());
+        match self.slots {
+            SlotMode::Batch => {
+                while self.try_pull_one(now, pilot)? {}
+                Ok(())
             }
-            // Agent-side staging throttle: don't start more concurrent
-            // input stagings than the agent can drive.
-            if *self.staging_in_flight.get(pilot).unwrap_or(&0) >= self.max_concurrent_staging {
-                return Ok(());
-            }
-            // Two-queue pull protocol (§4.2), with the queue-depth
-            // counter kept in lockstep with the store.
-            let Some((cu_id, from_own)) = agent_pull_tracked(&self.store, &self.qkeys[pilot])?
-            else {
-                return Ok(());
-            };
-            if from_own {
-                self.state.note_queue_pop(pilot);
-            }
-            let cu = &self.state.cus[&cu_id];
-            let cores = cu.description.cores.max(1);
-            if cores > cores_free {
-                // Not enough room. `requeue_k` is the silent push-back
-                // variant — no queue event, no waiter wakeup: nothing
-                // new appeared, and a wake here would livelock
-                // (push-back → wake → pop → …).
-                if !from_own && cores > self.state.pilots[pilot].description.cores {
-                    // A global-queue CU this pilot can never fit (own-
-                    // queue CUs always fit: eligibility filters on
-                    // total cores). Return it to the global queue for
-                    // a big-enough pilot — parking it on our own queue
-                    // would trap it forever, since only we pop that
-                    // queue.
-                    self.store.requeue_k(&self.global_q, &cu_id)?;
-                } else {
-                    self.store.requeue_k(&self.qkeys[pilot], &cu_id)?;
-                    self.state.note_queue_push(pilot);
+            SlotMode::PerSlot => {
+                if self.try_pull_one(now, pilot)? {
+                    self.sim.schedule_front(Ev::TryPull { pilot: pilot.to_string() });
                 }
-                return Ok(());
+                Ok(())
             }
-            self.begin_staging(now, pilot, &cu_id)?;
         }
+    }
+
+    /// One slot's pull attempt. Returns whether a CU was dispatched
+    /// (i.e. whether the pool has reason to try the next slot).
+    fn try_pull_one(&mut self, now: f64, pilot: &str) -> anyhow::Result<bool> {
+        let (can, cores_free) = {
+            let p = &self.state.pilots[pilot];
+            (p.state == PilotState::Active && p.free_slots() > 0, p.free_slots())
+        };
+        if !can {
+            return Ok(false);
+        }
+        // Agent-side staging throttle: don't start more concurrent
+        // input stagings than the agent can drive.
+        if *self.staging_in_flight.get(pilot).unwrap_or(&0) >= self.max_concurrent_staging {
+            return Ok(false);
+        }
+        // Two-queue pull protocol (§4.2), with the queue-depth
+        // counter kept in lockstep with the store.
+        let Some((cu_id, from_own)) = agent_pull_tracked(&self.store, &self.qkeys[pilot])?
+        else {
+            return Ok(false);
+        };
+        if from_own {
+            self.state.note_queue_pop(pilot);
+        }
+        if let Some(log) = self.pull_log.as_mut() {
+            log.push((pilot.to_string(), cu_id.clone(), from_own));
+        }
+        let cu = &self.state.cus[&cu_id];
+        let cores = cu.description.cores.max(1);
+        if cores > cores_free {
+            // Not enough room. `requeue_k` is the silent push-back
+            // variant — no queue event, no waiter wakeup: nothing
+            // new appeared, and a wake here would livelock
+            // (push-back → wake → pop → …).
+            if !from_own && cores > self.state.pilots[pilot].description.cores {
+                // A global-queue CU this pilot can never fit (own-
+                // queue CUs always fit: eligibility filters on
+                // total cores). Return it to the global queue for
+                // a big-enough pilot — parking it on our own queue
+                // would trap it forever, since only we pop that
+                // queue.
+                self.store.requeue_k(&self.global_q, &cu_id)?;
+            } else {
+                self.store.requeue_k(&self.qkeys[pilot], &cu_id)?;
+                self.state.note_queue_push(pilot);
+            }
+            return Ok(false);
+        }
+        self.begin_staging(now, pilot, &cu_id)?;
+        Ok(true)
     }
 
     /// Start input staging for a pulled CU.
@@ -728,6 +796,11 @@ impl SimSystem {
         let pilot_label = self.tb.batch.machine(&home.machine)?.label.clone();
         let cores = self.state.cus[cu_id].description.cores.max(1);
         self.state.pilots.get_mut(pilot).unwrap().busy_slots += cores;
+        let busy = self.state.pilots[pilot].busy_slots;
+        let peak = self.max_busy.entry(pilot.to_string()).or_insert(0);
+        if busy > *peak {
+            *peak = busy;
+        }
         {
             let c = self.state.cus.get_mut(cu_id).unwrap();
             c.pilot = Some(pilot.to_string());
@@ -959,6 +1032,38 @@ mod tests {
         sys.run().unwrap();
         assert!(sys.state.workload_finished(), "oversized CU trapped on the small pilot");
         assert_eq!(sys.state.count_cu_state(CuState::Done), 1);
+    }
+
+    /// The per-slot TryPull chain (multi-slot mapping) must make the
+    /// same dispatch decisions as the batch reference loop, and a
+    /// pilot must never exceed its core count in concurrent CUs.
+    #[test]
+    fn per_slot_chain_matches_batch_and_respects_cores() {
+        let run = |mode: SlotMode| {
+            let mut sys = SimSystem::new(paper_testbed(), 11).with_slot_mode(mode);
+            let ens = small_ensemble();
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").unwrap());
+            }
+            sys.run().unwrap();
+            let p = sys.submit_pilot("lonestar", 4, "lonestar-scratch").unwrap();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                sys.submit_cu(cud).unwrap();
+            }
+            sys.run().unwrap();
+            assert!(sys.state.workload_finished());
+            // 4-core pilot, 2-core CUs: at most 2 concurrent, never
+            // above the pilot's core count.
+            let peak = sys.max_busy.get(&p).copied().unwrap_or(0);
+            assert!(peak <= 4, "{mode:?}: peak busy {peak} > cores");
+            assert!(peak >= 2, "{mode:?}: pool never ran concurrently");
+            sys.makespan()
+        };
+        assert_eq!(run(SlotMode::PerSlot), run(SlotMode::Batch));
     }
 
     #[test]

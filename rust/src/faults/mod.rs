@@ -7,6 +7,7 @@
 //! and transfer errors. This module centralizes the knobs for injecting
 //! those faults deterministically.
 
+use crate::coordination::Store;
 use crate::rng::Rng;
 
 /// Retry policy for transfers ("Globus Online e.g. automatically
@@ -63,6 +64,29 @@ pub fn attempt_transfer(
     AttemptOutcome { succeeded: false, attempts: policy.max_attempts, wasted_s: wasted }
 }
 
+/// RAII coordination-store outage: the store goes down on
+/// construction and comes back up when the guard drops, so a test (or
+/// chaos hook) cannot leak a permanently dead store past an early
+/// return or panic. While the guard lives, blocked poppers surface
+/// [`crate::coordination::StoreError::Unavailable`] and agents park in
+/// `wait_available`; the drop-side `set_down(false)` wakes them all.
+pub struct ScopedOutage {
+    store: Store,
+}
+
+impl ScopedOutage {
+    pub fn inject(store: &Store) -> ScopedOutage {
+        store.set_down(true);
+        ScopedOutage { store: store.clone() }
+    }
+}
+
+impl Drop for ScopedOutage {
+    fn drop(&mut self) {
+        self.store.set_down(false);
+    }
+}
+
 /// Scheduled coordination-store outages (start, duration) in sim time.
 #[derive(Debug, Clone, Default)]
 pub struct OutagePlan {
@@ -116,6 +140,24 @@ mod tests {
         let p = RetryPolicy { max_attempts: 4, backoff_s: 2.0 };
         assert_eq!(p.backoff_for(0), 2.0);
         assert_eq!(p.backoff_for(2), 8.0);
+    }
+
+    #[test]
+    fn scoped_outage_restores_on_drop_even_on_unwind() {
+        let s = Store::new();
+        s.set("k", "v").unwrap();
+        {
+            let _o = ScopedOutage::inject(&s);
+            assert!(s.get("k").is_err(), "ops must fail during the outage");
+        }
+        assert_eq!(s.get("k").unwrap(), Some("v".to_string()), "drop must restore");
+        // Restored through an unwind too.
+        let s2 = s.clone();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _o = ScopedOutage::inject(&s2);
+            panic!("boom");
+        }));
+        assert!(s.get("k").is_ok(), "outage leaked past a panic");
     }
 
     #[test]

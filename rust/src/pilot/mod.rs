@@ -343,12 +343,42 @@ impl ManagerState {
         Ok(())
     }
 
-    /// Rebuild CU descriptions and states from the store after a
-    /// manager restart ("re-connect to a Pilot and Compute-Unit via a
-    /// unique URL"). Descriptions come through the store's typed record
-    /// cache, so each JSON document is parsed at most once.
+    /// Rebuild pilot records, CU descriptions, and states from the
+    /// store after a manager restart ("re-connect to a Pilot and
+    /// Compute-Unit via a unique URL"). Descriptions come through the
+    /// store's typed record cache, so each JSON document is parsed at
+    /// most once. Pilot `busy` counts are the multi-slot agents'
+    /// store-mirrored slot state, so a reconnected manager's scheduler
+    /// filters free slots against real occupancy instead of assuming
+    /// an idle fleet.
     pub fn reconnect(store: &Store) -> anyhow::Result<ManagerState> {
         let mut st = ManagerState::new();
+        for key in store.keys_with_prefix("pd:pilot:")? {
+            let h = store.hgetall(&key)?;
+            let id = key.trim_start_matches("pd:pilot:").to_string();
+            let cores = h.get("cores").and_then(|s| s.parse().ok()).unwrap_or(1);
+            let affinity = h.get("affinity").map(|s| Label::new(s));
+            let mut p = PilotCompute::new(PilotComputeDescription {
+                // The resource-manager URL is not checkpointed; a
+                // reconnected manager coordinates through the store
+                // only, so a synthetic scheme is sufficient.
+                service_url: format!("reconnect://{id}"),
+                cores,
+                walltime_s: f64::INFINITY,
+                affinity,
+            });
+            p.id = id.clone();
+            p.state = match h.get("state").map(String::as_str) {
+                Some("Queued") => PilotState::Queued,
+                Some("Active") => PilotState::Active,
+                Some("Done") => PilotState::Done,
+                Some("Failed") => PilotState::Failed,
+                Some("Canceled") => PilotState::Canceled,
+                _ => PilotState::New,
+            };
+            p.busy_slots = h.get("busy").and_then(|s| s.parse().ok()).unwrap_or(0);
+            st.add_pilot(p);
+        }
         for key in store.keys_with_prefix("pd:cu:")? {
             let h = store.hgetall(&key)?;
             let id = key.trim_start_matches("pd:cu:").to_string();
@@ -523,6 +553,32 @@ mod tests {
         assert_eq!(cu2.state, CuState::Queued);
         assert_eq!(cu2.description.executable, "/bin/bwa");
         assert_eq!(back.dus.len(), 1);
+    }
+
+    #[test]
+    fn reconnect_rebuilds_pilots_with_busy_slots() {
+        let mut st = ManagerState::new();
+        let pid = st.add_pilot(PilotCompute::new(pcd("lonestar", 16, "xsede/tacc/lonestar")));
+        {
+            let p = st.pilots.get_mut(&pid).unwrap();
+            p.transition(PilotState::Queued).unwrap();
+            p.transition(PilotState::Active).unwrap();
+            // A multi-slot agent mid-run: 3 slots occupied.
+            p.busy_slots = 3;
+        }
+        let store = Store::new();
+        st.checkpoint(&store).unwrap();
+
+        let back = ManagerState::reconnect(&store).unwrap();
+        let p = &back.pilots[&pid];
+        assert_eq!(p.state, PilotState::Active);
+        assert_eq!(p.description.cores, 16);
+        assert_eq!(p.busy_slots, 3);
+        assert_eq!(p.free_slots(), 13);
+        assert_eq!(p.affinity_ref().0, "xsede/tacc/lonestar");
+        // The label index is rebuilt too (scheduler constraint pruning
+        // works immediately after reconnect).
+        assert_eq!(back.pilots_at_label(&Label::new("xsede/tacc/lonestar")), &[pid]);
     }
 
     #[test]

@@ -194,6 +194,168 @@ mod tests {
         );
     }
 
+    /// ISSUE 3 tentpole: under simulated time a multi-slot pilot agent
+    /// is a chain of per-slot `TryPull` events — one CU dispatched per
+    /// event, the follow-up front-scheduled (`SlotMode::PerSlot`) —
+    /// while the reference `SlotMode::Batch` drains all slots in one
+    /// handler loop (the pre-multi-slot, single-event shape; with a
+    /// pool of size 1 the two are the same machine by construction).
+    /// The chain must be invisible: **bit-identical placement traces**
+    /// on randomized workloads. The per-slot run is also audited:
+    /// per-queue FIFO pop order against the store's own push events
+    /// (1-core workloads: no requeues, so pop order must equal push
+    /// order exactly), and no pilot ever exceeding `cores` concurrent
+    /// CUs.
+    #[test]
+    fn per_slot_driver_matches_batch_reference_traces() {
+        use crate::config::paper_testbed;
+        use crate::coordination::keys;
+        use crate::experiments::simdrive::{SimSystem, SlotMode};
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+        use std::collections::BTreeMap;
+
+        type Trace = (Vec<(usize, String, f64, f64, f64, f64)>, f64);
+
+        struct SlotAudit {
+            /// (queue key, cu id) per rpush on a pilot queue, in order.
+            pushes: Vec<(String, String)>,
+            /// (pilot, cu, from_own) per pull, in order.
+            pulls: Vec<(String, String, bool)>,
+            /// pilot id -> peak concurrent busy slots.
+            max_busy: BTreeMap<String, u32>,
+            /// pilot id -> cores.
+            cores: BTreeMap<String, u32>,
+        }
+
+        fn run_one(
+            mode: SlotMode,
+            seed: u64,
+            pilots: &[(&'static str, &'static str, u32)],
+            tasks: usize,
+            chunk_gb: u64,
+            one_core: bool,
+        ) -> Result<(Trace, SlotAudit), String> {
+            let es = |e: anyhow::Error| e.to_string();
+            let mut sys = SimSystem::new(paper_testbed(), seed).with_slot_mode(mode);
+            sys.pull_log = Some(Vec::new());
+            let push_rx = sys.store.subscribe_prefix(keys::PILOT_QUEUE_PREFIX);
+            let ens = bwa_ensemble(tasks, Bytes::gb(chunk_gb), Bytes::gb(8));
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            let mut cores = BTreeMap::new();
+            for (machine, scratch, n) in pilots {
+                let id = sys.submit_pilot(machine, *n, scratch).map_err(es)?;
+                cores.insert(id, *n);
+            }
+            sys.run().map_err(es)?; // activate pilots
+            let mut submitted = Vec::new();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                if one_core {
+                    cud.cores = 1;
+                }
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                submitted.push(sys.submit_cu(cud).map_err(es)?);
+            }
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err(format!("workload not finished under {mode:?}"));
+            }
+            let trace = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| {
+                    let idx = submitted
+                        .iter()
+                        .position(|id| *id == r.cu)
+                        .ok_or_else(|| format!("unknown cu {}", r.cu))?;
+                    Ok((idx, r.machine.clone(), r.t_start, r.t_end, r.staging_s, r.compute_s))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            let audit = SlotAudit {
+                pushes: push_rx.try_iter().map(|e| (e.key, e.payload)).collect(),
+                pulls: sys.pull_log.take().unwrap_or_default(),
+                max_busy: sys.max_busy.clone(),
+                cores,
+            };
+            Ok(((trace, sys.makespan()), audit))
+        }
+
+        crate::prop::check(
+            Config { cases: 8, seed: 0x510_7 },
+            |rng| {
+                let mut pilots: Vec<(&'static str, &'static str, u32)> =
+                    vec![("lonestar", "lonestar-scratch", 4 + 4 * rng.below(3) as u32)];
+                if rng.chance(0.6) {
+                    pilots.push(("stampede", "stampede-scratch", 4 + 4 * rng.below(3) as u32));
+                }
+                if rng.chance(0.3) {
+                    // Pool of size 1 (with 1-core CUs): the per-slot
+                    // chain degenerates to the single-slot reference.
+                    pilots.push(("lonestar", "lonestar-scratch", 1));
+                }
+                (
+                    rng.next_u64(),
+                    pilots,
+                    1 + rng.below(6) as usize,
+                    1 + rng.below(3),
+                    rng.chance(0.6),
+                )
+            },
+            |(seed, pilots, tasks, chunk_gb, one_core)| {
+                let (per_slot, audit) =
+                    run_one(SlotMode::PerSlot, *seed, pilots, *tasks, *chunk_gb, *one_core)?;
+                let (batch, _) =
+                    run_one(SlotMode::Batch, *seed, pilots, *tasks, *chunk_gb, *one_core)?;
+                if per_slot != batch {
+                    return Err(format!(
+                        "placement traces diverge:\n per-slot: {per_slot:?}\n batch:    {batch:?}"
+                    ));
+                }
+                // No pilot ever exceeds its core count in concurrent
+                // CU slots.
+                for (pilot, peak) in &audit.max_busy {
+                    let cores = audit.cores.get(pilot).copied().unwrap_or(0);
+                    if *peak > cores {
+                        return Err(format!(
+                            "pilot {pilot} peaked at {peak} busy slots with {cores} cores"
+                        ));
+                    }
+                }
+                // Per-queue FIFO pop order: with 1-core CUs nothing is
+                // ever requeued, so each pilot queue's pop sequence
+                // must equal its push sequence exactly.
+                if *one_core {
+                    let mut pushed: BTreeMap<String, Vec<String>> = BTreeMap::new();
+                    for (key, cu) in &audit.pushes {
+                        let pilot = key
+                            .strip_prefix(crate::coordination::keys::PILOT_QUEUE_PREFIX)
+                            .ok_or_else(|| format!("non-pilot queue key {key}"))?;
+                        pushed.entry(pilot.to_string()).or_default().push(cu.clone());
+                    }
+                    let mut popped: BTreeMap<String, Vec<String>> = BTreeMap::new();
+                    for (pilot, cu, from_own) in &audit.pulls {
+                        if *from_own {
+                            popped.entry(pilot.clone()).or_default().push(cu.clone());
+                        }
+                    }
+                    if pushed != popped {
+                        return Err(format!(
+                            "own-queue FIFO violated:\n pushed: {pushed:?}\n popped: {popped:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn json_roundtrip_property() {
         use crate::json::{parse, Json};

@@ -404,6 +404,40 @@ mod tests {
         ));
     }
 
+    /// Multi-slot pilots report occupancy through shared `busy_slots`
+    /// (updated at every dispatch/completion edge); the scheduler's
+    /// free-slot filtering must track it: a full data-local pilot
+    /// overflows new work to the global queue, and placement binds
+    /// again the moment a slot frees.
+    #[test]
+    fn busy_multi_slot_pilot_overflows_to_global_until_a_slot_frees() {
+        let mut st = ManagerState::new();
+        let near = mk_pilot(&mut st, 4, "xsede/tacc/lonestar", PilotState::Active);
+        mk_pilot(&mut st, 4, "osg/cornell", PilotState::Active);
+        let du = mk_du(&mut st, Bytes::gb(8));
+        let mut locs = BTreeMap::new();
+        locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
+        for (id, l) in &locs {
+            for label in l {
+                st.note_replica(id, label);
+            }
+        }
+        let topo = Topology::new();
+        let sched = AffinityScheduler::new(None);
+        let cu = mk_cu(vec![du], None);
+        // All four slots busy — as a 4-worker agent pool reports while
+        // running four CUs.
+        st.pilots.get_mut(&near).unwrap().busy_slots = 4;
+        {
+            let ctx = SchedContext::from_state(&topo, &st);
+            assert_eq!(sched.place(&cu, &ctx), Placement::Global);
+        }
+        // One CU completes -> a slot frees -> data-local binding again.
+        st.pilots.get_mut(&near).unwrap().busy_slots = 3;
+        let ctx = SchedContext::from_state(&topo, &st);
+        assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(near));
+    }
+
     #[test]
     fn delayed_scheduling_waits_then_gives_up() {
         let mut st = ManagerState::new();

@@ -21,6 +21,18 @@
 //! shutdown wakes everyone via queue sentinels + a waiter broadcast.
 //! There is no fixed-interval sleep/poll loop anywhere on this path —
 //! idle cost is zero regardless of agent count.
+//!
+//! A Pilot-Compute marshals *multiple* resource slots (paper §3–4), so
+//! its agent is a **worker pool**: `PilotComputeDescription::cores`
+//! identical worker threads all parked in the same blocking pop over
+//! [own queue, global queue]. The store's wake-one handoff delivers
+//! each pushed CU to exactly one of them (no thundering herd across
+//! the pool), so a pilot with `cores = N` executes up to N CUs
+//! concurrently and throughput scales with slots, not with pilot
+//! count. `busy_slots` is shared pool state maintained under the
+//! manager-state lock at dispatch/completion and mirrored into the
+//! store's pilot record, keeping the scheduler's free-slot filtering
+//! and the durable view consistent.
 
 use crate::coordination::{keys, Store};
 use crate::pilot::{
@@ -131,18 +143,28 @@ impl PilotSystem {
         ComputeDataService { sys: self.clone() }
     }
 
-    /// Stop all agents and join their threads. Agents block in the
-    /// store (a queue pop, or the availability wait during an outage)
-    /// rather than polling a flag, so shutdown wakes them explicitly:
-    /// a sentinel on each agent's own queue (only that agent pops it)
-    /// plus a waiter broadcast for agents parked on an outage.
+    /// Stop all agent workers and join their threads. Workers block in
+    /// the store (a queue pop, or the availability wait during an
+    /// outage) rather than polling a flag, so shutdown wakes them
+    /// explicitly: one sentinel **per worker** on each pilot's own
+    /// queue — the wake-one handoff delivers each sentinel to exactly
+    /// one parked worker of that pool — plus a waiter broadcast for
+    /// workers parked on an outage. A worker that is mid-CU re-checks
+    /// the shutdown flag when it finishes; its unconsumed sentinel is
+    /// inert residue in the dropped store.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        let ids: Vec<String> = self.state.lock().unwrap().pilots.keys().cloned().collect();
-        for id in &ids {
-            // Fails only while the store is down — those agents are in
-            // `wait_available` and get the wake_waiters broadcast.
-            let _ = self.store.rpush(&keys::pilot_queue(id), AGENT_WAKE);
+        let pilots: Vec<(String, u32)> = {
+            let st = self.state.lock().unwrap();
+            st.pilots.values().map(|p| (p.id.clone(), p.description.cores.max(1))).collect()
+        };
+        for (id, workers) in &pilots {
+            for _ in 0..*workers {
+                // Fails only while the store is down — those workers
+                // are in `wait_available` and get the wake_waiters
+                // broadcast.
+                let _ = self.store.rpush(&keys::pilot_queue(id), AGENT_WAKE);
+            }
         }
         self.store.wake_waiters();
         let mut agents = self.agents.lock().unwrap();
@@ -275,15 +297,43 @@ impl PilotSystem {
         Ok(())
     }
 
-    /// One agent's handling of one CU id pulled from a queue.
+    /// One worker's handling of one CU id pulled from a queue. Slot
+    /// accounting lives here so acquire/release always pair: the CU's
+    /// cores are added to the pilot's shared `busy_slots` when the CU
+    /// is accepted (same critical section as its StagingInput
+    /// transition, so the scheduler never sees a dispatched CU without
+    /// its slots) and subtracted when it reaches a terminal state.
+    /// Both edges are mirrored into the store's pilot record (best
+    /// effort — a mid-outage mirror is retried by the next edge).
     fn run_cu(&self, pilot_id: &str, cu_id: &str) {
-        let descr = {
+        let (descr, cores) = {
             let mut st = self.state.lock().unwrap();
             let Some(cu) = st.cus.get_mut(cu_id) else { return };
             cu.pilot = Some(pilot_id.to_string());
             cu.t_started_staging = Self::now_s();
             let _ = cu.transition(CuState::StagingInput);
-            cu.description.clone()
+            let descr = cu.description.clone();
+            // Local mode treats `cores` as advisory: a global-queue CU
+            // larger than this pilot still runs here (seed semantics —
+            // the host's real resources are what execute it, and
+            // busy_slots recovers via saturating_sub). Only the sim
+            // driver enforces strict fit, where a silent global
+            // requeue cannot starve: its wakeup chains re-offer the CU
+            // to a big-enough pilot. Here a requeue would need a
+            // waking push, which small pilots could ping-pong.
+            let cores = descr.cores.max(1);
+            let busy_now = st.pilots.get_mut(pilot_id).map(|p| {
+                p.busy_slots += cores;
+                p.busy_slots
+            });
+            // Mirror under the state lock so concurrent workers'
+            // dispatch/completion edges reach the store in the same
+            // order they updated the shared counter (state→store is
+            // the only lock-nesting direction in this module).
+            if let Some(b) = busy_now {
+                let _ = self.store.hset(&keys::pilot(pilot_id), "busy", &b.to_string());
+            }
+            (descr, cores)
         };
         let sandbox = self.workdir.join("sandbox").join(cu_id);
         let result: anyhow::Result<ExecResult> = (|| {
@@ -315,9 +365,10 @@ impl PilotSystem {
         })();
 
         let mut st = self.state.lock().unwrap();
-        if let Some(p) = st.pilots.get_mut(pilot_id) {
-            p.busy_slots = p.busy_slots.saturating_sub(descr.cores.max(1));
-        }
+        let busy_now = st.pilots.get_mut(pilot_id).map(|p| {
+            p.busy_slots = p.busy_slots.saturating_sub(cores);
+            p.busy_slots
+        });
         if let Some(cu) = st.cus.get_mut(cu_id) {
             cu.t_finished = Self::now_s();
             match result {
@@ -332,6 +383,13 @@ impl PilotSystem {
             }
         }
         let final_state = st.cus.get(cu_id).map(|c| c.state);
+        // Mirror the slot release while still holding the state lock
+        // (state→store is the only nesting direction in this module),
+        // so anyone who observes the CU terminal also finds the store's
+        // busy count already drained.
+        if let Some(b) = busy_now {
+            let _ = self.store.hset(&keys::pilot(pilot_id), "busy", &b.to_string());
+        }
         drop(st);
         // Terminal transition: wake `wait_all` waiters and notify
         // subscribers — a per-CU key event plus the legacy broadcast
@@ -343,15 +401,17 @@ impl PilotSystem {
         }
     }
 
-    /// Agent main loop for one pilot: §4.2's two-queue pull protocol
-    /// as **one blocking pop** over [own queue, global queue] in
-    /// priority order — the agent parks in the store's event layer
-    /// until work (or a shutdown sentinel) arrives. No fixed-interval
-    /// polling anywhere: empty queues block on a condvar, and a store
-    /// outage parks the agent on the availability wait (woken by
-    /// recovery or shutdown), matching how BigJob agents ride out
-    /// transient Redis failures.
-    fn agent_loop(self: Arc<Self>, pilot_id: String) {
+    /// Main loop of one worker in a pilot's agent pool (the pool has
+    /// one worker per slot): §4.2's two-queue pull protocol as **one
+    /// blocking pop** over [own queue, global queue] in priority
+    /// order — every worker of the pool parks in the store's event
+    /// layer until work (or a shutdown sentinel) arrives, and the
+    /// wake-one handoff hands each push to exactly one of them. No
+    /// fixed-interval polling anywhere: empty queues block on a
+    /// condvar, and a store outage parks the worker on the
+    /// availability wait (woken by recovery or shutdown), matching how
+    /// BigJob agents ride out transient Redis failures.
+    fn worker_loop(self: Arc<Self>, pilot_id: String) {
         let own_queue = keys::pilot_queue_key(&pilot_id);
         let global = keys::global_queue_key();
         while !self.shutdown.load(Ordering::SeqCst) {
@@ -363,23 +423,9 @@ impl PilotSystem {
                     if queue_idx == 0 {
                         self.state.lock().unwrap().note_queue_pop(&pilot_id);
                     }
-                    // Local mode treats `cores` as advisory: a global-
-                    // queue CU larger than this pilot still runs here
-                    // (seed semantics — the host's real resources are
-                    // what execute it, and busy_slots recovers via
-                    // saturating_sub). Only the sim driver enforces
-                    // strict fit, where a silent global requeue cannot
-                    // starve: its wakeup chains re-offer the CU to a
-                    // big-enough pilot. Here a requeue would need a
-                    // waking push, which small pilots could ping-pong.
-                    {
-                        let mut st = self.state.lock().unwrap();
-                        let cores =
-                            st.cus.get(&cu_id).map(|c| c.description.cores.max(1)).unwrap_or(1);
-                        if let Some(p) = st.pilots.get_mut(&pilot_id) {
-                            p.busy_slots += cores;
-                        }
-                    }
+                    // Slot accounting (busy_slots up/down + store
+                    // mirror) happens inside run_cu, under the state
+                    // lock shared by every worker of the pool.
                     self.run_cu(&pilot_id, &cu_id);
                 }
                 Ok(None) => {} // unreachable: no deadline was set
@@ -387,9 +433,29 @@ impl PilotSystem {
                     // Store outage: block until it recovers (or we are
                     // shut down) — event-driven, not a retry sleep.
                     self.store.wait_available(|| self.shutdown.load(Ordering::SeqCst));
+                    // Re-sync the busy mirror on recovery: completion
+                    // edges that fired during the outage lost their
+                    // hset, and an idle pilot has no further edge to
+                    // retry it — a reconnecting manager would otherwise
+                    // inherit phantom busy_slots from the stale mirror.
+                    if !self.shutdown.load(Ordering::SeqCst) {
+                        let st = self.state.lock().unwrap();
+                        if let Some(b) = st.pilots.get(&pilot_id).map(|p| p.busy_slots) {
+                            let _ = self.store.hset(
+                                &keys::pilot(&pilot_id),
+                                "busy",
+                                &b.to_string(),
+                            );
+                        }
+                    }
                 }
             }
         }
+    }
+
+    /// Busy slots of a pilot right now (tests, diagnostics).
+    pub fn pilot_busy_slots(&self, pilot_id: &str) -> Option<u32> {
+        self.state.lock().unwrap().pilots.get(pilot_id).map(|p| p.busy_slots)
     }
 }
 
@@ -401,23 +467,30 @@ pub struct PilotComputeService {
 
 impl PilotComputeService {
     /// Start a pilot: registers it, marks it Active, and spawns its
-    /// agent thread.
+    /// agent **worker pool** — one worker thread per slot
+    /// (`descr.cores`), all parked in the same blocking two-queue pop.
+    /// The wake-one handoff hands each pushed CU to exactly one
+    /// worker, so a pilot with `cores = N` executes up to N CUs
+    /// concurrently.
     pub fn create_pilot(&self, descr: PilotComputeDescription) -> anyhow::Result<String> {
         if descr.cores == 0 {
             anyhow::bail!("pilot must have at least one core");
         }
+        let workers = descr.cores;
         let mut pilot = PilotCompute::new(descr);
         pilot.transition(PilotState::Queued)?;
         pilot.transition(PilotState::Active)?;
         pilot.t_active = PilotSystem::now_s();
         let id = pilot.id.clone();
         self.sys.state.lock().unwrap().add_pilot(pilot);
-        let sys = self.sys.clone();
-        let tid = id.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("agent-{id}"))
-            .spawn(move || sys.agent_loop(tid))?;
-        self.sys.agents.lock().unwrap().push(handle);
+        for w in 0..workers {
+            let sys = self.sys.clone();
+            let tid = id.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("agent-{id}-w{w}"))
+                .spawn(move || sys.worker_loop(tid))?;
+            self.sys.agents.lock().unwrap().push(handle);
+        }
         Ok(id)
     }
 
@@ -835,6 +908,210 @@ mod tests {
         // Both PDs now hold the file; fetch still works after dropping A.
         let locs = sys.locations.lock().unwrap().get(&du).unwrap().len();
         assert_eq!(locs, 2);
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Executor that parks every call until `expected` calls are
+    /// inside `execute` simultaneously — a deterministic proof of
+    /// pool concurrency with no wall-clock sensitivity: a serial
+    /// (single-slot) agent would never assemble the quorum and every
+    /// CU would fail on the gate timeout.
+    struct GateExecutor {
+        expected: u32,
+        inside: Mutex<u32>,
+        cv: Condvar,
+    }
+
+    impl GateExecutor {
+        fn new(expected: u32) -> GateExecutor {
+            GateExecutor { expected, inside: Mutex::new(0), cv: Condvar::new() }
+        }
+    }
+
+    impl Executor for GateExecutor {
+        fn execute(&self, _cu: &ComputeUnitDescription, _sandbox: &Path) -> anyhow::Result<ExecResult> {
+            let mut n = self.inside.lock().unwrap();
+            *n += 1;
+            self.cv.notify_all();
+            let deadline = Instant::now() + Duration::from_secs(20);
+            while *n < self.expected {
+                let now = Instant::now();
+                if now >= deadline {
+                    anyhow::bail!("only {} of {} CUs became concurrent", *n, self.expected);
+                }
+                let (g, _) = self.cv.wait_timeout(n, deadline - now).unwrap();
+                n = g;
+            }
+            Ok(ExecResult::default())
+        }
+    }
+
+    fn n_core_pilot(cores: u32, affinity: &str) -> PilotComputeDescription {
+        PilotComputeDescription {
+            service_url: "fork://localhost".into(),
+            cores,
+            walltime_s: 600.0,
+            affinity: Some(Label::new(affinity)),
+        }
+    }
+
+    /// Tentpole acceptance: a pilot with `cores = N` executes up to N
+    /// CUs concurrently in local mode.
+    #[test]
+    fn multi_slot_pilot_runs_n_cus_concurrently() {
+        const N: u32 = 4;
+        let dir = tmpdir("slots");
+        let sys = PilotSystem::new(&dir, Arc::new(GateExecutor::new(N)));
+        let pilot = sys.compute_service().create_pilot(n_core_pilot(N, "x")).unwrap();
+        let cds = sys.compute_data_service();
+        let mut ids = Vec::new();
+        for _ in 0..N {
+            ids.push(
+                cds.submit_compute_unit(ComputeUnitDescription {
+                    executable: "builtin:gate".into(),
+                    cores: 1,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+        }
+        // The gate only opens once all N CUs are inside execute() at
+        // the same time, so completion itself proves N-way concurrency.
+        sys.wait_all(Duration::from_secs(30)).unwrap();
+        for id in &ids {
+            assert_eq!(sys.cu_state(id), Some(CuState::Done), "err={:?}", sys.cu_error(id));
+        }
+        assert_eq!(sys.pilot_busy_slots(&pilot), Some(0), "busy_slots must drain to 0");
+        // The dispatch mirror left the drained count in the store too.
+        assert_eq!(
+            sys.store.hget(&keys::pilot(&pilot), "busy").unwrap().as_deref(),
+            Some("0")
+        );
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Executor that sleeps a fixed unit — the acceptance's wall-time
+    /// shape: N unit-cost CUs on an N-slot pilot take ≈ 1 unit.
+    struct SleepExecutor(Duration);
+
+    impl Executor for SleepExecutor {
+        fn execute(&self, _cu: &ComputeUnitDescription, _sandbox: &Path) -> anyhow::Result<ExecResult> {
+            std::thread::sleep(self.0);
+            Ok(ExecResult::default())
+        }
+    }
+
+    #[test]
+    fn n_unit_cost_cus_take_about_one_unit_of_wall_time() {
+        const N: usize = 6;
+        let unit = Duration::from_millis(300);
+        let dir = tmpdir("walltime");
+        let sys = PilotSystem::new(&dir, Arc::new(SleepExecutor(unit)));
+        sys.compute_service().create_pilot(n_core_pilot(N as u32, "x")).unwrap();
+        let cds = sys.compute_data_service();
+        let t0 = Instant::now();
+        let mut ids = Vec::new();
+        for _ in 0..N {
+            ids.push(
+                cds.submit_compute_unit(ComputeUnitDescription {
+                    executable: "builtin:sleep".into(),
+                    cores: 1,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+        }
+        sys.wait_all(Duration::from_secs(20)).unwrap();
+        let elapsed = t0.elapsed();
+        for id in &ids {
+            assert_eq!(sys.cu_state(id), Some(CuState::Done), "err={:?}", sys.cu_error(id));
+        }
+        // Serial execution would take N units (1.8 s); allow generous
+        // CI slack while still ruling out serialization.
+        assert!(
+            elapsed < unit * 4,
+            "{N} unit-cost CUs took {elapsed:?} on a {N}-slot pilot (serial would be {:?})",
+            unit * N as u32
+        );
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Executor that reports entry on a channel, then dwells — so a
+    /// test can inject a store outage while CUs are verifiably
+    /// mid-execution.
+    struct NotifyingSleepExecutor {
+        entered: Mutex<std::sync::mpsc::Sender<()>>,
+        dwell: Duration,
+    }
+
+    impl Executor for NotifyingSleepExecutor {
+        fn execute(&self, _cu: &ComputeUnitDescription, _sandbox: &Path) -> anyhow::Result<ExecResult> {
+            let _ = self.entered.lock().unwrap().send(());
+            std::thread::sleep(self.dwell);
+            Ok(ExecResult::default())
+        }
+    }
+
+    /// Fault injection (ISSUE 3 satellite): outage mid-execution with
+    /// multi-slot workers busy — in-flight CUs complete cleanly,
+    /// busy_slots drains to 0, parked workers surface Unavailable and
+    /// wait, and recovery (outage guard drop, then snapshot restore)
+    /// resumes dispatch.
+    #[test]
+    fn outage_mid_execution_drains_cleanly_and_recovers() {
+        let dir = tmpdir("outage-slots");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sys = PilotSystem::new(
+            &dir,
+            Arc::new(NotifyingSleepExecutor {
+                entered: Mutex::new(tx),
+                dwell: Duration::from_millis(200),
+            }),
+        );
+        let pilot = sys.compute_service().create_pilot(n_core_pilot(2, "x")).unwrap();
+        let cds = sys.compute_data_service();
+        let submit = |cds: &ComputeDataService| {
+            cds.submit_compute_unit(ComputeUnitDescription {
+                executable: "builtin:notify-sleep".into(),
+                cores: 1,
+                ..Default::default()
+            })
+        };
+        let snap = sys.store.snapshot();
+        let a = submit(&cds).unwrap();
+        let b = submit(&cds).unwrap();
+        // Both workers are inside the executor: the outage hits
+        // mid-execution with the whole pool busy.
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        {
+            let _outage = crate::faults::ScopedOutage::inject(&sys.store);
+            // In-flight CUs run to completion against the dead store
+            // (state lives under the manager lock; store mirrors and
+            // publishes are best-effort).
+            sys.wait_all(Duration::from_secs(10)).unwrap();
+            assert_eq!(sys.cu_state(&a), Some(CuState::Done), "err={:?}", sys.cu_error(&a));
+            assert_eq!(sys.cu_state(&b), Some(CuState::Done), "err={:?}", sys.cu_error(&b));
+            assert_eq!(sys.pilot_busy_slots(&pilot), Some(0), "busy_slots leaked");
+            // Submitting against the dead store fails cleanly.
+            assert!(submit(&cds).is_err(), "enqueue must fail while the store is down");
+        } // guard drop restores availability and wakes parked workers
+        let c = submit(&cds).unwrap();
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&c), Some(CuState::Done), "dispatch did not resume");
+        // Second outage, recovered via snapshot restore (the paper's
+        // "restart the Redis server" path): restore clears the down
+        // flag and wakes `wait_available` parkers.
+        sys.store.set_down(true);
+        sys.store.restore(&snap).unwrap();
+        assert!(!sys.store.is_down());
+        let d = submit(&cds).unwrap();
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&d), Some(CuState::Done), "dispatch dead after restore");
+        assert_eq!(sys.pilot_busy_slots(&pilot), Some(0));
         sys.shutdown();
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -8,7 +8,12 @@
 //! it to the caller's handler, which may schedule further events.
 //!
 //! Ties are broken FIFO (by insertion sequence) so runs are fully
-//! deterministic.
+//! deterministic. A separate **front lane** ([`Sim::schedule_front`])
+//! fires before every normally scheduled event at the same instant —
+//! used by the sim driver's per-slot agent chains, where one pilot's
+//! next slot must pull before any other same-time event interleaves
+//! (the DES equivalent of a worker handing off to the next worker of
+//! the same pool).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -36,13 +41,16 @@ impl std::fmt::Display for SimTime {
 
 struct Scheduled<E> {
     time: f64,
+    /// 0 = front lane (fires before lane-1 events at the same time),
+    /// 1 = normal. Within a lane, ties stay FIFO by `seq`.
+    lane: u8,
     seq: u64,
     event: E,
 }
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.lane == other.lane && self.seq == other.seq
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -54,11 +62,12 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first, then
-        // FIFO on the sequence number.
+        // front lane first, then FIFO on the sequence number.
         other
             .time
             .partial_cmp(&self.time)
             .unwrap_or(Ordering::Equal)
+            .then(other.lane.cmp(&self.lane))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -104,14 +113,24 @@ impl<E> Sim<E> {
     pub fn schedule(&mut self, delay: f64, event: E) {
         assert!(delay >= 0.0 && delay.is_finite(), "bad delay {delay}");
         self.seq += 1;
-        self.queue.push(Scheduled { time: self.now + delay, seq: self.seq, event });
+        self.queue.push(Scheduled { time: self.now + delay, lane: 1, seq: self.seq, event });
     }
 
     /// Schedule at an absolute time (must not be in the past).
     pub fn schedule_at(&mut self, time: f64, event: E) {
         assert!(time >= self.now, "schedule_at past time {time} < now {}", self.now);
         self.seq += 1;
-        self.queue.push(Scheduled { time, seq: self.seq, event });
+        self.queue.push(Scheduled { time, lane: 1, seq: self.seq, event });
+    }
+
+    /// Schedule `event` at the current instant, ahead of every event
+    /// already queued for this instant. Continuation lane for handlers
+    /// that must run again before any other same-time event interleaves
+    /// (e.g. the per-slot agent pull chain); front-lane events among
+    /// themselves stay FIFO.
+    pub fn schedule_front(&mut self, event: E) {
+        self.seq += 1;
+        self.queue.push(Scheduled { time: self.now, lane: 0, seq: self.seq, event });
     }
 
     /// Pop the next event, advancing the clock. Returns `None` when the
@@ -189,6 +208,42 @@ mod tests {
             true
         });
         assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn front_lane_preempts_same_time_events() {
+        let mut sim: Sim<&'static str> = Sim::new();
+        sim.schedule(1.0, "a");
+        sim.schedule(1.0, "b");
+        sim.schedule(2.0, "later");
+        let mut seen = Vec::new();
+        sim.run(|sim, _, e| {
+            seen.push(e);
+            if e == "a" {
+                // Chain: both front events must run before "b", in
+                // FIFO order among themselves — and never before an
+                // earlier-time event would have.
+                sim.schedule_front("front-1");
+                sim.schedule_front("front-2");
+            }
+            true
+        });
+        assert_eq!(seen, vec!["a", "front-1", "front-2", "b", "later"]);
+    }
+
+    #[test]
+    fn front_lane_does_not_rewind_time() {
+        let mut sim: Sim<u32> = Sim::new();
+        sim.schedule(5.0, 1);
+        let mut times = Vec::new();
+        sim.run(|sim, t, e| {
+            times.push((t.secs(), e));
+            if e == 1 {
+                sim.schedule_front(2);
+            }
+            true
+        });
+        assert_eq!(times, vec![(5.0, 1), (5.0, 2)]);
     }
 
     #[test]
