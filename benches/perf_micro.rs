@@ -11,11 +11,15 @@
 //! Run with: `cargo bench --bench perf_micro`
 
 use pilot_data::coordination::{keys, Key, Store};
+use pilot_data::net::{reference::StringNetwork, Bandwidth, Network};
 use pilot_data::pilot::{ManagerState, PilotCompute, PilotComputeDescription, PilotState};
 use pilot_data::scheduler::{AffinityScheduler, SchedContext, Scheduler};
 use pilot_data::simtime::Sim;
+use pilot_data::storage::simstore;
+use pilot_data::storage::{BackendKind, ProtocolParams};
 use pilot_data::topology::{Label, Topology};
 use pilot_data::unit::{ComputeUnit, ComputeUnitDescription};
+use pilot_data::util::Bytes;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -263,6 +267,79 @@ fn main() {
             results.push((format!("herd {label} wakeups/push (K={k})"), wakeups));
         }
     }
+
+    // --- network/transfer data plane: string-keyed baseline vs ids ---
+    // The ISSUE 4 acceptance rows: the interned engine (dense Vec
+    // capacities/flows, memoized id paths, single-walk priced flows)
+    // against the retained seed implementation (BTreeMap + Vec<String>
+    // per path query) on a ≥ 3-level topology with a WAN hop.
+    let uplinks: &[(&str, f64)] = &[
+        ("xsede", 1200.0),
+        ("xsede/tacc", 800.0),
+        ("xsede/tacc/lonestar", 200.0),
+        ("xsede/iu", 400.0),
+        ("xsede/iu/gw68", 120.0),
+        ("osg", 600.0),
+        ("osg/purdue", 110.0),
+    ];
+    let mut snet = StringNetwork::new();
+    let mut inet = Network::new();
+    for (label, mb) in uplinks {
+        snet.set_uplink(label, Bandwidth::mbps(*mb));
+        inet.set_uplink(label, Bandwidth::mbps(*mb));
+    }
+    let la = Label::new("xsede/tacc/lonestar");
+    let lb = Label::new("osg/purdue/nodes");
+    let lg = Label::new("xsede/iu/gw68");
+    let (ia, ib, ig) = (inet.node(&la), inet.node(&lb), inet.node(&lg));
+    bench(&mut results, "net_path (string baseline)", 300_000, || {
+        std::hint::black_box(snet.path(&la, &lb));
+    });
+    bench(&mut results, "net_path (interned memo)", 2_000_000, || {
+        std::hint::black_box(inet.path_hops(ia, ib));
+    });
+    bench(&mut results, "effective_bandwidth (string baseline)", 300_000, || {
+        std::hint::black_box(snet.effective_bandwidth(&la, &lb));
+    });
+    bench(&mut results, "effective_bandwidth (interned)", 2_000_000, || {
+        std::hint::black_box(inet.effective_bandwidth_id(ia, ib));
+    });
+    bench(&mut results, "begin_end_flow (string baseline)", 300_000, || {
+        let h = snet.begin_flow(&la, &lb);
+        snet.end_flow(&h);
+    });
+    bench(&mut results, "begin_end_flow (interned)", 2_000_000, || {
+        let h = inet.begin_flow_id(ia, ib);
+        inet.end_flow(&h);
+    });
+    bench(&mut results, "begin_flow_priced (single walk)", 2_000_000, || {
+        let (h, bw) = inet.begin_flow_priced_id(ia, ib);
+        std::hint::black_box(bw);
+        inet.end_flow(&h);
+    });
+    let ssh = ProtocolParams::defaults(BackendKind::Ssh);
+    bench(&mut results, "transfer_cost (string baseline)", 300_000, || {
+        std::hint::black_box(simstore::transfer_cost_reference(
+            &snet,
+            &la,
+            &lb,
+            Some(&lg),
+            &ssh,
+            Bytes::gb(1),
+            8,
+        ));
+    });
+    bench(&mut results, "transfer_cost (interned)", 1_000_000, || {
+        std::hint::black_box(simstore::transfer_cost_id(
+            &mut inet,
+            ia,
+            ib,
+            Some(ig),
+            &ssh,
+            Bytes::gb(1),
+            8,
+        ));
+    });
 
     // --- discrete-event engine ---
     bench(&mut results, "DES schedule+pop (1k events)", 2_000, || {

@@ -10,7 +10,12 @@
 //! Perf shape: every queue touch goes through per-pilot interned
 //! [`Key`] handles (no `format!` per event), the scheduler context is
 //! assembled in O(1) from [`ManagerState`]'s incremental indexes, and
-//! agent wakeups are **event-driven**: the driver holds a pattern
+//! every transfer start is **one walk of the interned network path**:
+//! `SimStore::staging_cost_flow` prices the transfer and registers its
+//! flow in a single [`crate::net::Network::begin_flow_priced_id`] call
+//! (the seed walked the string-keyed path twice — `transfer_cost`,
+//! then `begin_flow` — per DU upload, replication, and agent
+//! stage-in). Agent wakeups are **event-driven**: the driver holds a pattern
 //! subscription on the store's queue namespace
 //! ([`Store::subscribe_prefix`]) and translates each queue event into
 //! a targeted `TryPull` — a push onto one pilot's queue wakes that
@@ -341,12 +346,14 @@ impl SimSystem {
         }
         let gateway = self.tb.gateway.clone();
         let via = if via_gateway { Some(&gateway) } else { None };
-        let cost = self.tb.store.staging_cost(&self.tb.net, du, src_pd, dst_pd, via)?;
-        let src_label = self.tb.store.pd(src_pd)?.endpoint.label.clone();
-        let dst_label = self.tb.store.pd(dst_pd)?.endpoint.label.clone();
-        let params = self.tb.store.pd(dst_pd)?.endpoint.params.clone();
-        let outcome = attempt_transfer(&mut self.rng, params.failure_rate, cost.wire_s, self.retry);
-        let flow = self.tb.net.begin_flow(&src_label, &dst_label);
+        // One path walk prices the transfer AND registers its flow
+        // (the seed walked the path twice: `transfer_cost`, then
+        // `begin_flow`). The bandwidth is sampled before the flow's own
+        // increment, so the cost is bit-identical to the two-step.
+        let (cost, flow) =
+            self.tb.store.staging_cost_flow(&mut self.tb.net, du, src_pd, dst_pd, via)?;
+        let failure_rate = self.tb.store.pd(dst_pd)?.endpoint.params.failure_rate;
+        let outcome = attempt_transfer(&mut self.rng, failure_rate, cost.wire_s, self.retry);
         let total = cost.total() + outcome.wasted_s;
         self.sim.schedule(total, Ev::DuStaged {
             du: du.to_string(),
@@ -814,6 +821,11 @@ impl SimSystem {
         let mut ok = true;
         let mut flow: Option<FlowHandle> = None;
         let mut remote = false;
+        // Loop-invariant: the scratch PD exists (validated at
+        // submit_pilot) and its label decides whether the agent's
+        // staging flow can fuse with the cost walk below.
+        let scratch_is_pilot =
+            self.tb.store.pd(&home.scratch)?.endpoint.label == pilot_label;
         for du in &inputs {
             let Some(src) = self.tb.store.closest_replica(&self.tb.topo, du, &pilot_label) else {
                 // Input not materialized anywhere yet — treat as
@@ -828,25 +840,42 @@ impl SimSystem {
                 total += 1.0;
             } else {
                 remote = true;
-                let cost: TransferCost = self.tb.store.staging_cost(
-                    &self.tb.net,
-                    du,
-                    &src_name,
-                    &home.scratch,
-                    None,
-                )?;
                 // Staging is sequential-read + one protocol stream:
                 // the per-flow cap inside `transfer_cost` (e.g. ~20
                 // MiB/s scp) is the binding constraint, matching the
-                // paper's ~450 s per 9 GB task move.
-                let params = self.tb.store.pd(&src_name)?.endpoint.params.clone();
+                // paper's ~450 s per 9 GB task move. The first remote
+                // DU also registers the agent's staging flow — combined
+                // with its pricing into one path walk when the flow's
+                // endpoint (the pilot machine) is the scratch PD's
+                // label, which it is on every calibrated testbed.
+                let cost: TransferCost = if flow.is_none() && scratch_is_pilot {
+                    let (cost, h) = self.tb.store.staging_cost_flow(
+                        &mut self.tb.net,
+                        du,
+                        &src_name,
+                        &home.scratch,
+                        None,
+                    )?;
+                    flow = Some(h);
+                    cost
+                } else {
+                    let cost = self.tb.store.staging_cost(
+                        &self.tb.net,
+                        du,
+                        &src_name,
+                        &home.scratch,
+                        None,
+                    )?;
+                    if flow.is_none() {
+                        flow = Some(self.tb.net.begin_flow(&src_label, &pilot_label));
+                    }
+                    cost
+                };
+                let failure_rate = self.tb.store.pd(&src_name)?.endpoint.params.failure_rate;
                 let outcome =
-                    attempt_transfer(&mut self.rng, params.failure_rate, cost.wire_s, self.retry);
+                    attempt_transfer(&mut self.rng, failure_rate, cost.wire_s, self.retry);
                 ok &= outcome.succeeded;
                 total += cost.total() + outcome.wasted_s;
-                if flow.is_none() {
-                    flow = Some(self.tb.net.begin_flow(&src_label, &pilot_label));
-                }
             }
         }
         self.staged_remote.insert(cu_id.to_string(), remote);

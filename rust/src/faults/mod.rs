@@ -69,21 +69,26 @@ pub fn attempt_transfer(
 /// chaos hook) cannot leak a permanently dead store past an early
 /// return or panic. While the guard lives, blocked poppers surface
 /// [`crate::coordination::StoreError::Unavailable`] and agents park in
-/// `wait_available`; the drop-side `set_down(false)` wakes them all.
+/// `wait_available`; the drop wakes them all. The guard is
+/// re-entrant: it restores the *prior* down state, so a nested or
+/// overlapping guard (or one created while an outage was already
+/// injected by hand) does not end an outage it did not start.
 pub struct ScopedOutage {
     store: Store,
+    was_down: bool,
 }
 
 impl ScopedOutage {
     pub fn inject(store: &Store) -> ScopedOutage {
+        let was_down = store.is_down();
         store.set_down(true);
-        ScopedOutage { store: store.clone() }
+        ScopedOutage { store: store.clone(), was_down }
     }
 }
 
 impl Drop for ScopedOutage {
     fn drop(&mut self) {
-        self.store.set_down(false);
+        self.store.set_down(self.was_down);
     }
 }
 

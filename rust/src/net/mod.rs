@@ -1,4 +1,5 @@
-//! Shared-network bandwidth model for the DCI simulation.
+//! Shared-network bandwidth model for the DCI simulation — the data
+//! plane's hottest path, rebuilt around **interned link ids**.
 //!
 //! Transfers between two topology labels traverse the tree path between
 //! them (up to the lowest common ancestor and back down). Every node has
@@ -13,10 +14,43 @@
 //! lifetime), which keeps the event count linear in the number of
 //! transfers while preserving the contention *shape*: many concurrent
 //! wide-area transfers slow each other down.
+//!
+//! # Interned data plane (perf)
+//!
+//! The seed keyed every uplink capacity, live-flow counter, and path
+//! segment by freshly `join("/")`-allocated `String`s in `BTreeMap`s —
+//! a `Vec<String>` allocation per path query, on the path that runs
+//! once per transfer event in every experiment replay. The engine is
+//! now id-based:
+//!
+//! * labels intern to [`NodeId`]s in a [`crate::topology::NodeArena`];
+//!   a **link id is the node id of its child endpoint** ([`LinkId`]);
+//! * uplink capacities and live-flow counts live in dense `Vec`s
+//!   indexed by link id (O(1), no tree lookups);
+//! * `(src, dst)` paths are computed once and memoized
+//!   ([`Network::path_ids`]); steady-state path access is one hash of
+//!   the id pair returning a boxed id slice;
+//! * [`Network::effective_bandwidth_id`], [`Network::begin_flow_id`],
+//!   [`Network::end_flow`], and [`Network::congestion_id`] are
+//!   **allocation-free post-memo** — they iterate the memoized slice
+//!   and index the dense vectors;
+//! * [`Network::begin_flow_priced_id`] samples the flow's bandwidth
+//!   *and* registers it in one walk, killing the
+//!   `transfer_cost`-then-`begin_flow` double traversal on transfer
+//!   start (see `storage::simstore::transfer_cost_flow`);
+//! * [`FlowHandle`] is two node ids (`Copy`); [`Network::end_flow`]
+//!   re-reads the memoized path instead of carrying owned strings.
+//!
+//! The label-keyed methods (`effective_bandwidth`, `begin_flow`,
+//! `congestion`, `path`, `transfer_secs`) are kept as **compat shims**:
+//! they probe the arena per label prefix (string slicing, no
+//! allocation) and are property-tested identical to both the id walk
+//! and the retained seed implementation in [`reference`]. New code
+//! should intern once via [`Network::node`] and stay on ids.
 
-use crate::topology::Label;
+use crate::coordination::FxMap;
+use crate::topology::{Label, NodeArena, NodeId};
 use crate::util::Bytes;
-use std::collections::BTreeMap;
 
 /// Bandwidth in bytes/second.
 #[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
@@ -36,37 +70,80 @@ impl Bandwidth {
     }
 }
 
-/// The network: per-uplink capacity and live flow counts.
-#[derive(Debug)]
+/// A link is the uplink above a topology node, identified by that
+/// node's interned id.
+pub type LinkId = NodeId;
+
+/// The network: interned topology nodes, dense per-link capacity and
+/// live-flow vectors, and a `(src, dst)` → link-id-path memo table.
+#[derive(Debug, Clone)]
 pub struct Network {
-    /// Capacity of the uplink above each node (keyed by full label path).
-    uplink: BTreeMap<String, Bandwidth>,
+    arena: NodeArena,
+    /// Uplink capacity override per node (bytes/s); `NaN` = unset
+    /// (falls back to `default_uplink`). Indexed by [`LinkId`].
+    cap: Vec<f64>,
+    /// Live flows per link. Indexed by [`LinkId`].
+    flows: Vec<u32>,
     /// Default capacity for unlisted uplinks.
     default_uplink: Option<Bandwidth>,
-    /// Live flows per link.
-    flows: BTreeMap<String, u32>,
     /// Loopback bandwidth when src == dst (shared-FS copy / local link).
     loopback: Bandwidth,
+    /// (src, dst) -> crossed link ids, a-side then b-side, each in
+    /// increasing depth order (the id image of [`Network::path`]).
+    path_memo: FxMap<(u32, u32), Box<[u32]>>,
 }
 
-/// Handle for a started flow; pass back to [`Network::end_flow`].
-#[derive(Debug, Clone)]
+/// Handle for a started flow; pass back to [`Network::end_flow`]. Two
+/// interned endpoints — the path is re-read from the memo table, so the
+/// handle is `Copy` and allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlowHandle {
-    links: Vec<String>,
+    a: NodeId,
+    b: NodeId,
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Network::new()
+    }
 }
 
 impl Network {
     pub fn new() -> Network {
         Network {
-            uplink: BTreeMap::new(),
+            arena: NodeArena::new(),
+            cap: vec![f64::NAN],
+            flows: vec![0],
             default_uplink: Some(Bandwidth::mbps(100.0)),
-            flows: BTreeMap::new(),
             loopback: Bandwidth::mbps(400.0),
+            path_memo: FxMap::default(),
         }
     }
 
+    /// Grow the dense vectors to cover nodes interned since last call.
+    fn sync(&mut self) {
+        while self.cap.len() < self.arena.len() {
+            self.cap.push(f64::NAN);
+            self.flows.push(0);
+        }
+    }
+
+    /// Intern a label (O(1) full-string hash once known). The returned
+    /// id is valid for this `Network` only.
+    pub fn node(&mut self, label: &Label) -> NodeId {
+        let id = self.arena.intern(label);
+        self.sync();
+        id
+    }
+
+    /// Full label path of an interned node (diagnostics/tests).
+    pub fn link_name(&self, l: LinkId) -> &str {
+        self.arena.path_str(l)
+    }
+
     pub fn set_uplink(&mut self, label: &str, bw: Bandwidth) {
-        self.uplink.insert(Label::new(label).0, bw);
+        let id = self.node(&Label::new(label));
+        self.cap[id.index()] = bw.0;
     }
 
     pub fn set_default_uplink(&mut self, bw: Bandwidth) {
@@ -77,15 +154,183 @@ impl Network {
         self.loopback = bw;
     }
 
-    fn capacity(&self, link: &str) -> Bandwidth {
-        self.uplink
-            .get(link)
-            .copied()
-            .or(self.default_uplink)
-            .unwrap_or(Bandwidth::mbps(100.0))
+    fn default_cap(&self) -> f64 {
+        self.default_uplink.unwrap_or(Bandwidth::mbps(100.0)).0
     }
 
-    /// Links (child-label keyed) crossed between `a` and `b`.
+    fn cap_at(&self, idx: usize) -> f64 {
+        let c = self.cap[idx];
+        if c.is_nan() {
+            self.default_cap()
+        } else {
+            c
+        }
+    }
+
+    /// Memoize the (a, b) link path if not yet known (the only
+    /// allocation in the id plane; every later access is one hash of
+    /// the id pair).
+    fn ensure_path(&mut self, a: NodeId, b: NodeId) {
+        if self.path_memo.contains_key(&(a.0, b.0)) {
+            return;
+        }
+        let links = Self::compute_path(&self.arena, a, b);
+        self.path_memo.insert((a.0, b.0), links);
+    }
+
+    fn compute_path(arena: &NodeArena, a: NodeId, b: NodeId) -> Box<[u32]> {
+        let lca = arena.lca(a, b);
+        let cd = arena.depth(lca);
+        let hops = (arena.depth(a) - cd) + (arena.depth(b) - cd);
+        let mut links: Vec<u32> = Vec::with_capacity(hops as usize);
+        // a-side then b-side, each in increasing depth order — the id
+        // image of the string `path()` ordering.
+        for side in [a, b] {
+            let start = links.len();
+            let mut n = side;
+            while n != lca {
+                links.push(n.0);
+                n = arena.parent(n);
+            }
+            links[start..].reverse();
+        }
+        links.into_boxed_slice()
+    }
+
+    /// Link ids crossed between `a` and `b`, from the memo table
+    /// (allocates only the returned `Vec` — diagnostics and property
+    /// tests; the flow/bandwidth paths iterate the memo slice
+    /// directly).
+    pub fn path_ids(&mut self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        self.ensure_path(a, b);
+        self.path_memo[&(a.0, b.0)].iter().map(|&i| NodeId(i)).collect()
+    }
+
+    /// Hop count of the memoized (a, b) path — the zero-alloc path
+    /// query.
+    pub fn path_hops(&mut self, a: NodeId, b: NodeId) -> u32 {
+        self.ensure_path(a, b);
+        self.path_memo[&(a.0, b.0)].len() as u32
+    }
+
+    /// Effective bandwidth a new flow from `a` to `b` would get right
+    /// now: the bottleneck link's fair share. Allocation-free
+    /// post-memo.
+    pub fn effective_bandwidth_id(&mut self, a: NodeId, b: NodeId) -> Bandwidth {
+        if a == b {
+            return self.loopback;
+        }
+        self.ensure_path(a, b);
+        let dcap = self.default_cap();
+        let links = &self.path_memo[&(a.0, b.0)];
+        let mut bw = f64::INFINITY;
+        for &l in links.iter() {
+            let idx = l as usize;
+            let cap = if self.cap[idx].is_nan() { dcap } else { self.cap[idx] };
+            let sharers = (self.flows[idx] + 1) as f64;
+            bw = bw.min(cap / sharers);
+        }
+        Bandwidth(bw)
+    }
+
+    /// Register a flow on the (a, b) path; returns its handle.
+    /// Allocation-free post-memo.
+    pub fn begin_flow_id(&mut self, a: NodeId, b: NodeId) -> FlowHandle {
+        if a != b {
+            self.ensure_path(a, b);
+            let links = &self.path_memo[&(a.0, b.0)];
+            for &l in links.iter() {
+                self.flows[l as usize] += 1;
+            }
+        }
+        FlowHandle { a, b }
+    }
+
+    /// Sample the bandwidth a new (a, b) flow gets *and* register it,
+    /// in one path walk — the transfer-start fast path (the seed
+    /// walked the path twice: `transfer_cost` then `begin_flow`).
+    /// Identical numbers to `effective_bandwidth_id` followed by
+    /// `begin_flow_id`.
+    pub fn begin_flow_priced_id(&mut self, a: NodeId, b: NodeId) -> (FlowHandle, Bandwidth) {
+        if a == b {
+            return (FlowHandle { a, b }, self.loopback);
+        }
+        self.ensure_path(a, b);
+        let dcap = self.default_cap();
+        let links = &self.path_memo[&(a.0, b.0)];
+        let mut bw = f64::INFINITY;
+        for &l in links.iter() {
+            let idx = l as usize;
+            let cap = if self.cap[idx].is_nan() { dcap } else { self.cap[idx] };
+            // Each link appears once per path, so reading the count
+            // before this flow's own increment matches the seed's
+            // sample-then-register order exactly.
+            let sharers = (self.flows[idx] + 1) as f64;
+            bw = bw.min(cap / sharers);
+            self.flows[idx] += 1;
+        }
+        (FlowHandle { a, b }, Bandwidth(bw))
+    }
+
+    /// Release a flow. Allocation-free: re-reads the memoized path the
+    /// matching `begin_flow*` created.
+    pub fn end_flow(&mut self, h: &FlowHandle) {
+        if h.a == h.b {
+            return;
+        }
+        self.ensure_path(h.a, h.b);
+        let links = &self.path_memo[&(h.a.0, h.b.0)];
+        for &l in links.iter() {
+            let idx = l as usize;
+            self.flows[idx] = self.flows[idx].saturating_sub(1);
+        }
+    }
+
+    /// Live flow count on the busiest link of the path (diagnostics).
+    pub fn congestion_id(&mut self, a: NodeId, b: NodeId) -> u32 {
+        if a == b {
+            return 0;
+        }
+        self.ensure_path(a, b);
+        let links = &self.path_memo[&(a.0, b.0)];
+        links.iter().map(|&l| self.flows[l as usize]).max().unwrap_or(0)
+    }
+
+    // ---- label-keyed compat shims ---------------------------------
+
+    /// Walk the (a, b) label path calling `f(capacity, flows)` per
+    /// link: per-prefix arena probes over string slices, no
+    /// allocations. A prefix the arena has never seen carries the
+    /// default capacity and zero flows — exactly what the seed's
+    /// `BTreeMap` misses meant. Returns whether any link was visited.
+    fn for_each_link_str<F: FnMut(f64, u32)>(&self, a: &Label, b: &Label, mut f: F) -> bool {
+        let common = a.common_prefix_len(b);
+        let mut any = false;
+        for lab in [a, b] {
+            let s = lab.0.as_str();
+            if s.is_empty() {
+                continue;
+            }
+            let mut depth = 0usize;
+            let ends = s.match_indices('/').map(|(i, _)| i).chain(std::iter::once(s.len()));
+            for end in ends {
+                depth += 1;
+                if depth <= common {
+                    continue;
+                }
+                any = true;
+                match self.arena.lookup_str(&s[..end]) {
+                    Some(id) => f(self.cap_at(id.index()), self.flows[id.index()]),
+                    None => f(self.default_cap(), 0),
+                }
+            }
+        }
+        any
+    }
+
+    /// Links (child-label keyed) crossed between `a` and `b`. Compat
+    /// shim allocating one `String` per link — tests and diagnostics;
+    /// hot paths use [`Network::path_ids`] / the memo slice.
     pub fn path(&self, a: &Label, b: &Label) -> Vec<String> {
         let ac = a.components();
         let bc = b.components();
@@ -100,49 +345,32 @@ impl Network {
         links
     }
 
-    /// Effective bandwidth a new flow from `a` to `b` would get right
-    /// now: the bottleneck link's fair share.
+    /// Label-keyed [`Network::effective_bandwidth_id`] (compat shim;
+    /// allocation-free via per-prefix arena probes).
     pub fn effective_bandwidth(&self, a: &Label, b: &Label) -> Bandwidth {
-        let links = self.path(a, b);
-        if links.is_empty() {
-            return self.loopback;
-        }
         let mut bw = f64::INFINITY;
-        for link in &links {
-            let cap = self.capacity(link).0;
-            let sharers = (*self.flows.get(link).unwrap_or(&0) + 1) as f64;
-            bw = bw.min(cap / sharers);
+        let any = self.for_each_link_str(a, b, |cap, flows| {
+            bw = bw.min(cap / (flows + 1) as f64);
+        });
+        if any {
+            Bandwidth(bw)
+        } else {
+            self.loopback
         }
-        Bandwidth(bw)
     }
 
-    /// Register a flow on the path; returns its handle.
+    /// Label-keyed [`Network::begin_flow_id`] (compat shim; interns).
     pub fn begin_flow(&mut self, a: &Label, b: &Label) -> FlowHandle {
-        let links = self.path(a, b);
-        for link in &links {
-            *self.flows.entry(link.clone()).or_insert(0) += 1;
-        }
-        FlowHandle { links }
+        let ai = self.node(a);
+        let bi = self.node(b);
+        self.begin_flow_id(ai, bi)
     }
 
-    pub fn end_flow(&mut self, h: &FlowHandle) {
-        for link in &h.links {
-            if let Some(n) = self.flows.get_mut(link) {
-                *n = n.saturating_sub(1);
-                if *n == 0 {
-                    self.flows.remove(link);
-                }
-            }
-        }
-    }
-
-    /// Live flow count on the busiest link of the path (diagnostics).
+    /// Label-keyed [`Network::congestion_id`] (compat shim).
     pub fn congestion(&self, a: &Label, b: &Label) -> u32 {
-        self.path(a, b)
-            .iter()
-            .map(|l| *self.flows.get(l).unwrap_or(&0))
-            .max()
-            .unwrap_or(0)
+        let mut m = 0u32;
+        self.for_each_link_str(a, b, |_, flows| m = m.max(flows));
+        m
     }
 
     /// Transfer duration for `size` at the *current* effective bandwidth
@@ -153,6 +381,141 @@ impl Network {
             return f64::INFINITY;
         }
         size.as_f64() / bw
+    }
+}
+
+pub mod reference {
+    //! The seed's string-keyed data plane, retained verbatim as the
+    //! property-test oracle and the `perf_micro` "before" baseline:
+    //! uplinks and flow counts in `BTreeMap<String, _>`, a
+    //! `Vec<String>` allocated per path query. Nothing in the system
+    //! runs on this — it exists so the interned engine can be proved
+    //! identical and measured against.
+
+    use super::Bandwidth;
+    use crate::topology::Label;
+    use crate::util::Bytes;
+    use std::collections::BTreeMap;
+
+    /// The seed `Network`: per-uplink capacity and live flow counts
+    /// keyed by full label paths.
+    #[derive(Debug, Clone)]
+    pub struct StringNetwork {
+        uplink: BTreeMap<String, Bandwidth>,
+        default_uplink: Option<Bandwidth>,
+        flows: BTreeMap<String, u32>,
+        loopback: Bandwidth,
+    }
+
+    /// The seed flow handle: owned link strings.
+    #[derive(Debug, Clone)]
+    pub struct StringFlowHandle {
+        links: Vec<String>,
+    }
+
+    impl Default for StringNetwork {
+        fn default() -> Self {
+            StringNetwork::new()
+        }
+    }
+
+    impl StringNetwork {
+        pub fn new() -> StringNetwork {
+            StringNetwork {
+                uplink: BTreeMap::new(),
+                default_uplink: Some(Bandwidth::mbps(100.0)),
+                flows: BTreeMap::new(),
+                loopback: Bandwidth::mbps(400.0),
+            }
+        }
+
+        pub fn set_uplink(&mut self, label: &str, bw: Bandwidth) {
+            self.uplink.insert(Label::new(label).0, bw);
+        }
+
+        pub fn set_default_uplink(&mut self, bw: Bandwidth) {
+            self.default_uplink = Some(bw);
+        }
+
+        pub fn set_loopback(&mut self, bw: Bandwidth) {
+            self.loopback = bw;
+        }
+
+        fn capacity(&self, link: &str) -> Bandwidth {
+            self.uplink
+                .get(link)
+                .copied()
+                .or(self.default_uplink)
+                .unwrap_or(Bandwidth::mbps(100.0))
+        }
+
+        pub fn path(&self, a: &Label, b: &Label) -> Vec<String> {
+            let ac = a.components();
+            let bc = b.components();
+            let common = a.common_prefix_len(b);
+            let mut links = Vec::new();
+            for depth in common..ac.len() {
+                links.push(ac[..=depth].join("/"));
+            }
+            for depth in common..bc.len() {
+                links.push(bc[..=depth].join("/"));
+            }
+            links
+        }
+
+        pub fn effective_bandwidth(&self, a: &Label, b: &Label) -> Bandwidth {
+            let links = self.path(a, b);
+            if links.is_empty() {
+                return self.loopback;
+            }
+            let mut bw = f64::INFINITY;
+            for link in &links {
+                let cap = self.capacity(link).0;
+                let sharers = (*self.flows.get(link).unwrap_or(&0) + 1) as f64;
+                bw = bw.min(cap / sharers);
+            }
+            Bandwidth(bw)
+        }
+
+        pub fn begin_flow(&mut self, a: &Label, b: &Label) -> StringFlowHandle {
+            let links = self.path(a, b);
+            for link in &links {
+                *self.flows.entry(link.clone()).or_insert(0) += 1;
+            }
+            StringFlowHandle { links }
+        }
+
+        pub fn end_flow(&mut self, h: &StringFlowHandle) {
+            for link in &h.links {
+                if let Some(n) = self.flows.get_mut(link) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        self.flows.remove(link);
+                    }
+                }
+            }
+        }
+
+        pub fn congestion(&self, a: &Label, b: &Label) -> u32 {
+            self.path(a, b)
+                .iter()
+                .map(|l| *self.flows.get(l).unwrap_or(&0))
+                .max()
+                .unwrap_or(0)
+        }
+
+        pub fn transfer_secs(&self, a: &Label, b: &Label, size: Bytes) -> f64 {
+            let bw = self.effective_bandwidth(a, b).0;
+            if bw <= 0.0 {
+                return f64::INFINITY;
+            }
+            size.as_f64() / bw
+        }
+
+        /// Live flow table (oracle comparisons).
+        pub fn flows(&self) -> &BTreeMap<String, u32> {
+            &self.flows
+        }
     }
 }
 
@@ -172,10 +535,13 @@ mod tests {
 
     #[test]
     fn loopback_when_same_label() {
-        let net = Network::new();
+        let mut net = Network::new();
         let a = l("xsede/tacc/lonestar");
         assert!(net.path(&a, &a).is_empty());
         assert_eq!(net.effective_bandwidth(&a, &a).0, net.loopback.0);
+        let ai = net.node(&a);
+        assert!(net.path_ids(ai, ai).is_empty());
+        assert_eq!(net.effective_bandwidth_id(ai, ai).0, net.loopback.0);
     }
 
     #[test]
@@ -189,6 +555,39 @@ mod tests {
     }
 
     #[test]
+    fn path_ids_mirror_string_path() {
+        let mut net = Network::new();
+        let a = l("xsede/tacc/lonestar");
+        let b = l("osg/purdue");
+        let (ai, bi) = (net.node(&a), net.node(&b));
+        let by_id: Vec<String> = net
+            .path_ids(ai, bi)
+            .iter()
+            .map(|&id| net.link_name(id).to_string())
+            .collect();
+        assert_eq!(by_id, net.path(&a, &b));
+        assert_eq!(net.path_hops(ai, bi), 5);
+        // Partial overlap: same site, different machine.
+        let c = l("xsede/tacc/stampede");
+        let ci = net.node(&c);
+        let by_id: Vec<String> = net
+            .path_ids(ai, ci)
+            .iter()
+            .map(|&id| net.link_name(id).to_string())
+            .collect();
+        assert_eq!(by_id, net.path(&a, &c));
+        // Ancestor/descendant: one side of the walk is empty.
+        let tacc = l("xsede/tacc");
+        let ti = net.node(&tacc);
+        let by_id: Vec<String> = net
+            .path_ids(ti, ai)
+            .iter()
+            .map(|&id| net.link_name(id).to_string())
+            .collect();
+        assert_eq!(by_id, net.path(&tacc, &a));
+    }
+
+    #[test]
     fn bottleneck_is_min_capacity() {
         let mut net = Network::new();
         net.set_uplink("xsede", Bandwidth::mbps(1000.0));
@@ -198,6 +597,8 @@ mod tests {
         net.set_uplink("osg/purdue", Bandwidth::mbps(1000.0));
         let bw = net.effective_bandwidth(&l("xsede/tacc/lonestar"), &l("osg/purdue"));
         assert_eq!(bw.0, Bandwidth::mbps(10.0).0);
+        let (a, b) = (net.node(&l("xsede/tacc/lonestar")), net.node(&l("osg/purdue")));
+        assert_eq!(net.effective_bandwidth_id(a, b).0, Bandwidth::mbps(10.0).0);
     }
 
     #[test]
@@ -215,6 +616,26 @@ mod tests {
         assert!((with_two - solo / 3.0).abs() < 1.0);
         net.end_flow(&h1);
         assert!((net.effective_bandwidth(&a, &b).0 - solo / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn priced_begin_equals_sample_then_register() {
+        let mut net = Network::new();
+        net.set_uplink("x", Bandwidth::mbps(50.0));
+        let (a, b) = (net.node(&l("x/m1")), net.node(&l("y/m2")));
+        // Pre-load one flow so sharers > 1.
+        let _h0 = net.begin_flow_id(a, b);
+        let sampled = net.effective_bandwidth_id(a, b);
+        let (h, priced) = net.begin_flow_priced_id(a, b);
+        assert_eq!(sampled.0.to_bits(), priced.0.to_bits());
+        assert_eq!(net.congestion_id(a, b), 2);
+        net.end_flow(&h);
+        assert_eq!(net.congestion_id(a, b), 1);
+        // Loopback: priced on self is the loopback rate, no flows.
+        let (h_self, bw_self) = net.begin_flow_priced_id(a, a);
+        assert_eq!(bw_self.0, net.loopback.0);
+        net.end_flow(&h_self);
+        assert_eq!(net.congestion_id(a, b), 1);
     }
 
     #[test]
@@ -260,6 +681,141 @@ mod tests {
                 } else {
                     Err("residual flows".into())
                 }
+            },
+        );
+    }
+
+    /// Tentpole acceptance: on randomized topologies and random flow
+    /// interleavings, the id plane, the label compat shims, and the
+    /// retained seed engine ([`reference::StringNetwork`]) agree
+    /// bitwise — paths, bandwidths, congestion, and the full live-flow
+    /// table after every operation.
+    #[test]
+    fn id_plane_matches_string_reference_property() {
+        use super::reference::{StringFlowHandle, StringNetwork};
+
+        #[derive(Debug)]
+        enum Op {
+            Begin(usize, usize),
+            End(usize),
+            Check(usize, usize),
+        }
+
+        crate::prop::check_default(
+            |rng| {
+                let mk = |rng: &mut crate::rng::Rng| {
+                    let depth = crate::prop::gen::usize_in(rng, 0, 5);
+                    let parts: Vec<String> =
+                        (0..depth).map(|d| format!("s{}", rng.below(3 + d as u64))).collect();
+                    parts.join("/")
+                };
+                let labels: Vec<String> =
+                    (0..crate::prop::gen::usize_in(rng, 2, 7)).map(|_| mk(rng)).collect();
+                let uplinks: Vec<(String, f64)> = (0..crate::prop::gen::usize_in(rng, 0, 6))
+                    .map(|_| (mk(rng), rng.range_f64(1.0, 500.0)))
+                    .collect();
+                let default_mb = rng.range_f64(10.0, 200.0);
+                let n = labels.len();
+                let ops: Vec<Op> = (0..crate::prop::gen::usize_in(rng, 1, 40))
+                    .map(|_| {
+                        let a = rng.below(n as u64) as usize;
+                        let b = rng.below(n as u64) as usize;
+                        match rng.below(3) {
+                            0 => Op::Begin(a, b),
+                            1 => Op::End(rng.below(64) as usize),
+                            _ => Op::Check(a, b),
+                        }
+                    })
+                    .collect();
+                (labels, uplinks, default_mb, ops)
+            },
+            |(labels, uplinks, default_mb, ops)| {
+                let labels: Vec<Label> = labels.iter().map(|s| Label::new(s)).collect();
+                let mut net = Network::new();
+                let mut sref = StringNetwork::new();
+                net.set_default_uplink(Bandwidth::mbps(*default_mb));
+                sref.set_default_uplink(Bandwidth::mbps(*default_mb));
+                for (label, mb) in uplinks {
+                    net.set_uplink(label, Bandwidth::mbps(*mb));
+                    sref.set_uplink(label, Bandwidth::mbps(*mb));
+                }
+                let ids: Vec<NodeId> = labels.iter().map(|la| net.node(la)).collect();
+                let mut handles: Vec<(FlowHandle, StringFlowHandle)> = Vec::new();
+                for op in ops {
+                    match op {
+                        Op::Begin(a, b) => {
+                            let h = net.begin_flow_id(ids[*a], ids[*b]);
+                            let hr = sref.begin_flow(&labels[*a], &labels[*b]);
+                            handles.push((h, hr));
+                        }
+                        Op::End(i) => {
+                            if !handles.is_empty() {
+                                let (h, hr) = handles.remove(i % handles.len());
+                                net.end_flow(&h);
+                                sref.end_flow(&hr);
+                            }
+                        }
+                        Op::Check(..) => {}
+                    }
+                    // After every op: full agreement on paths, rates,
+                    // and congestion for the checked pair (or the last
+                    // touched pair for Begin/End).
+                    let (a, b) = match op {
+                        Op::Begin(a, b) | Op::Check(a, b) => (*a, *b),
+                        Op::End(_) => (0, labels.len() - 1),
+                    };
+                    let (la, lb) = (&labels[a], &labels[b]);
+                    let (ia, ib) = (ids[a], ids[b]);
+                    let want = sref.effective_bandwidth(la, lb).0;
+                    let got_id = net.effective_bandwidth_id(ia, ib).0;
+                    let got_str = net.effective_bandwidth(la, lb).0;
+                    if want.to_bits() != got_id.to_bits() {
+                        return Err(format!("bw({la},{lb}): ref {want} != id {got_id}"));
+                    }
+                    if want.to_bits() != got_str.to_bits() {
+                        return Err(format!("bw({la},{lb}): ref {want} != shim {got_str}"));
+                    }
+                    if sref.congestion(la, lb) != net.congestion_id(ia, ib)
+                        || sref.congestion(la, lb) != net.congestion(la, lb)
+                    {
+                        return Err(format!("congestion({la},{lb}) diverges"));
+                    }
+                    let id_path: Vec<String> = net
+                        .path_ids(ia, ib)
+                        .iter()
+                        .map(|&id| net.link_name(id).to_string())
+                        .collect();
+                    if id_path != sref.path(la, lb) {
+                        return Err(format!(
+                            "path({la},{lb}): id {id_path:?} != ref {:?}",
+                            sref.path(la, lb)
+                        ));
+                    }
+                }
+                // Final flow tables agree: every reference entry matches
+                // the dense vector, and every non-zero dense count has a
+                // reference entry.
+                for (link, n) in sref.flows() {
+                    let id = net
+                        .arena
+                        .lookup_str(link)
+                        .ok_or_else(|| format!("link {link} never interned"))?;
+                    if net.flows[id.index()] != *n {
+                        return Err(format!(
+                            "flows[{link}]: dense {} != ref {n}",
+                            net.flows[id.index()]
+                        ));
+                    }
+                }
+                for (idx, n) in net.flows.iter().enumerate() {
+                    if *n > 0 {
+                        let name = net.arena.path_str(NodeId(idx as u32));
+                        if sref.flows().get(name).copied().unwrap_or(0) != *n {
+                            return Err(format!("dense flows[{name}]={n} missing in ref"));
+                        }
+                    }
+                }
+                Ok(())
             },
         );
     }

@@ -339,6 +339,15 @@ impl ManagerState {
             let k = keys::du(&d.id);
             store.hset(&k, "state", d.state.name())?;
             store.hset_if_absent(&k, "descr", || d.description().to_json().to_string_compact())?;
+            // Replica labels (the du_locations index) as a JSON array,
+            // overwritten on every checkpoint — this is what lets a
+            // reconnected manager score data affinity immediately
+            // instead of warming up from zero.
+            let locs = self.du_locations.get(&d.id).map(Vec::as_slice).unwrap_or(&[]);
+            let arr = crate::json::Json::Arr(
+                locs.iter().map(|l| crate::json::Json::Str(l.0.clone())).collect(),
+            );
+            store.hset(&k, "replicas", &arr.to_string_compact())?;
         }
         Ok(())
     }
@@ -405,14 +414,27 @@ impl ManagerState {
             if let Some(description) = store.du_description(&id)? {
                 let mut du = DataUnit::new((*description).clone());
                 du.id = id.clone();
-                st.dus.insert(id, du);
+                st.dus.insert(id.clone(), du);
+            }
+            // Restore the replica-location index from the checkpointed
+            // label array, so data-affinity scoring is warm immediately
+            // after a manager restart (same placement decisions as
+            // before the restart — property-tested).
+            if let Some(raw) = store.hget(&key, "replicas")? {
+                if let Ok(parsed) = crate::json::parse(&raw) {
+                    if let Some(arr) = parsed.as_arr() {
+                        for label in arr {
+                            if let Some(s) = label.as_str() {
+                                st.note_replica(&id, &Label::new(s));
+                            }
+                        }
+                    }
+                }
             }
         }
         // Rebuild the live queue-depth counters from the store's agent
         // queues so a reconnected manager schedules against real
-        // backlog, not empty indexes. (The replica-location index
-        // cannot be rebuilt — replica labels are not checkpointed —
-        // so data-affinity scoring warms up as new transfers land.)
+        // backlog, not empty indexes.
         for key in store.keys_with_prefix(keys::PILOT_QUEUE_PREFIX)? {
             let pilot = key.trim_start_matches(keys::PILOT_QUEUE_PREFIX).to_string();
             let depth = store.llen(&key)?;
@@ -610,6 +632,126 @@ mod tests {
         st.note_replica("du-1", &l2);
         assert_eq!(st.du_locations()["du-1"], vec![l1.clone(), l2]);
         assert!(st.du_locations().get("du-2").is_none());
+    }
+
+    /// Satellite (ROADMAP): DU replica labels are checkpointed into the
+    /// store mirror, so `reconnect` restores `du_locations` and the
+    /// scheduler's data-affinity scoring does not warm up from zero
+    /// after a manager restart. Property: on randomized fleets,
+    /// replica sets, and CU mixes, scores and placements are identical
+    /// pre/post restart.
+    #[test]
+    fn reconnect_restores_data_affinity_scores_property() {
+        use crate::scheduler::{AffinityScheduler, SchedContext, Scheduler};
+        use crate::topology::Topology;
+        use crate::unit::{ComputeUnitDescription, DataUnitDescription, FileRef};
+
+        crate::prop::check_default(
+            |rng| {
+                let sites = ["osg/a", "osg/b", "xsede/tacc/ls", "xsede/tacc/st", "ec2/east"];
+                let n_pilots = crate::prop::gen::usize_in(rng, 1, 5);
+                let pilots: Vec<(u32, String, bool, u32)> = (0..n_pilots)
+                    .map(|_| {
+                        (
+                            1 + rng.below(16) as u32,
+                            rng.choose(&sites).to_string(),
+                            rng.chance(0.8),
+                            rng.below(4) as u32,
+                        )
+                    })
+                    .collect();
+                let n_dus = crate::prop::gen::usize_in(rng, 1, 5);
+                let dus: Vec<(u64, Vec<String>)> = (0..n_dus)
+                    .map(|_| {
+                        (
+                            1 + rng.below(64),
+                            (0..rng.below(4)).map(|_| rng.choose(&sites).to_string()).collect(),
+                        )
+                    })
+                    .collect();
+                let n_cus = crate::prop::gen::usize_in(rng, 1, 6);
+                let cus: Vec<(u32, Option<String>, Vec<usize>)> = (0..n_cus)
+                    .map(|_| {
+                        (
+                            1 + rng.below(4) as u32,
+                            if rng.chance(0.3) {
+                                Some(rng.choose(&sites).to_string())
+                            } else {
+                                None
+                            },
+                            (0..1 + rng.below(3)).map(|_| rng.below(n_dus as u64) as usize).collect(),
+                        )
+                    })
+                    .collect();
+                (pilots, dus, cus)
+            },
+            |(pilots, dus, cus)| {
+                let mut st = ManagerState::new();
+                for (cores, site, active, busy) in pilots {
+                    let mut p = PilotCompute::new(PilotComputeDescription {
+                        service_url: "batch://m".into(),
+                        cores: *cores,
+                        walltime_s: 1e6,
+                        affinity: Some(Label::new(site)),
+                    });
+                    p.state = if *active { PilotState::Active } else { PilotState::Queued };
+                    p.busy_slots = (*busy).min(*cores);
+                    st.add_pilot(p);
+                }
+                let mut du_ids = Vec::new();
+                for (gb, labels) in dus {
+                    let id = st.add_du(DataUnit::new(DataUnitDescription {
+                        name: "d".into(),
+                        files: vec![FileRef::sized("f", Bytes::gb(*gb))],
+                        affinity: None,
+                    }));
+                    for l in labels {
+                        st.note_replica(&id, &Label::new(l));
+                    }
+                    du_ids.push(id);
+                }
+                let store = Store::new();
+                st.checkpoint(&store).map_err(|e| e.to_string())?;
+                let back = ManagerState::reconnect(&store).map_err(|e| e.to_string())?;
+                if back.du_locations() != st.du_locations() {
+                    return Err(format!(
+                        "du_locations not restored:\n pre:  {:?}\n post: {:?}",
+                        st.du_locations(),
+                        back.du_locations()
+                    ));
+                }
+                let topo = Topology::new();
+                let sched_a = AffinityScheduler::new(None);
+                let sched_b = AffinityScheduler::new(None);
+                for (cores, aff, inputs) in cus {
+                    let cu = ComputeUnit::new(ComputeUnitDescription {
+                        executable: "x".into(),
+                        cores: *cores,
+                        input_data: inputs.iter().map(|i| du_ids[*i].clone()).collect(),
+                        affinity: aff.as_deref().map(Label::new),
+                        ..Default::default()
+                    });
+                    let ctx_pre = SchedContext::from_state(&topo, &st);
+                    let ctx_post = SchedContext::from_state(&topo, &back);
+                    for p in st.pilots.values() {
+                        let pre = ctx_pre.data_score(&cu, p.affinity_ref());
+                        let post = ctx_post.data_score(&cu, p.affinity_ref());
+                        if pre.to_bits() != post.to_bits() {
+                            return Err(format!(
+                                "data_score({}, {}) pre {pre} != post {post}",
+                                cu.id, p.id
+                            ));
+                        }
+                    }
+                    let a = sched_a.place(&cu, &ctx_pre);
+                    let b = sched_b.place(&cu, &ctx_post);
+                    if a != b {
+                        return Err(format!("placement pre {a:?} != post {b:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

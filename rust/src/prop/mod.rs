@@ -356,6 +356,26 @@ mod tests {
         );
     }
 
+    /// ISSUE 4 (interned data plane): experiment outputs must stay
+    /// deterministic per seed through the id-based network engine — a
+    /// hash-map-iteration-order leak anywhere in the path memo / arena
+    /// would show up here as run-to-run drift. Together with the
+    /// bitwise equivalence properties (id vs string reference in
+    /// `topology`, `net`, and `simstore`), this is what pins fig7/fig8
+    /// outputs to their pre-refactor traces.
+    #[test]
+    fn fig7_fig8_outputs_deterministic_post_interning() {
+        let render = |tables: &[crate::metrics::Table]| -> Vec<String> {
+            tables.iter().map(|t| t.render()).collect()
+        };
+        let f7a = crate::experiments::fig7::run(42).unwrap();
+        let f7b = crate::experiments::fig7::run(42).unwrap();
+        assert_eq!(render(&f7a), render(&f7b), "fig7 output drifted between runs");
+        let f8a = crate::experiments::fig8::run(7).unwrap();
+        let f8b = crate::experiments::fig8::run(7).unwrap();
+        assert_eq!(render(&f8a), render(&f8b), "fig8 output drifted between runs");
+    }
+
     #[test]
     fn json_roundtrip_property() {
         use crate::json::{parse, Json};

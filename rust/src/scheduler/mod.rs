@@ -120,13 +120,18 @@ impl<'a> SchedContext<'a> {
     /// Data-affinity score of running `cu` on a pilot at `label`:
     /// size-weighted affinity to the closest replica of each input DU.
     /// Higher is better; DUs with no replica yet contribute 0.
+    ///
+    /// Affinities go through the topology's interned-id walk
+    /// ([`Topology::affinity_interned`]): one full-string hash per
+    /// label, then integer LCA math — this runs once per (CU input,
+    /// candidate pilot) on every placement decision.
     pub fn data_score(&self, cu: &ComputeUnit, label: &Label) -> f64 {
         let mut score = 0.0;
         for du in &cu.description.input_data {
             let Some(locs) = self.du_locations.get(du) else { continue };
             let best = locs
                 .iter()
-                .map(|l| self.topo.affinity(label, l))
+                .map(|l| self.topo.affinity_interned(label, l))
                 .fold(0.0, f64::max);
             let size = self
                 .state

@@ -23,16 +23,20 @@
 //! idle cost is zero regardless of agent count.
 //!
 //! A Pilot-Compute marshals *multiple* resource slots (paper §3–4), so
-//! its agent is a **worker pool**: `PilotComputeDescription::cores`
-//! identical worker threads all parked in the same blocking pop over
-//! [own queue, global queue]. The store's wake-one handoff delivers
-//! each pushed CU to exactly one of them (no thundering herd across
-//! the pool), so a pilot with `cores = N` executes up to N CUs
-//! concurrently and throughput scales with slots, not with pilot
-//! count. `busy_slots` is shared pool state maintained under the
-//! manager-state lock at dispatch/completion and mirrored into the
-//! store's pilot record, keeping the scheduler's free-slot filtering
-//! and the durable view consistent.
+//! its agent is a **worker pool**: `min(cores, worker cap)` identical
+//! worker threads (cap = `PD_MAX_WORKERS`, default 32 — a pilot
+//! marshaling thousands of cores does not spawn thousands of 1:1 OS
+//! threads) all parked in the same blocking pop over [own queue,
+//! global queue]. The store's wake-one handoff delivers each pushed CU
+//! to exactly one of them (no thundering herd across the pool), so a
+//! pilot executes up to `min(cores, cap)` CUs concurrently and
+//! throughput scales with slots, not with pilot count. `busy_slots` is
+//! shared pool state maintained under the manager-state lock at
+//! dispatch/completion and mirrored into the store's pilot record,
+//! keeping the scheduler's free-slot filtering and the durable view
+//! consistent; a **slot semaphore** in `run_cu` (condvar wait until
+//! `busy + need ≤ cores`) keeps `busy ≤ cores` even when workers are
+//! fewer than slots or CUs span multiple cores.
 
 use crate::coordination::{keys, Store};
 use crate::pilot::{
@@ -46,13 +50,20 @@ use crate::topology::{Label, Topology};
 use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUnitDescription, DuState};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Sentinel pushed onto an agent's own queue to wake it without
 /// handing it work (shutdown). Never a valid CU id.
 const AGENT_WAKE: &str = "__agent_wake__";
+
+/// Default ceiling on OS worker threads per pilot pool (override with
+/// the `PD_MAX_WORKERS` env var or [`PilotSystem::set_worker_cap`]).
+/// A pilot marshaling thousands of cores should not spawn thousands of
+/// 1:1 threads; the slot semaphore in `run_cu` keeps `busy ≤ cores`
+/// regardless of how many workers drive the slots.
+const DEFAULT_WORKER_CAP: u32 = 32;
 
 /// Result of executing one Compute-Unit.
 #[derive(Debug, Clone, Default)]
@@ -110,6 +121,21 @@ pub struct PilotSystem {
     workdir: PathBuf,
     shutdown: AtomicBool,
     agents: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Max worker threads per pilot pool: a pilot spawns
+    /// `min(cores, worker_cap)` workers (ROADMAP: no 1:1 OS threads
+    /// for very large `cores`). Slots are still accounted in cores —
+    /// the semaphore in `run_cu` enforces `busy ≤ cores`.
+    worker_cap: AtomicU32,
+    /// Pilot id -> workers actually spawned (the cap may change after
+    /// creation, so shutdown must not recompute it): one shutdown
+    /// sentinel per worker, no O(cores) pushes, no sentinel residue.
+    pool_sizes: Mutex<BTreeMap<String, u32>>,
+    /// Per-pilot slot condvars (paired with the `state` mutex): a CU
+    /// completion wakes only the completing pilot's gated/slot-waiting
+    /// workers — O(own pool), not O(every parked worker of every
+    /// pilot). `progress` stays the global workload-level signal for
+    /// `wait_all`.
+    slot_cvs: Mutex<BTreeMap<String, Arc<Condvar>>>,
 }
 
 impl PilotSystem {
@@ -128,7 +154,44 @@ impl PilotSystem {
             workdir: workdir.into(),
             shutdown: AtomicBool::new(false),
             agents: Mutex::new(Vec::new()),
+            worker_cap: AtomicU32::new(
+                std::env::var("PD_MAX_WORKERS")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .filter(|&n| n >= 1)
+                    .unwrap_or(DEFAULT_WORKER_CAP),
+            ),
+            pool_sizes: Mutex::new(BTreeMap::new()),
+            slot_cvs: Mutex::new(BTreeMap::new()),
         })
+    }
+
+    /// The slot condvar of one pilot's pool (created on first use).
+    /// Fetched *before* taking the `state` lock — the `slot_cvs` lock
+    /// never nests inside it.
+    fn slot_cv(&self, pilot_id: &str) -> Arc<Condvar> {
+        self.slot_cvs
+            .lock()
+            .unwrap()
+            .entry(pilot_id.to_string())
+            .or_insert_with(|| Arc::new(Condvar::new()))
+            .clone()
+    }
+
+    /// Per-pilot worker-thread ceiling (see [`DEFAULT_WORKER_CAP`]).
+    pub fn worker_cap(&self) -> u32 {
+        self.worker_cap.load(Ordering::Relaxed)
+    }
+
+    /// Override the worker-thread ceiling for pilots created after
+    /// this call.
+    pub fn set_worker_cap(&self, cap: u32) {
+        self.worker_cap.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    /// Live agent worker threads across all pilots (tests/diagnostics).
+    pub fn agent_count(&self) -> usize {
+        self.agents.lock().unwrap().len()
     }
 
     pub fn compute_service(self: &Arc<Self>) -> PilotComputeService {
@@ -154,9 +217,12 @@ impl PilotSystem {
     /// inert residue in the dropped store.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // One sentinel per *spawned* worker (recorded at create time —
+        // the cap may have changed since), so a cores=10k pilot does
+        // not trigger 10k pushes or leave sentinel residue behind.
         let pilots: Vec<(String, u32)> = {
-            let st = self.state.lock().unwrap();
-            st.pilots.values().map(|p| (p.id.clone(), p.description.cores.max(1))).collect()
+            let sizes = self.pool_sizes.lock().unwrap();
+            sizes.iter().map(|(id, n)| (id.clone(), *n)).collect()
         };
         for (id, workers) in &pilots {
             for _ in 0..*workers {
@@ -167,6 +233,13 @@ impl PilotSystem {
             }
         }
         self.store.wake_waiters();
+        // Workers parked in a slot gate/semaphore re-check the
+        // shutdown flag on their pool's condvar signal (see `run_cu`
+        // and `worker_loop`).
+        for cv in self.slot_cvs.lock().unwrap().values() {
+            cv.notify_all();
+        }
+        self.progress.notify_all();
         let mut agents = self.agents.lock().unwrap();
         for h in agents.drain(..) {
             let _ = h.join();
@@ -300,12 +373,23 @@ impl PilotSystem {
     /// One worker's handling of one CU id pulled from a queue. Slot
     /// accounting lives here so acquire/release always pair: the CU's
     /// cores are added to the pilot's shared `busy_slots` when the CU
-    /// is accepted (same critical section as its StagingInput
-    /// transition, so the scheduler never sees a dispatched CU without
-    /// its slots) and subtracted when it reaches a terminal state.
+    /// is accepted and subtracted when it reaches a terminal state.
     /// Both edges are mirrored into the store's pilot record (best
     /// effort — a mid-outage mirror is retried by the next edge).
+    ///
+    /// With the pool capped below `cores` (see [`DEFAULT_WORKER_CAP`])
+    /// a worker is no longer 1:1 with a slot, so acquisition is a
+    /// **slot semaphore**: the worker parks on the `progress` condvar
+    /// until `busy + need ≤ cores` (every completion signals it). The
+    /// requested cores are clamped to the pilot's total — local mode
+    /// treats `cores` as advisory (seed semantics: a global-queue CU
+    /// larger than this pilot still runs here, taking the whole
+    /// pilot), which also makes the wait deadlock-free: `need ≤ cores`
+    /// always, so an idle pilot can always admit the CU. Only the sim
+    /// driver enforces strict fit, where a silent global requeue
+    /// cannot starve.
     fn run_cu(&self, pilot_id: &str, cu_id: &str) {
+        let slot_cv = self.slot_cv(pilot_id);
         let (descr, cores) = {
             let mut st = self.state.lock().unwrap();
             let Some(cu) = st.cus.get_mut(cu_id) else { return };
@@ -313,19 +397,23 @@ impl PilotSystem {
             cu.t_started_staging = Self::now_s();
             let _ = cu.transition(CuState::StagingInput);
             let descr = cu.description.clone();
-            // Local mode treats `cores` as advisory: a global-queue CU
-            // larger than this pilot still runs here (seed semantics —
-            // the host's real resources are what execute it, and
-            // busy_slots recovers via saturating_sub). Only the sim
-            // driver enforces strict fit, where a silent global
-            // requeue cannot starve: its wakeup chains re-offer the CU
-            // to a big-enough pilot. Here a requeue would need a
-            // waking push, which small pilots could ping-pong.
-            let cores = descr.cores.max(1);
-            let busy_now = st.pilots.get_mut(pilot_id).map(|p| {
-                p.busy_slots += cores;
-                p.busy_slots
-            });
+            let need = {
+                let total =
+                    st.pilots.get(pilot_id).map(|p| p.description.cores.max(1)).unwrap_or(1);
+                descr.cores.max(1).min(total)
+            };
+            let busy_now = loop {
+                let Some(p) = st.pilots.get_mut(pilot_id) else { break None };
+                // Shutdown must not strand a worker in the slot wait;
+                // admit and let the CU drain.
+                if p.busy_slots + need <= p.description.cores
+                    || self.shutdown.load(Ordering::SeqCst)
+                {
+                    p.busy_slots += need;
+                    break Some(p.busy_slots);
+                }
+                st = slot_cv.wait(st).unwrap();
+            };
             // Mirror under the state lock so concurrent workers'
             // dispatch/completion edges reach the store in the same
             // order they updated the shared counter (state→store is
@@ -333,7 +421,7 @@ impl PilotSystem {
             if let Some(b) = busy_now {
                 let _ = self.store.hset(&keys::pilot(pilot_id), "busy", &b.to_string());
             }
-            (descr, cores)
+            (descr, need)
         };
         let sandbox = self.workdir.join("sandbox").join(cu_id);
         let result: anyhow::Result<ExecResult> = (|| {
@@ -391,6 +479,9 @@ impl PilotSystem {
             let _ = self.store.hset(&keys::pilot(pilot_id), "busy", &b.to_string());
         }
         drop(st);
+        // Slots freed: wake this pool's gated/slot-waiting workers
+        // (O(own pool) — other pilots' parked workers are not touched).
+        slot_cv.notify_all();
         // Terminal transition: wake `wait_all` waiters and notify
         // subscribers — a per-CU key event plus the legacy broadcast
         // channel.
@@ -414,7 +505,23 @@ impl PilotSystem {
     fn worker_loop(self: Arc<Self>, pilot_id: String) {
         let own_queue = keys::pilot_queue_key(&pilot_id);
         let global = keys::global_queue_key();
+        let slot_cv = self.slot_cv(&pilot_id);
         while !self.shutdown.load(Ordering::SeqCst) {
+            // Don't compete for work while the pilot has no free slot:
+            // a saturated pilot's spare workers must not capture global
+            // CUs that an idle pilot could run (head-of-line blocking).
+            // Park on this pool's slot condvar until a completion frees
+            // a slot; work pushed meanwhile is picked up by the
+            // blocking pop's initial queue recheck, so nothing is lost
+            // while no worker of this pool is parked in the pop.
+            {
+                let mut st = self.state.lock().unwrap();
+                while !self.shutdown.load(Ordering::SeqCst)
+                    && st.pilots.get(&pilot_id).map_or(false, |p| p.free_slots() == 0)
+                {
+                    st = slot_cv.wait(st).unwrap();
+                }
+            }
             match self.store.blpop_any(&[&own_queue, global], None) {
                 Ok(Some((queue_idx, cu_id))) => {
                     if cu_id == AGENT_WAKE {
@@ -467,22 +574,24 @@ pub struct PilotComputeService {
 
 impl PilotComputeService {
     /// Start a pilot: registers it, marks it Active, and spawns its
-    /// agent **worker pool** — one worker thread per slot
-    /// (`descr.cores`), all parked in the same blocking two-queue pop.
-    /// The wake-one handoff hands each pushed CU to exactly one
-    /// worker, so a pilot with `cores = N` executes up to N CUs
-    /// concurrently.
+    /// agent **worker pool** — `min(cores, worker cap)` worker threads
+    /// (see [`DEFAULT_WORKER_CAP`]), all parked in the same blocking
+    /// two-queue pop. The wake-one handoff hands each pushed CU to
+    /// exactly one worker, so a pilot executes up to `min(cores, cap)`
+    /// CUs concurrently while the slot semaphore keeps the cores-level
+    /// invariant `busy ≤ cores`.
     pub fn create_pilot(&self, descr: PilotComputeDescription) -> anyhow::Result<String> {
         if descr.cores == 0 {
             anyhow::bail!("pilot must have at least one core");
         }
-        let workers = descr.cores;
+        let workers = descr.cores.min(self.sys.worker_cap()).max(1);
         let mut pilot = PilotCompute::new(descr);
         pilot.transition(PilotState::Queued)?;
         pilot.transition(PilotState::Active)?;
         pilot.t_active = PilotSystem::now_s();
         let id = pilot.id.clone();
         self.sys.state.lock().unwrap().add_pilot(pilot);
+        self.sys.pool_sizes.lock().unwrap().insert(id.clone(), workers);
         for w in 0..workers {
             let sys = self.sys.clone();
             let tid = id.clone();
@@ -988,6 +1097,103 @@ mod tests {
             sys.store.hget(&keys::pilot(&pilot), "busy").unwrap().as_deref(),
             Some("0")
         );
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Executor that records its own live/peak concurrency — lets a
+    /// test assert how many CUs were ever inside `execute` at once.
+    struct PeakExecutor {
+        /// (currently inside, peak ever inside)
+        state: Mutex<(u32, u32)>,
+        dwell: Duration,
+    }
+
+    impl PeakExecutor {
+        fn new(dwell: Duration) -> PeakExecutor {
+            PeakExecutor { state: Mutex::new((0, 0)), dwell }
+        }
+
+        fn peak(&self) -> u32 {
+            self.state.lock().unwrap().1
+        }
+    }
+
+    impl Executor for PeakExecutor {
+        fn execute(&self, _cu: &ComputeUnitDescription, _sandbox: &Path) -> anyhow::Result<ExecResult> {
+            {
+                let mut s = self.state.lock().unwrap();
+                s.0 += 1;
+                s.1 = s.1.max(s.0);
+            }
+            std::thread::sleep(self.dwell);
+            self.state.lock().unwrap().0 -= 1;
+            Ok(ExecResult::default())
+        }
+    }
+
+    /// ROADMAP satellite: a pilot with `cores` ≫ the worker cap spawns
+    /// only `cap` OS threads, still completes everything, never runs
+    /// more than `cap` CUs at once, and drains `busy_slots` to 0.
+    #[test]
+    fn capped_pool_bounds_threads_and_concurrency() {
+        let dir = tmpdir("cap");
+        let exec = Arc::new(PeakExecutor::new(Duration::from_millis(60)));
+        let sys = PilotSystem::new(&dir, exec.clone());
+        sys.set_worker_cap(3);
+        let pilot = sys.compute_service().create_pilot(n_core_pilot(64, "x")).unwrap();
+        assert_eq!(sys.agent_count(), 3, "cores ≫ cap must spawn cap workers");
+        let cds = sys.compute_data_service();
+        let mut ids = Vec::new();
+        for _ in 0..9 {
+            ids.push(
+                cds.submit_compute_unit(ComputeUnitDescription {
+                    executable: "builtin:peak".into(),
+                    cores: 1,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+        }
+        sys.wait_all(Duration::from_secs(20)).unwrap();
+        for id in &ids {
+            assert_eq!(sys.cu_state(id), Some(CuState::Done), "err={:?}", sys.cu_error(id));
+        }
+        let peak = exec.peak();
+        assert!(peak <= 3, "peak concurrency {peak} exceeded the 3-worker cap");
+        assert!(peak >= 2, "capped pool never ran concurrently");
+        assert_eq!(sys.pilot_busy_slots(&pilot), Some(0), "busy_slots must drain to 0");
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The slot semaphore keeps `busy ≤ cores` when CUs span multiple
+    /// cores: two 3-core CUs on a 4-core pilot must serialize even
+    /// though the pool has a free worker thread for each.
+    #[test]
+    fn slot_semaphore_serializes_wide_cus() {
+        let dir = tmpdir("semaphore");
+        let exec = Arc::new(PeakExecutor::new(Duration::from_millis(150)));
+        let sys = PilotSystem::new(&dir, exec.clone());
+        let pilot = sys.compute_service().create_pilot(n_core_pilot(4, "x")).unwrap();
+        let cds = sys.compute_data_service();
+        let mut ids = Vec::new();
+        for _ in 0..2 {
+            ids.push(
+                cds.submit_compute_unit(ComputeUnitDescription {
+                    executable: "builtin:peak".into(),
+                    cores: 3,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+        }
+        sys.wait_all(Duration::from_secs(20)).unwrap();
+        for id in &ids {
+            assert_eq!(sys.cu_state(id), Some(CuState::Done), "err={:?}", sys.cu_error(id));
+        }
+        assert_eq!(exec.peak(), 1, "3+3 cores on a 4-core pilot must not overlap");
+        assert_eq!(sys.pilot_busy_slots(&pilot), Some(0));
         sys.shutdown();
         let _ = std::fs::remove_dir_all(dir);
     }

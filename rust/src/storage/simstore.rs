@@ -8,8 +8,8 @@
 //! exactly why naive data management in Fig. 9 scenarios 1–2 is slow.
 
 use super::{Endpoint, ProtocolParams};
-use crate::net::Network;
-use crate::topology::Label;
+use crate::net::{Bandwidth, FlowHandle, Network};
+use crate::topology::{Label, NodeId};
 use crate::util::Bytes;
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -27,11 +27,25 @@ impl TransferCost {
     }
 }
 
+/// One wire leg at a sampled fair-share bandwidth: effective rate =
+/// min(network share × protocol efficiency, the protocol's
+/// single-flow ceiling), floored away from zero. The single home of
+/// the formula for all live cost paths (`transfer_cost_reference`
+/// keeps its own frozen copy by design — it is the oracle).
+fn leg_secs(params: &ProtocolParams, size: Bytes, bw: Bandwidth) -> f64 {
+    let eff = params.efficiency.max(1e-6);
+    let net_rate = bw.bytes_per_sec() * eff;
+    size.as_f64() / net_rate.min(params.per_flow_cap).max(1e-6)
+}
+
 /// Compute the cost of moving `size` bytes in `files` files from
 /// `src` to `dst` with protocol `params`, at current network
 /// congestion. `via` is the submission host used when the protocol
 /// cannot do third-party transfers and neither endpoint is the
 /// submission host itself.
+///
+/// Label-keyed compat shim; hot paths use [`transfer_cost_id`] or the
+/// combined [`transfer_cost_flow`].
 pub fn transfer_cost(
     net: &Network,
     src: &Label,
@@ -42,16 +56,93 @@ pub fn transfer_cost(
     files: u32,
 ) -> TransferCost {
     let setup_s = params.setup_s + params.per_file_s * files as f64;
+    let leg = |a: &Label, b: &Label| leg_secs(params, size, net.effective_bandwidth(a, b));
+    let wire_s = match via {
+        Some(gw) if !params.third_party && src != gw && dst != gw && src != dst => {
+            // Two legs through the gateway.
+            leg(src, gw) + leg(gw, dst)
+        }
+        _ => leg(src, dst),
+    };
+    TransferCost { setup_s, wire_s, register_s: params.register_s }
+}
+
+/// [`transfer_cost`] over interned node ids: allocation-free post-memo
+/// (`&mut` because first-seen paths are memoized into the network's
+/// path table).
+pub fn transfer_cost_id(
+    net: &mut Network,
+    src: NodeId,
+    dst: NodeId,
+    via: Option<NodeId>,
+    params: &ProtocolParams,
+    size: Bytes,
+    files: u32,
+) -> TransferCost {
+    let setup_s = params.setup_s + params.per_file_s * files as f64;
+    let leg = |net: &mut Network, a: NodeId, b: NodeId| {
+        leg_secs(params, size, net.effective_bandwidth_id(a, b))
+    };
+    let wire_s = match via {
+        Some(gw) if !params.third_party && src != gw && dst != gw && src != dst => {
+            leg(net, src, gw) + leg(net, gw, dst)
+        }
+        _ => leg(net, src, dst),
+    };
+    TransferCost { setup_s, wire_s, register_s: params.register_s }
+}
+
+/// Price the transfer *and* register its src→dst flow in one path
+/// walk ([`Network::begin_flow_priced_id`]) — the transfer-start fast
+/// path. Numbers are identical to [`transfer_cost_id`] followed by
+/// `begin_flow_id`: the bandwidth is sampled before the flow's own
+/// increment lands. Gateway-routed transfers still price two legs (the
+/// seed shape) but register only the direct src→dst flow, exactly as
+/// the drivers always did.
+pub fn transfer_cost_flow(
+    net: &mut Network,
+    src: NodeId,
+    dst: NodeId,
+    via: Option<NodeId>,
+    params: &ProtocolParams,
+    size: Bytes,
+    files: u32,
+) -> (TransferCost, FlowHandle) {
+    let setup_s = params.setup_s + params.per_file_s * files as f64;
+    let routed =
+        matches!(via, Some(gw) if !params.third_party && src != gw && dst != gw && src != dst);
+    let (wire_s, flow) = if routed {
+        let gw = via.unwrap();
+        let w = leg_secs(params, size, net.effective_bandwidth_id(src, gw))
+            + leg_secs(params, size, net.effective_bandwidth_id(gw, dst));
+        (w, net.begin_flow_id(src, dst))
+    } else {
+        let (flow, bw) = net.begin_flow_priced_id(src, dst);
+        (leg_secs(params, size, bw), flow)
+    };
+    (TransferCost { setup_s, wire_s, register_s: params.register_s }, flow)
+}
+
+/// [`transfer_cost`] against the retained seed engine
+/// ([`crate::net::reference::StringNetwork`]) — property-test oracle
+/// and the `perf_micro` string baseline.
+pub fn transfer_cost_reference(
+    net: &crate::net::reference::StringNetwork,
+    src: &Label,
+    dst: &Label,
+    via: Option<&Label>,
+    params: &ProtocolParams,
+    size: Bytes,
+    files: u32,
+) -> TransferCost {
+    let setup_s = params.setup_s + params.per_file_s * files as f64;
     let eff = params.efficiency.max(1e-6);
-    // One leg: effective rate = min(fair network share x protocol
-    // efficiency, the protocol's single-flow ceiling).
     let leg = |a: &Label, b: &Label| {
         let net_rate = net.effective_bandwidth(a, b).bytes_per_sec() * eff;
         size.as_f64() / net_rate.min(params.per_flow_cap).max(1e-6)
     };
     let wire_s = match via {
         Some(gw) if !params.third_party && src != gw && dst != gw && src != dst => {
-            // Two legs through the gateway.
             leg(src, gw) + leg(gw, dst)
         }
         _ => leg(src, dst),
@@ -165,8 +256,8 @@ impl SimStore {
         self.replicas(du)
             .into_iter()
             .max_by(|a, b| {
-                topo.affinity(target, &a.endpoint.label)
-                    .partial_cmp(&topo.affinity(target, &b.endpoint.label))
+                topo.affinity_interned(target, &a.endpoint.label)
+                    .partial_cmp(&topo.affinity_interned(target, &b.endpoint.label))
                     .unwrap()
             })
     }
@@ -193,6 +284,27 @@ impl SimStore {
             size,
             files,
         ))
+    }
+
+    /// [`SimStore::staging_cost`] that also registers the src→dst wire
+    /// flow, in one path walk (see [`transfer_cost_flow`]) — the
+    /// sim driver's transfer-start fast path. Endpoint labels intern
+    /// into the network's arena (O(1) after first sight).
+    pub fn staging_cost_flow(
+        &self,
+        net: &mut Network,
+        du: &str,
+        src_pd: &str,
+        dst_pd: &str,
+        via: Option<&Label>,
+    ) -> anyhow::Result<(TransferCost, FlowHandle)> {
+        let (size, files) = self.du_meta(du)?;
+        let src = self.pd(src_pd)?;
+        let dst = self.pd(dst_pd)?;
+        let s = net.node(&src.endpoint.label);
+        let d = net.node(&dst.endpoint.label);
+        let v = via.map(|l| net.node(l));
+        Ok(transfer_cost_flow(net, s, d, v, &dst.endpoint.params, size, files))
     }
 }
 
@@ -283,6 +395,149 @@ mod tests {
         let srm = ProtocolParams::defaults(BackendKind::Srm);
         assert_eq!(c.setup_s, srm.setup_s + 16.0 * srm.per_file_s);
         assert!(c.wire_s > 0.0);
+    }
+
+    /// Satellite regression (single-walk transfer start): on random
+    /// topologies and random transfer sequences, the combined
+    /// [`transfer_cost_flow`] must produce bitwise-identical costs and
+    /// the same live-flow state as the legacy two-step
+    /// (`transfer_cost` then `begin_flow`) — including gateway-routed,
+    /// loopback, and already-congested cases. This is what guarantees
+    /// fig7/fig8 traces are unchanged by the refactor.
+    #[test]
+    fn combined_priced_staging_equals_two_step_property() {
+        use crate::net::Bandwidth;
+        crate::prop::check_default(
+            |rng| {
+                let mk = |rng: &mut crate::rng::Rng| {
+                    let depth = crate::prop::gen::usize_in(rng, 1, 4);
+                    let parts: Vec<String> =
+                        (0..depth).map(|d| format!("h{}", rng.below(3 + d as u64))).collect();
+                    parts.join("/")
+                };
+                let labels: Vec<String> =
+                    (0..crate::prop::gen::usize_in(rng, 2, 6)).map(|_| mk(rng)).collect();
+                let uplinks: Vec<(String, f64)> = (0..crate::prop::gen::usize_in(rng, 0, 5))
+                    .map(|_| (mk(rng), rng.range_f64(1.0, 500.0)))
+                    .collect();
+                let n = labels.len();
+                let transfers: Vec<(usize, usize, usize, bool, u64, u32, bool)> =
+                    (0..crate::prop::gen::usize_in(rng, 1, 16))
+                        .map(|_| {
+                            (
+                                rng.below(n as u64) as usize,       // src
+                                rng.below(n as u64) as usize,       // dst
+                                rng.below(n as u64) as usize,       // gateway
+                                rng.chance(0.5),                    // route via gateway?
+                                1 + rng.below(8),                   // GiB
+                                1 + rng.below(16) as u32,           // files
+                                rng.chance(0.3),                    // end an open flow first
+                            )
+                        })
+                        .collect();
+                (labels, uplinks, transfers)
+            },
+            |(labels, uplinks, transfers)| {
+                let labels: Vec<Label> = labels.iter().map(|s| Label::new(s)).collect();
+                // Two independently-evolving networks: A runs the legacy
+                // two-step, B the combined walk.
+                let setup = || {
+                    let mut net = Network::new();
+                    for (label, mb) in uplinks {
+                        net.set_uplink(label, Bandwidth::mbps(*mb));
+                    }
+                    net
+                };
+                let mut net_a = setup();
+                let mut net_b = setup();
+                let kinds = BackendKind::all_simulated();
+                let mut open_a = Vec::new();
+                let mut open_b = Vec::new();
+                for (k, (s, d, g, via, gb, files, end_first)) in transfers.iter().enumerate() {
+                    if *end_first {
+                        if let (Some(ha), Some(hb)) = (open_a.pop(), open_b.pop()) {
+                            net_a.end_flow(&ha);
+                            net_b.end_flow(&hb);
+                        }
+                    }
+                    let params = ProtocolParams::defaults(kinds[k % kinds.len()]);
+                    let (src, dst, gw) = (&labels[*s], &labels[*d], &labels[*g]);
+                    let via = if *via { Some(gw) } else { None };
+                    let size = Bytes::gb(*gb);
+                    // Legacy: price, then register (seed order).
+                    let cost_a = transfer_cost(&net_a, src, dst, via, &params, size, *files);
+                    open_a.push(net_a.begin_flow(src, dst));
+                    // Combined: one walk.
+                    let (si, di) = (net_b.node(src), net_b.node(dst));
+                    let vi = via.map(|l| net_b.node(l));
+                    let (cost_b, hb) =
+                        transfer_cost_flow(&mut net_b, si, di, vi, &params, size, *files);
+                    open_b.push(hb);
+                    if cost_a != cost_b {
+                        return Err(format!(
+                            "transfer {k} {src}->{dst} via {via:?}: {cost_a:?} != {cost_b:?}"
+                        ));
+                    }
+                    // Live congestion agrees after every transfer.
+                    if net_a.congestion(src, dst) != net_b.congestion_id(si, di) {
+                        return Err(format!("congestion after transfer {k} diverges"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Id-keyed [`transfer_cost_id`] equals both the label shim and the
+    /// retained seed engine, bitwise, on the calibrated testbed pairs.
+    #[test]
+    fn transfer_cost_id_matches_string_and_reference() {
+        use crate::net::reference::StringNetwork;
+        use crate::net::Bandwidth;
+        let mut net = Network::new();
+        let mut sref = StringNetwork::new();
+        for (label, mb) in [("xsede", 1200.0), ("xsede/tacc", 800.0), ("osg", 600.0)] {
+            net.set_uplink(label, Bandwidth::mbps(mb));
+            sref.set_uplink(label, Bandwidth::mbps(mb));
+        }
+        let src = Label::new("xsede/tacc/lonestar");
+        let dst = Label::new("osg/purdue");
+        let gw = Label::new("xsede/iu/gw68");
+        let (si, di, gi) = (net.node(&src), net.node(&dst), net.node(&gw));
+        for kind in BackendKind::all_simulated() {
+            let p = ProtocolParams::defaults(kind);
+            for via in [None, Some(&gw)] {
+                let vi = via.map(|_| gi);
+                let a = transfer_cost(&net, &src, &dst, via, &p, Bytes::gb(2), 8);
+                let b = transfer_cost_id(&mut net, si, di, vi, &p, Bytes::gb(2), 8);
+                let c = transfer_cost_reference(&sref, &src, &dst, via, &p, Bytes::gb(2), 8);
+                assert_eq!(a, b, "{kind:?} via={via:?}");
+                assert_eq!(a, c, "{kind:?} via={via:?} (reference)");
+            }
+        }
+    }
+
+    #[test]
+    fn staging_cost_flow_prices_and_registers_once() {
+        let mut s = store_with(&[
+            ("pd-gw", "ssh://gw68/staging", "xsede/iu/gw68"),
+            ("pd-srm", "srm://osg-pool/x", "osg/fermilab"),
+        ]);
+        s.register_du("du-1", Bytes::gb(4), 16);
+        s.place("du-1", "pd-gw").unwrap();
+        let mut net = Network::new();
+        let plain = s.staging_cost(&net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        let (cost, flow) =
+            s.staging_cost_flow(&mut net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        assert_eq!(plain, cost, "combined walk must price like the two-step");
+        let (a, b) = (
+            net.node(&Label::new("xsede/iu/gw68")),
+            net.node(&Label::new("osg/fermilab")),
+        );
+        assert_eq!(net.congestion_id(a, b), 1, "flow must be registered");
+        net.end_flow(&flow);
+        assert_eq!(net.congestion_id(a, b), 0);
+        assert!(s.staging_cost_flow(&mut net, "du-nope", "pd-gw", "pd-srm", None).is_err());
     }
 
     #[test]
