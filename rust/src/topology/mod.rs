@@ -1,14 +1,46 @@
-//! Resource topology and the affinity model (paper §5, Fig. 6).
+//! Resource topology and the affinity model (paper §5, Fig. 6) — now
+//! built around an **interned node arena**.
 //!
 //! Data centers and machines are organized in a logical topology tree;
 //! the further the distance between two resources, the smaller their
 //! affinity. Resources are named by slash-separated *affinity labels*
-//! exactly as in the Pilot-Description (e.g.
-//! `us-east/tacc/lonestar`), and the tree is built implicitly from the
-//! labels in use. Edges may carry weights to reflect dynamic
-//! connectivity differences (the paper's proposed enhancement).
+//! exactly as in the Pilot-Description (e.g. `us-east/tacc/lonestar`),
+//! and the tree is built implicitly from the labels in use. Edges may
+//! carry weights to reflect dynamic connectivity differences (the
+//! paper's proposed enhancement).
+//!
+//! # Interned model (perf)
+//!
+//! Every label interns to a [`NodeId`] (`u32`) in a [`NodeArena`]: one
+//! hash of the full path string on the way in, then a record of
+//! `(parent, depth, weight-above)` per node. Once interned,
+//! LCA/`distance`/`within` are pure integer walks over `Vec`-indexed
+//! parent chains — no string splitting, no slicing, zero heap
+//! allocations:
+//!
+//! * [`Topology::node`] — intern a label (O(components) first time,
+//!   O(1) full-string hash after);
+//! * [`Topology::distance_id`] / [`Topology::affinity_id`] — integer
+//!   LCA climb plus precomputed per-edge weights;
+//! * [`Topology::distance_interned`] / [`Topology::affinity_interned`]
+//!   — label-keyed front door to the same id walk (one arena lock, two
+//!   hash lookups); this is what the scheduler's `data_score` hot loop
+//!   calls.
+//!
+//! The id walk is engineered to be **bit-identical** to the retained
+//! string implementation ([`Topology::distance`]): the defaults-only
+//! fast path uses the same multiplication, and weighted sums accumulate
+//! per side in increasing depth order, mirroring the string walk's
+//! float-addition order exactly (property-tested in this module).
+//! The string API is kept as the compat shim and the property-test
+//! reference; the arena lives behind a `Mutex` so interning works
+//! through `&Topology` (the scheduler only ever sees a shared
+//! reference). [`NodeArena`] is reused by [`crate::net`], which keys
+//! its uplink capacities and flow counters by the same id scheme.
 
+use crate::coordination::FxMap;
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 /// An affinity label: a path in the logical topology tree.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -70,18 +102,183 @@ impl From<&str> for Label {
     }
 }
 
+/// Interned identity of one topology-tree node. Valid only for the
+/// arena (Topology/Network) that minted it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    /// The tree root (the empty label).
+    pub const ROOT: NodeId = NodeId(0);
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Append-only arena of topology-tree nodes: full-path interning plus
+/// per-node `(parent, depth)` so ancestor walks are integer chases over
+/// dense `Vec`s. Node 0 is always the root (empty label); interning a
+/// label also interns its whole prefix chain, so every node's parent
+/// exists by construction.
+#[derive(Debug, Clone)]
+pub struct NodeArena {
+    /// Full normalized path -> node index.
+    map: FxMap<String, u32>,
+    parent: Vec<u32>,
+    depth: Vec<u32>,
+    /// Full path per node (compat shims and diagnostics only).
+    paths: Vec<String>,
+}
+
+impl Default for NodeArena {
+    fn default() -> Self {
+        NodeArena::new()
+    }
+}
+
+impl NodeArena {
+    pub fn new() -> NodeArena {
+        let mut map = FxMap::default();
+        map.insert(String::new(), 0);
+        NodeArena { map, parent: vec![0], depth: vec![0], paths: vec![String::new()] }
+    }
+
+    /// Number of nodes (≥ 1: the root always exists).
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // the root always exists
+    }
+
+    /// O(1): one hash of the full path. `None` if never interned.
+    pub fn lookup(&self, label: &Label) -> Option<NodeId> {
+        self.lookup_str(label.0.as_str())
+    }
+
+    /// [`NodeArena::lookup`] by raw path slice — lets compat shims
+    /// probe label *prefixes* without allocating substrings.
+    pub fn lookup_str(&self, path: &str) -> Option<NodeId> {
+        self.map.get(path).map(|&i| NodeId(i))
+    }
+
+    /// Intern `label` (and its whole prefix chain), returning the node
+    /// of the deepest component. O(1) full-string hash when already
+    /// interned.
+    pub fn intern(&mut self, label: &Label) -> NodeId {
+        if let Some(&i) = self.map.get(label.0.as_str()) {
+            return NodeId(i);
+        }
+        let s = label.0.as_str();
+        let mut node = 0u32;
+        let mut depth = 0u32;
+        let ends = s.match_indices('/').map(|(i, _)| i).chain(std::iter::once(s.len()));
+        for end in ends {
+            depth += 1;
+            let prefix = &s[..end];
+            node = match self.map.get(prefix) {
+                Some(&i) => i,
+                None => {
+                    let id = self.parent.len() as u32;
+                    self.parent.push(node);
+                    self.depth.push(depth);
+                    self.paths.push(prefix.to_string());
+                    self.map.insert(prefix.to_string(), id);
+                    id
+                }
+            };
+        }
+        NodeId(node)
+    }
+
+    pub fn parent(&self, n: NodeId) -> NodeId {
+        NodeId(self.parent[n.index()])
+    }
+
+    pub fn depth(&self, n: NodeId) -> u32 {
+        self.depth[n.index()]
+    }
+
+    /// Full label path of a node ("" for the root).
+    pub fn path_str(&self, n: NodeId) -> &str {
+        &self.paths[n.index()]
+    }
+
+    /// Lowest common ancestor: lift the deeper side, then climb both.
+    pub fn lca(&self, a: NodeId, b: NodeId) -> NodeId {
+        let (mut x, mut y) = (a.0 as usize, b.0 as usize);
+        while self.depth[x] > self.depth[y] {
+            x = self.parent[x] as usize;
+        }
+        while self.depth[y] > self.depth[x] {
+            y = self.parent[y] as usize;
+        }
+        while x != y {
+            x = self.parent[x] as usize;
+            y = self.parent[y] as usize;
+        }
+        NodeId(x as u32)
+    }
+
+    /// The node on `n`'s parent chain at exactly `depth` (≤ `n`'s own).
+    pub fn ancestor_at(&self, n: NodeId, depth: u32) -> NodeId {
+        let mut x = n.0 as usize;
+        while self.depth[x] > depth {
+            x = self.parent[x] as usize;
+        }
+        NodeId(x as u32)
+    }
+
+    /// Integer image of [`Label::within`]: is `n` in `root`'s subtree?
+    pub fn within(&self, n: NodeId, root: NodeId) -> bool {
+        self.depth(n) >= self.depth(root) && self.ancestor_at(n, self.depth(root)) == root
+    }
+}
+
+/// Arena plus per-node edge weights (weight of the uplink edge *above*
+/// each node), kept in lockstep with `Topology::edge_weights`.
+#[derive(Debug, Clone)]
+struct Interned {
+    arena: NodeArena,
+    weight_above: Vec<f64>,
+}
+
 /// The topology tree with per-edge weights. An edge is identified by the
 /// label of its *child* endpoint; unlisted edges weigh
 /// `default_edge_weight`.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Topology {
     default_edge_weight: f64,
+    /// String-keyed override view: the compat API and the property-test
+    /// reference. The interned `weight_above` mirrors it exactly.
     edge_weights: BTreeMap<String, f64>,
+    /// Node arena behind a mutex so interning works through
+    /// `&Topology` — the scheduler only ever holds a shared reference.
+    interned: Mutex<Interned>,
 }
 
 impl Default for Topology {
     fn default() -> Self {
-        Topology { default_edge_weight: 1.0, edge_weights: BTreeMap::new() }
+        Topology {
+            default_edge_weight: 1.0,
+            edge_weights: BTreeMap::new(),
+            interned: Mutex::new(Interned {
+                arena: NodeArena::new(),
+                weight_above: vec![0.0],
+            }),
+        }
+    }
+}
+
+impl Clone for Topology {
+    fn clone(&self) -> Topology {
+        Topology {
+            default_edge_weight: self.default_edge_weight,
+            edge_weights: self.edge_weights.clone(),
+            interned: Mutex::new(self.interned.lock().unwrap().clone()),
+        }
     }
 }
 
@@ -90,17 +287,94 @@ impl Topology {
         Topology::default()
     }
 
+    /// Fill `weight_above` for nodes interned since the last sync. New
+    /// nodes can only carry an override if it was set by
+    /// `set_edge_weight` (which interns eagerly), so the lookup is a
+    /// correctness belt, not a hot path.
+    fn sync_weights(&self, inner: &mut Interned) {
+        while inner.weight_above.len() < inner.arena.len() {
+            let path = inner.arena.path_str(NodeId(inner.weight_above.len() as u32));
+            let w = *self.edge_weights.get(path).unwrap_or(&self.default_edge_weight);
+            inner.weight_above.push(w);
+        }
+    }
+
     /// Override the weight of the edge above the node named by `label`.
     pub fn set_edge_weight(&mut self, label: &str, weight: f64) {
         assert!(weight >= 0.0);
-        self.edge_weights.insert(Label::new(label).0, weight);
+        let label = Label::new(label);
+        self.edge_weights.insert(label.0.clone(), weight);
+        let mut inner = self.interned.lock().unwrap();
+        let id = inner.arena.intern(&label);
+        self.sync_weights(&mut inner);
+        inner.weight_above[id.index()] = weight;
+    }
+
+    /// Intern `label` into the node arena (O(1) once interned).
+    pub fn node(&self, label: &Label) -> NodeId {
+        let mut inner = self.interned.lock().unwrap();
+        let id = inner.arena.intern(label);
+        self.sync_weights(&mut inner);
+        id
+    }
+
+    /// Weighted hops above `n` down to (exclusive) `from_depth`,
+    /// mirroring the string `suffix_weight` branch-for-branch — same
+    /// multiplication on the defaults-only fast path, same
+    /// increasing-depth addition order otherwise — so id distances are
+    /// bit-identical to string distances.
+    fn suffix_weight_id(&self, inner: &Interned, n: NodeId, from_depth: u32) -> f64 {
+        let nd = inner.arena.depth(n);
+        if self.edge_weights.is_empty() {
+            return (nd - from_depth) as f64 * self.default_edge_weight;
+        }
+        let mut w = 0.0;
+        for d in (from_depth + 1)..=nd {
+            let node = inner.arena.ancestor_at(n, d);
+            w += inner.weight_above[node.index()];
+        }
+        w
+    }
+
+    fn distance_id_inner(&self, inner: &Interned, a: NodeId, b: NodeId) -> f64 {
+        let common = inner.arena.depth(inner.arena.lca(a, b));
+        self.suffix_weight_id(inner, a, common) + self.suffix_weight_id(inner, b, common)
+    }
+
+    /// Tree distance between two interned nodes: an integer LCA climb
+    /// plus precomputed per-edge weights. Zero heap allocations.
+    pub fn distance_id(&self, a: NodeId, b: NodeId) -> f64 {
+        let inner = self.interned.lock().unwrap();
+        self.distance_id_inner(&inner, a, b)
+    }
+
+    /// Affinity in (0, 1] over interned nodes.
+    pub fn affinity_id(&self, a: NodeId, b: NodeId) -> f64 {
+        1.0 / (1.0 + self.distance_id(a, b))
+    }
+
+    /// [`Topology::distance`] through the arena: one lock, two
+    /// full-string hash lookups, then the integer walk. This is the
+    /// scheduler's `data_score` hot path.
+    pub fn distance_interned(&self, a: &Label, b: &Label) -> f64 {
+        let mut inner = self.interned.lock().unwrap();
+        let ai = inner.arena.intern(a);
+        let bi = inner.arena.intern(b);
+        self.sync_weights(&mut inner);
+        self.distance_id_inner(&inner, ai, bi)
+    }
+
+    /// [`Topology::affinity`] through the arena (see
+    /// [`Topology::distance_interned`]).
+    pub fn affinity_interned(&self, a: &Label, b: &Label) -> f64 {
+        1.0 / (1.0 + self.distance_interned(a, b))
     }
 
     /// Total weight of the edges above `label`'s nodes deeper than
     /// `from_depth`. Edge keys are label *prefixes*, so lookups slice
-    /// the original string instead of joining components — this path
-    /// runs once per (CU input, pilot, replica) in the scheduler and
-    /// must not allocate.
+    /// the original string instead of joining components. Retained as
+    /// the string reference implementation the interned walk is
+    /// property-tested against.
     fn suffix_weight(&self, label: &Label, from_depth: usize) -> f64 {
         let s = label.0.as_str();
         if s.is_empty() {
@@ -123,7 +397,9 @@ impl Topology {
     }
 
     /// Tree distance between two labels: the weighted number of hops up
-    /// from each label to their lowest common ancestor.
+    /// from each label to their lowest common ancestor. String compat
+    /// shim and property-test reference; hot paths use
+    /// [`Topology::distance_interned`] / [`Topology::distance_id`].
     pub fn distance(&self, a: &Label, b: &Label) -> f64 {
         let common = a.common_prefix_len(b);
         self.suffix_weight(a, common) + self.suffix_weight(b, common)
@@ -143,11 +419,11 @@ impl Topology {
         }
         let best = candidates
             .iter()
-            .map(|c| self.affinity(target, c))
+            .map(|c| self.affinity_interned(target, c))
             .fold(f64::MIN, f64::max);
         candidates
             .iter()
-            .filter(|c| (self.affinity(target, c) - best).abs() < 1e-12)
+            .filter(|c| (self.affinity_interned(target, c) - best).abs() < 1e-12)
             .collect()
     }
 }
@@ -206,6 +482,9 @@ mod tests {
         let eu = l("eu/surfsara");
         // 3 edges up from lonestar (weight 1 each) + down: "eu" (10) + "eu/surfsara" (1).
         assert_eq!(t.distance(&a, &eu), 3.0 + 10.0 + 1.0);
+        // Interned walk sees the same weights.
+        assert_eq!(t.distance_interned(&a, &eu), 14.0);
+        assert_eq!(t.distance_id(t.node(&a), t.node(&eu)), 14.0);
     }
 
     #[test]
@@ -218,6 +497,48 @@ mod tests {
         // Ties: two equally-far candidates are both returned.
         let cands2 = vec![l("osg/cornell"), l("osg/tacc")];
         assert_eq!(t.closest(&target, &cands2).len(), 2);
+    }
+
+    #[test]
+    fn arena_interns_prefix_chains_once() {
+        let mut arena = NodeArena::new();
+        let a = arena.intern(&l("osg/purdue/c1"));
+        assert_eq!(arena.depth(a), 3);
+        assert_eq!(arena.path_str(a), "osg/purdue/c1");
+        // Parent chain exists and is shared with siblings.
+        let purdue = arena.parent(a);
+        assert_eq!(arena.path_str(purdue), "osg/purdue");
+        let b = arena.intern(&l("osg/purdue/c2"));
+        assert_eq!(arena.parent(b), purdue);
+        // Re-interning is identity; lookup agrees.
+        assert_eq!(arena.intern(&l("osg/purdue/c1")), a);
+        assert_eq!(arena.lookup(&l("osg/purdue")), Some(purdue));
+        assert_eq!(arena.lookup(&l("osg/nowhere")), None);
+        // Root is node 0.
+        assert_eq!(arena.intern(&l("")), NodeId::ROOT);
+        assert_eq!(arena.depth(NodeId::ROOT), 0);
+    }
+
+    #[test]
+    fn arena_lca_and_within_match_label_math() {
+        let mut arena = NodeArena::new();
+        let ls = arena.intern(&l("xsede/tacc/lonestar"));
+        let st = arena.intern(&l("xsede/tacc/stampede"));
+        let osg = arena.intern(&l("osg/purdue"));
+        let tacc = arena.lookup(&l("xsede/tacc")).unwrap();
+        assert_eq!(arena.lca(ls, st), tacc);
+        assert_eq!(arena.lca(ls, ls), ls);
+        assert_eq!(arena.lca(ls, osg), NodeId::ROOT);
+        assert!(arena.within(ls, tacc));
+        assert!(arena.within(ls, ls));
+        assert!(!arena.within(tacc, ls));
+        assert!(!arena.within(osg, tacc));
+        assert!(arena.within(osg, NodeId::ROOT));
+        // Adversarial sibling: "xsede/tacc2" shares the string prefix
+        // but not the component prefix.
+        let tc2 = arena.intern(&l("xsede/tacc2"));
+        assert!(!arena.within(tc2, tacc));
+        assert_eq!(arena.ancestor_at(ls, 1), arena.lookup(&l("xsede")).unwrap());
     }
 
     #[test]
@@ -242,6 +563,72 @@ mod tests {
                 } else {
                     Err(format!("triangle violated: d({a},{c})={ac} > {ab}+{bc}"))
                 }
+            },
+        );
+    }
+
+    /// Tentpole acceptance: the interned id walk must be bit-identical
+    /// to the string reference on randomized topologies — same labels,
+    /// random edge-weight overrides (including the defaults-only fast
+    /// path), every pair compared via `f64::to_bits`.
+    #[test]
+    fn interned_distance_matches_string_reference_property() {
+        crate::prop::check_default(
+            |rng| {
+                let mk = |rng: &mut crate::rng::Rng| {
+                    let depth = crate::prop::gen::usize_in(rng, 0, 5);
+                    let parts: Vec<String> =
+                        (0..depth).map(|d| format!("n{}", rng.below(3 + d as u64))).collect();
+                    Label::new(&parts.join("/"))
+                };
+                let labels: Vec<Label> = (0..crate::prop::gen::usize_in(rng, 2, 8))
+                    .map(|_| mk(rng))
+                    .collect();
+                let n_weights = if rng.chance(0.3) {
+                    0 // defaults-only fast path
+                } else {
+                    crate::prop::gen::usize_in(rng, 1, 5)
+                };
+                let weights: Vec<(Label, f64)> = (0..n_weights)
+                    .map(|_| (mk(rng), rng.range_f64(0.1, 9.0)))
+                    .collect();
+                (labels, weights)
+            },
+            |(labels, weights)| {
+                let mut t = Topology::new();
+                for (label, w) in weights {
+                    if !label.0.is_empty() {
+                        t.set_edge_weight(&label.0, *w);
+                    }
+                }
+                for a in labels {
+                    for b in labels {
+                        let string = t.distance(a, b);
+                        let interned = t.distance_interned(a, b);
+                        let by_id = t.distance_id(t.node(a), t.node(b));
+                        if string.to_bits() != interned.to_bits() {
+                            return Err(format!(
+                                "d({a},{b}): string {string} != interned {interned}"
+                            ));
+                        }
+                        if string.to_bits() != by_id.to_bits() {
+                            return Err(format!("d({a},{b}): string {string} != id {by_id}"));
+                        }
+                        if t.affinity(a, b).to_bits() != t.affinity_interned(a, b).to_bits() {
+                            return Err(format!("affinity({a},{b}) diverges"));
+                        }
+                        // within() and the arena's subtree test agree.
+                        let arena_within = {
+                            let inner = t.interned.lock().unwrap();
+                            let (ai, bi) = (inner.arena.lookup(a).unwrap(), inner.arena.lookup(b).unwrap());
+                            inner.arena.within(ai, bi)
+                        };
+                        if arena_within != a.within(b) {
+                            return Err(format!("within({a},{b}) diverges"));
+                        }
+                    }
+                }
+                Ok(())
             },
         );
     }
