@@ -1,0 +1,63 @@
+//! Execution-mode comparison bench: runs the two-site workload of
+//! `experiments::modes` under each mode and emits `BENCH_modes.json`
+//! with per-mode makespan, bytes moved, replica count, and wall time —
+//! the machine-readable trajectory for the execution-mode engine
+//! (companion to `BENCH_perf_micro.json`).
+//!
+//! Set `PD_BENCH_MODES_OUT` to change the output path and
+//! `PD_BENCH_QUICK=1` to average over 1 seed instead of 3 (CI smoke).
+//!
+//! Run with: `cargo bench --bench modes_compare`
+
+use pilot_data::datamgmt::ModeKind;
+use pilot_data::experiments::modes::run_mode;
+use std::time::Instant;
+
+fn main() {
+    let reps: u64 = if std::env::var("PD_BENCH_QUICK").is_ok() { 1 } else { 3 };
+    println!("# Execution-mode comparison ({reps} seed(s) per mode)");
+    println!(
+        "{:<16}{:>12}{:>16}{:>14}{:>12}",
+        "mode", "T (s)", "bytes moved", "ref replicas", "wall (s)"
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for mode in ModeKind::all() {
+        let t0 = Instant::now();
+        let mut makespan = 0.0;
+        let mut bytes = 0u64;
+        let mut replicas = 0usize;
+        for rep in 0..reps {
+            let r = run_mode(mode, 42 + rep * 101).expect("mode run failed");
+            makespan += r.makespan;
+            bytes += r.bytes_moved.as_u64();
+            replicas = r.ref_replicas; // identical across seeds by construction
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let makespan = makespan / reps as f64;
+        let bytes = bytes / reps;
+        println!(
+            "{:<16}{:>12.0}{:>16}{:>14}{:>12.3}",
+            mode.name(),
+            makespan,
+            bytes,
+            replicas,
+            wall
+        );
+        results.push((format!("{} makespan_s", mode.name()), makespan));
+        results.push((format!("{} bytes_moved", mode.name()), bytes as f64));
+        results.push((format!("{} ref_replicas", mode.name()), replicas as f64));
+        results.push((format!("{} wall_s", mode.name()), wall));
+    }
+
+    let out =
+        std::env::var("PD_BENCH_MODES_OUT").unwrap_or_else(|_| "BENCH_modes.json".into());
+    let mut obj = pilot_data::json::Json::obj();
+    for (name, v) in &results {
+        obj = obj.set(name.as_str(), *v);
+    }
+    match std::fs::write(&out, obj.to_string_pretty()) {
+        Ok(()) => println!("\n[json] {out}"),
+        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
+    }
+}

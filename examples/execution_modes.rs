@@ -1,0 +1,68 @@
+//! Execution modes walkthrough: one workload, three data-management
+//! policies, head-to-head on the simulated paper testbed.
+//!
+//! The paper's core claim is that Pilot-Data makes data management a
+//! *policy*, not a property of the infrastructure: the same
+//! application can run with on-demand staging, pre-staged inputs, or
+//! autonomous replication without touching application code. This
+//! example runs the identical two-site BWA workload (8 tasks on
+//! Lonestar + Stampede sharing an 8 GiB reference) under each
+//! [`pilot_data::datamgmt::ModeKind`] and prints the comparison.
+//!
+//! Run with: `cargo run --example execution_modes`
+
+use pilot_data::datamgmt::ModeKind;
+use pilot_data::experiments::modes::{run_mode, TASKS};
+
+fn main() -> anyhow::Result<()> {
+    let seed = 42;
+    println!("Execution-mode comparison: {TASKS}-task BWA on Lonestar + Stampede (seed {seed})\n");
+
+    // 1. OnDemand — the reference pull model (§4.2): nothing moves
+    //    until a task is dispatched and its agent stages the inputs.
+    //    The Stampede half of the workload pays an ~8 GiB wire pull
+    //    *per task*, throttled by the scp per-flow cap — the paper's
+    //    ~450 s/task pathology (Fig. 11, scenario 2).
+    let on_demand = run_mode(ModeKind::OnDemand, seed)?;
+
+    // 2. PreStage — eager push at submit: the reference carries the
+    //    affinity label `xsede/tacc`, so the engine copies it once to
+    //    every distinct TACC site the moment the upload lands. Tasks
+    //    then find a local replica wherever they run.
+    let pre_stage = run_mode(ModeKind::PreStage, seed)?;
+
+    // 3. AutoReplicate — background replica maintenance: the engine
+    //    holds every DU at 2 replicas, choosing target sites from the
+    //    scheduler's affinity index (where the pilots actually are)
+    //    and repairing replicas lost to storage outages through the
+    //    coordination event layer. Replication starts when the second
+    //    site's pilot activates, hiding the copy behind the
+    //    batch-queue wait.
+    let auto_repl = run_mode(ModeKind::AutoReplicate { replicas: 2 }, seed)?;
+
+    println!(
+        "{:<16}{:>12}{:>12}{:>16}{:>14}{:>20}",
+        "mode", "T (s)", "T_D (s)", "bytes moved", "ref replicas", "staging mean (s)"
+    );
+    println!("{}", "-".repeat(90));
+    for r in [&on_demand, &pre_stage, &auto_repl] {
+        println!(
+            "{:<16}{:>12.0}{:>12.0}{:>16}{:>14}{:>20.1}",
+            r.mode.name(),
+            r.makespan,
+            r.t_d,
+            format!("{}", r.bytes_moved),
+            r.ref_replicas,
+            r.staging_mean,
+        );
+    }
+
+    // The shape to expect: the proactive modes hold a replica at both
+    // sites (2 vs 1), move a fraction of on-demand's bytes (one 8 GiB
+    // copy instead of one per remote task), and collapse the mean
+    // staging time from minutes to seconds.
+    assert!(pre_stage.staging_mean < on_demand.staging_mean);
+    assert!(auto_repl.bytes_moved.as_u64() < on_demand.bytes_moved.as_u64());
+    println!("\nexecution_modes OK");
+    Ok(())
+}

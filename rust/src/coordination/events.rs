@@ -22,7 +22,7 @@
 //! * **Blocking pops.** [`Store::blpop_k`] / [`Store::blpop_any`]
 //!   block the calling thread until an element arrives, built on
 //!   condvar-backed waiter cells in a per-stripe registry: a popper
-//!   that finds its queues empty registers a [`WaitCell`] under each
+//!   that finds its queues empty registers a `WaitCell` under each
 //!   queue key (then re-checks, closing the classic lost-wakeup
 //!   window) and sleeps. Multi-queue pops implement §4.2's two-queue
 //!   protocol in one call: queues are tried in priority order
@@ -39,10 +39,10 @@
 //! parked workers, so the herd would cost O(N) wakeups per push; the
 //! handoff costs O(1). The protocol:
 //!
-//! * **Per-waiter delivery state.** Each [`WaitCell`] carries a
+//! * **Per-waiter delivery state.** Each `WaitCell` carries a
 //!   `signaled` claim flag. A push scans the key's waiter list in
 //!   registration order and *claims* the first cell whose flag is
-//!   clear ([`WaitCell::try_claim`]); already-claimed cells are
+//!   clear (`WaitCell::try_claim`); already-claimed cells are
 //!   skipped, so a cell registered under several queues (a multi-queue
 //!   pop) can absorb at most one pending handoff — a second push on a
 //!   *different* covered queue passes over it and claims the next

@@ -697,6 +697,13 @@ pub mod keys {
     pub const PILOT_QUEUE_PREFIX: &str = "pd:queue:pilot:";
     /// The global CU queue any agent may pull from.
     pub const GLOBAL_QUEUE: &str = "pd:queue:global";
+    /// Prefix of data-plane loss notifications: a replica of DU `x`
+    /// disappearing (capacity eviction, storage outage) is published on
+    /// `pd:data:lost:<x>` with the PD name as payload. The sim driver's
+    /// execution-mode engine subscribes here and turns each loss into a
+    /// repair decision — the outage-repair path rides the same event
+    /// layer as the queue wakeups.
+    pub const DATA_LOST_PREFIX: &str = "pd:data:lost:";
     /// The agent-specific queue of one pilot.
     pub fn pilot_queue(pilot_id: &str) -> String {
         format!("{PILOT_QUEUE_PREFIX}{pilot_id}")

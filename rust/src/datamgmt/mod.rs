@@ -1,0 +1,664 @@
+//! Execution-mode engine: pluggable data-staging / replication
+//! policies over the Pilot-Data substrate.
+//!
+//! The paper's evaluation turns on the claim that one coordination
+//! substrate supports *interchangeable* data-management strategies
+//! ("flexible execution modes enabled by Pilot-Data", §6; the P* model
+//! frames them as policies over a common coordination element). This
+//! module makes that claim concrete: an [`ExecutionMode`] policy
+//! decides **when data moves** — the mechanics (transfer pricing, flow
+//! registration, replica bookkeeping, scheduler integration) stay in
+//! the shared substrate, so swapping a mode never touches the
+//! scheduler, the event layer, or the storage model.
+//!
+//! Three policies ship with the crate:
+//!
+//! * [`OnDemand`] — data moves only when a Compute-Unit is dispatched
+//!   and its agent stages the inputs (§4.2's pull model). This is the
+//!   reference mode: it issues **no** proactive actions, so a run under
+//!   `OnDemand` is bit-identical to the pre-engine hard-wired path
+//!   (property-tested in `experiments::modes`).
+//! * [`PreStage`] — eager push at submit: a Data-Unit carrying an
+//!   affinity label fans out to one Pilot-Data per distinct resource
+//!   label inside that affinity subtree, so compute anywhere in the
+//!   subtree finds a local replica (the Fig. 9 scenario-3/4 shape,
+//!   automated). DUs without an affinity label behave on-demand.
+//! * [`AutoReplicate`] — background N-replica maintenance driven by
+//!   the scheduler's affinity index ([`ManagerState`]'s
+//!   `pilots_by_label`): whenever a DU lands, a pilot activates, or a
+//!   replica is lost (capacity eviction or a storage outage delivered
+//!   through the coordination event layer), the policy tops the DU
+//!   back up to N replicas on the scratch Pilot-Data of live pilots,
+//!   preferring sites hosting the most pilots.
+//!
+//! Policies return [`StageAction`]s; the sim driver
+//! ([`crate::experiments::simdrive::SimSystem`]) dispatches them as
+//! priced transfers and the wall-clock service applies the same
+//! [`ModeKind`] semantics to its local Pilot-Data set
+//! ([`crate::service::PilotSystem::set_execution_mode`]). Capacity
+//! pressure is real in both: every placement goes through the
+//! quota-checked [`crate::storage::simstore::SimStore::try_place`],
+//! so an aggressive policy faces LRU eviction instead of an infinite
+//! disk.
+//!
+//! # Selecting a mode
+//!
+//! ```
+//! use pilot_data::config::paper_testbed;
+//! use pilot_data::datamgmt::{self, ModeKind};
+//! use pilot_data::experiments::simdrive::SimSystem;
+//! use pilot_data::topology::Label;
+//! use pilot_data::unit::{DataUnitDescription, FileRef};
+//! use pilot_data::util::Bytes;
+//!
+//! let mut sys = SimSystem::new(paper_testbed(), 7)
+//!     .with_mode(datamgmt::make(ModeKind::PreStage));
+//! // A reference dataset pinned to the TACC subtree: PreStage pushes
+//! // it to every distinct TACC site as soon as the upload lands.
+//! let du = sys
+//!     .upload_du(
+//!         &DataUnitDescription {
+//!             name: "reference".into(),
+//!             files: vec![FileRef::sized("ref.fa", Bytes::gb(2))],
+//!             affinity: Some(Label::new("xsede/tacc")),
+//!         },
+//!         "lonestar-scratch",
+//!     )
+//!     .unwrap();
+//! sys.run().unwrap();
+//! // Lonestar (the upload target) plus Stampede (pre-staged).
+//! assert_eq!(sys.tb.store.replica_count(&du), 2);
+//! # assert!(sys.tb.store.has_replica(&du, "stampede-scratch"));
+//! ```
+
+use crate::pilot::{ManagerState, PilotState};
+use crate::storage::simstore::SimStore;
+use crate::topology::{Label, Topology};
+use std::collections::BTreeSet;
+
+/// Which execution mode to run — the serializable selector shared by
+/// the sim driver, the wall-clock service, experiments, and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModeKind {
+    /// Stage inputs at CU dispatch (the reference pull model).
+    OnDemand,
+    /// Eager push of affinity-labelled DUs at submit.
+    PreStage,
+    /// Background N-replica maintenance with outage repair.
+    AutoReplicate {
+        /// Target replica count per DU.
+        replicas: u32,
+    },
+}
+
+impl ModeKind {
+    /// Stable display/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModeKind::OnDemand => "on-demand",
+            ModeKind::PreStage => "pre-stage",
+            ModeKind::AutoReplicate { .. } => "auto-replicate",
+        }
+    }
+
+    /// The three modes compared by `experiments::modes` and
+    /// `benches/modes_compare` (auto-replication targets 2 copies).
+    pub fn all() -> [ModeKind; 3] {
+        [ModeKind::OnDemand, ModeKind::PreStage, ModeKind::AutoReplicate { replicas: 2 }]
+    }
+}
+
+impl std::fmt::Display for ModeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One proactive data movement requested by a policy: replicate `du`
+/// onto `dst_pd` (the driver picks the closest source replica and
+/// prices the transfer on the shared network).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageAction {
+    pub du: String,
+    pub dst_pd: String,
+}
+
+/// Why a replica disappeared. Policies repair `Outage` losses but
+/// deliberately ignore `Evicted` ones: a capacity eviction means the
+/// site is full — re-pushing the same bytes would evict something
+/// else and thrash forever, so the pressure signal is left standing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossCause {
+    /// Removed by the storage-capacity model to make room.
+    Evicted,
+    /// Lost to a Pilot-Data storage outage.
+    Outage,
+}
+
+impl LossCause {
+    /// Wire name used on the coordination store's loss channel.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            LossCause::Evicted => "evicted",
+            LossCause::Outage => "outage",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Option<LossCause> {
+        match s {
+            "evicted" => Some(LossCause::Evicted),
+            "outage" => Some(LossCause::Outage),
+            _ => None,
+        }
+    }
+}
+
+/// Read-only world view handed to a policy when it plans: the topology
+/// (for affinity math), the storage state (replicas, quotas, outages),
+/// the manager state (DU descriptions, the pilot fleet and its
+/// `pilots_by_label` affinity index), the agents' scratch Pilot-Data,
+/// and the replication transfers already in flight (so policies do not
+/// double-issue).
+pub struct DataCtx<'a> {
+    pub topo: &'a Topology,
+    pub store: &'a SimStore,
+    pub state: &'a ManagerState,
+    /// `(pilot id, scratch pd name)` in pilot-id (creation) order —
+    /// includes every non-terminal pilot.
+    pub pilot_scratch: &'a [(String, String)],
+    /// Replication transfers in flight as `(du, dst pd)`.
+    pub in_flight: &'a BTreeSet<(String, String)>,
+}
+
+impl<'a> DataCtx<'a> {
+    /// Is a transfer of `du` toward `pd` already running?
+    fn pending(&self, du: &str, pd: &str) -> bool {
+        self.in_flight.contains(&(du.to_string(), pd.to_string()))
+    }
+
+    /// Labels already covered for `du`: resident replicas plus
+    /// in-flight destinations.
+    fn covered_labels(&self, du: &str) -> BTreeSet<String> {
+        let mut seen: BTreeSet<String> = self
+            .store
+            .replicas(du)
+            .into_iter()
+            .map(|p| p.endpoint.label.0.clone())
+            .collect();
+        for (d, pd) in self.in_flight.iter() {
+            if d == du {
+                if let Ok(p) = self.store.pd(pd) {
+                    seen.insert(p.endpoint.label.0.clone());
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// A pluggable staging/replication policy. Hooks are invoked by the
+/// drivers at data-plane events; each returns the proactive transfers
+/// it wants started. Implementations must be deterministic functions
+/// of the [`DataCtx`] — the sim's reproducibility (and the
+/// `OnDemand`-equals-reference property) depends on it.
+pub trait ExecutionMode: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// A passive policy never returns actions from any hook. The
+    /// drivers use this to skip assembling the [`DataCtx`] snapshot
+    /// (a per-event allocation) on hot paths — [`OnDemand`] is the
+    /// passive reference; proactive policies keep the default `false`.
+    fn is_passive(&self) -> bool {
+        false
+    }
+
+    /// A replica of `du` just landed on `pd` (upload, replication, or
+    /// repair transfer completing).
+    fn on_du_available(&self, du: &str, pd: &str, ctx: &DataCtx) -> Vec<StageAction>;
+
+    /// A pilot just became Active (its scratch PD is now a useful
+    /// replication target).
+    fn on_pilot_active(&self, pilot: &str, ctx: &DataCtx) -> Vec<StageAction>;
+
+    /// A replica of `du` on `pd` was lost — capacity eviction or a
+    /// storage outage, delivered through the coordination event layer.
+    /// See [`LossCause`] for why policies treat the two differently.
+    fn on_replica_lost(&self, du: &str, pd: &str, cause: LossCause, ctx: &DataCtx)
+        -> Vec<StageAction>;
+}
+
+/// Build the policy object for a [`ModeKind`].
+pub fn make(kind: ModeKind) -> Box<dyn ExecutionMode> {
+    match kind {
+        ModeKind::OnDemand => Box::new(OnDemand),
+        ModeKind::PreStage => Box::new(PreStage),
+        ModeKind::AutoReplicate { replicas } => Box::new(AutoReplicate { replicas }),
+    }
+}
+
+/// The reference policy: stage at CU dispatch, never proactively.
+/// Every hook returns no actions, so the driver's event stream (and
+/// its RNG draws) are exactly those of the pre-engine hard-wired path.
+pub struct OnDemand;
+
+impl ExecutionMode for OnDemand {
+    fn name(&self) -> &'static str {
+        "on-demand"
+    }
+    fn is_passive(&self) -> bool {
+        true
+    }
+    fn on_du_available(&self, _du: &str, _pd: &str, _ctx: &DataCtx) -> Vec<StageAction> {
+        Vec::new()
+    }
+    fn on_pilot_active(&self, _pilot: &str, _ctx: &DataCtx) -> Vec<StageAction> {
+        Vec::new()
+    }
+    fn on_replica_lost(
+        &self,
+        _du: &str,
+        _pd: &str,
+        _cause: LossCause,
+        _ctx: &DataCtx,
+    ) -> Vec<StageAction> {
+        Vec::new()
+    }
+}
+
+/// Eager push at submit: fan an affinity-labelled DU out to one PD per
+/// distinct resource label within its affinity subtree (skipping
+/// labels already covered, down PDs, and PDs without capacity). The
+/// per-label dedup is what keeps e.g. two Lonestar-resident PDs from
+/// both receiving a copy — one local replica per site is enough for
+/// data-local scheduling.
+pub struct PreStage;
+
+impl PreStage {
+    fn plan(&self, du: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        let Some(d) = ctx.state.dus.get(du) else { return Vec::new() };
+        let Some(aff) = d.description().affinity.clone() else { return Vec::new() };
+        let size = d.size();
+        let mut covered = ctx.covered_labels(du);
+        let mut out = Vec::new();
+        // BTreeMap name order: deterministic target choice per label.
+        for p in ctx.store.pds() {
+            if !p.endpoint.label.within(&aff)
+                || covered.contains(&p.endpoint.label.0)
+                || ctx.store.pd_is_down(&p.name)
+                || ctx.pending(du, &p.name)
+                || !ctx.store.can_fit(&p.name, size)
+            {
+                continue;
+            }
+            covered.insert(p.endpoint.label.0.clone());
+            out.push(StageAction { du: du.to_string(), dst_pd: p.name.clone() });
+        }
+        out
+    }
+}
+
+impl ExecutionMode for PreStage {
+    fn name(&self) -> &'static str {
+        "pre-stage"
+    }
+    fn on_du_available(&self, du: &str, _pd: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        self.plan(du, ctx)
+    }
+    fn on_pilot_active(&self, _pilot: &str, _ctx: &DataCtx) -> Vec<StageAction> {
+        Vec::new() // pre-staging is a submit-time decision
+    }
+    fn on_replica_lost(
+        &self,
+        du: &str,
+        _pd: &str,
+        cause: LossCause,
+        ctx: &DataCtx,
+    ) -> Vec<StageAction> {
+        match cause {
+            // Re-cover the lost label if it is still in the subtree.
+            LossCause::Outage => self.plan(du, ctx),
+            // Capacity pressure: leave the signal standing.
+            LossCause::Evicted => Vec::new(),
+        }
+    }
+}
+
+/// Background N-replica maintenance: keep every DU at `replicas`
+/// copies, placed on the scratch Pilot-Data of live pilots — the
+/// candidates come from the agents' homes and are ranked by how many
+/// pilots the manager's `pilots_by_label` affinity index registers at
+/// the candidate's site (most compute first, then PD name for
+/// determinism). Lost replicas (eviction, outage) are repaired the
+/// same way.
+pub struct AutoReplicate {
+    pub replicas: u32,
+}
+
+impl AutoReplicate {
+    fn top_up(&self, du: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        let Some(d) = ctx.state.dus.get(du) else { return Vec::new() };
+        let size = d.size();
+        let have = ctx.store.replica_count(du);
+        let pending = ctx.in_flight.iter().filter(|(d, _)| d == du).count();
+        let mut need = (self.replicas as usize).saturating_sub(have + pending);
+        if need == 0 {
+            return Vec::new();
+        }
+        // Candidate targets: scratch PDs of non-terminal pilots,
+        // deduped, ranked by (pilots at the PD's label desc, name asc).
+        let mut seen_pd: BTreeSet<&str> = BTreeSet::new();
+        let mut candidates: Vec<(usize, &str)> = Vec::new();
+        for (pilot, scratch) in ctx.pilot_scratch.iter() {
+            let alive = ctx
+                .state
+                .pilots
+                .get(pilot)
+                .map(|p| !p.state.is_terminal())
+                .unwrap_or(false);
+            if !alive || !seen_pd.insert(scratch.as_str()) {
+                continue;
+            }
+            let Ok(p) = ctx.store.pd(scratch) else { continue };
+            if ctx.store.has_replica(du, scratch)
+                || ctx.store.pd_is_down(scratch)
+                || ctx.pending(du, scratch)
+                || !ctx.store.can_fit(scratch, size)
+            {
+                continue;
+            }
+            let weight = ctx
+                .state
+                .pilots_at_label(&p.endpoint.label)
+                .iter()
+                .filter(|id| {
+                    ctx.state
+                        .pilots
+                        .get(id.as_str())
+                        .map(|p| p.state == PilotState::Active || p.state == PilotState::Queued)
+                        .unwrap_or(false)
+                })
+                .count();
+            candidates.push((weight, scratch.as_str()));
+        }
+        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(b.1)));
+        let mut out = Vec::new();
+        for (_, pd) in candidates {
+            if need == 0 {
+                break;
+            }
+            out.push(StageAction { du: du.to_string(), dst_pd: pd.to_string() });
+            need -= 1;
+        }
+        out
+    }
+}
+
+impl ExecutionMode for AutoReplicate {
+    fn name(&self) -> &'static str {
+        "auto-replicate"
+    }
+    fn on_du_available(&self, du: &str, _pd: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        self.top_up(du, ctx)
+    }
+    fn on_pilot_active(&self, _pilot: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        // A new site appeared: re-examine every DU (BTreeMap id order).
+        let mut out = Vec::new();
+        for du in ctx.state.dus.keys() {
+            out.extend(self.top_up(du, ctx));
+        }
+        out
+    }
+    fn on_replica_lost(
+        &self,
+        du: &str,
+        _pd: &str,
+        cause: LossCause,
+        ctx: &DataCtx,
+    ) -> Vec<StageAction> {
+        match cause {
+            LossCause::Outage => self.top_up(du, ctx),
+            // See LossCause: repairing an eviction would thrash the
+            // full site.
+            LossCause::Evicted => Vec::new(),
+        }
+    }
+}
+
+/// Rank replication target PDs for the wall-clock service's local
+/// mode: affinity of each candidate's label to `origin` (descending,
+/// bitwise-stable f64 compare), then PD id. Shared pure helper so the
+/// service's [`ModeKind`] application and tests agree on order.
+pub fn rank_targets_by_affinity(
+    topo: &Topology,
+    origin: &Label,
+    candidates: &mut Vec<(String, Label)>,
+) {
+    candidates.sort_by(|a, b| {
+        let fa = topo.affinity_interned(&a.1, origin);
+        let fb = topo.affinity_interned(&b.1, origin);
+        fb.partial_cmp(&fa).unwrap().then(a.0.cmp(&b.0))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pilot::{PilotCompute, PilotComputeDescription};
+    use crate::storage::Endpoint;
+    use crate::unit::{DataUnit, DataUnitDescription, FileRef};
+    use crate::util::Bytes;
+
+    fn store_with(pds: &[(&str, &str)]) -> SimStore {
+        let mut s = SimStore::new();
+        for (name, label) in pds {
+            s.add_pd(name, Endpoint::new(&format!("ssh://{name}/x"), label).unwrap());
+        }
+        s
+    }
+
+    fn du_with_affinity(st: &mut ManagerState, gb: u64, affinity: Option<&str>) -> String {
+        st.add_du(DataUnit::new(DataUnitDescription {
+            name: "d".into(),
+            files: vec![FileRef::sized("f", Bytes::gb(gb))],
+            affinity: affinity.map(Label::new),
+        }))
+    }
+
+    fn pilot_at(st: &mut ManagerState, label: &str, state: PilotState) -> String {
+        let mut p = PilotCompute::new(PilotComputeDescription {
+            service_url: "batch://m".into(),
+            cores: 4,
+            walltime_s: 1e6,
+            affinity: Some(Label::new(label)),
+        });
+        p.state = state;
+        st.add_pilot(p)
+    }
+
+    #[test]
+    fn on_demand_never_acts() {
+        let topo = Topology::new();
+        let store = store_with(&[("a", "osg/a")]);
+        let mut st = ManagerState::new();
+        let du = du_with_affinity(&mut st, 1, Some("osg"));
+        let in_flight = BTreeSet::new();
+        let scratch = Vec::new();
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        let m = OnDemand;
+        assert!(m.on_du_available(&du, "a", &ctx).is_empty());
+        assert!(m.on_pilot_active("p", &ctx).is_empty());
+        assert!(m.on_replica_lost(&du, "a", LossCause::Outage, &ctx).is_empty());
+    }
+
+    #[test]
+    fn prestage_fans_out_one_pd_per_label_in_subtree() {
+        let topo = Topology::new();
+        let mut store = store_with(&[
+            ("ls-go", "xsede/tacc/lonestar"), // same label as ls-scratch: dedup
+            ("ls-scratch", "xsede/tacc/lonestar"),
+            ("st-scratch", "xsede/tacc/stampede"),
+            ("tr-scratch", "xsede/sdsc/trestles"), // outside the subtree
+        ]);
+        let mut st = ManagerState::new();
+        let du = du_with_affinity(&mut st, 2, Some("xsede/tacc"));
+        store.register_du(&du, Bytes::gb(2), 1);
+        store.place(&du, "ls-scratch").unwrap();
+        let in_flight = BTreeSet::new();
+        let scratch = Vec::new();
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        let actions = PreStage.on_du_available(&du, "ls-scratch", &ctx);
+        // Lonestar label already covered; stampede gets one copy;
+        // trestles is outside the affinity subtree.
+        assert_eq!(
+            actions,
+            vec![StageAction { du: du.clone(), dst_pd: "st-scratch".into() }]
+        );
+        // A DU without affinity never pre-stages.
+        let du2 = du_with_affinity(&mut st, 1, None);
+        store.register_du(&du2, Bytes::gb(1), 1);
+        store.place(&du2, "ls-scratch").unwrap();
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        assert!(PreStage.on_du_available(&du2, "ls-scratch", &ctx).is_empty());
+    }
+
+    #[test]
+    fn prestage_skips_in_flight_and_full_targets() {
+        let topo = Topology::new();
+        let mut store = store_with(&[
+            ("ls", "xsede/tacc/lonestar"),
+            ("st", "xsede/tacc/stampede"),
+            ("tiny", "xsede/tacc/wrangler"),
+        ]);
+        store.set_quota("tiny", Some(Bytes::gb(1))).unwrap();
+        let mut st = ManagerState::new();
+        let du = du_with_affinity(&mut st, 2, Some("xsede/tacc"));
+        store.register_du(&du, Bytes::gb(2), 1);
+        store.place(&du, "ls").unwrap();
+        let mut in_flight = BTreeSet::new();
+        in_flight.insert((du.clone(), "st".to_string()));
+        let scratch = Vec::new();
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        // st is in flight (label covered), tiny cannot fit 2 GiB.
+        assert!(PreStage.on_du_available(&du, "ls", &ctx).is_empty());
+    }
+
+    #[test]
+    fn auto_replicate_tops_up_on_pilot_sites() {
+        let topo = Topology::new();
+        let mut store = store_with(&[
+            ("ls-scratch", "xsede/tacc/lonestar"),
+            ("st-scratch", "xsede/tacc/stampede"),
+            ("tr-scratch", "xsede/sdsc/trestles"),
+        ]);
+        let mut st = ManagerState::new();
+        let p1 = pilot_at(&mut st, "xsede/tacc/stampede", PilotState::Active);
+        let p2 = pilot_at(&mut st, "xsede/sdsc/trestles", PilotState::Active);
+        pilot_at(&mut st, "xsede/tacc/stampede", PilotState::Active); // 2nd stampede pilot
+        let du = du_with_affinity(&mut st, 2, None);
+        store.register_du(&du, Bytes::gb(2), 1);
+        store.place(&du, "ls-scratch").unwrap();
+        let in_flight = BTreeSet::new();
+        let scratch = vec![
+            (p1.clone(), "st-scratch".to_string()),
+            (p2.clone(), "tr-scratch".to_string()),
+        ];
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        // Target 2: one more replica; stampede wins (2 pilots > 1).
+        let m = AutoReplicate { replicas: 2 };
+        assert_eq!(
+            m.on_du_available(&du, "ls-scratch", &ctx),
+            vec![StageAction { du: du.clone(), dst_pd: "st-scratch".into() }]
+        );
+        // Target 3: both sites.
+        let m3 = AutoReplicate { replicas: 3 };
+        assert_eq!(m3.on_du_available(&du, "ls-scratch", &ctx).len(), 2);
+        // In-flight copies count toward the target: nothing re-issued.
+        let mut in_flight = BTreeSet::new();
+        in_flight.insert((du.clone(), "st-scratch".to_string()));
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        assert!(m.on_du_available(&du, "ls-scratch", &ctx).is_empty());
+    }
+
+    #[test]
+    fn auto_replicate_repair_skips_down_pds() {
+        let topo = Topology::new();
+        let mut store = store_with(&[
+            ("ls-scratch", "xsede/tacc/lonestar"),
+            ("st-scratch", "xsede/tacc/stampede"),
+            ("tr-scratch", "xsede/sdsc/trestles"),
+        ]);
+        let mut st = ManagerState::new();
+        let p1 = pilot_at(&mut st, "xsede/tacc/stampede", PilotState::Active);
+        let p2 = pilot_at(&mut st, "xsede/sdsc/trestles", PilotState::Active);
+        let du = du_with_affinity(&mut st, 2, None);
+        store.register_du(&du, Bytes::gb(2), 1);
+        store.place(&du, "ls-scratch").unwrap();
+        // Stampede's storage is down: repair must route to trestles.
+        store.set_pd_down("st-scratch", true);
+        let in_flight = BTreeSet::new();
+        let scratch = vec![
+            (p1.clone(), "st-scratch".to_string()),
+            (p2.clone(), "tr-scratch".to_string()),
+        ];
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        let m = AutoReplicate { replicas: 2 };
+        assert_eq!(
+            m.on_replica_lost(&du, "st-scratch", LossCause::Outage, &ctx),
+            vec![StageAction { du: du.clone(), dst_pd: "tr-scratch".into() }]
+        );
+        // A capacity eviction is NOT repaired (anti-thrash rule).
+        assert!(m.on_replica_lost(&du, "st-scratch", LossCause::Evicted, &ctx).is_empty());
+        assert_eq!(LossCause::from_wire("outage"), Some(LossCause::Outage));
+        assert_eq!(LossCause::from_wire("gone"), None);
+    }
+
+    #[test]
+    fn mode_kind_names_roundtrip() {
+        for kind in ModeKind::all() {
+            assert_eq!(make(kind).name(), kind.name());
+        }
+        assert_eq!(format!("{}", ModeKind::PreStage), "pre-stage");
+    }
+}

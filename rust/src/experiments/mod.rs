@@ -13,12 +13,15 @@
 //! | fig11  | 1024-task distributed run, 4 scenarios              |
 //! | fig12  | per-machine task runtimes + distribution            |
 //! | fig13  | timeline of the 3-machine run                       |
+//! | modes  | execution-mode comparison (on-demand / pre-stage /  |
+//! |        | auto-replicate) on the 2-site workload              |
 
 pub mod simdrive;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod fig11;
+pub mod modes;
 pub mod table1;
 
 use crate::metrics::Table;
@@ -35,14 +38,15 @@ pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
         "fig11" => fig11::run_fig11(seed),
         "fig12" => fig11::run_fig12(seed),
         "fig13" => fig11::run_fig13(seed),
+        "modes" => modes::run(seed),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13)"
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes)"
         ),
     }
 }
 
-pub const ALL: [&str; 8] =
-    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13"];
+pub const ALL: [&str; 9] =
+    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "modes"];
 
 /// Print tables and persist CSVs under `results/`.
 pub fn report(id: &str, tables: &[Table], results_dir: &Path) -> anyhow::Result<()> {

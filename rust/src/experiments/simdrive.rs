@@ -44,6 +44,7 @@
 use crate::config::Testbed;
 use crate::coordination::events::Event;
 use crate::coordination::{keys, Key, Store};
+use crate::datamgmt::{DataCtx, ExecutionMode, LossCause, OnDemand, StageAction};
 use crate::faults::{attempt_transfer, RetryPolicy};
 use crate::metrics::{CuRecord, RunMetrics, TimelineEvent};
 use crate::net::FlowHandle;
@@ -51,11 +52,12 @@ use crate::pilot::{agent_pull_tracked, ManagerState, PilotCompute, PilotComputeD
 use crate::rng::Rng;
 use crate::scheduler::{AffinityScheduler, Placement, SchedContext, Scheduler};
 use crate::simtime::Sim;
-use crate::storage::simstore::TransferCost;
+use crate::storage::simstore::{PlaceOutcome, TransferCost};
 use crate::topology::Label;
 use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUnitDescription, DuState};
+use crate::util::Bytes;
 use crate::workload::task_runtime_s;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 /// Events of the simulated pilot system.
@@ -75,6 +77,10 @@ pub enum Ev {
     Reschedule { cu: String },
     /// Pilot hit its walltime limit (or was killed by fault injection).
     PilotExpired { pilot: String },
+    /// A Pilot-Data's storage went down (fault injection): its
+    /// replicas are lost and the execution-mode engine repairs them
+    /// through the event layer.
+    PdDown { pd: String },
 }
 
 /// Where a pilot's agent runs: its machine and scratch Pilot-Data.
@@ -163,14 +169,34 @@ pub struct SimSystem {
     pub pull_log: Option<Vec<(String, String, bool)>>,
     /// Pattern subscription on the queue namespace: every rpush in the
     /// store lands here and is translated into sim wakeups by
-    /// [`SimSystem::drain_queue_events`].
+    /// `drain_queue_events`.
     queue_events: std::sync::mpsc::Receiver<Event>,
+    /// The staging/replication policy (see [`crate::datamgmt`]).
+    /// `None` is the seed's hard-wired path with no engine dispatch at
+    /// all — kept as the reference for the `OnDemand`-equivalence
+    /// property test; the default is `Some(OnDemand)`.
+    mode: Option<Box<dyn ExecutionMode>>,
+    /// Replication transfers in flight as `(du, dst pd)` — the
+    /// policies' double-issue guard.
+    repl_in_flight: BTreeSet<(String, String)>,
+    /// Subscription on the data-plane loss channel
+    /// (`keys::DATA_LOST_PREFIX`): capacity evictions and PD outages
+    /// publish here, and `drain_data_events` turns each loss into the
+    /// policy's repair actions — outage repair rides the event layer.
+    data_events: std::sync::mpsc::Receiver<Event>,
+    /// Total bytes sent over the wire (DU uploads/replications + remote
+    /// CU stage-ins) — the mode-comparison cost metric.
+    bytes_moved: u64,
+    /// Placements rejected by the storage-capacity model (PD full of
+    /// pinned/last replicas, or down).
+    pub capacity_rejections: u32,
 }
 
 impl SimSystem {
     pub fn new(tb: Testbed, seed: u64) -> SimSystem {
         let store = Store::new();
         let queue_events = store.subscribe_prefix(keys::QUEUE_PREFIX);
+        let data_events = store.subscribe_prefix(keys::DATA_LOST_PREFIX);
         SimSystem {
             sim: Sim::new(),
             tb,
@@ -195,12 +221,42 @@ impl SimSystem {
             max_busy: BTreeMap::new(),
             pull_log: None,
             queue_events,
+            mode: Some(Box::new(OnDemand)),
+            repl_in_flight: BTreeSet::new(),
+            data_events,
+            bytes_moved: 0,
+            capacity_rejections: 0,
         }
     }
 
     pub fn with_scheduler(mut self, s: Box<dyn Scheduler>) -> SimSystem {
         self.scheduler = s;
         self
+    }
+
+    /// Select the execution mode (default: [`OnDemand`]).
+    pub fn with_mode(mut self, mode: Box<dyn ExecutionMode>) -> SimSystem {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// Reference configuration: no engine dispatch at all — the seed's
+    /// hard-wired staging path, kept so the property suite can assert
+    /// `OnDemand` is a bit-identical no-op wrapper around it.
+    pub fn with_seed_staging_reference(mut self) -> SimSystem {
+        self.mode = None;
+        self
+    }
+
+    /// Name of the active execution mode.
+    pub fn mode_name(&self) -> &'static str {
+        self.mode.as_ref().map(|m| m.name()).unwrap_or("reference")
+    }
+
+    /// Total bytes moved over the wire so far (uploads, replications,
+    /// remote stage-ins).
+    pub fn bytes_moved(&self) -> Bytes {
+        Bytes(self.bytes_moved)
     }
 
     pub fn with_wakeups(mut self, mode: WakeupMode) -> SimSystem {
@@ -296,9 +352,27 @@ impl SimSystem {
         du.transition(DuState::Running)?;
         let id = du.id.clone();
         self.tb.store.register_du(&id, du.size(), du.file_count());
-        self.tb.store.place(&id, pd)?;
+        // Quota-checked like every other placement; evictions it
+        // forces must reach the scheduler index and the loss channel.
+        match self.tb.store.try_place(&id, pd)? {
+            PlaceOutcome::Placed { evicted } => {
+                for (edu, epd) in evicted {
+                    let elabel = self.tb.store.pd(&epd)?.endpoint.label.clone();
+                    self.note_replica_lost(&edu, &epd, &elabel, LossCause::Evicted);
+                }
+            }
+            PlaceOutcome::NoCapacity => {
+                anyhow::bail!("no capacity for pre-staged DU '{id}' on '{pd}'")
+            }
+        }
         self.note_replica_pd(&id, pd);
         self.state.add_du(du);
+        // Pre-staged data is still policy-visible (e.g. auto-replicate
+        // tops it up once pilots appear), and the evictions above may
+        // need the policy's attention too.
+        let actions = self.mode_actions(|m, ctx| m.on_du_available(&id, pd, ctx));
+        self.apply_actions(actions);
+        self.drain_data_events();
         Ok(id)
     }
 
@@ -352,6 +426,8 @@ impl SimSystem {
         // increment, so the cost is bit-identical to the two-step.
         let (cost, flow) =
             self.tb.store.staging_cost_flow(&mut self.tb.net, du, src_pd, dst_pd, via)?;
+        self.bytes_moved += self.tb.store.du_meta(du)?.0.as_u64();
+        self.tb.store.touch(du, src_pd);
         let failure_rate = self.tb.store.pd(dst_pd)?.endpoint.params.failure_rate;
         let outcome = attempt_transfer(&mut self.rng, failure_rate, cost.wire_s, self.retry);
         let total = cost.total() + outcome.wasted_s;
@@ -362,6 +438,107 @@ impl SimSystem {
             ok: outcome.succeeded,
         });
         Ok(())
+    }
+
+    /// Fault injection: take a Pilot-Data's storage down at a given sim
+    /// time. Its resident replicas are lost; each loss is published on
+    /// the coordination store's data channel and the execution-mode
+    /// engine repairs it if the policy calls for replicas.
+    pub fn fail_pd_at(&mut self, pd: &str, at_s: f64) {
+        self.sim.schedule_at(at_s, Ev::PdDown { pd: pd.to_string() });
+    }
+
+    /// `(pilot id, scratch pd)` of every non-terminal pilot, in pilot
+    /// id (creation) order — the policies' candidate-target list.
+    fn pilot_scratch_list(&self) -> Vec<(String, String)> {
+        self.pilot_home
+            .iter()
+            .filter(|(id, _)| {
+                self.state.pilots.get(id.as_str()).map_or(false, |p| !p.state.is_terminal())
+            })
+            .map(|(id, h)| (id.clone(), h.scratch.clone()))
+            .collect()
+    }
+
+    /// Ask the active policy for actions at a data-plane event. The
+    /// hook runs against an immutable [`DataCtx`] snapshot; dispatch
+    /// happens after the borrow ends.
+    fn mode_actions(
+        &self,
+        hook: impl FnOnce(&dyn ExecutionMode, &DataCtx) -> Vec<StageAction>,
+    ) -> Vec<StageAction> {
+        let Some(mode) = self.mode.as_deref() else { return Vec::new() };
+        if mode.is_passive() {
+            // OnDemand: skip the per-event ctx snapshot entirely — the
+            // hook cannot return actions. Keeps the default-mode hot
+            // path allocation-free, like the seed.
+            return Vec::new();
+        }
+        let homes = self.pilot_scratch_list();
+        let ctx = DataCtx {
+            topo: &self.tb.topo,
+            store: &self.tb.store,
+            state: &self.state,
+            pilot_scratch: &homes,
+            in_flight: &self.repl_in_flight,
+        };
+        hook(mode, &ctx)
+    }
+
+    /// Dispatch policy actions as priced replication transfers from
+    /// each DU's closest live replica. Best-effort: an action whose DU
+    /// has no source replica yet (or is already satisfied) is skipped —
+    /// a later `DuStaged`/`PdDown` event re-plans.
+    fn apply_actions(&mut self, actions: Vec<StageAction>) {
+        for a in actions {
+            if self.tb.store.has_replica(&a.du, &a.dst_pd)
+                || self.repl_in_flight.contains(&(a.du.clone(), a.dst_pd.clone()))
+            {
+                continue;
+            }
+            if self.replicate(&a.du, &a.dst_pd).is_ok() {
+                self.repl_in_flight.insert((a.du, a.dst_pd));
+            }
+        }
+    }
+
+    /// A replica of `du` at `pd` (label `label`) is gone. Keep the
+    /// scheduler's replica-location index honest (drop the label only
+    /// when no other PD at that label still holds the DU) and publish
+    /// the loss — with its cause — on the event layer for the policy's
+    /// repair pass.
+    fn note_replica_lost(&mut self, du: &str, pd: &str, label: &Label, cause: LossCause) {
+        let still_at_label = self
+            .tb
+            .store
+            .replicas(du)
+            .iter()
+            .any(|p| p.endpoint.label == *label);
+        if !still_at_label {
+            self.state.drop_replica(du, label);
+        }
+        let _ = self.store.publish(
+            &format!("{}{du}", keys::DATA_LOST_PREFIX),
+            &format!("{pd} {}", cause.wire_name()),
+        );
+    }
+
+    /// Consume data-plane loss events published since the last drain
+    /// and turn each into the policy's repair actions (the data-plane
+    /// analogue of `drain_queue_events`). PD names never contain
+    /// spaces, so the payload splits unambiguously.
+    fn drain_data_events(&mut self) {
+        let mut lost: Vec<(String, String, LossCause)> = Vec::new();
+        while let Ok(ev) = self.data_events.try_recv() {
+            let Some(du) = ev.key.strip_prefix(keys::DATA_LOST_PREFIX) else { continue };
+            let Some((pd, cause)) = ev.payload.rsplit_once(' ') else { continue };
+            let Some(cause) = LossCause::from_wire(cause) else { continue };
+            lost.push((du.to_string(), pd.to_string(), cause));
+        }
+        for (du, pd, cause) in lost {
+            let actions = self.mode_actions(|m, ctx| m.on_replica_lost(&du, &pd, cause, ctx));
+            self.apply_actions(actions);
+        }
     }
 
     /// Submit a CU through the scheduler.
@@ -531,6 +708,10 @@ impl SimSystem {
                 p.transition(PilotState::Active)?;
                 p.t_active = now;
                 self.metrics.mark(now, &home.machine, TimelineEvent::PilotActive);
+                // A new site is live: an auto-replicating policy may
+                // want copies on its scratch PD before work arrives.
+                let actions = self.mode_actions(|m, ctx| m.on_pilot_active(&pilot, ctx));
+                self.apply_actions(actions);
                 self.sim.schedule(0.0, Ev::TryPull { pilot });
             }
 
@@ -538,21 +719,49 @@ impl SimSystem {
                 if let Some(f) = flow {
                     self.tb.net.end_flow(&f);
                 }
+                self.repl_in_flight.remove(&(du.clone(), pd.clone()));
                 if ok {
-                    self.tb.store.place(&du, &pd)?;
-                    self.note_replica_pd(&du, &pd);
-                    if let Some(d) = self.state.dus.get_mut(&du) {
-                        if d.state == DuState::Pending {
-                            d.transition(DuState::Running)?;
+                    // Quota-checked placement: a full (or downed) PD
+                    // rejects the replica instead of growing forever,
+                    // and making room may evict cold replicas.
+                    match self.tb.store.try_place(&du, &pd)? {
+                        PlaceOutcome::Placed { evicted } => {
+                            self.note_replica_pd(&du, &pd);
+                            for (edu, epd) in evicted {
+                                let elabel = self.tb.store.pd(&epd)?.endpoint.label.clone();
+                                self.note_replica_lost(&edu, &epd, &elabel, LossCause::Evicted);
+                            }
+                            if let Some(d) = self.state.dus.get_mut(&du) {
+                                if d.state == DuState::Pending {
+                                    d.transition(DuState::Running)?;
+                                }
+                            }
+                            self.metrics.set_scalar(&format!("staged:{du}:{pd}"), now);
+                            // The policy may fan the new replica out
+                            // further (pre-stage) or top up a replica
+                            // target (auto-replicate); evictions above
+                            // may also need repair — both ride the
+                            // drained data events / hook actions.
+                            let actions =
+                                self.mode_actions(|m, ctx| m.on_du_available(&du, &pd, ctx));
+                            self.apply_actions(actions);
+                            self.drain_data_events();
+                            // New data may unlock data-local work: wake
+                            // pilots at the replica's label (plus
+                            // everyone ready if the global queue holds
+                            // work).
+                            if let Ok(p) = self.tb.store.pd(&pd) {
+                                let label = p.endpoint.label.clone();
+                                self.wake_pilots_for_du(&label);
+                            }
                         }
-                    }
-                    self.metrics.set_scalar(&format!("staged:{du}:{pd}"), now);
-                    // New data may unlock data-local work: wake pilots
-                    // at the replica's label (plus everyone ready if
-                    // the global queue holds work).
-                    if let Ok(p) = self.tb.store.pd(&pd) {
-                        let label = p.endpoint.label.clone();
-                        self.wake_pilots_for_du(&label);
+                        PlaceOutcome::NoCapacity => {
+                            // The bytes crossed the wire but the PD
+                            // cannot legally hold them (quota full of
+                            // pinned/last replicas, or down).
+                            self.capacity_rejections += 1;
+                            self.wake_ready_pilots();
+                        }
                     }
                 } else {
                     // Partial replication (Fig. 8's ~7.5 of 9): the DU
@@ -721,6 +930,25 @@ impl SimSystem {
                 // turning them into wakeups is the drain's job.
                 self.drain_queue_events();
             }
+
+            Ev::PdDown { pd } => {
+                if self.tb.store.pd_is_down(&pd) {
+                    return Ok(()); // idempotent re-delivery
+                }
+                self.tb.store.set_pd_down(&pd, true);
+                let label = self.tb.store.pd(&pd)?.endpoint.label.clone();
+                // Every resident replica is lost: force-evict (the
+                // outage bypasses the capacity-eviction protections),
+                // fix the scheduler's replica index, and publish each
+                // loss on the event layer.
+                for du in self.tb.store.dus_on(&pd) {
+                    self.tb.store.evict(&du, &pd);
+                    self.note_replica_lost(&du, &pd, &label, LossCause::Outage);
+                }
+                // Turn the published losses into the policy's repair
+                // transfers (no-op under OnDemand/reference).
+                self.drain_data_events();
+            }
         }
         Ok(())
     }
@@ -836,7 +1064,9 @@ impl SimSystem {
             let src_name = src.name.clone();
             let src_label = src.endpoint.label.clone();
             if src_label == pilot_label {
-                // Co-located: logical filesystem link.
+                // Co-located: logical filesystem link (still an
+                // access — keep the replica warm in its PD's LRU).
+                self.tb.store.touch(du, &src_name);
                 total += 1.0;
             } else {
                 remote = true;
@@ -876,6 +1106,8 @@ impl SimSystem {
                     attempt_transfer(&mut self.rng, failure_rate, cost.wire_s, self.retry);
                 ok &= outcome.succeeded;
                 total += cost.total() + outcome.wasted_s;
+                self.bytes_moved += self.tb.store.du_meta(du)?.0.as_u64();
+                self.tb.store.touch(du, &src_name);
             }
         }
         self.staged_remote.insert(cu_id.to_string(), remote);
@@ -1093,6 +1325,82 @@ mod tests {
             sys.makespan()
         };
         assert_eq!(run(SlotMode::PerSlot), run(SlotMode::Batch));
+    }
+
+    /// A PD outage must reach the scheduler's replica-location index:
+    /// `data_score` consults `du_locations`, so a label backed only by
+    /// the dead PD has to disappear from it (while labels still backed
+    /// by another PD survive).
+    #[test]
+    fn pd_outage_drops_replica_label_from_scheduler_index() {
+        let mut sys = SimSystem::new(paper_testbed(), 71);
+        let ens = small_ensemble();
+        let du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        sys.replicate(&du, "stampede-scratch").unwrap();
+        sys.run().unwrap();
+        assert_eq!(sys.state.du_locations()[&du].len(), 2);
+        sys.fail_pd_at("lonestar-scratch", sys.sim.now() + 1.0);
+        sys.run().unwrap();
+        assert!(sys.tb.store.pd_is_down("lonestar-scratch"));
+        assert!(!sys.tb.store.has_replica(&du, "lonestar-scratch"));
+        assert_eq!(
+            sys.state.du_locations()[&du],
+            vec![Label::new("xsede/tacc/stampede")],
+            "dead PD's label must leave the scheduler index"
+        );
+    }
+
+    /// A transfer into a PD that cannot legally hold the bytes (quota
+    /// smaller than the DU) pays the wire time but is refused at
+    /// placement — counted, residents untouched.
+    #[test]
+    fn capacity_rejection_is_counted_and_evicts_nothing() {
+        let mut sys = SimSystem::new(paper_testbed(), 73);
+        sys.tb.store.set_quota("stampede-scratch", Some(Bytes::gb(1))).unwrap();
+        let ens = small_ensemble(); // 8 GiB reference
+        let du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        assert_eq!(sys.capacity_rejections, 0);
+        sys.replicate(&du, "stampede-scratch").unwrap();
+        sys.run().unwrap();
+        assert!(!sys.tb.store.has_replica(&du, "stampede-scratch"));
+        assert_eq!(sys.capacity_rejections, 1);
+        assert_eq!(sys.tb.store.used("stampede-scratch"), Bytes::b(0));
+        // The replica index never learned the failed placement.
+        assert_eq!(sys.state.du_locations()[&du].len(), 1);
+    }
+
+    /// Wire-byte accounting: an upload and a remote stage-in count
+    /// their DU sizes; co-located staging moves nothing.
+    #[test]
+    fn bytes_moved_counts_wire_transfers_only() {
+        let mut sys = SimSystem::new(paper_testbed(), 77);
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        let after_upload = sys.bytes_moved().as_u64();
+        assert_eq!(after_upload, Bytes::gb(8).as_u64(), "upload must count its bytes");
+        sys.submit_pilot("lonestar", 4, "lonestar-scratch").unwrap();
+        let mut cud = ens.cu_template.clone();
+        cud.input_data = vec![ref_du.clone()];
+        sys.submit_cu(cud).unwrap();
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(
+            sys.bytes_moved().as_u64(),
+            after_upload,
+            "co-located staging must not count wire bytes"
+        );
+        // A remote pilot stages the same DU over the wire.
+        sys.submit_pilot("stampede", 4, "stampede-scratch").unwrap();
+        let mut cud = ens.cu_template.clone();
+        cud.input_data = vec![ref_du.clone()];
+        cud.affinity = Some(Label::new("xsede/tacc/stampede"));
+        sys.submit_cu(cud).unwrap();
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(sys.bytes_moved().as_u64(), after_upload + Bytes::gb(8).as_u64());
     }
 
     #[test]

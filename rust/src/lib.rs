@@ -2,15 +2,46 @@
 //!
 //! A full reimplementation of the Pilot-Data system (Luckow, Santcroos,
 //! Zebrowski, Jha — 2013): a unified abstraction for distributed **data**
-//! management in conjunction with Pilot-Jobs, including
+//! management in conjunction with Pilot-Jobs.
+//!
+//! # Layer diagram
+//!
+//! The crate is organized as a stack; each layer consumes only the
+//! layers below it:
+//!
+//! ```text
+//!   experiments/          paper figures + the mode-comparison driver
+//!        │                (drivers over simulated time: `simdrive`)
+//!   datamgmt/             execution-mode engine: pluggable staging /
+//!        │                replication policies over the substrate
+//!   pilot/ service/ scheduler/
+//!        │                Pilot-Manager state + Pilot-API facades +
+//!        │                the §5 affinity scheduler
+//!   topology/ net/ storage/ batch/
+//!        │                interned data plane: resource topology,
+//!        │                shared-network flow model, quota-checked
+//!        │                replica store, batch queues
+//!   coordination/         sharded Redis-equivalent: keyspace events,
+//!        │                blocking pops, wake-one handoff
+//!   simtime/ rng/ util/ json/
+//!                         deterministic DES core + support
+//! ```
+//!
+//! In detail:
 //!
 //! * the Pilot-API (`service`): [`service::PilotComputeService`],
 //!   [`service::PilotDataService`], [`service::ComputeDataService`];
 //! * Pilot-Computes and Pilot-Data (`pilot`) with pull-based agents
-//!   coordinated through a from-scratch Redis-equivalent (`coordination`);
+//!   coordinated through a from-scratch Redis-equivalent (`coordination`)
+//!   whose event layer (pub/sub, blocking pops) drives both wall-clock
+//!   agents and the sim driver's wakeups;
 //! * Data-Units / Compute-Units (`unit`) and the affinity-aware
 //!   scheduler of §5 (`scheduler`) over a hierarchical resource topology
-//!   (`topology`);
+//!   (`topology`, interned to integer node ids);
+//! * the **execution-mode engine** (`datamgmt`): pluggable
+//!   staging/replication policies — on-demand, pre-stage,
+//!   auto-replicate — over a storage-capacity model with per-PD quotas
+//!   and LRU eviction (`storage::simstore`);
 //! * storage adaptors for the paper's backends — SSH, SRM/GridFTP, iRODS,
 //!   Globus Online, S3, local filesystem (`storage`);
 //! * a deterministic discrete-event simulation of production DCI
@@ -21,10 +52,53 @@
 //!   kernels, so Compute-Units run *real* compute in local mode —
 //!   python never on the task path;
 //! * experiment drivers regenerating every figure and table of the
-//!   paper's evaluation (`experiments`).
+//!   paper's evaluation, plus the execution-mode comparison
+//!   (`experiments`).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `README.md` for the paper-to-module map and how to run each
+//! experiment, and `ROADMAP.md` for the architecture notes.
+//!
+//! # Quickstart: submit a workload against the simulated testbed
+//!
+//! The same manager/scheduler/store stack that runs wall-clock agents
+//! replays hour-scale runs in milliseconds under simulated time:
+//!
+//! ```
+//! use pilot_data::config::paper_testbed;
+//! use pilot_data::experiments::simdrive::SimSystem;
+//! use pilot_data::unit::{ComputeUnitDescription, DataUnitDescription, FileRef};
+//! use pilot_data::util::Bytes;
+//!
+//! let mut sys = SimSystem::new(paper_testbed(), 42);
+//! // Upload a Data-Unit to Lonestar's scratch Pilot-Data...
+//! let du = sys
+//!     .upload_du(
+//!         &DataUnitDescription {
+//!             name: "reads".into(),
+//!             files: vec![FileRef::sized("chunk0", Bytes::mb(256))],
+//!             affinity: None,
+//!         },
+//!         "lonestar-scratch",
+//!     )
+//!     .unwrap();
+//! sys.run().unwrap(); // land the upload
+//! // ...start a pilot there and submit a Compute-Unit over the DU.
+//! sys.submit_pilot("lonestar", 4, "lonestar-scratch").unwrap();
+//! sys.submit_cu(ComputeUnitDescription {
+//!     executable: "/bin/bwa".into(),
+//!     cores: 2,
+//!     input_data: vec![du],
+//!     ..Default::default()
+//! })
+//! .unwrap();
+//! sys.run().unwrap();
+//! assert!(sys.state.workload_finished());
+//! assert!(sys.makespan() > 0.0);
+//! ```
+//!
+//! To swap the data-management policy, see [`datamgmt`] — the same
+//! submit sequence under `PreStage` or `AutoReplicate` changes *when*
+//! the bytes move, not the application code.
 
 pub mod util;
 pub mod json;
@@ -39,6 +113,7 @@ pub mod coordination;
 pub mod faults;
 pub mod unit;
 pub mod pilot;
+pub mod datamgmt;
 pub mod scheduler;
 pub mod service;
 pub mod runtime;

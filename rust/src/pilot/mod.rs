@@ -227,6 +227,19 @@ impl ManagerState {
         }
     }
 
+    /// Remove `label` from `du`'s replica-location index — the inverse
+    /// of [`ManagerState::note_replica`], called when the *last*
+    /// replica at that label is evicted or lost to a storage outage,
+    /// so `data_score` stops crediting data that is no longer there.
+    pub fn drop_replica(&mut self, du: &str, label: &Label) {
+        if let Some(locs) = self.du_locations.get_mut(du) {
+            locs.retain(|l| l != label);
+            if locs.is_empty() {
+                self.du_locations.remove(du);
+            }
+        }
+    }
+
     /// One CU was pushed onto `pilot`'s agent queue.
     pub fn note_queue_push(&mut self, pilot: &str) {
         *self.queue_depth.entry(pilot.to_string()).or_insert(0) += 1;
@@ -632,6 +645,22 @@ mod tests {
         st.note_replica("du-1", &l2);
         assert_eq!(st.du_locations()["du-1"], vec![l1.clone(), l2]);
         assert!(st.du_locations().get("du-2").is_none());
+    }
+
+    #[test]
+    fn drop_replica_inverts_note_replica() {
+        let mut st = ManagerState::new();
+        let l1 = Label::new("xsede/tacc/lonestar");
+        let l2 = Label::new("osg/fnal");
+        st.note_replica("du-1", &l1);
+        st.note_replica("du-1", &l2);
+        st.drop_replica("du-1", &l1);
+        assert_eq!(st.du_locations()["du-1"], vec![l2.clone()]);
+        // Dropping the last label removes the whole entry, and
+        // dropping from an unknown DU is a no-op.
+        st.drop_replica("du-1", &l2);
+        assert!(st.du_locations().get("du-1").is_none());
+        st.drop_replica("du-unknown", &l1);
     }
 
     /// Satellite (ROADMAP): DU replica labels are checkpointed into the

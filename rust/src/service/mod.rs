@@ -39,6 +39,7 @@
 //! fewer than slots or CUs span multiple cores.
 
 use crate::coordination::{keys, Store};
+use crate::datamgmt::{self, ModeKind};
 use crate::pilot::{
     ManagerState, PilotCompute, PilotComputeDescription, PilotData, PilotDataDescription,
     PilotState,
@@ -63,7 +64,7 @@ const AGENT_WAKE: &str = "__agent_wake__";
 /// A pilot marshaling thousands of cores should not spawn thousands of
 /// 1:1 threads; the slot semaphore in `run_cu` keeps `busy ≤ cores`
 /// regardless of how many workers drive the slots.
-const DEFAULT_WORKER_CAP: u32 = 32;
+pub const DEFAULT_WORKER_CAP: u32 = 32;
 
 /// Result of executing one Compute-Unit.
 #[derive(Debug, Clone, Default)]
@@ -136,6 +137,12 @@ pub struct PilotSystem {
     /// pilot). `progress` stays the global workload-level signal for
     /// `wait_all`.
     slot_cvs: Mutex<BTreeMap<String, Arc<Condvar>>>,
+    /// The data-management execution mode applied at DU submit (local
+    /// analogue of the sim driver's [`crate::datamgmt::ExecutionMode`]
+    /// engine): `PreStage` fans affinity-labelled DUs out to one PD
+    /// per distinct label in the affinity subtree; `AutoReplicate`
+    /// tops every DU up to N replicas on affinity-ranked PDs.
+    data_mode: Mutex<ModeKind>,
 }
 
 impl PilotSystem {
@@ -163,7 +170,19 @@ impl PilotSystem {
             ),
             pool_sizes: Mutex::new(BTreeMap::new()),
             slot_cvs: Mutex::new(BTreeMap::new()),
+            data_mode: Mutex::new(ModeKind::OnDemand),
         })
+    }
+
+    /// Select the data-management execution mode applied to DUs
+    /// submitted after this call (default: [`ModeKind::OnDemand`]).
+    pub fn set_execution_mode(&self, mode: ModeKind) {
+        *self.data_mode.lock().unwrap() = mode;
+    }
+
+    /// The currently selected execution mode.
+    pub fn execution_mode(&self) -> ModeKind {
+        *self.data_mode.lock().unwrap()
     }
 
     /// The slot condvar of one pilot's pool (created on first use).
@@ -655,8 +674,23 @@ pub struct ComputeDataService {
 impl ComputeDataService {
     /// Submit a Data-Unit into a specific Pilot-Data, ingesting file
     /// content from `FileRef::src` paths (or creating empty DUs for
-    /// outputs).
+    /// outputs). The selected execution mode
+    /// ([`PilotSystem::set_execution_mode`]) then replicates the DU
+    /// proactively — pre-staging across its affinity subtree, or
+    /// topping it up to the auto-replication target.
     pub fn submit_data_unit(
+        &self,
+        descr: DataUnitDescription,
+        pd_id: &str,
+    ) -> anyhow::Result<String> {
+        let id = self.submit_data_unit_inner(descr, pd_id)?;
+        self.apply_execution_mode(&id);
+        Ok(id)
+    }
+
+    /// The mode-free submit path (shared by [`Self::put_data_unit`],
+    /// which must write its byte blobs before replication copies them).
+    fn submit_data_unit_inner(
         &self,
         descr: DataUnitDescription,
         pd_id: &str,
@@ -716,7 +750,7 @@ impl ComputeDataService {
                 .collect(),
             affinity: None,
         };
-        let du = self.submit_data_unit(descr, pd_id)?;
+        let du = self.submit_data_unit_inner(descr, pd_id)?;
         {
             let pd_fs = self.sys.pd_fs.lock().unwrap();
             let fs = pd_fs.get(pd_id).unwrap();
@@ -729,7 +763,89 @@ impl ComputeDataService {
                 let _ = d.transition(DuState::Running);
             }
         }
+        // Replicate only after the blobs are on disk, so the mode's
+        // copies are complete.
+        self.apply_execution_mode(&du);
         Ok(du)
+    }
+
+    /// Apply the system's execution mode to a freshly submitted DU.
+    /// Local-mode counterpart of the sim driver's policy dispatch —
+    /// same semantics, against the service's `file://` Pilot-Data set.
+    /// Best-effort, like the sim's action dispatch: the DU is already
+    /// durably placed when this runs, so a failed proactive replica
+    /// must not turn the whole submit into an error (retrying callers
+    /// would duplicate live data).
+    fn apply_execution_mode(&self, du_id: &str) {
+        match self.sys.execution_mode() {
+            ModeKind::OnDemand => {}
+            ModeKind::PreStage => {
+                let affinity = {
+                    let st = self.sys.state.lock().unwrap();
+                    st.dus.get(du_id).and_then(|d| d.description().affinity.clone())
+                };
+                let Some(affinity) = affinity else { return };
+                let covered: std::collections::BTreeSet<String> = {
+                    let locations = self.sys.locations.lock().unwrap();
+                    locations
+                        .get(du_id)
+                        .map(|v| v.iter().map(|(_, l)| l.0.clone()).collect())
+                        .unwrap_or_default()
+                };
+                let candidates: Vec<(String, Label)> = {
+                    let st = self.sys.state.lock().unwrap();
+                    st.pilot_datas
+                        .values()
+                        .filter(|p| p.affinity().within(&affinity))
+                        .map(|p| (p.id.clone(), p.affinity()))
+                        .collect()
+                };
+                let mut covered = covered;
+                for (pd, label) in candidates {
+                    if covered.contains(&label.0) {
+                        continue;
+                    }
+                    // Best-effort: a failed copy leaves that label
+                    // uncovered but the submit stands.
+                    if self.replicate(du_id, &pd).is_ok() {
+                        covered.insert(label.0.clone());
+                    }
+                }
+            }
+            ModeKind::AutoReplicate { replicas } => {
+                let (origin, existing) = {
+                    let locations = self.sys.locations.lock().unwrap();
+                    let locs = locations.get(du_id).cloned().unwrap_or_default();
+                    let origin = locs
+                        .first()
+                        .map(|(_, l)| l.clone())
+                        .unwrap_or_else(|| Label::new(""));
+                    let pds: std::collections::BTreeSet<String> =
+                        locs.iter().map(|(pd, _)| pd.clone()).collect();
+                    (origin, pds)
+                };
+                let mut candidates: Vec<(String, Label)> = {
+                    let st = self.sys.state.lock().unwrap();
+                    st.pilot_datas
+                        .values()
+                        .filter(|p| !existing.contains(&p.id))
+                        .map(|p| (p.id.clone(), p.affinity()))
+                        .collect()
+                };
+                datamgmt::rank_targets_by_affinity(&self.sys.topo, &origin, &mut candidates);
+                let mut need = (replicas as usize).saturating_sub(existing.len());
+                for (pd, _) in candidates {
+                    if need == 0 {
+                        break;
+                    }
+                    // Best-effort; a failed candidate does not consume
+                    // the budget, the next-ranked PD is tried instead.
+                    if self.replicate(du_id, &pd).is_ok() {
+                        need -= 1;
+                    }
+                }
+            }
+        }
     }
 
     /// Replicate a DU into another Pilot-Data (local copy).
@@ -1000,6 +1116,71 @@ mod tests {
             ..Default::default()
         });
         assert!(res.is_err());
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The execution-mode engine's local dispatch: `PreStage` fans an
+    /// affinity-labelled DU out to one PD per distinct label in its
+    /// affinity subtree at submit, with complete file content.
+    #[test]
+    fn prestage_mode_fans_out_at_submit() {
+        let dir = tmpdir("mode-prestage");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        sys.set_execution_mode(ModeKind::PreStage);
+        assert_eq!(sys.execution_mode(), ModeKind::PreStage);
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+        let a = pds.create_pilot_data(local_pd(&dir, "a", "site/a")).unwrap();
+        let _b = pds.create_pilot_data(local_pd(&dir, "b", "site/b")).unwrap();
+        let _c = pds.create_pilot_data(local_pd(&dir, "c", "site/b")).unwrap(); // same label as b
+        let _far = pds.create_pilot_data(local_pd(&dir, "far", "elsewhere/x")).unwrap();
+        let du = cds
+            .submit_data_unit(
+                DataUnitDescription {
+                    name: "shared".into(),
+                    files: vec![],
+                    affinity: Some(Label::new("site")),
+                },
+                &a,
+            )
+            .unwrap();
+        // One replica per distinct label within `site`: a + (b|c), the
+        // out-of-subtree PD untouched.
+        let locs = sys.locations.lock().unwrap().get(&du).unwrap().clone();
+        assert_eq!(locs.len(), 2, "locs={locs:?}");
+        assert!(locs.iter().any(|(_, l)| l.0 == "site/a"));
+        assert!(locs.iter().any(|(_, l)| l.0 == "site/b"));
+        // An unlabelled DU stays on-demand — and its blobs are intact.
+        let plain = cds.put_data_unit("plain", &[("f.txt", b"payload")], &a).unwrap();
+        assert_eq!(sys.locations.lock().unwrap().get(&plain).unwrap().len(), 1);
+        assert_eq!(cds.fetch(&plain, "f.txt").unwrap(), b"payload");
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// `AutoReplicate` tops a submitted DU up to N replicas on
+    /// affinity-ranked PDs, and the replicas carry the byte content
+    /// (put_data_unit replicates only after the blobs land).
+    #[test]
+    fn auto_replicate_mode_tops_up_at_submit() {
+        let dir = tmpdir("mode-autorepl");
+        let sys = PilotSystem::new(&dir, Arc::new(ShellExecutor));
+        sys.set_execution_mode(ModeKind::AutoReplicate { replicas: 2 });
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+        let a = pds.create_pilot_data(local_pd(&dir, "a", "site/a")).unwrap();
+        let near = pds.create_pilot_data(local_pd(&dir, "near", "site/a")).unwrap();
+        let _far = pds.create_pilot_data(local_pd(&dir, "far", "elsewhere/x")).unwrap();
+        let du = cds.put_data_unit("d", &[("f.bin", b"replicated")], &a).unwrap();
+        let locs = sys.locations.lock().unwrap().get(&du).unwrap().clone();
+        assert_eq!(locs.len(), 2, "locs={locs:?}");
+        // Affinity ranking picks the co-located PD over the far one.
+        assert!(locs.iter().any(|(pd, _)| *pd == near), "locs={locs:?}");
+        // The second replica holds the content: fetch works even after
+        // the original is forgotten.
+        sys.locations.lock().unwrap().get_mut(&du).unwrap().retain(|(pd, _)| *pd != a);
+        assert_eq!(cds.fetch(&du, "f.bin").unwrap(), b"replicated");
         sys.shutdown();
         let _ = std::fs::remove_dir_all(dir);
     }

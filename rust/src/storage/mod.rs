@@ -147,8 +147,8 @@ pub struct ProtocolParams {
 }
 
 impl ProtocolParams {
-    /// Defaults calibrated so the Fig. 7 ordering holds (see DESIGN.md
-    /// substitution table).
+    /// Defaults calibrated so the Fig. 7 ordering holds (see the
+    /// README's experiment notes for the substitution rationale).
     pub fn defaults(kind: BackendKind) -> ProtocolParams {
         match kind {
             BackendKind::Ssh => ProtocolParams {

@@ -6,6 +6,22 @@
 //! routed through the submission machine (the paper stages via GW68,
 //! the XSEDE gateway at Indiana University), doubling the path: this is
 //! exactly why naive data management in Fig. 9 scenarios 1–2 is slow.
+//!
+//! # Capacity model
+//!
+//! A Pilot-Data is a *finite* storage allocation (paper §4.3.1: "a
+//! certain physical storage resource"), so every [`SimPd`] can carry a
+//! byte **quota**. [`SimStore::try_place`] is the quota-checked
+//! placement path: it accounts used bytes per PD and, when a new
+//! replica does not fit, evicts replicas in **LRU order** — skipping
+//! [`SimStore::pin`]ned replicas and any replica that is the *last*
+//! copy of its Data-Unit — until the newcomer fits or no legal victim
+//! remains ([`PlaceOutcome::NoCapacity`]). PDs without a quota behave
+//! exactly like the seed's unbounded store (nothing is ever evicted),
+//! which is what keeps the `OnDemand` execution mode bit-identical to
+//! the pre-capacity behavior. [`SimStore::evict`] stays the *forced*
+//! removal path (PD outages, tests): it bypasses the pin/last-replica
+//! safety rules by design.
 
 use super::{Endpoint, ProtocolParams};
 use crate::net::{Bandwidth, FlowHandle, Network};
@@ -155,10 +171,25 @@ pub fn transfer_cost_reference(
 pub struct SimPd {
     pub name: String,
     pub endpoint: Endpoint,
+    /// Storage quota in bytes; `None` = unbounded (the seed behavior).
+    pub quota: Option<Bytes>,
 }
 
-/// Registry of endpoints, DU replica placement, and iRODS-style
-/// server-side replication groups.
+/// Outcome of a quota-checked placement ([`SimStore::try_place`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlaceOutcome {
+    /// The replica was placed; `evicted` lists the `(du, pd)` replicas
+    /// removed under capacity pressure to make room, in eviction
+    /// (LRU) order.
+    Placed { evicted: Vec<(String, String)> },
+    /// The replica does not fit: the PD is down, the DU is larger than
+    /// the quota, or every resident byte is pinned / a last replica.
+    /// Nothing was evicted and nothing was placed.
+    NoCapacity,
+}
+
+/// Registry of endpoints, DU replica placement, per-PD capacity
+/// accounting, and iRODS-style server-side replication groups.
 #[derive(Debug, Default)]
 pub struct SimStore {
     pds: BTreeMap<String, SimPd>,
@@ -168,6 +199,16 @@ pub struct SimStore {
     du_meta: BTreeMap<String, (Bytes, u32)>,
     /// replication group name -> member pd names (iRODS resource groups).
     groups: BTreeMap<String, Vec<String>>,
+    /// pd name -> bytes occupied by resident replicas.
+    used: BTreeMap<String, u64>,
+    /// pd name -> resident du ids in recency order (front = coldest):
+    /// the eviction order under capacity pressure.
+    lru: BTreeMap<String, Vec<String>>,
+    /// (du, pd) replicas exempt from capacity eviction.
+    pinned: BTreeSet<(String, String)>,
+    /// PDs currently unavailable (storage outage): they serve no
+    /// transfers and accept no placements until restored.
+    down: BTreeSet<String>,
 }
 
 impl SimStore {
@@ -176,7 +217,88 @@ impl SimStore {
     }
 
     pub fn add_pd(&mut self, name: &str, endpoint: Endpoint) {
-        self.pds.insert(name.to_string(), SimPd { name: name.to_string(), endpoint });
+        self.pds
+            .insert(name.to_string(), SimPd { name: name.to_string(), endpoint, quota: None });
+    }
+
+    /// Set (or clear) a PD's storage quota. Shrinking below the
+    /// current occupancy does not evict anything retroactively; the
+    /// next [`SimStore::try_place`] faces the pressure.
+    pub fn set_quota(&mut self, pd: &str, quota: Option<Bytes>) -> anyhow::Result<()> {
+        self.pds
+            .get_mut(pd)
+            .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{pd}'"))?
+            .quota = quota;
+        Ok(())
+    }
+
+    /// Bytes occupied by resident replicas on `pd`.
+    pub fn used(&self, pd: &str) -> Bytes {
+        Bytes(self.used.get(pd).copied().unwrap_or(0))
+    }
+
+    /// Remaining quota headroom (`None` for unbounded PDs).
+    pub fn free_space(&self, pd: &str) -> Option<Bytes> {
+        let q = self.pds.get(pd)?.quota?;
+        Some(q.saturating_sub(self.used(pd)))
+    }
+
+    /// Exempt a resident replica from capacity eviction.
+    pub fn pin(&mut self, du: &str, pd: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(self.has_replica(du, pd), "no replica of '{du}' on '{pd}' to pin");
+        self.pinned.insert((du.to_string(), pd.to_string()));
+        Ok(())
+    }
+
+    pub fn unpin(&mut self, du: &str, pd: &str) {
+        self.pinned.remove(&(du.to_string(), pd.to_string()));
+    }
+
+    pub fn is_pinned(&self, du: &str, pd: &str) -> bool {
+        self.pinned.contains(&(du.to_string(), pd.to_string()))
+    }
+
+    /// Mark a replica as recently used (moved to the warm end of the
+    /// PD's LRU order). Called by the drivers when a replica serves as
+    /// a transfer source, so eviction preferentially removes cold data.
+    pub fn touch(&mut self, du: &str, pd: &str) {
+        if let Some(order) = self.lru.get_mut(pd) {
+            if let Some(i) = order.iter().position(|d| d == du) {
+                let d = order.remove(i);
+                order.push(d);
+            }
+        }
+    }
+
+    /// Take a PD out of (or back into) service. A down PD serves no
+    /// transfers and rejects placements; its resident replicas are the
+    /// caller's to force-[`SimStore::evict`] (the sim driver does so on
+    /// its `PdDown` event).
+    pub fn set_pd_down(&mut self, pd: &str, down: bool) {
+        if down {
+            self.down.insert(pd.to_string());
+        } else {
+            self.down.remove(pd);
+        }
+    }
+
+    pub fn pd_is_down(&self, pd: &str) -> bool {
+        self.down.contains(pd)
+    }
+
+    /// Du ids with a resident replica on `pd` (LRU order).
+    pub fn dus_on(&self, pd: &str) -> Vec<String> {
+        self.lru.get(pd).cloned().unwrap_or_default()
+    }
+
+    /// Total replica count across all DUs (mode-comparison metric).
+    pub fn total_replicas(&self) -> usize {
+        self.replicas.values().map(BTreeSet::len).sum()
+    }
+
+    /// Replica count of one DU.
+    pub fn replica_count(&self, du: &str) -> usize {
+        self.replicas.get(du).map(BTreeSet::len).unwrap_or(0)
     }
 
     pub fn pd(&self, name: &str) -> anyhow::Result<&SimPd> {
@@ -217,19 +339,119 @@ impl SimStore {
             .ok_or_else(|| anyhow::anyhow!("unknown data-unit '{du}'"))
     }
 
-    /// Mark `pd` as holding a full replica of `du`.
+    /// Mark `pd` as holding a full replica of `du`, evicting under
+    /// capacity pressure if the PD has a quota. Errors when the
+    /// replica cannot legally fit ([`PlaceOutcome::NoCapacity`]) —
+    /// impossible on quota-less PDs, so seed-era callers are
+    /// unaffected. Callers that must react to eviction or rejection
+    /// (the sim driver) use [`SimStore::try_place`] instead.
     pub fn place(&mut self, du: &str, pd: &str) -> anyhow::Result<()> {
-        self.pd(pd)?;
-        if !self.du_meta.contains_key(du) {
-            anyhow::bail!("register_du('{du}') before place");
+        match self.try_place(du, pd)? {
+            PlaceOutcome::Placed { .. } => Ok(()),
+            PlaceOutcome::NoCapacity => {
+                anyhow::bail!("no capacity for '{du}' on '{pd}'")
+            }
         }
-        self.replicas.entry(du.to_string()).or_default().insert(pd.to_string());
-        Ok(())
     }
 
+    /// Quota-checked placement (see the module docs' capacity model).
+    /// Idempotent: re-placing a resident replica just touches its LRU
+    /// slot. Eviction victims are chosen in LRU order, skipping pinned
+    /// replicas and last replicas; feasibility is decided *before* the
+    /// first eviction, so a rejected placement evicts nothing.
+    pub fn try_place(&mut self, du: &str, pd: &str) -> anyhow::Result<PlaceOutcome> {
+        let quota = self
+            .pds
+            .get(pd)
+            .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{pd}'"))?
+            .quota;
+        let (size, _) = self
+            .du_meta
+            .get(du)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("register_du('{du}') before place"))?;
+        if self.down.contains(pd) {
+            return Ok(PlaceOutcome::NoCapacity);
+        }
+        if self.has_replica(du, pd) {
+            self.touch(du, pd);
+            return Ok(PlaceOutcome::Placed { evicted: Vec::new() });
+        }
+        let mut evicted = Vec::new();
+        if let Some(q) = quota {
+            let used = self.used(pd);
+            let need = size.as_u64();
+            if used.as_u64() + need > q.as_u64() {
+                // Feasibility first: can legal evictions ever make room?
+                let evictable: u64 = self
+                    .dus_on(pd)
+                    .iter()
+                    .filter(|d| self.evictable(d.as_str(), pd))
+                    .map(|d| self.du_meta[d.as_str()].0.as_u64())
+                    .sum();
+                if used.as_u64().saturating_sub(evictable) + need > q.as_u64() {
+                    return Ok(PlaceOutcome::NoCapacity);
+                }
+                while self.used(pd).as_u64() + need > q.as_u64() {
+                    // Coldest legal victim. The feasibility check above
+                    // guarantees one exists until the newcomer fits.
+                    let victim = self
+                        .dus_on(pd)
+                        .into_iter()
+                        .find(|d| self.evictable(d.as_str(), pd))
+                        .expect("feasibility checked before evicting");
+                    self.evict(&victim, pd);
+                    evicted.push((victim, pd.to_string()));
+                }
+            }
+        }
+        self.replicas.entry(du.to_string()).or_default().insert(pd.to_string());
+        *self.used.entry(pd.to_string()).or_insert(0) += size.as_u64();
+        self.lru.entry(pd.to_string()).or_default().push(du.to_string());
+        Ok(PlaceOutcome::Placed { evicted })
+    }
+
+    /// May this replica be removed under capacity pressure? Pinned
+    /// replicas and the last replica of a DU are protected.
+    fn evictable(&self, du: &str, pd: &str) -> bool {
+        !self.is_pinned(du, pd) && self.replica_count(du) > 1
+    }
+
+    /// Could `size` bytes be placed on `pd` right now, evicting if
+    /// legal? (Policy-side capacity probe; does not mutate.)
+    pub fn can_fit(&self, pd: &str, size: Bytes) -> bool {
+        if self.down.contains(pd) {
+            return false;
+        }
+        let Some(p) = self.pds.get(pd) else { return false };
+        let Some(q) = p.quota else { return true };
+        let evictable: u64 = self
+            .dus_on(pd)
+            .iter()
+            .filter(|d| self.evictable(d, pd))
+            .map(|d| self.du_meta[d.as_str()].0.as_u64())
+            .sum();
+        self.used(pd).as_u64().saturating_sub(evictable) + size.as_u64() <= q.as_u64()
+    }
+
+    /// Forced replica removal (storage outage, tests): bypasses the
+    /// pin/last-replica protections of capacity eviction and keeps the
+    /// byte accounting consistent.
     pub fn evict(&mut self, du: &str, pd: &str) {
-        if let Some(set) = self.replicas.get_mut(du) {
-            set.remove(pd);
+        let was_present = self
+            .replicas
+            .get_mut(du)
+            .map(|set| set.remove(pd))
+            .unwrap_or(false);
+        if was_present {
+            let size = self.du_meta.get(du).map(|(s, _)| s.as_u64()).unwrap_or(0);
+            if let Some(u) = self.used.get_mut(pd) {
+                *u = u.saturating_sub(size);
+            }
+            if let Some(order) = self.lru.get_mut(pd) {
+                order.retain(|d| d != du);
+            }
+            self.pinned.remove(&(du.to_string(), pd.to_string()));
         }
     }
 
@@ -538,6 +760,208 @@ mod tests {
         net.end_flow(&flow);
         assert_eq!(net.congestion_id(a, b), 0);
         assert!(s.staging_cost_flow(&mut net, "du-nope", "pd-gw", "pd-srm", None).is_err());
+    }
+
+    #[test]
+    fn quota_evicts_in_lru_order() {
+        let mut s = store_with(&[
+            ("pd-a", "ssh://a/scratch", "xsede/tacc/lonestar"),
+            ("pd-b", "ssh://b/scratch", "xsede/tacc/stampede"),
+        ]);
+        s.set_quota("pd-a", Some(Bytes::gb(5))).unwrap();
+        for (du, gb) in [("du-1", 2), ("du-2", 2), ("du-3", 2)] {
+            s.register_du(du, Bytes::gb(gb), 1);
+            // Second replicas on pd-b so du-1/du-2 are legal victims.
+            s.place(du, "pd-b").unwrap();
+        }
+        s.place("du-1", "pd-a").unwrap();
+        s.place("du-2", "pd-a").unwrap();
+        assert_eq!(s.used("pd-a"), Bytes::gb(4));
+        // Touch du-1: du-2 becomes the coldest and must be the victim.
+        s.touch("du-1", "pd-a");
+        match s.try_place("du-3", "pd-a").unwrap() {
+            PlaceOutcome::Placed { evicted } => {
+                assert_eq!(evicted, vec![("du-2".to_string(), "pd-a".to_string())]);
+            }
+            PlaceOutcome::NoCapacity => panic!("eviction should have made room"),
+        }
+        assert!(s.has_replica("du-1", "pd-a"));
+        assert!(!s.has_replica("du-2", "pd-a"));
+        assert!(s.has_replica("du-3", "pd-a"));
+        assert!(s.used("pd-a").as_u64() <= Bytes::gb(5).as_u64());
+        assert_eq!(s.free_space("pd-a"), Some(Bytes::gb(1)));
+    }
+
+    #[test]
+    fn pinned_and_last_replicas_survive_pressure() {
+        let mut s = store_with(&[
+            ("pd-a", "ssh://a/scratch", "xsede/tacc/lonestar"),
+            ("pd-b", "ssh://b/scratch", "xsede/tacc/stampede"),
+        ]);
+        s.set_quota("pd-a", Some(Bytes::gb(4))).unwrap();
+        s.register_du("du-last", Bytes::gb(2), 1); // only replica lives on pd-a
+        s.register_du("du-pin", Bytes::gb(2), 1);
+        s.register_du("du-new", Bytes::gb(2), 1);
+        s.place("du-last", "pd-a").unwrap();
+        s.place("du-pin", "pd-b").unwrap();
+        s.place("du-pin", "pd-a").unwrap();
+        s.pin("du-pin", "pd-a").unwrap();
+        s.place("du-new", "pd-b").unwrap();
+        // Both residents are protected: last replica + pinned.
+        assert_eq!(s.try_place("du-new", "pd-a").unwrap(), PlaceOutcome::NoCapacity);
+        assert!(s.has_replica("du-last", "pd-a"), "last replica must survive");
+        assert!(s.has_replica("du-pin", "pd-a"), "pinned replica must survive");
+        assert_eq!(s.used("pd-a"), Bytes::gb(4), "rejected placement must not evict");
+        // Unpinning makes du-pin a legal victim (it has a pd-b copy).
+        s.unpin("du-pin", "pd-a");
+        assert!(matches!(
+            s.try_place("du-new", "pd-a").unwrap(),
+            PlaceOutcome::Placed { .. }
+        ));
+        assert!(!s.has_replica("du-pin", "pd-a"));
+        // A DU larger than the whole quota can never fit.
+        s.register_du("du-huge", Bytes::gb(16), 1);
+        s.place("du-huge", "pd-b").unwrap();
+        assert_eq!(s.try_place("du-huge", "pd-a").unwrap(), PlaceOutcome::NoCapacity);
+    }
+
+    #[test]
+    fn down_pd_rejects_placements_and_recovers() {
+        let mut s = store_with(&[("pd-a", "ssh://a/x", "osg/a"), ("pd-b", "ssh://b/x", "osg/b")]);
+        s.register_du("du-1", Bytes::gb(1), 1);
+        s.set_pd_down("pd-a", true);
+        assert!(s.pd_is_down("pd-a"));
+        assert!(!s.can_fit("pd-a", Bytes::b(1)));
+        assert_eq!(s.try_place("du-1", "pd-a").unwrap(), PlaceOutcome::NoCapacity);
+        s.set_pd_down("pd-a", false);
+        assert!(matches!(s.try_place("du-1", "pd-a").unwrap(), PlaceOutcome::Placed { .. }));
+    }
+
+    /// ISSUE 5 satellite: capacity/eviction invariants under randomized
+    /// workloads — after every operation, `used(pd)` equals the sum of
+    /// resident replica sizes and never exceeds the quota; capacity
+    /// eviction never removes a pinned replica and never removes the
+    /// last replica of a DU (forced `evict` is excluded by
+    /// construction: the property only drives `try_place`).
+    #[test]
+    fn capacity_invariants_property() {
+        crate::prop::check_default(
+            |rng| {
+                let n_pds = crate::prop::gen::usize_in(rng, 1, 4);
+                let pds: Vec<(String, Option<u64>)> = (0..n_pds)
+                    .map(|i| {
+                        (
+                            format!("pd-{i}"),
+                            if rng.chance(0.7) { Some(2 + rng.below(8)) } else { None },
+                        )
+                    })
+                    .collect();
+                let n_dus = crate::prop::gen::usize_in(rng, 1, 6);
+                let dus: Vec<(String, u64)> =
+                    (0..n_dus).map(|i| (format!("du-{i}"), 1 + rng.below(4))).collect();
+                let n_ops = crate::prop::gen::usize_in(rng, 1, 40);
+                // op: (kind, du index, pd index) — kind 0..=2:
+                // try_place / touch / pin-toggle.
+                let ops: Vec<(u8, usize, usize)> = (0..n_ops)
+                    .map(|_| {
+                        (
+                            rng.below(3) as u8,
+                            rng.below(n_dus as u64) as usize,
+                            rng.below(n_pds as u64) as usize,
+                        )
+                    })
+                    .collect();
+                (pds, dus, ops)
+            },
+            |(pds, dus, ops)| {
+                let mut s = SimStore::new();
+                for (name, quota) in pds {
+                    s.add_pd(name, Endpoint::new(&format!("ssh://{name}/x"), "osg/a").unwrap());
+                    s.set_quota(name, (*quota).map(Bytes::gb)).unwrap();
+                }
+                for (du, gb) in dus {
+                    s.register_du(du, Bytes::gb(*gb), 1);
+                }
+                let check = |s: &SimStore, when: &str| -> Result<(), String> {
+                    for (pd, quota) in pds {
+                        let resident: u64 = dus
+                            .iter()
+                            .filter(|(du, _)| s.has_replica(du, pd))
+                            .map(|(_, gb)| Bytes::gb(*gb).as_u64())
+                            .sum();
+                        if s.used(pd).as_u64() != resident {
+                            return Err(format!(
+                                "{when}: used({pd})={} != resident {resident}",
+                                s.used(pd).as_u64()
+                            ));
+                        }
+                        if let Some(q) = quota {
+                            if resident > Bytes::gb(*q).as_u64() {
+                                return Err(format!("{when}: {pd} over quota"));
+                            }
+                        }
+                    }
+                    Ok(())
+                };
+                for (i, (kind, di, pi)) in ops.iter().enumerate() {
+                    let du = &dus[*di].0;
+                    let pd = &pds[*pi].0;
+                    match kind {
+                        0 => {
+                            let mut pinned_before: Vec<(String, String)> = Vec::new();
+                            for (d, _) in dus.iter() {
+                                for (p, _) in pds.iter() {
+                                    if s.is_pinned(d, p) {
+                                        pinned_before.push((d.clone(), p.clone()));
+                                    }
+                                }
+                            }
+                            let last_before: Vec<String> = dus
+                                .iter()
+                                .filter(|(d, _)| s.replica_count(d.as_str()) == 1)
+                                .map(|(d, _)| d.clone())
+                                .collect();
+                            match s.try_place(du, pd).map_err(|e| e.to_string())? {
+                                PlaceOutcome::Placed { evicted } => {
+                                    for (ed, ep) in &evicted {
+                                        if pinned_before.contains(&(ed.clone(), ep.clone())) {
+                                            return Err(format!(
+                                                "op {i}: pinned ({ed},{ep}) evicted"
+                                            ));
+                                        }
+                                    }
+                                    for d in &last_before {
+                                        if s.replica_count(d) == 0 {
+                                            return Err(format!(
+                                                "op {i}: last replica of {d} evicted"
+                                            ));
+                                        }
+                                    }
+                                }
+                                PlaceOutcome::NoCapacity => {}
+                            }
+                            // Placement never drops any DU to zero
+                            // replicas, placed or not.
+                            for (d, _) in dus.iter() {
+                                if last_before.contains(d) && s.replica_count(d) == 0 {
+                                    return Err(format!("op {i}: {d} lost its only replica"));
+                                }
+                            }
+                        }
+                        1 => s.touch(du, pd),
+                        _ => {
+                            if s.is_pinned(du, pd) {
+                                s.unpin(du, pd);
+                            } else {
+                                let _ = s.pin(du, pd);
+                            }
+                        }
+                    }
+                    check(&s, &format!("after op {i}"))?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
