@@ -1,0 +1,67 @@
+//! Resilience bench: runs the two-site workload of
+//! `experiments::resilience` at each chaos intensity (pilot kills, PD
+//! down→up cycles, lossy links) and emits `BENCH_resilience.json`
+//! with per-intensity makespan, bytes moved, re-dispatch/retry
+//! counts, completion, and wall time — the machine-readable
+//! trajectory for the fault-lifecycle engine.
+//!
+//! Set `PD_BENCH_RESILIENCE_OUT` to change the output path and
+//! `PD_BENCH_QUICK=1` to average over 1 seed instead of 3 (CI smoke).
+//!
+//! Run with: `cargo bench --bench resilience`
+
+use pilot_data::experiments::resilience::{run_intensity, INTENSITIES, TASKS};
+use std::time::Instant;
+
+fn main() {
+    let reps: u64 = if std::env::var("PD_BENCH_QUICK").is_ok() { 1 } else { 3 };
+    println!("# Resilience sweep ({reps} seed(s) per intensity, {TASKS} tasks)");
+    println!(
+        "{:<12}{:>12}{:>16}{:>14}{:>12}{:>10}{:>12}",
+        "intensity", "T (s)", "bytes moved", "redispatch", "retries", "done", "wall (s)"
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for intensity in INTENSITIES {
+        let t0 = Instant::now();
+        let mut makespan = 0.0;
+        let mut bytes = 0u64;
+        let mut redispatches = 0u64;
+        let mut retries = 0u64;
+        let mut done = 0u64;
+        for rep in 0..reps {
+            let r = run_intensity(intensity, 42 + rep * 101).expect("resilience run failed");
+            makespan += r.makespan;
+            bytes += r.bytes_moved.as_u64();
+            redispatches += r.redispatches as u64;
+            retries += r.transfer_retries as u64;
+            done += r.done as u64;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let makespan = makespan / reps as f64;
+        let bytes = bytes / reps;
+        let done = done as f64 / reps as f64;
+        println!(
+            "{:<12.1}{:>12.0}{:>16}{:>14}{:>12}{:>10.1}{:>12.3}",
+            intensity, makespan, bytes, redispatches, retries, done, wall
+        );
+        let tag = format!("intensity_{intensity:.1}");
+        results.push((format!("{tag} makespan_s"), makespan));
+        results.push((format!("{tag} bytes_moved"), bytes as f64));
+        results.push((format!("{tag} redispatches"), redispatches as f64));
+        results.push((format!("{tag} transfer_retries"), retries as f64));
+        results.push((format!("{tag} done"), done));
+        results.push((format!("{tag} wall_s"), wall));
+    }
+
+    let out = std::env::var("PD_BENCH_RESILIENCE_OUT")
+        .unwrap_or_else(|_| "BENCH_resilience.json".into());
+    let mut obj = pilot_data::json::Json::obj();
+    for (name, v) in &results {
+        obj = obj.set(name.as_str(), *v);
+    }
+    match std::fs::write(&out, obj.to_string_pretty()) {
+        Ok(()) => println!("\n[json] {out}"),
+        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
+    }
+}

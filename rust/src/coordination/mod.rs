@@ -704,6 +704,20 @@ pub mod keys {
     /// repair decision — the outage-repair path rides the same event
     /// layer as the queue wakeups.
     pub const DATA_LOST_PREFIX: &str = "pd:data:lost:";
+    /// Prefix of data-plane availability notifications: a PD coming
+    /// (back) online publishes on `pd:data:avail:<pd>`. The
+    /// execution-mode engine subscribes here to re-balance replicas
+    /// onto recovered storage.
+    pub const DATA_AVAIL_PREFIX: &str = "pd:data:avail:";
+    /// Prefix of pilot liveness leases: each agent refreshes
+    /// `pd:pilot:hb:<id>` with a wall-clock timestamp (millis); the
+    /// manager treats a lease older than its TTL as a dead agent and
+    /// reclaims that pilot's queued CUs to the global queue.
+    pub const PILOT_HB_PREFIX: &str = "pd:pilot:hb:";
+    /// The liveness lease key of one pilot.
+    pub fn pilot_hb(pilot_id: &str) -> String {
+        format!("{PILOT_HB_PREFIX}{pilot_id}")
+    }
     /// The agent-specific queue of one pilot.
     pub fn pilot_queue(pilot_id: &str) -> String {
         format!("{PILOT_QUEUE_PREFIX}{pilot_id}")

@@ -225,6 +225,14 @@ pub trait ExecutionMode: Send + Sync {
     /// See [`LossCause`] for why policies treat the two differently.
     fn on_replica_lost(&self, du: &str, pd: &str, cause: LossCause, ctx: &DataCtx)
         -> Vec<StageAction>;
+
+    /// A Pilot-Data came (back) online empty — `Ev::PdUp` after an
+    /// outage, announced on the `pd:data:avail:` channel. Proactive
+    /// policies re-balance onto the recovered storage; the default is
+    /// inert so passive policies (and test stubs) need not care.
+    fn on_pd_up(&self, _pd: &str, _ctx: &DataCtx) -> Vec<StageAction> {
+        Vec::new()
+    }
 }
 
 /// Build the policy object for a [`ModeKind`].
@@ -320,6 +328,16 @@ impl ExecutionMode for PreStage {
             // Capacity pressure: leave the signal standing.
             LossCause::Evicted => Vec::new(),
         }
+    }
+    fn on_pd_up(&self, _pd: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        // A site returned: re-push every affinity DU whose subtree the
+        // recovered PD may now re-cover (plan() itself skips labels
+        // still covered elsewhere).
+        let mut out = Vec::new();
+        for du in ctx.state.dus.keys() {
+            out.extend(self.plan(du, ctx));
+        }
+        out
     }
 }
 
@@ -421,6 +439,15 @@ impl ExecutionMode for AutoReplicate {
             // full site.
             LossCause::Evicted => Vec::new(),
         }
+    }
+    fn on_pd_up(&self, _pd: &str, ctx: &DataCtx) -> Vec<StageAction> {
+        // Recovered storage is a fresh (empty) target: top every DU
+        // back up, exactly like a newly active pilot site.
+        let mut out = Vec::new();
+        for du in ctx.state.dus.keys() {
+            out.extend(self.top_up(du, ctx));
+        }
+        out
     }
 }
 
@@ -652,6 +679,35 @@ mod tests {
         assert!(m.on_replica_lost(&du, "st-scratch", LossCause::Evicted, &ctx).is_empty());
         assert_eq!(LossCause::from_wire("outage"), Some(LossCause::Outage));
         assert_eq!(LossCause::from_wire("gone"), None);
+    }
+
+    #[test]
+    fn pd_up_rebalances_proactive_modes_only() {
+        let topo = Topology::new();
+        let mut store = store_with(&[
+            ("ls-scratch", "xsede/tacc/lonestar"),
+            ("st-scratch", "xsede/tacc/stampede"),
+        ]);
+        let mut st = ManagerState::new();
+        let p1 = pilot_at(&mut st, "xsede/tacc/stampede", PilotState::Active);
+        let du = du_with_affinity(&mut st, 2, Some("xsede/tacc"));
+        store.register_du(&du, Bytes::gb(2), 1);
+        store.place(&du, "ls-scratch").unwrap();
+        let in_flight = BTreeSet::new();
+        let scratch = vec![(p1.clone(), "st-scratch".to_string())];
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        // Stampede just recovered (empty): both proactive modes re-fill
+        // it; the passive reference does nothing (default hook).
+        let want = vec![StageAction { du: du.clone(), dst_pd: "st-scratch".into() }];
+        assert_eq!(AutoReplicate { replicas: 2 }.on_pd_up("st-scratch", &ctx), want);
+        assert_eq!(PreStage.on_pd_up("st-scratch", &ctx), want);
+        assert!(OnDemand.on_pd_up("st-scratch", &ctx).is_empty());
     }
 
     #[test]

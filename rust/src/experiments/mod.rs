@@ -15,6 +15,10 @@
 //! | fig13  | timeline of the 3-machine run                       |
 //! | modes  | execution-mode comparison (on-demand / pre-stage /  |
 //! |        | auto-replicate) on the 2-site workload              |
+//!
+//! Beyond the paper's own tables, `resilience` sweeps the 2-site
+//! workload across chaos intensities (pilot kills, PD down→up cycles,
+//! lossy links) and reports the fault-lifecycle cost.
 
 pub mod simdrive;
 pub mod fig7;
@@ -22,6 +26,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod fig11;
 pub mod modes;
+pub mod resilience;
 pub mod table1;
 
 use crate::metrics::Table;
@@ -39,14 +44,15 @@ pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
         "fig12" => fig11::run_fig12(seed),
         "fig13" => fig11::run_fig13(seed),
         "modes" => modes::run(seed),
+        "resilience" => resilience::run(seed),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes)"
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, resilience)"
         ),
     }
 }
 
-pub const ALL: [&str; 9] =
-    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "modes"];
+pub const ALL: [&str; 10] =
+    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "modes", "resilience"];
 
 /// Print tables and persist CSVs under `results/`.
 pub fn report(id: &str, tables: &[Table], results_dir: &Path) -> anyhow::Result<()> {

@@ -45,7 +45,7 @@ use crate::config::Testbed;
 use crate::coordination::events::Event;
 use crate::coordination::{keys, Key, Store};
 use crate::datamgmt::{DataCtx, ExecutionMode, LossCause, OnDemand, StageAction};
-use crate::faults::{attempt_transfer, RetryPolicy};
+use crate::faults::{attempt_transfer, ChaosPlan, RetryPolicy};
 use crate::metrics::{CuRecord, RunMetrics, TimelineEvent};
 use crate::net::FlowHandle;
 use crate::pilot::{agent_pull_tracked, ManagerState, PilotCompute, PilotComputeDescription, PilotState};
@@ -65,22 +65,56 @@ use std::sync::Arc;
 pub enum Ev {
     /// Pilot finished waiting in the batch queue.
     PilotActive { pilot: String },
-    /// A DU transfer into a PD completed (or failed permanently).
-    DuStaged { du: String, pd: String, flow: Option<FlowHandle>, ok: bool },
+    /// A DU transfer attempt into a PD finished. `attempt` is 1-based;
+    /// a failed attempt with budget left re-issues via [`Ev::DuRetry`]
+    /// (under [`RetryStyle::InDes`]) instead of failing the DU.
+    DuStaged { du: String, pd: String, flow: Option<FlowHandle>, ok: bool, attempt: u32 },
+    /// Re-issue a failed DU transfer after its backoff elapsed in
+    /// simulated time. The source replica is re-resolved at fire time
+    /// — it may have moved (or vanished) during the backoff.
+    DuRetry { du: String, pd: String, attempt: u32 },
     /// Ask a pilot's agent to try pulling work.
     TryPull { pilot: String },
-    /// CU input staging finished.
-    CuStaged { cu: String, flow: Option<FlowHandle>, ok: bool },
+    /// CU input staging finished. `attempt` is the CU's 1-based
+    /// dispatch epoch (every `begin_staging` bumps it): an event whose
+    /// epoch is stale — the CU was re-dispatched while this staging
+    /// was in flight (pilot loss) — is dropped after ending its flow.
+    CuStaged { cu: String, flow: Option<FlowHandle>, ok: bool, attempt: u32 },
     /// CU compute finished.
     CuDone { cu: String },
     /// Delayed-scheduling re-evaluation.
     Reschedule { cu: String },
     /// Pilot hit its walltime limit (or was killed by fault injection).
     PilotExpired { pilot: String },
+    /// Pilot died hard mid-run (node crash, agent kill): same teardown
+    /// as expiry but the pilot ends [`PilotState::Failed`] and its
+    /// in-flight CUs count against the re-dispatch bound.
+    PilotFailed { pilot: String },
     /// A Pilot-Data's storage went down (fault injection): its
     /// replicas are lost and the execution-mode engine repairs them
     /// through the event layer.
     PdDown { pd: String },
+    /// A downed Pilot-Data's storage came back (empty, quota intact):
+    /// availability is published on the event layer and the active
+    /// execution mode re-balances onto the recovered capacity.
+    PdUp { pd: String },
+}
+
+/// How failed transfer attempts are modeled (see `faults` module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryStyle {
+    /// Default: every attempt is its own DES event. A failed attempt
+    /// pays partial wire time until the failure is detected, releases
+    /// its flow, waits [`RetryPolicy::backoff_for`] in simulated time,
+    /// and re-issues from a freshly resolved source.
+    InDes,
+    /// The seed's statistical shortcut: the whole attempt sequence
+    /// collapses into one [`attempt_transfer`] outcome whose wasted
+    /// time pads the single completion event. Kept as the oracle for
+    /// the fault-free bit-identity property — with zero failure rates
+    /// both styles consume the same RNG draws and schedule the same
+    /// events.
+    Aggregate,
 }
 
 /// Where a pilot's agent runs: its machine and scratch Pilot-Data.
@@ -136,10 +170,25 @@ pub struct SimSystem {
     qkeys: BTreeMap<String, Key>,
     /// Interned global-queue key.
     global_q: Key,
-    /// Remote staging time already paid per (cu): avoids double I/O.
-    staged_remote: BTreeMap<String, bool>,
-    /// Count of CUs that failed staging permanently.
+    /// How failed transfer attempts are modeled (see [`RetryStyle`]).
+    pub retry_style: RetryStyle,
+    /// Remote input DUs staged per CU (empty = all inputs were
+    /// co-located): decides staging-slot accounting and which DUs a
+    /// quota'd scratch PD must admit at staging completion.
+    staged_remote: BTreeMap<String, Vec<String>>,
+    /// Count of CU staging attempts that failed (each re-queues the CU
+    /// through the scheduler until `max_requeues`).
     pub staging_failures: u32,
+    /// Failed transfer attempts that were re-issued in simulated time
+    /// ([`RetryStyle::InDes`] only).
+    pub transfer_retries: u32,
+    /// Pilots lost to hard failures ([`Ev::PilotFailed`]).
+    pub pilot_failures: u32,
+    /// Per-CU count of re-dispatches forced by pilot loss (expiry or
+    /// hard failure while the CU was staging/running).
+    pub redispatches: BTreeMap<String, u32>,
+    /// Max pilot-loss re-dispatches before a CU is failed permanently.
+    pub max_redispatches: u32,
     /// Max CUs a pilot's agent will stage remotely at once (BigJob
     /// agents throttle staging; this is what limits how fast a
     /// non-data-local pilot can drain the global queue — Fig. 11 sc. 2).
@@ -149,6 +198,9 @@ pub struct SimSystem {
     /// Staging re-queues per CU; bounded to avoid spinning forever on
     /// inputs that can never materialize.
     requeues: BTreeMap<String, u32>,
+    /// Dispatch epoch per CU (bumped at every `begin_staging`): the
+    /// staleness guard for `CuStaged` events of a superseded dispatch.
+    dispatch_epoch: BTreeMap<String, u32>,
     /// Max staging retries before a CU is failed permanently.
     pub max_requeues: u32,
     /// Schedule automatic PilotExpired events at each machine's
@@ -190,6 +242,10 @@ pub struct SimSystem {
     /// Placements rejected by the storage-capacity model (PD full of
     /// pinned/last replicas, or down).
     pub capacity_rejections: u32,
+    /// Feed per-label storage headroom to the scheduler (default).
+    /// `false` keeps the capacity-blind decisions for A/B comparisons;
+    /// testbeds without quotas are identical either way.
+    pub capacity_aware_scheduling: bool,
 }
 
 impl SimSystem {
@@ -209,11 +265,17 @@ impl SimSystem {
             pilot_home: BTreeMap::new(),
             qkeys: BTreeMap::new(),
             global_q: keys::global_queue_key().clone(),
+            retry_style: RetryStyle::InDes,
             staged_remote: BTreeMap::new(),
             staging_failures: 0,
+            transfer_retries: 0,
+            pilot_failures: 0,
+            redispatches: BTreeMap::new(),
+            max_redispatches: 16,
             max_concurrent_staging: 4,
             staging_in_flight: BTreeMap::new(),
             requeues: BTreeMap::new(),
+            dispatch_epoch: BTreeMap::new(),
             max_requeues: 24,
             enforce_walltime: false,
             wakeups: WakeupMode::Evented,
@@ -226,6 +288,7 @@ impl SimSystem {
             data_events,
             bytes_moved: 0,
             capacity_rejections: 0,
+            capacity_aware_scheduling: true,
         }
     }
 
@@ -248,9 +311,32 @@ impl SimSystem {
         self
     }
 
+    /// Reference configuration: keep the seed's statistical retry
+    /// shortcut (see [`RetryStyle::Aggregate`]) — the fault-free
+    /// bit-identity oracle for the in-DES retry path.
+    pub fn with_aggregate_retry_reference(mut self) -> SimSystem {
+        self.retry_style = RetryStyle::Aggregate;
+        self
+    }
+
     /// Name of the active execution mode.
     pub fn mode_name(&self) -> &'static str {
         self.mode.as_ref().map(|m| m.name()).unwrap_or("reference")
+    }
+
+    /// Total pilot-loss re-dispatches across all CUs.
+    pub fn total_redispatches(&self) -> u32 {
+        self.redispatches.values().sum()
+    }
+
+    /// Zero every protocol failure rate in the testbed: fault-free
+    /// runs for byte-exact accounting tests and the bit-identity
+    /// properties (link failure rates default to zero already).
+    pub fn zero_transfer_faults(&mut self) {
+        let names: Vec<String> = self.tb.store.pds().map(|p| p.name.clone()).collect();
+        for n in names {
+            let _ = self.tb.store.set_failure_rate(&n, 0.0);
+        }
     }
 
     /// Total bytes moved over the wire so far (uploads, replications,
@@ -308,7 +394,44 @@ impl SimSystem {
     /// and queued CUs are re-queued globally (the paper observed
     /// wall-time-limit kills during the Fig. 11 runs).
     pub fn kill_pilot_at(&mut self, pilot: &str, at_s: f64) {
+        let at_s = at_s.max(self.sim.now());
         self.sim.schedule_at(at_s, Ev::PilotExpired { pilot: pilot.to_string() });
+    }
+
+    /// Fault injection: hard-fail a pilot at a given sim time (node
+    /// crash rather than walltime). Same CU teardown as expiry, but
+    /// the pilot ends [`PilotState::Failed`] and each orphaned CU's
+    /// re-dispatch counts against `max_redispatches`.
+    pub fn fail_pilot_at(&mut self, pilot: &str, at_s: f64) {
+        let at_s = at_s.max(self.sim.now());
+        self.sim.schedule_at(at_s, Ev::PilotFailed { pilot: pilot.to_string() });
+    }
+
+    /// Fault injection: bring a downed Pilot-Data back at a given sim
+    /// time (empty, quota intact). No-op if it is up at fire time.
+    pub fn recover_pd_at(&mut self, pd: &str, at_s: f64) {
+        let at_s = at_s.max(self.sim.now());
+        self.sim.schedule_at(at_s, Ev::PdUp { pd: pd.to_string() });
+    }
+
+    /// Install a whole chaos schedule: pilot kills, PD down/up cycles,
+    /// and per-link transfer failure rates (see
+    /// [`crate::faults::ChaosPlan`]). Fault times already past fire
+    /// immediately (the injection helpers clamp to the current
+    /// instant), so a plan may be installed at any point in a run.
+    pub fn apply_chaos(&mut self, plan: &ChaosPlan) {
+        for (pilot, at) in &plan.pilot_kills {
+            self.fail_pilot_at(pilot, *at);
+        }
+        for (pd, at) in &plan.pd_down {
+            self.fail_pd_at(pd, *at);
+        }
+        for (pd, at) in &plan.pd_up {
+            self.recover_pd_at(pd, *at);
+        }
+        for (link, rate) in &plan.link_faults {
+            self.tb.net.set_link_failure_rate(link, *rate);
+        }
     }
 
     /// Register a DU and stage it from the gateway into `pd`,
@@ -321,7 +444,7 @@ impl SimSystem {
         self.tb.store.register_du(&id, du.size(), du.file_count());
         self.state.add_du(du);
         let gw_pd = self.gateway_pd()?;
-        self.start_transfer_from(&id, &gw_pd, pd, true)?;
+        self.start_transfer_from(&id, &gw_pd, pd, true, 1)?;
         Ok(id)
     }
 
@@ -386,7 +509,7 @@ impl SimSystem {
             .ok_or_else(|| anyhow::anyhow!("DU '{du}' has no replica to copy from"))?
             .name
             .clone();
-        self.start_transfer_from(du, &src, dst_pd, false)
+        self.start_transfer_from(du, &src, dst_pd, false, 1)
     }
 
     /// Group replication (iRODS resource group): concurrent transfers
@@ -407,6 +530,7 @@ impl SimSystem {
         src_pd: &str,
         dst_pd: &str,
         via_gateway: bool,
+        attempt: u32,
     ) -> anyhow::Result<()> {
         if src_pd == dst_pd {
             // Already there: instant success.
@@ -415,6 +539,7 @@ impl SimSystem {
                 pd: dst_pd.to_string(),
                 flow: None,
                 ok: true,
+                attempt,
             });
             return Ok(());
         }
@@ -426,17 +551,51 @@ impl SimSystem {
         // increment, so the cost is bit-identical to the two-step.
         let (cost, flow) =
             self.tb.store.staging_cost_flow(&mut self.tb.net, du, src_pd, dst_pd, via)?;
-        self.bytes_moved += self.tb.store.du_meta(du)?.0.as_u64();
         self.tb.store.touch(du, src_pd);
-        let failure_rate = self.tb.store.pd(dst_pd)?.endpoint.params.failure_rate;
-        let outcome = attempt_transfer(&mut self.rng, failure_rate, cost.wire_s, self.retry);
-        let total = cost.total() + outcome.wasted_s;
-        self.sim.schedule(total, Ev::DuStaged {
-            du: du.to_string(),
-            pd: dst_pd.to_string(),
-            flow: Some(flow),
-            ok: outcome.succeeded,
-        });
+        let size = self.tb.store.du_meta(du)?.0.as_u64();
+        let proto_rate = self.tb.store.pd(dst_pd)?.endpoint.params.failure_rate;
+        match self.retry_style {
+            RetryStyle::Aggregate => {
+                self.bytes_moved += size;
+                let outcome =
+                    attempt_transfer(&mut self.rng, proto_rate, cost.wire_s, self.retry);
+                let total = cost.total() + outcome.wasted_s;
+                self.sim.schedule(total, Ev::DuStaged {
+                    du: du.to_string(),
+                    pd: dst_pd.to_string(),
+                    flow: Some(flow),
+                    ok: outcome.succeeded,
+                    attempt: outcome.attempts,
+                });
+            }
+            RetryStyle::InDes => {
+                // One attempt, one event. The failure probability
+                // composes the destination protocol's rate with the
+                // per-link rates along the routed path; a failed
+                // attempt is detected partway through the wire leg and
+                // pays (and counts) only the bytes sent by then. The
+                // DuStaged handler owns backoff and re-issue.
+                let src_label = self.tb.store.pd(src_pd)?.endpoint.label.clone();
+                let dst_label = self.tb.store.pd(dst_pd)?.endpoint.label.clone();
+                let link_rate = self.tb.net.path_failure_rate_labels(&src_label, &dst_label);
+                let rate = 1.0 - (1.0 - proto_rate) * (1.0 - link_rate);
+                let (elapsed, ok) = if self.rng.chance(rate) {
+                    let frac = self.rng.range_f64(0.1, 0.9);
+                    self.bytes_moved += (size as f64 * frac) as u64;
+                    (cost.setup_s + cost.wire_s * frac, false)
+                } else {
+                    self.bytes_moved += size;
+                    (cost.total(), true)
+                };
+                self.sim.schedule(elapsed, Ev::DuStaged {
+                    du: du.to_string(),
+                    pd: dst_pd.to_string(),
+                    flow: Some(flow),
+                    ok,
+                    attempt,
+                });
+            }
+        }
         Ok(())
     }
 
@@ -445,6 +604,7 @@ impl SimSystem {
     /// the coordination store's data channel and the execution-mode
     /// engine repairs it if the policy calls for replicas.
     pub fn fail_pd_at(&mut self, pd: &str, at_s: f64) {
+        let at_s = at_s.max(self.sim.now());
         self.sim.schedule_at(at_s, Ev::PdDown { pd: pd.to_string() });
     }
 
@@ -560,10 +720,48 @@ impl SimSystem {
         }
     }
 
+    /// Free bytes on the roomiest live quota'd PD per label — the
+    /// scheduler's capacity feed ([`SchedContext::with_capacity`]).
+    /// Labels backed by any unbounded live PD are omitted (no
+    /// pressure there), and a testbed with no quotas at all returns
+    /// `None`: the scheduler stays bit-identical capacity-blind.
+    fn capacity_by_label(&self) -> Option<BTreeMap<Label, u64>> {
+        let mut bounded: BTreeMap<Label, u64> = BTreeMap::new();
+        let mut unbounded: BTreeSet<Label> = BTreeSet::new();
+        let mut any_quota = false;
+        for p in self.tb.store.pds() {
+            if self.tb.store.pd_is_down(&p.name) {
+                continue;
+            }
+            match self.tb.store.free_space(&p.name) {
+                None => {
+                    unbounded.insert(p.endpoint.label.clone());
+                }
+                Some(free) => {
+                    any_quota = true;
+                    let e = bounded.entry(p.endpoint.label.clone()).or_insert(0);
+                    *e = (*e).max(free.as_u64());
+                }
+            }
+        }
+        if !any_quota {
+            return None;
+        }
+        for l in unbounded {
+            bounded.remove(&l);
+        }
+        Some(bounded)
+    }
+
     fn place_cu(&mut self, cu_id: &str) -> anyhow::Result<()> {
+        let capacity =
+            if self.capacity_aware_scheduling { self.capacity_by_label() } else { None };
         let placement = {
             let cu = &self.state.cus[cu_id];
-            let ctx = SchedContext::from_state(&self.tb.topo, &self.state);
+            let mut ctx = SchedContext::from_state(&self.tb.topo, &self.state);
+            if let Some(cap) = capacity.as_ref() {
+                ctx = ctx.with_capacity(cap);
+            }
             self.scheduler.place(cu, &ctx)
         };
         match placement {
@@ -705,6 +903,11 @@ impl SimSystem {
             Ev::PilotActive { pilot } => {
                 let home = Arc::clone(&self.pilot_home[&pilot]);
                 let p = self.state.pilots.get_mut(&pilot).unwrap();
+                if p.state.is_terminal() {
+                    // Killed while still waiting in the batch queue
+                    // (chaos injection): the activation is stale.
+                    return Ok(());
+                }
                 p.transition(PilotState::Active)?;
                 p.t_active = now;
                 self.metrics.mark(now, &home.machine, TimelineEvent::PilotActive);
@@ -715,9 +918,22 @@ impl SimSystem {
                 self.sim.schedule(0.0, Ev::TryPull { pilot });
             }
 
-            Ev::DuStaged { du, pd, flow, ok } => {
+            Ev::DuStaged { du, pd, flow, ok, attempt } => {
                 if let Some(f) = flow {
                     self.tb.net.end_flow(&f);
+                }
+                if !ok && self.retry_style == RetryStyle::InDes && attempt < self.retry.max_attempts
+                {
+                    // Attempt budget left: back off in simulated time,
+                    // then re-issue from a freshly resolved source.
+                    // The (du, pd) pair stays in `repl_in_flight` so
+                    // policies don't double-issue during the backoff.
+                    self.transfer_retries += 1;
+                    self.sim.schedule(
+                        self.retry.backoff_for(attempt.saturating_sub(1)),
+                        Ev::DuRetry { du, pd, attempt: attempt + 1 },
+                    );
+                    return Ok(());
                 }
                 self.repl_in_flight.remove(&(du.clone(), pd.clone()));
                 if ok {
@@ -772,6 +988,38 @@ impl SimSystem {
                 }
             }
 
+            Ev::DuRetry { du, pd, attempt } => {
+                // Re-resolve the source: replicas may have moved (or
+                // vanished) during the backoff. A DU with no replica
+                // anywhere is an upload still in flight — it retries
+                // from the gateway.
+                let dst_label = self.tb.store.pd(&pd)?.endpoint.label.clone();
+                let gw = self.gateway_pd().ok();
+                let src = self
+                    .tb
+                    .store
+                    .closest_replica(&self.tb.topo, &du, &dst_label)
+                    .map(|p| p.name.clone())
+                    .or(gw.clone());
+                match src {
+                    Some(src) if !self.tb.store.pd_is_down(&pd) => {
+                        let via_gateway = gw.as_deref() == Some(src.as_str());
+                        self.start_transfer_from(&du, &src, &pd, via_gateway, attempt)?;
+                    }
+                    _ => {
+                        // No surviving source, or the destination went
+                        // down during the backoff: fail permanently.
+                        self.sim.schedule(0.0, Ev::DuStaged {
+                            du,
+                            pd,
+                            flow: None,
+                            ok: false,
+                            attempt: self.retry.max_attempts,
+                        });
+                    }
+                }
+            }
+
             Ev::TryPull { pilot } => {
                 if std::env::var("PD_DEBUG_PULL").is_ok() {
                     let p = &self.state.pilots[&pilot];
@@ -788,44 +1036,100 @@ impl SimSystem {
                 self.try_pull(now, &pilot)?;
             }
 
-            Ev::CuStaged { cu, flow, ok } => {
+            Ev::CuStaged { cu, flow, ok, attempt } => {
                 if let Some(f) = flow {
                     self.tb.net.end_flow(&f);
                 }
                 // The pilot may have expired mid-staging (the CU was
-                // re-queued); drop the stale event.
-                if self.state.cus[&cu].state != CuState::StagingInput {
+                // re-queued), or the CU may already be staging again on
+                // another pilot; both leave a stale event — drop it.
+                if self.state.cus[&cu].state != CuState::StagingInput
+                    || self.dispatch_epoch.get(&cu) != Some(&attempt)
+                {
                     return Ok(());
                 }
                 let pilot_id = self.state.cus[&cu].pilot.clone().unwrap();
                 let home = Arc::clone(&self.pilot_home[&pilot_id]);
-                if self.staged_remote.get(&cu).copied().unwrap_or(false) {
+                let remote_inputs = self.staged_remote.get(&cu).cloned().unwrap_or_default();
+                if !remote_inputs.is_empty() {
                     if let Some(n) = self.staging_in_flight.get_mut(&pilot_id) {
                         *n = n.saturating_sub(1);
                     }
                 }
                 self.sim.schedule(0.0, Ev::TryPull { pilot: pilot_id.clone() });
                 if !ok {
-                    // Staging failed after retries: re-queue globally,
-                    // up to a bound (inputs that never materialize —
-                    // e.g. a permanently failed upload — fail the CU).
+                    // Staging failed: free the slots and retry through
+                    // the legal `StagingInput → Queued` edge, up to a
+                    // bound (inputs that never materialize — e.g. a
+                    // permanently failed upload — fail the CU).
                     self.staging_failures += 1;
                     let n = self.requeues.entry(cu.clone()).or_insert(0);
                     *n += 1;
-                    let give_up = *n > self.max_requeues;
+                    let failures = *n;
+                    let give_up = failures > self.max_requeues;
                     let c = self.state.cus.get_mut(&cu).unwrap();
                     let cores = c.description.cores.max(1);
                     self.state.pilots.get_mut(&pilot_id).unwrap().busy_slots -= cores;
                     let c = self.state.cus.get_mut(&cu).unwrap();
                     if give_up {
                         c.error = Some("input staging failed permanently".into());
-                        c.state = CuState::Failed;
+                        c.transition(CuState::Failed)?;
                     } else {
-                        c.transition(CuState::Queued)?;
-                        self.store.rpush_k(&self.global_q, &cu)?;
-                        self.drain_queue_events();
+                        match self.retry_style {
+                            RetryStyle::Aggregate => {
+                                // Seed semantics: blind immediate push
+                                // back onto the global queue.
+                                c.transition(CuState::Queued)?;
+                                self.store.rpush_k(&self.global_q, &cu)?;
+                                self.drain_queue_events();
+                            }
+                            RetryStyle::InDes => {
+                                // Unbind from the (possibly unhealthy)
+                                // pilot, back off in simulated time,
+                                // then re-place through the scheduler —
+                                // which sees the current replica map
+                                // and capacity feed, not the one that
+                                // produced the failing placement.
+                                c.transition(CuState::Queued)?;
+                                c.pilot = None;
+                                let backoff =
+                                    self.retry.backoff_for(failures.saturating_sub(1));
+                                self.sim.schedule(backoff, Ev::Reschedule { cu: cu.clone() });
+                            }
+                        }
                     }
                     return Ok(());
+                }
+                // Remote inputs landed on the scratch PD. A quota'd
+                // scratch must admit them as real residents (possibly
+                // evicting cold replicas, possibly refusing outright);
+                // unbounded scratch keeps the seed's transient-staging
+                // semantics where only the wire time is modeled.
+                if self.tb.store.free_space(&home.scratch).is_some() {
+                    for du in &remote_inputs {
+                        if self.tb.store.has_replica(du, &home.scratch) {
+                            continue;
+                        }
+                        match self.tb.store.try_place(du, &home.scratch)? {
+                            PlaceOutcome::Placed { evicted } => {
+                                self.note_replica_pd(du, &home.scratch);
+                                for (edu, epd) in evicted {
+                                    let elabel =
+                                        self.tb.store.pd(&epd)?.endpoint.label.clone();
+                                    self.note_replica_lost(
+                                        &edu,
+                                        &epd,
+                                        &elabel,
+                                        LossCause::Evicted,
+                                    );
+                                }
+                            }
+                            PlaceOutcome::NoCapacity => {
+                                self.capacity_rejections += 1;
+                            }
+                        }
+                    }
+                    self.drain_data_events();
                 }
                 let m = self.tb.batch.machine(&home.machine)?.clone();
                 self.tb.batch.io_begin(&home.machine);
@@ -890,45 +1194,19 @@ impl SimSystem {
             }
 
             Ev::PilotExpired { pilot } => {
-                let Some(p) = self.state.pilots.get_mut(&pilot) else { return Ok(()) };
-                if p.state.is_terminal() {
-                    return Ok(());
-                }
-                let was_active = p.state == crate::pilot::PilotState::Active;
-                p.state = crate::pilot::PilotState::Done;
-                p.busy_slots = 0;
-                let home = Arc::clone(&self.pilot_home[&pilot]);
-                if was_active {
-                    let cores = self.state.pilots[&pilot].description.cores;
-                    self.tb.batch.release(&home.machine, cores);
-                }
-                // Re-queue this pilot's in-flight CUs and drain its
-                // agent queue back to the global queue.
-                let orphaned: Vec<String> = self
+                self.teardown_pilot(&pilot, PilotState::Done)?;
+            }
+
+            Ev::PilotFailed { pilot } => {
+                let alive = self
                     .state
-                    .cus
-                    .values()
-                    .filter(|c| {
-                        c.pilot.as_deref() == Some(pilot.as_str()) && !c.state.is_terminal()
-                    })
-                    .map(|c| c.id.clone())
-                    .collect();
-                for cu in orphaned {
-                    let c = self.state.cus.get_mut(&cu).unwrap();
-                    if matches!(c.state, CuState::StagingInput | CuState::Running) {
-                        c.transition(CuState::Queued)?;
-                        c.pilot = None;
-                        self.store.rpush_k(&self.global_q, &cu)?;
-                    }
+                    .pilots
+                    .get(&pilot)
+                    .map_or(false, |p| !p.state.is_terminal());
+                if alive {
+                    self.pilot_failures += 1;
                 }
-                while let Some(cu) = self.store.lpop_k(&self.qkeys[&pilot])? {
-                    self.store.rpush_k(&self.global_q, &cu)?;
-                }
-                self.state.reset_queue_depth(&pilot);
-                self.staging_in_flight.remove(&pilot);
-                // The re-queues above published global-queue events;
-                // turning them into wakeups is the drain's job.
-                self.drain_queue_events();
+                self.teardown_pilot(&pilot, PilotState::Failed)?;
             }
 
             Ev::PdDown { pd } => {
@@ -949,7 +1227,88 @@ impl SimSystem {
                 // transfers (no-op under OnDemand/reference).
                 self.drain_data_events();
             }
+
+            Ev::PdUp { pd } => {
+                if !self.tb.store.pd_is_down(&pd) {
+                    return Ok(()); // never went down, or already recovered
+                }
+                // The outage evicted every resident replica, so the PD
+                // comes back empty with its quota intact.
+                self.tb.store.set_pd_down(&pd, false);
+                let _ = self
+                    .store
+                    .publish(&format!("{}{pd}", keys::DATA_AVAIL_PREFIX), "up");
+                // Proactive policies re-balance onto the recovered
+                // capacity (re-fill replica targets, re-push affinity
+                // data); OnDemand/reference ignore it.
+                let actions = self.mode_actions(|m, ctx| m.on_pd_up(&pd, ctx));
+                self.apply_actions(actions);
+                self.drain_data_events();
+                // Recovered locality may unlock queued work.
+                if let Ok(p) = self.tb.store.pd(&pd) {
+                    let label = p.endpoint.label.clone();
+                    self.wake_pilots_for_du(&label);
+                }
+            }
         }
+        Ok(())
+    }
+
+    /// Shared teardown for a pilot leaving service (walltime expiry or
+    /// hard failure): release its batch cores, re-dispatch in-flight
+    /// CUs through the per-CU re-dispatch bound, drain its agent queue
+    /// back to the global queue, and reset the bookkeeping.
+    fn teardown_pilot(&mut self, pilot: &str, final_state: PilotState) -> anyhow::Result<()> {
+        let Some(p) = self.state.pilots.get_mut(pilot) else { return Ok(()) };
+        if p.state.is_terminal() {
+            return Ok(());
+        }
+        let was_active = p.state == PilotState::Active;
+        p.state = final_state;
+        p.busy_slots = 0;
+        let home = Arc::clone(&self.pilot_home[pilot]);
+        if was_active {
+            let cores = self.state.pilots[pilot].description.cores;
+            self.tb.batch.release(&home.machine, cores);
+        }
+        // Re-queue this pilot's in-flight CUs and drain its agent
+        // queue back to the global queue. A CU that keeps losing its
+        // pilot mid-flight is failed once it exhausts the re-dispatch
+        // bound rather than bouncing forever.
+        let orphaned: Vec<String> = self
+            .state
+            .cus
+            .values()
+            .filter(|c| c.pilot.as_deref() == Some(pilot) && !c.state.is_terminal())
+            .map(|c| c.id.clone())
+            .collect();
+        for cu in orphaned {
+            let c = self.state.cus.get_mut(&cu).unwrap();
+            if matches!(c.state, CuState::StagingInput | CuState::Running) {
+                let n = self.redispatches.entry(cu.clone()).or_insert(0);
+                *n += 1;
+                if *n > self.max_redispatches {
+                    let c = self.state.cus.get_mut(&cu).unwrap();
+                    c.error = Some(format!(
+                        "re-dispatch bound exceeded after {} pilot losses",
+                        self.max_redispatches
+                    ));
+                    c.transition(CuState::Failed)?;
+                } else {
+                    c.transition(CuState::Queued)?;
+                    c.pilot = None;
+                    self.store.rpush_k(&self.global_q, &cu)?;
+                }
+            }
+        }
+        while let Some(cu) = self.store.lpop_k(&self.qkeys[pilot])? {
+            self.store.rpush_k(&self.global_q, &cu)?;
+        }
+        self.state.reset_queue_depth(pilot);
+        self.staging_in_flight.remove(pilot);
+        // The re-queues above published global-queue events; turning
+        // them into wakeups is the drain's job.
+        self.drain_queue_events();
         Ok(())
     }
 
@@ -1048,7 +1407,7 @@ impl SimSystem {
         let mut total = 0.0f64;
         let mut ok = true;
         let mut flow: Option<FlowHandle> = None;
-        let mut remote = false;
+        let mut remote_dus: Vec<String> = Vec::new();
         // Loop-invariant: the scratch PD exists (validated at
         // submit_pilot) and its label decides whether the agent's
         // staging flow can fuse with the cost walk below.
@@ -1069,7 +1428,7 @@ impl SimSystem {
                 self.tb.store.touch(du, &src_name);
                 total += 1.0;
             } else {
-                remote = true;
+                remote_dus.push(du.clone());
                 // Staging is sequential-read + one protocol stream:
                 // the per-flow cap inside `transfer_cost` (e.g. ~20
                 // MiB/s scp) is the binding constraint, matching the
@@ -1102,21 +1461,58 @@ impl SimSystem {
                     cost
                 };
                 let failure_rate = self.tb.store.pd(&src_name)?.endpoint.params.failure_rate;
-                let outcome =
-                    attempt_transfer(&mut self.rng, failure_rate, cost.wire_s, self.retry);
-                ok &= outcome.succeeded;
-                total += cost.total() + outcome.wasted_s;
-                self.bytes_moved += self.tb.store.du_meta(du)?.0.as_u64();
+                let size = self.tb.store.du_meta(du)?.0.as_u64();
+                match self.retry_style {
+                    RetryStyle::Aggregate => {
+                        let outcome = attempt_transfer(
+                            &mut self.rng,
+                            failure_rate,
+                            cost.wire_s,
+                            self.retry,
+                        );
+                        ok &= outcome.succeeded;
+                        total += cost.total() + outcome.wasted_s;
+                        self.bytes_moved += size;
+                    }
+                    RetryStyle::InDes => {
+                        // One draw per attempt, composed with the
+                        // per-link rates on the staging path. A failed
+                        // pull is detected partway through the wire
+                        // leg; the retry is the CU-level re-dispatch
+                        // (CuStaged's failure path backs off and
+                        // re-places through the scheduler), not an
+                        // inline loop.
+                        let link_rate =
+                            self.tb.net.path_failure_rate_labels(&src_label, &pilot_label);
+                        let rate = 1.0 - (1.0 - failure_rate) * (1.0 - link_rate);
+                        if self.rng.chance(rate) {
+                            let frac = self.rng.range_f64(0.1, 0.9);
+                            ok = false;
+                            total += cost.setup_s + cost.wire_s * frac;
+                            self.bytes_moved += (size as f64 * frac) as u64;
+                        } else {
+                            total += cost.total();
+                            self.bytes_moved += size;
+                        }
+                    }
+                }
                 self.tb.store.touch(du, &src_name);
             }
         }
-        self.staged_remote.insert(cu_id.to_string(), remote);
+        let remote = !remote_dus.is_empty();
+        self.staged_remote.insert(cu_id.to_string(), remote_dus);
         if remote {
             // Only remote stagings consume agent staging slots; local
             // links are effectively free.
             *self.staging_in_flight.entry(pilot.to_string()).or_insert(0) += 1;
         }
-        self.sim.schedule(total, Ev::CuStaged { cu: cu_id.to_string(), flow, ok });
+        let epoch = {
+            let e = self.dispatch_epoch.entry(cu_id.to_string()).or_insert(0);
+            *e += 1;
+            *e
+        };
+        self.sim
+            .schedule(total, Ev::CuStaged { cu: cu_id.to_string(), flow, ok, attempt: epoch });
         Ok(())
     }
 
@@ -1376,6 +1772,9 @@ mod tests {
     #[test]
     fn bytes_moved_counts_wire_transfers_only() {
         let mut sys = SimSystem::new(paper_testbed(), 77);
+        // Exact-byte assertions: a faulty transfer would add partial
+        // wire bytes for the failed attempt plus the retry's full copy.
+        sys.zero_transfer_faults();
         let ens = small_ensemble();
         let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
         sys.run().unwrap();
@@ -1453,5 +1852,210 @@ mod tests {
         assert_eq!(counter, actual, "post-run counter drift");
         assert_eq!(actual, 0);
         assert_eq!(sys.store.llen(keys::GLOBAL_QUEUE).unwrap(), 0);
+    }
+
+    /// A hard pilot failure mid-CU re-dispatches the in-flight CUs to
+    /// the surviving pilot (bounded by `max_redispatches`) and leaves
+    /// the pilot `Failed`, not `Done`.
+    #[test]
+    fn pilot_hard_failure_redispatches_in_flight_cus() {
+        let mut sys = SimSystem::new(paper_testbed(), 23);
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        let p1 = sys.submit_pilot("lonestar", 16, "lonestar-scratch").unwrap();
+        sys.submit_pilot("stampede", 16, "stampede-scratch").unwrap();
+        for chunk_descr in &ens.read_chunks {
+            let chunk = sys.upload_du(chunk_descr, "lonestar-scratch").unwrap();
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk];
+            sys.submit_cu(cud).unwrap();
+        }
+        sys.fail_pilot_at(&p1, 3000.0);
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(sys.state.count_cu_state(CuState::Done), 4);
+        assert_eq!(sys.state.pilots[&p1].state, PilotState::Failed);
+        assert_eq!(sys.pilot_failures, 1);
+        assert!(sys.total_redispatches() >= 1, "no CU was re-dispatched");
+        let on_stampede = sys
+            .metrics
+            .cu_records
+            .iter()
+            .filter(|r| r.machine == "stampede")
+            .count();
+        assert!(on_stampede >= 1, "records={:?}", sys.metrics.distribution());
+    }
+
+    /// A PD down→up cycle under AutoReplicate: the outage drops the
+    /// replica, recovery publishes availability and the policy re-fills
+    /// the replica target onto the recovered (empty) storage.
+    #[test]
+    fn pd_down_up_cycle_refills_replicas_on_recovery() {
+        use crate::datamgmt::AutoReplicate;
+        let mut sys = SimSystem::new(paper_testbed(), 25)
+            .with_mode(Box::new(AutoReplicate { replicas: 2 }));
+        sys.zero_transfer_faults();
+        let ens = small_ensemble();
+        let du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        // Two sites: the policy's only top-up target is stampede.
+        sys.submit_pilot("lonestar", 16, "lonestar-scratch").unwrap();
+        sys.submit_pilot("stampede", 16, "stampede-scratch").unwrap();
+        sys.run().unwrap();
+        assert!(sys.tb.store.has_replica(&du, "stampede-scratch"));
+        let t = sys.sim.now();
+        sys.fail_pd_at("stampede-scratch", t + 10.0);
+        sys.run().unwrap();
+        // With lonestar the only live site, the loss is irreparable.
+        assert_eq!(sys.tb.store.replica_count(&du), 1);
+        let t = sys.sim.now();
+        sys.recover_pd_at("stampede-scratch", t + 100.0);
+        sys.run().unwrap();
+        assert!(!sys.tb.store.pd_is_down("stampede-scratch"));
+        assert!(
+            sys.tb.store.has_replica(&du, "stampede-scratch"),
+            "recovery must trigger the policy's re-fill"
+        );
+        assert_eq!(sys.tb.store.replica_count(&du), 2);
+    }
+
+    /// In-DES transfer retries: a link that always fails exhausts the
+    /// retry budget inside simulated time, ends every flow cleanly,
+    /// and leaves no replica behind.
+    #[test]
+    fn transfer_retries_run_inside_sim_time_and_end_flows() {
+        let mut sys = SimSystem::new(paper_testbed(), 27);
+        sys.zero_transfer_faults(); // isolate the injected link fault
+        let ens = small_ensemble();
+        let du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        sys.run().unwrap();
+        sys.tb.net.set_link_failure_rate("xsede/tacc/stampede", 1.0);
+        sys.replicate(&du, "stampede-scratch").unwrap();
+        let t0 = sys.sim.now();
+        sys.run().unwrap();
+        assert!(!sys.tb.store.has_replica(&du, "stampede-scratch"));
+        assert_eq!(
+            sys.transfer_retries,
+            sys.retry.max_attempts - 1,
+            "every spare attempt must re-issue"
+        );
+        assert_eq!(sys.tb.net.total_live_flows(), 0, "failed attempts must end their flows");
+        // Partial wire time plus two exponential backoffs elapsed.
+        assert!(sys.sim.now() > t0 + sys.retry.backoff_s * 3.0);
+    }
+
+    /// Fault-free, the in-DES retry engine must be bit-identical to
+    /// the seed's statistical shortcut it replaced: same RNG draws,
+    /// same event times, same placements, same bytes.
+    #[test]
+    fn fault_free_in_des_matches_aggregate_reference() {
+        let run = |aggregate: bool| {
+            let mut sys = SimSystem::new(paper_testbed(), 33);
+            if aggregate {
+                sys = sys.with_aggregate_retry_reference();
+            }
+            sys.zero_transfer_faults();
+            let ens = small_ensemble();
+            let ref_du = sys.upload_du(&ens.reference, "osg-srm").unwrap();
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").unwrap());
+            }
+            sys.run().unwrap();
+            sys.submit_pilot("lonestar", 8, "lonestar-scratch").unwrap();
+            sys.submit_pilot("stampede", 8, "stampede-scratch").unwrap();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                sys.submit_cu(cud).unwrap();
+            }
+            sys.run().unwrap();
+            assert!(sys.state.workload_finished());
+            let trace: Vec<(String, f64, f64, f64)> = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| (r.machine.clone(), r.t_start, r.t_end, r.staging_s))
+                .collect();
+            (trace, sys.makespan(), sys.bytes_moved().as_u64())
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    /// Satellite (b) end to end: on a quota-tight site the capacity
+    /// feed steers placements away, so staging stops slamming into the
+    /// full PD — `capacity_rejections` drops versus the blind run.
+    #[test]
+    fn capacity_aware_scheduling_cuts_capacity_rejections() {
+        let run = |aware: bool| {
+            let mut sys = SimSystem::new(paper_testbed(), 35);
+            sys.capacity_aware_scheduling = aware;
+            sys.zero_transfer_faults();
+            sys.tb.store.set_quota("stampede-scratch", Some(Bytes::gb(1))).unwrap();
+            let ens = small_ensemble(); // 8 GiB reference
+            // Data at the gateway: equidistant from both sites, so the
+            // blind tie-break (free slots) prefers the bigger stampede
+            // pilot whose 1 GiB scratch can never admit the stage-in.
+            let du = sys.upload_du(&ens.reference, "gw68-staging").unwrap();
+            sys.run().unwrap();
+            sys.submit_pilot("lonestar", 4, "lonestar-scratch").unwrap();
+            sys.submit_pilot("stampede", 16, "stampede-scratch").unwrap();
+            sys.run().unwrap();
+            for _ in 0..2 {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![du.clone()];
+                sys.submit_cu(cud).unwrap();
+            }
+            sys.run().unwrap();
+            assert!(sys.state.workload_finished());
+            sys.capacity_rejections
+        };
+        let blind = run(false);
+        let aware = run(true);
+        assert!(blind >= 1, "blind run must hit the quota (got {blind})");
+        assert_eq!(aware, 0, "capacity-aware run must avoid the full site");
+    }
+
+    /// Acceptance scenario: a two-site workload survives a mid-CU
+    /// pilot kill, a PD down→up cycle, and lossy links — every CU
+    /// completes exactly once and all flows drain.
+    #[test]
+    fn chaos_two_site_run_completes_with_zero_lost_cus() {
+        use crate::datamgmt::AutoReplicate;
+        let mut sys = SimSystem::new(paper_testbed(), 37)
+            .with_mode(Box::new(AutoReplicate { replicas: 2 }));
+        let ens = small_ensemble();
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        let mut chunks = Vec::new();
+        for c in &ens.read_chunks {
+            chunks.push(sys.upload_du(c, "lonestar-scratch").unwrap());
+        }
+        sys.run().unwrap();
+        sys.submit_pilot("lonestar", 16, "lonestar-scratch").unwrap();
+        let p2 = sys.submit_pilot("stampede", 16, "stampede-scratch").unwrap();
+        for chunk in &chunks {
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk.clone()];
+            sys.submit_cu(cud).unwrap();
+        }
+        let plan = ChaosPlan {
+            pilot_kills: vec![(p2.clone(), 4000.0)],
+            pd_down: vec![("stampede-scratch".into(), 2000.0)],
+            pd_up: vec![("stampede-scratch".into(), 6000.0)],
+            link_faults: vec![("xsede/tacc/stampede".into(), 0.2)],
+        };
+        sys.apply_chaos(&plan);
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(sys.state.count_cu_state(CuState::Done), 4, "lost CUs");
+        assert_eq!(sys.state.pilots[&p2].state, PilotState::Failed);
+        assert_eq!(sys.tb.net.total_live_flows(), 0, "leaked flows");
+        // Exactly one completion record per CU.
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &sys.metrics.cu_records {
+            assert!(seen.insert(r.cu.clone()), "CU {} completed twice", r.cu);
+        }
+        assert_eq!(seen.len(), 4);
     }
 }

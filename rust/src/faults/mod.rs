@@ -6,6 +6,43 @@
 //! replica was ∼7.5" (Fig. 8), and Fig. 11/13 runs saw wall-time limits
 //! and transfer errors. This module centralizes the knobs for injecting
 //! those faults deterministically.
+//!
+//! # Fault model
+//!
+//! The system distinguishes four failure kinds, each recoverable:
+//!
+//! * **Transfer faults** — every transfer attempt fails independently
+//!   with a rate composed from the destination protocol's
+//!   `ProtocolParams::failure_rate` and the per-link rates on the
+//!   crossed network path (`Network::path_failure_rate`). In the DES a
+//!   failed attempt runs for a partial-transfer fraction of its wire
+//!   time, releases its network flow, then retries after
+//!   [`RetryPolicy::backoff_for`] *in simulated time* — up to
+//!   [`RetryPolicy::max_attempts`]; exhaustion surfaces as a failed
+//!   staging event. ([`attempt_transfer`] is the older aggregate form
+//!   of the same model, collapsing the attempt sequence into one
+//!   statistical outcome; it is retained as the property-test oracle
+//!   for fault-free bit-identity.)
+//! * **Pilot failures** — a pilot dies mid-CU (`Ev::PilotFailed`) or
+//!   hits its wall-time (`Ev::PilotExpired`). In-flight CUs take the
+//!   `StagingInput→Queued` / `Running→Queued` retry edges and are
+//!   re-dispatched by the scheduler; per-CU re-dispatch counters bound
+//!   the retries. In the wall-clock service the same liveness is
+//!   lease-based: agents refresh `pd:pilot:hb:<id>` heartbeats and the
+//!   manager reclaims the queue of any agent whose lease expired.
+//! * **Storage outages** — `Ev::PdDown` evicts every replica on the PD
+//!   and publishes each loss on `pd:data:lost:<du>`; the active
+//!   execution mode repairs lost replicas from survivors. `Ev::PdUp`
+//!   re-registers the PD empty, publishes `pd:data:avail:<pd>`, and
+//!   lets the mode re-balance onto the recovered storage.
+//! * **Coordination outages** — [`ScopedOutage`] / [`OutagePlan`] take
+//!   the coordination store itself down; agents park in
+//!   `wait_available` and resume when it returns.
+//!
+//! [`ChaosPlan`] composes the first three into a seeded random
+//! failure/recovery timeline that can be injected into any
+//! `SimSystem` (`apply_chaos`), which is how the resilience experiment
+//! and the chaos property suite drive the whole lifecycle at once.
 
 use crate::coordination::Store;
 use crate::rng::Rng;
@@ -104,6 +141,74 @@ impl OutagePlan {
     }
 }
 
+/// A seeded random failure/recovery timeline over a simulation run:
+/// pilot kills, PD down→up cycles, and per-link fault rates. Inject
+/// into a driver with `SimSystem::apply_chaos` before (or between)
+/// `run()` calls; every timestamp is absolute sim time.
+///
+/// The plan is plain data on purpose — tests that must guarantee
+/// survivors (one live pilot, one replica of every input) simply pass
+/// only the expendable pilots/PDs to [`ChaosPlan::seeded`].
+#[derive(Debug, Clone, Default)]
+pub struct ChaosPlan {
+    /// (pilot id, kill time): hard mid-CU death, not wall-time expiry.
+    pub pilot_kills: Vec<(String, f64)>,
+    /// (pd name, outage start).
+    pub pd_down: Vec<(String, f64)>,
+    /// (pd name, recovery time) — paired with an entry in `pd_down`.
+    pub pd_up: Vec<(String, f64)>,
+    /// (link label, per-attempt failure rate), applied for the whole
+    /// run.
+    pub link_faults: Vec<(String, f64)>,
+}
+
+impl ChaosPlan {
+    /// Generate a plan. `intensity` in `[0, 1]` scales both the
+    /// probability that each candidate pilot/PD/link is hit and the
+    /// injected link fault rates; kill and outage times land inside
+    /// `(0.05, 0.75) * horizon_s` so recoveries fit the run.
+    pub fn seeded(
+        seed: u64,
+        intensity: f64,
+        pilots: &[String],
+        pds: &[String],
+        links: &[String],
+        horizon_s: f64,
+    ) -> ChaosPlan {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5BAD);
+        let intensity = intensity.clamp(0.0, 1.0);
+        let mut plan = ChaosPlan::default();
+        for p in pilots {
+            if rng.chance(0.7 * intensity) {
+                plan.pilot_kills.push((p.clone(), horizon_s * rng.range_f64(0.05, 0.75)));
+            }
+        }
+        for pd in pds {
+            if rng.chance(0.6 * intensity) {
+                let down = horizon_s * rng.range_f64(0.05, 0.6);
+                let up = down + horizon_s * rng.range_f64(0.05, 0.3);
+                plan.pd_down.push((pd.clone(), down));
+                plan.pd_up.push((pd.clone(), up));
+            }
+        }
+        for link in links {
+            if rng.chance(0.8 * intensity) {
+                plan.link_faults.push((link.clone(), 0.25 * intensity * rng.range_f64(0.2, 1.0)));
+            }
+        }
+        plan
+    }
+
+    /// Total number of injected fault events (diagnostics/reporting).
+    pub fn len(&self) -> usize {
+        self.pilot_kills.len() + self.pd_down.len() + self.link_faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +268,40 @@ mod tests {
             panic!("boom");
         }));
         assert!(s.get("k").is_ok(), "outage leaked past a panic");
+    }
+
+    #[test]
+    fn chaos_plan_is_seed_deterministic_and_scales_with_intensity() {
+        let pilots: Vec<String> = (0..6).map(|i| format!("pilot-{i}")).collect();
+        let pds: Vec<String> = (0..4).map(|i| format!("pd-{i}")).collect();
+        let links = vec!["xsede".to_string(), "osg".to_string()];
+        let mk = |seed, i| ChaosPlan::seeded(seed, i, &pilots, &pds, &links, 10_000.0);
+        // Same seed, same plan — different seed, (almost surely) not.
+        let a = mk(7, 0.8);
+        let b = mk(7, 0.8);
+        assert_eq!(a.pilot_kills, b.pilot_kills);
+        assert_eq!(a.pd_down, b.pd_down);
+        assert_eq!(a.pd_up, b.pd_up);
+        assert_eq!(a.link_faults, b.link_faults);
+        // Zero intensity is a no-op plan.
+        let z = mk(7, 0.0);
+        assert!(z.is_empty());
+        // Recoveries follow their outages, inside the horizon.
+        for ((pd_d, down), (pd_u, up)) in a.pd_down.iter().zip(&a.pd_up) {
+            assert_eq!(pd_d, pd_u);
+            assert!(*down < *up && *up < 10_000.0);
+        }
+        for (_, t) in &a.pilot_kills {
+            assert!(*t > 0.0 && *t < 7_500.0);
+        }
+        // Higher intensity injects at least as much on average: check a
+        // small seed ensemble rather than one draw.
+        let (mut lo, mut hi) = (0usize, 0usize);
+        for s in 0..32 {
+            lo += mk(s, 0.2).len();
+            hi += mk(s, 1.0).len();
+        }
+        assert!(hi > lo, "intensity 1.0 injected {hi} <= intensity 0.2's {lo}");
     }
 
     #[test]

@@ -84,6 +84,10 @@ pub struct Network {
     cap: Vec<f64>,
     /// Live flows per link. Indexed by [`LinkId`].
     flows: Vec<u32>,
+    /// Per-attempt transfer failure probability per link (default
+    /// 0.0 — reliable). Indexed by [`LinkId`]; composed over a path by
+    /// [`Network::path_failure_rate`].
+    fail: Vec<f64>,
     /// Default capacity for unlisted uplinks.
     default_uplink: Option<Bandwidth>,
     /// Loopback bandwidth when src == dst (shared-FS copy / local link).
@@ -114,6 +118,7 @@ impl Network {
             arena: NodeArena::new(),
             cap: vec![f64::NAN],
             flows: vec![0],
+            fail: vec![0.0],
             default_uplink: Some(Bandwidth::mbps(100.0)),
             loopback: Bandwidth::mbps(400.0),
             path_memo: FxMap::default(),
@@ -125,6 +130,7 @@ impl Network {
         while self.cap.len() < self.arena.len() {
             self.cap.push(f64::NAN);
             self.flows.push(0);
+            self.fail.push(0.0);
         }
     }
 
@@ -152,6 +158,42 @@ impl Network {
 
     pub fn set_loopback(&mut self, bw: Bandwidth) {
         self.loopback = bw;
+    }
+
+    /// Set the per-attempt failure probability of one link (the uplink
+    /// above `label`). Clamped to `[0, 1]`.
+    pub fn set_link_failure_rate(&mut self, label: &str, rate: f64) {
+        let id = self.node(&Label::new(label));
+        self.fail[id.index()] = rate.clamp(0.0, 1.0);
+    }
+
+    /// Probability that a single attempt crossing the `(a, b)` path
+    /// fails due to link faults: `1 − Π (1 − fail_l)` over the crossed
+    /// links. Loopback (`a == b`) never fails.
+    pub fn path_failure_rate(&mut self, a: NodeId, b: NodeId) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.ensure_path(a, b);
+        let links = &self.path_memo[&(a.0, b.0)];
+        let mut ok = 1.0;
+        for &l in links.iter() {
+            ok *= 1.0 - self.fail[l as usize];
+        }
+        1.0 - ok
+    }
+
+    /// Label-keyed [`Network::path_failure_rate`] (interns).
+    pub fn path_failure_rate_labels(&mut self, a: &Label, b: &Label) -> f64 {
+        let ai = self.node(a);
+        let bi = self.node(b);
+        self.path_failure_rate(ai, bi)
+    }
+
+    /// Total live flow registrations across every link — zero when all
+    /// started flows have been ended (leak detection in chaos tests).
+    pub fn total_live_flows(&self) -> u64 {
+        self.flows.iter().map(|&n| n as u64).sum()
     }
 
     fn default_cap(&self) -> f64 {
@@ -636,6 +678,46 @@ mod tests {
         assert_eq!(bw_self.0, net.loopback.0);
         net.end_flow(&h_self);
         assert_eq!(net.congestion_id(a, b), 1);
+    }
+
+    #[test]
+    fn link_failure_rates_compose_over_the_path() {
+        let mut net = Network::new();
+        let (a, b) = (net.node(&l("xsede/tacc/lonestar")), net.node(&l("osg/purdue")));
+        // Default: every link reliable.
+        assert_eq!(net.path_failure_rate(a, b), 0.0);
+        assert_eq!(net.path_failure_rate(a, a), 0.0);
+        // One lossy WAN link.
+        net.set_link_failure_rate("osg", 0.1);
+        assert!((net.path_failure_rate(a, b) - 0.1).abs() < 1e-12);
+        // Two independent lossy links compose: 1 - 0.9 * 0.8 = 0.28.
+        net.set_link_failure_rate("xsede", 0.2);
+        assert!((net.path_failure_rate(a, b) - 0.28).abs() < 1e-12);
+        // A path avoiding both stays clean.
+        let c = net.node(&l("xsede/tacc/stampede"));
+        assert_eq!(net.path_failure_rate(a, c), 0.0);
+        // Label shim agrees; rates clamp to [0, 1].
+        assert!(
+            (net.path_failure_rate_labels(&l("xsede/tacc/lonestar"), &l("osg/purdue")) - 0.28)
+                .abs()
+                < 1e-12
+        );
+        net.set_link_failure_rate("osg", 7.0);
+        assert_eq!(net.path_failure_rate(a, b), 1.0);
+    }
+
+    #[test]
+    fn total_live_flows_tracks_begin_end() {
+        let mut net = Network::new();
+        let (a, b) = (net.node(&l("x/m1")), net.node(&l("y/m2")));
+        assert_eq!(net.total_live_flows(), 0);
+        let h1 = net.begin_flow_id(a, b);
+        let h2 = net.begin_flow_id(a, b);
+        // 4 links on the path, 2 flows each.
+        assert_eq!(net.total_live_flows(), 8);
+        net.end_flow(&h1);
+        net.end_flow(&h2);
+        assert_eq!(net.total_live_flows(), 0);
     }
 
     #[test]

@@ -376,6 +376,189 @@ mod tests {
         assert_eq!(render(&f8a), render(&f8b), "fig8 output drifted between runs");
     }
 
+    /// ISSUE 6 tentpole: with every failure rate zeroed, the in-DES
+    /// retry engine (one event per transfer attempt, backoff in
+    /// simulated time) must be **bit-identical** to the seed's
+    /// statistical `attempt_transfer` shortcut it replaced — same RNG
+    /// draws, same event times, same placements, same bytes — on
+    /// randomized two-site workloads. Fault handling must cost nothing
+    /// when nothing faults.
+    #[test]
+    fn fault_free_in_des_retry_matches_aggregate_reference_traces() {
+        use crate::config::paper_testbed;
+        use crate::experiments::simdrive::SimSystem;
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+
+        type Trace = (Vec<(usize, String, f64, f64, f64, f64)>, f64, u64);
+
+        fn run_one(
+            aggregate: bool,
+            seed: u64,
+            pilots: &[(&'static str, &'static str, u32)],
+            tasks: usize,
+            chunk_gb: u64,
+        ) -> Result<Trace, String> {
+            let es = |e: anyhow::Error| e.to_string();
+            let mut sys = SimSystem::new(paper_testbed(), seed);
+            if aggregate {
+                sys = sys.with_aggregate_retry_reference();
+            }
+            sys.zero_transfer_faults();
+            let ens = bwa_ensemble(tasks, Bytes::gb(chunk_gb), Bytes::gb(8));
+            // Reference on a remote SRM: CU stagings cross the wire.
+            let ref_du = sys.upload_du(&ens.reference, "osg-srm").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            for (machine, scratch, cores) in pilots {
+                sys.submit_pilot(machine, *cores, scratch).map_err(es)?;
+            }
+            let mut submitted = Vec::new();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                submitted.push(sys.submit_cu(cud).map_err(es)?);
+            }
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err("workload not finished".into());
+            }
+            let trace = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| {
+                    let idx = submitted
+                        .iter()
+                        .position(|id| *id == r.cu)
+                        .ok_or_else(|| format!("unknown cu {}", r.cu))?;
+                    Ok((idx, r.machine.clone(), r.t_start, r.t_end, r.staging_s, r.compute_s))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok((trace, sys.makespan(), sys.bytes_moved().as_u64()))
+        }
+
+        crate::prop::check(
+            Config { cases: 8, seed: 0x0DE5_FA17 },
+            |rng| {
+                let mut pilots: Vec<(&'static str, &'static str, u32)> =
+                    vec![("lonestar", "lonestar-scratch", 4 + 4 * rng.below(3) as u32)];
+                if rng.chance(0.6) {
+                    pilots.push(("stampede", "stampede-scratch", 4 + 4 * rng.below(3) as u32));
+                }
+                (rng.next_u64(), pilots, 1 + rng.below(5) as usize, 1 + rng.below(3))
+            },
+            |(seed, pilots, tasks, chunk_gb)| {
+                let in_des = run_one(false, *seed, pilots, *tasks, *chunk_gb)?;
+                let aggregate = run_one(true, *seed, pilots, *tasks, *chunk_gb)?;
+                if in_des != aggregate {
+                    return Err(format!(
+                        "fault-free traces diverge:\n in-des:    {in_des:?}\n aggregate: {aggregate:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// ISSUE 6 satellite: randomized chaos schedules (pilot kills, a
+    /// PD down→up cycle, lossy links) against a two-site workload.
+    /// Whenever at least one pilot and one replica of every input DU
+    /// survive — guaranteed here by never targeting the lonestar pilot
+    /// or its scratch — the run must still satisfy the end-to-end
+    /// invariants: the workload completes, no CU is lost or completed
+    /// twice, no pilot ever exceeds its core count, and every network
+    /// flow drains.
+    #[test]
+    fn chaos_runs_preserve_end_to_end_invariants() {
+        use crate::config::paper_testbed;
+        use crate::experiments::simdrive::SimSystem;
+        use crate::faults::ChaosPlan;
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+
+        crate::prop::check(
+            Config { cases: 8, seed: 0xC4A0_5 },
+            |rng| {
+                (
+                    rng.next_u64(),
+                    1 + rng.below(5) as usize,          // tasks
+                    4 + 4 * rng.below(3) as u32,        // survivor cores
+                    4 + 4 * rng.below(2) as u32,        // victim cores
+                    rng.range_f64(0.3, 1.0),            // chaos intensity
+                )
+            },
+            |&(seed, tasks, survivor_cores, victim_cores, intensity)| {
+                let es = |e: anyhow::Error| e.to_string();
+                let mut sys = SimSystem::new(paper_testbed(), seed);
+                let ens = bwa_ensemble(tasks, Bytes::gb(1), Bytes::gb(8));
+                let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+                let mut chunks = Vec::new();
+                for c in &ens.read_chunks {
+                    chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+                }
+                sys.run().map_err(es)?; // land the data
+                let mut cores = std::collections::BTreeMap::new();
+                let p1 = sys
+                    .submit_pilot("lonestar", survivor_cores, "lonestar-scratch")
+                    .map_err(es)?;
+                cores.insert(p1.clone(), survivor_cores);
+                let p2 = sys
+                    .submit_pilot("stampede", victim_cores, "stampede-scratch")
+                    .map_err(es)?;
+                cores.insert(p2.clone(), victim_cores);
+                for chunk in &chunks {
+                    let mut cud = ens.cu_template.clone();
+                    cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                    sys.submit_cu(cud).map_err(es)?;
+                }
+                // Chaos may only touch the stampede side: the lonestar
+                // pilot and the scratch holding every input DU survive.
+                let plan = ChaosPlan::seeded(
+                    seed ^ 0xBAD,
+                    intensity,
+                    &[p2.clone()],
+                    &["stampede-scratch".to_string()],
+                    &["xsede/tacc/stampede".to_string()],
+                    20_000.0,
+                );
+                sys.apply_chaos(&plan);
+                sys.run().map_err(es)?;
+                if !sys.state.workload_finished() {
+                    return Err("workload did not finish under chaos".into());
+                }
+                let done = sys.state.count_cu_state(crate::unit::CuState::Done);
+                if done != tasks {
+                    return Err(format!("{done}/{tasks} CUs done — CUs lost"));
+                }
+                let mut seen = std::collections::BTreeSet::new();
+                for r in &sys.metrics.cu_records {
+                    if !seen.insert(r.cu.clone()) {
+                        return Err(format!("CU {} completed twice", r.cu));
+                    }
+                }
+                for (pilot, peak) in &sys.max_busy {
+                    let c = cores.get(pilot).copied().unwrap_or(0);
+                    if *peak > c {
+                        return Err(format!(
+                            "pilot {pilot} peaked at {peak} busy slots with {c} cores"
+                        ));
+                    }
+                }
+                if sys.tb.net.total_live_flows() != 0 {
+                    return Err(format!(
+                        "{} network flows leaked",
+                        sys.tb.net.total_live_flows()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn json_roundtrip_property() {
         use crate::json::{parse, Json};

@@ -67,6 +67,16 @@ pub struct SchedContext<'a> {
     pub du_locations: &'a BTreeMap<String, Vec<Label>>,
     /// Pilot id -> CUs waiting in its agent-specific queue.
     pub queue_depth: &'a BTreeMap<String, usize>,
+    /// Optional storage headroom per resource label: free bytes on the
+    /// roomiest live quota'd Pilot-Data at that label. Labels with an
+    /// unbounded (quota-less) PD are absent — they never fill. When
+    /// present, [`SchedContext::data_score`] zeroes the score of any
+    /// candidate whose pending stage-ins cannot fit, so nearly-full
+    /// sites stop attracting placements whose staging would be
+    /// rejected. `None` (the [`SchedContext::from_state`] default)
+    /// disables the gate and keeps decisions bit-identical to the
+    /// capacity-blind scheduler.
+    pub capacity: Option<&'a BTreeMap<Label, u64>>,
 }
 
 impl<'a> SchedContext<'a> {
@@ -78,7 +88,15 @@ impl<'a> SchedContext<'a> {
             state,
             du_locations: state.du_locations(),
             queue_depth: state.queue_depths(),
+            capacity: None,
         }
+    }
+
+    /// Attach a per-label storage-headroom map (see the `capacity`
+    /// field) to enable capacity-aware scoring.
+    pub fn with_capacity(mut self, capacity: &'a BTreeMap<Label, u64>) -> SchedContext<'a> {
+        self.capacity = Some(capacity);
+        self
     }
 
     /// Effective open capacity of a pilot in cores: free slots minus
@@ -126,7 +144,9 @@ impl<'a> SchedContext<'a> {
     /// label, then integer LCA math — this runs once per (CU input,
     /// candidate pilot) on every placement decision.
     pub fn data_score(&self, cu: &ComputeUnit, label: &Label) -> f64 {
+        let headroom = self.capacity.and_then(|m| m.get(label)).copied();
         let mut score = 0.0;
+        let mut need: u64 = 0;
         for du in &cu.description.input_data {
             let Some(locs) = self.du_locations.get(du) else { continue };
             let best = locs
@@ -141,6 +161,21 @@ impl<'a> SchedContext<'a> {
                 .unwrap_or(1.0)
                 .max(1.0);
             score += best * size.ln_1p();
+            // Inputs without a replica at exactly this label would have
+            // to be staged in — they consume local headroom.
+            if headroom.is_some() && !locs.contains(label) {
+                need = need.saturating_add(
+                    self.state.dus.get(du).map(|d| d.size().as_u64()).unwrap_or(0),
+                );
+            }
+        }
+        // Capacity gate: a site whose quota cannot absorb the pending
+        // stage-ins must not attract the placement (its staging would
+        // be rejected at dispatch).
+        if let Some(free) = headroom {
+            if need > free {
+                return 0.0;
+            }
         }
         score
     }
@@ -358,7 +393,7 @@ mod tests {
         locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
         let topo = Topology::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let cu = mk_cu(vec![du], None);
         let sched = AffinityScheduler::new(None);
         assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(p_near.clone()));
@@ -372,7 +407,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let sched = AffinityScheduler::new(None);
         assert_eq!(sched.place(&mk_cu(vec![], None), &ctx), Placement::Global);
     }
@@ -385,7 +420,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let sched = AffinityScheduler::new(None);
         let cu = mk_cu(vec![], Some("xsede"));
         assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(p_x));
@@ -400,7 +435,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let mut cu = mk_cu(vec![], None);
         cu.description.cores = 16;
         assert!(matches!(
@@ -443,6 +478,62 @@ mod tests {
         assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(near));
     }
 
+    /// ISSUE 6 satellite: with a capacity map attached, a nearly-full
+    /// site stops attracting placements whose stage-ins cannot fit —
+    /// the next-best replica site wins instead. Without the map the
+    /// decision is the capacity-blind one.
+    #[test]
+    fn capacity_gate_redirects_placement_away_from_full_sites() {
+        let mut st = ManagerState::new();
+        let p_full = mk_pilot(&mut st, 8, "xsede/tacc/stampede", PilotState::Active);
+        let p_roomy = mk_pilot(&mut st, 8, "xsede/tacc/lonestar", PilotState::Active);
+        let du = mk_du(&mut st, Bytes::gb(8));
+        let mut locs = BTreeMap::new();
+        // Stampede holds the only replica, so it wins the score
+        // outright when capacity is ignored.
+        locs.insert(du.clone(), vec![Label::new("xsede/tacc/stampede")]);
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let sched = AffinityScheduler::new(None);
+        let cu = mk_cu(vec![du.clone()], None);
+        let blind = SchedContext {
+            topo: &topo,
+            state: &st,
+            du_locations: &locs,
+            queue_depth: &depth,
+            capacity: None,
+        };
+        assert_eq!(sched.place(&cu, &blind), Placement::Pilot(p_full.clone()));
+        // Stampede's scratch has 1 GiB of headroom left; lonestar is
+        // quota'd but roomy. Stampede holds the replica (no stage-in
+        // needed) so it still wins: the gate only fires on *missing*
+        // local replicas.
+        let mut cap = BTreeMap::new();
+        cap.insert(Label::new("xsede/tacc/stampede"), Bytes::gb(1).as_u64());
+        cap.insert(Label::new("xsede/tacc/lonestar"), Bytes::gb(100).as_u64());
+        let gated = SchedContext {
+            topo: &topo,
+            state: &st,
+            du_locations: &locs,
+            queue_depth: &depth,
+            capacity: Some(&cap),
+        };
+        assert_eq!(sched.place(&cu, &gated), Placement::Pilot(p_full.clone()));
+        // Now the replica lives only on lonestar: stampede would have
+        // to stage 8 GiB into 1 GiB of headroom — its score gates to
+        // zero and lonestar (local replica, plenty of room) wins.
+        locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
+        let gated = SchedContext {
+            topo: &topo,
+            state: &st,
+            du_locations: &locs,
+            queue_depth: &depth,
+            capacity: Some(&cap),
+        };
+        assert_eq!(sched.place(&cu, &gated), Placement::Pilot(p_roomy));
+        let _ = p_full;
+    }
+
     #[test]
     fn delayed_scheduling_waits_then_gives_up() {
         let mut st = ManagerState::new();
@@ -454,7 +545,7 @@ mod tests {
         locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
         let topo = Topology::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let sched = AffinityScheduler::new(Some(30.0));
         let cu = mk_cu(vec![du], None);
         // max_delay_rounds delays, then fall back to global.
@@ -472,7 +563,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let cu = mk_cu(vec![], None);
         assert_eq!(DataUnawareScheduler.place(&cu, &ctx), Placement::Pilot(a));
     }
@@ -485,7 +576,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let sched = RoundRobinScheduler::default();
         let cu = mk_cu(vec![], None);
         let p1 = sched.place(&cu, &ctx);
@@ -505,7 +596,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
         let cu = mk_cu(vec![], None);
         let seq = |seed| {
             let s = RandomScheduler::new(seed);
@@ -627,6 +718,7 @@ mod tests {
                         state: &st,
                         du_locations: &expected_locs,
                         queue_depth: &expected_depth,
+                        capacity: None,
                     };
                     let a = sched_indexed.place(&cu, &ctx_indexed);
                     let b = sched_rebuilt.place(&cu, &ctx_rebuilt);
@@ -683,6 +775,7 @@ mod tests {
                     state: &st,
                     du_locations: &locs,
                     queue_depth: &depth,
+                    capacity: None,
                 };
                 for (site, cores) in constraints {
                     let mut cu = mk_cu(vec![], Some(site.as_str()));
@@ -754,7 +847,7 @@ mod tests {
                 let topo = Topology::new();
                 let locs = BTreeMap::new();
                 let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
                 let sched = AffinityScheduler::new(None);
                 for (cores, aff) in cus {
                     let mut cu = mk_cu(vec![], aff.as_deref());

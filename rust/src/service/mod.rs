@@ -38,8 +38,9 @@
 //! `busy + need ≤ cores`) keeps `busy ≤ cores` even when workers are
 //! fewer than slots or CUs span multiple cores.
 
+use crate::coordination::events::Event;
 use crate::coordination::{keys, Store};
-use crate::datamgmt::{self, ModeKind};
+use crate::datamgmt::{self, LossCause, ModeKind};
 use crate::pilot::{
     ManagerState, PilotCompute, PilotComputeDescription, PilotData, PilotDataDescription,
     PilotState,
@@ -51,7 +52,8 @@ use crate::topology::{Label, Topology};
 use crate::unit::{ComputeUnit, ComputeUnitDescription, CuState, DataUnit, DataUnitDescription, DuState};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -65,6 +67,16 @@ const AGENT_WAKE: &str = "__agent_wake__";
 /// 1:1 threads; the slot semaphore in `run_cu` keeps `busy ≤ cores`
 /// regardless of how many workers drive the slots.
 pub const DEFAULT_WORKER_CAP: u32 = 32;
+
+/// Default agent-liveness lease TTL in milliseconds (override with
+/// [`PilotSystem::set_heartbeat_ttl_ms`]). An agent pool refreshes its
+/// pilot's heartbeat key (`pd:pilot:hb:<id>`) at every queue
+/// interaction; a lease older than the TTL marks the agent dead at
+/// dispatch time, so no new work is routed onto a queue nothing pops.
+/// Generous by default: an *idle* pool parks in the blocking pop
+/// without refreshing, so the TTL must exceed the longest expected
+/// idle gap between submissions.
+pub const DEFAULT_HB_TTL_MS: u64 = 30_000;
 
 /// Result of executing one Compute-Unit.
 #[derive(Debug, Clone, Default)]
@@ -143,14 +155,24 @@ pub struct PilotSystem {
     /// per distinct label in the affinity subtree; `AutoReplicate`
     /// tops every DU up to N replicas on affinity-ranked PDs.
     data_mode: Mutex<ModeKind>,
+    /// Agent-liveness lease TTL (ms) — see [`DEFAULT_HB_TTL_MS`].
+    hb_ttl_ms: AtomicU64,
+    /// Subscription on the data-plane loss channel
+    /// (`keys::DATA_LOST_PREFIX`) — the same wire protocol the sim
+    /// driver speaks: replica losses are published with their cause,
+    /// and [`ComputeDataService::drain_data_losses`] turns each into
+    /// the active execution mode's repair.
+    data_events: Mutex<Receiver<Event>>,
 }
 
 impl PilotSystem {
     /// Create a system with the default affinity scheduler and a given
     /// executor. `workdir` hosts CU sandboxes.
     pub fn new(workdir: impl Into<PathBuf>, executor: Arc<dyn Executor>) -> Arc<PilotSystem> {
+        let store = Store::new();
+        let data_events = store.subscribe_prefix(keys::DATA_LOST_PREFIX);
         Arc::new(PilotSystem {
-            store: Store::new(),
+            store,
             topo: Topology::new(),
             state: Mutex::new(ManagerState::new()),
             progress: Condvar::new(),
@@ -171,6 +193,8 @@ impl PilotSystem {
             pool_sizes: Mutex::new(BTreeMap::new()),
             slot_cvs: Mutex::new(BTreeMap::new()),
             data_mode: Mutex::new(ModeKind::OnDemand),
+            hb_ttl_ms: AtomicU64::new(DEFAULT_HB_TTL_MS),
+            data_events: Mutex::new(data_events),
         })
     }
 
@@ -211,6 +235,100 @@ impl PilotSystem {
     /// Live agent worker threads across all pilots (tests/diagnostics).
     pub fn agent_count(&self) -> usize {
         self.agents.lock().unwrap().len()
+    }
+
+    /// Agent-liveness lease TTL in milliseconds (see
+    /// [`DEFAULT_HB_TTL_MS`]).
+    pub fn heartbeat_ttl_ms(&self) -> u64 {
+        self.hb_ttl_ms.load(Ordering::Relaxed)
+    }
+
+    /// Override the lease TTL. Size it above the longest expected idle
+    /// gap between submissions: an idle pool parks in the blocking pop
+    /// and does not refresh until the next queue interaction.
+    pub fn set_heartbeat_ttl_ms(&self, ms: u64) {
+        self.hb_ttl_ms.store(ms.max(1), Ordering::Relaxed);
+    }
+
+    /// Refresh a pilot's liveness lease (best effort — a mid-outage
+    /// write is retried at the next queue interaction, and the lease
+    /// check treats an unreachable store as inconclusive).
+    fn touch_heartbeat(&self, pilot_id: &str) {
+        let _ = self.store.set(&keys::pilot_hb(pilot_id), &format!("{:.3}", Self::now_s()));
+    }
+
+    /// Is the pilot's lease fresh? A missing key is stale (the agent
+    /// never heartbeat, or was already reaped); an unparseable value is
+    /// stale (a corrupt lease proves nothing about liveness); a store
+    /// outage is *fresh* — an unreachable store says nothing about the
+    /// agent, and BigJob agents ride out transient store failures, so
+    /// reaping on outage would kill healthy pilots wholesale.
+    fn lease_fresh(&self, pilot_id: &str) -> bool {
+        match self.store.get(&keys::pilot_hb(pilot_id)) {
+            Ok(Some(v)) => v
+                .parse::<f64>()
+                .map(|hb| (Self::now_s() - hb) * 1000.0 <= self.heartbeat_ttl_ms() as f64)
+                .unwrap_or(false),
+            Ok(None) => false,
+            Err(_) => true,
+        }
+    }
+
+    /// Declare one agent dead: mark the pilot `Failed`, zero its slot
+    /// accounting, and reclaim every CU parked on its own queue back
+    /// onto the global queue where surviving agents pull. The
+    /// wall-clock twin of the sim driver's pilot teardown — queued work
+    /// is never stranded while a live pilot remains. (Work the dead
+    /// process held *mid-CU* cannot be reclaimed here: its sandbox and
+    /// slot state died with it; the CU surfaces through `wait_all`
+    /// timeouts and the caller's retry, as in BigJob.)
+    fn reap_pilot(&self, pilot_id: &str) {
+        {
+            let mut st = self.state.lock().unwrap();
+            let Some(p) = st.pilots.get_mut(pilot_id) else { return };
+            if p.state.is_terminal() {
+                return;
+            }
+            let _ = p.transition(PilotState::Failed);
+            p.busy_slots = 0;
+            st.reset_queue_depth(pilot_id);
+        }
+        let _ = self.store.hset(&keys::pilot(pilot_id), "busy", "0");
+        let _ = self.store.del(&keys::pilot_hb(pilot_id));
+        // Drain the dead agent's own queue — nothing will ever pop it.
+        let own = keys::pilot_queue(pilot_id);
+        while let Ok(Some(cu)) = self.store.lpop(&own) {
+            if cu == AGENT_WAKE {
+                continue;
+            }
+            let _ = self.store.rpush(keys::GLOBAL_QUEUE, &cu);
+        }
+        self.slot_cv(pilot_id).notify_all();
+        self.progress.notify_all();
+    }
+
+    /// Sweep every non-terminal pilot's lease and reap the dead ones;
+    /// returns the reaped ids. `submit_compute_unit` performs the same
+    /// check inline for the pilot it is about to dispatch to (so a
+    /// stale agent cannot capture *new* work); this sweep additionally
+    /// reclaims CUs already sitting on dead agents' queues.
+    pub fn reap_dead_agents(&self) -> Vec<String> {
+        let ids: Vec<String> = {
+            let st = self.state.lock().unwrap();
+            st.pilots
+                .values()
+                .filter(|p| !p.state.is_terminal())
+                .map(|p| p.id.clone())
+                .collect()
+        };
+        let mut reaped = Vec::new();
+        for id in ids {
+            if !self.lease_fresh(&id) {
+                self.reap_pilot(&id);
+                reaped.push(id);
+            }
+        }
+        reaped
     }
 
     pub fn compute_service(self: &Arc<Self>) -> PilotComputeService {
@@ -526,6 +644,13 @@ impl PilotSystem {
         let global = keys::global_queue_key();
         let slot_cv = self.slot_cv(&pilot_id);
         while !self.shutdown.load(Ordering::SeqCst) {
+            // Refresh the liveness lease at every queue interaction: a
+            // live pool keeps the lease fresh as long as work flows,
+            // and only a dead process lets it lapse. (No heartbeat
+            // thread, no fixed-interval timer — the lease rides the
+            // event-driven loop, which is why the TTL must cover idle
+            // gaps; see `DEFAULT_HB_TTL_MS`.)
+            self.touch_heartbeat(&pilot_id);
             // Don't compete for work while the pilot has no free slot:
             // a saturated pilot's spare workers must not capture global
             // CUs that an idle pilot could run (head-of-line blocking).
@@ -610,6 +735,9 @@ impl PilotComputeService {
         pilot.t_active = PilotSystem::now_s();
         let id = pilot.id.clone();
         self.sys.state.lock().unwrap().add_pilot(pilot);
+        // Initial liveness lease, so the dispatch-time check never
+        // mistakes a freshly created pilot for a dead one.
+        self.sys.touch_heartbeat(&id);
         self.sys.pool_sizes.lock().unwrap().insert(id.clone(), workers);
         for w in 0..workers {
             let sys = self.sys.clone();
@@ -886,6 +1014,61 @@ impl ComputeDataService {
         Ok(())
     }
 
+    /// Report that a replica of `du_id` at `pd_id` is gone (disk
+    /// failure, eviction, operator action): drop it from the location
+    /// index — keeping the scheduler's replica-label view honest, the
+    /// label is removed only when no other PD at that label still
+    /// holds the DU — and publish the loss *with its cause* on the
+    /// store's `pd:data:lost:` channel, the same wire protocol the sim
+    /// driver speaks. [`Self::drain_data_losses`] (or any other
+    /// subscriber) turns the event into the active mode's repair.
+    pub fn report_replica_lost(&self, du_id: &str, pd_id: &str, cause: LossCause) {
+        let removed_label = {
+            let mut locations = self.sys.locations.lock().unwrap();
+            let Some(locs) = locations.get_mut(du_id) else { return };
+            let Some(pos) = locs.iter().position(|(pd, _)| pd == pd_id) else { return };
+            let (_, label) = locs.remove(pos);
+            let still_at_label = locs.iter().any(|(_, l)| l.0 == label.0);
+            (!still_at_label).then_some(label)
+        };
+        if let Some(label) = removed_label {
+            self.sys.state.lock().unwrap().drop_replica(du_id, &label);
+        }
+        let _ = self.sys.store.publish(
+            &format!("{}{du_id}", keys::DATA_LOST_PREFIX),
+            &format!("{pd_id} {}", cause.wire_name()),
+        );
+    }
+
+    /// Consume loss events published since the last drain and apply
+    /// the active execution mode's repair to each affected DU — the
+    /// local twin of the sim driver's data-event drain. `Outage`
+    /// losses re-run the mode's proactive placement (`AutoReplicate`
+    /// tops the DU back up to N, `PreStage` re-covers its affinity
+    /// subtree); `Evicted` losses are deliberate capacity decisions
+    /// and are not repaired (re-placing one would thrash the PD that
+    /// just shed it). Returns the number of loss events consumed.
+    pub fn drain_data_losses(&self) -> usize {
+        let mut lost: Vec<(String, LossCause)> = Vec::new();
+        {
+            let rx = self.sys.data_events.lock().unwrap();
+            while let Ok(ev) = rx.try_recv() {
+                let Some(du) = ev.key.strip_prefix(keys::DATA_LOST_PREFIX) else { continue };
+                let Some((_pd, cause)) = ev.payload.rsplit_once(' ') else { continue };
+                let Some(cause) = LossCause::from_wire(cause) else { continue };
+                lost.push((du.to_string(), cause));
+            }
+        }
+        let n = lost.len();
+        for (du, cause) in lost {
+            match cause {
+                LossCause::Outage => self.apply_execution_mode(&du),
+                LossCause::Evicted => {}
+            }
+        }
+        n
+    }
+
     /// Read one file out of a DU (first replica).
     pub fn fetch(&self, du_id: &str, name: &str) -> anyhow::Result<Vec<u8>> {
         let locations = self.sys.locations.lock().unwrap();
@@ -945,6 +1128,17 @@ impl ComputeDataService {
         };
         match placement {
             Placement::Pilot(pilot_id) => {
+                // Lease-based liveness check at dispatch: routing a CU
+                // onto the queue of an agent whose heartbeat lapsed
+                // would strand it (nothing pops a dead agent's queue).
+                // Reap the dead pilot — reclaiming anything already
+                // parked on its queue — and fall back to the global
+                // queue, where surviving agents pull.
+                if !self.sys.lease_fresh(&pilot_id) {
+                    self.sys.reap_pilot(&pilot_id);
+                    enqueue(keys::GLOBAL_QUEUE, cu)?;
+                    return Ok(id);
+                }
                 // Pre-account the push: the agent thread may pop (and
                 // decrement) the instant the rpush lands, so counting
                 // after the fact could leak the counter upward.
@@ -1037,6 +1231,119 @@ mod tests {
         assert_eq!(sys.cu_state(&cu), Some(CuState::Done), "err={:?}", sys.cu_error(&cu));
         let out = cds.fetch(&output, "out.txt").unwrap();
         assert_eq!(out, b"HELLO PILOT-DATA");
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Lease-based liveness: a pilot whose agent process died (stale
+    /// heartbeat, no worker threads) is reaped at dispatch time — the
+    /// new CU falls back to the global queue and CUs already parked on
+    /// the dead agent's own queue are reclaimed with it, so a healthy
+    /// pilot finishes the whole workload.
+    #[test]
+    fn stale_heartbeat_pilot_is_reaped_and_its_cus_reclaimed() {
+        let dir = tmpdir("reap");
+        let sys = PilotSystem::new(dir.join("work"), Arc::new(UppercaseExecutor));
+        sys.set_heartbeat_ttl_ms(50);
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+        let pd = pds.create_pilot_data(local_pd(&dir, "pd1", "site/a")).unwrap();
+        let du = cds.put_data_unit("in", &[("in.txt", b"abc")], &pd).unwrap();
+
+        // A pilot whose agent process died: the record looks Active,
+        // but no worker threads back it and its lease is ancient.
+        // (Registered directly — `create_pilot` would spawn a live
+        // pool, which is exactly what a dead agent does not have.)
+        let zombie = {
+            let mut p = PilotCompute::new(one_core_pilot("site/a"));
+            p.transition(PilotState::Queued).unwrap();
+            p.transition(PilotState::Active).unwrap();
+            let id = p.id.clone();
+            sys.state.lock().unwrap().add_pilot(p);
+            sys.store.set(&keys::pilot_hb(&id), "0").unwrap();
+            id
+        };
+
+        // A CU already parked on the dead agent's own queue.
+        let orphan = {
+            let mut cu = ComputeUnit::new(ComputeUnitDescription {
+                executable: "builtin:uppercase".into(),
+                cores: 1,
+                input_data: vec![du.clone()],
+                ..Default::default()
+            });
+            cu.transition(CuState::Queued).unwrap();
+            let id = cu.id.clone();
+            let mut st = sys.state.lock().unwrap();
+            st.add_cu(cu);
+            st.note_queue_push(&zombie);
+            drop(st);
+            sys.store.rpush(&keys::pilot_queue(&zombie), &id).unwrap();
+            id
+        };
+
+        // The scheduler picks the zombie (only pilot, data on site),
+        // but the stale lease reaps it and reroutes to the global
+        // queue — reclaiming the orphan too.
+        let cu2 = cds
+            .submit_compute_unit(ComputeUnitDescription {
+                executable: "builtin:uppercase".into(),
+                cores: 1,
+                input_data: vec![du.clone()],
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(
+            sys.state.lock().unwrap().pilots[&zombie].state,
+            PilotState::Failed,
+            "stale lease marks the pilot dead"
+        );
+        assert_eq!(sys.store.llen(&keys::pilot_queue(&zombie)).unwrap(), 0);
+        assert_eq!(sys.store.llen(keys::GLOBAL_QUEUE).unwrap(), 2);
+        assert!(
+            sys.store.get(&keys::pilot_hb(&zombie)).unwrap().is_none(),
+            "reap clears the lease key"
+        );
+
+        // A healthy pilot drains both reclaimed CUs off the global
+        // queue.
+        sys.compute_service().create_pilot(one_core_pilot("site/a")).unwrap();
+        sys.wait_all(Duration::from_secs(10)).unwrap();
+        assert_eq!(sys.cu_state(&orphan), Some(CuState::Done), "err={:?}", sys.cu_error(&orphan));
+        assert_eq!(sys.cu_state(&cu2), Some(CuState::Done), "err={:?}", sys.cu_error(&cu2));
+        sys.shutdown();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The `pd:data:lost:` loss channel, ported from the sim driver:
+    /// an `Outage` loss is published with its cause and repaired by
+    /// the active mode at the next drain; an `Evicted` loss is a
+    /// deliberate capacity decision and stays lost.
+    #[test]
+    fn lost_replica_outage_is_repaired_via_loss_channel() {
+        let dir = tmpdir("loss");
+        let sys = PilotSystem::new(dir.join("work"), Arc::new(UppercaseExecutor));
+        sys.set_execution_mode(ModeKind::AutoReplicate { replicas: 2 });
+        let pds = sys.data_service();
+        let cds = sys.compute_data_service();
+        let a = pds.create_pilot_data(local_pd(&dir, "pd-a", "site/a")).unwrap();
+        let b = pds.create_pilot_data(local_pd(&dir, "pd-b", "site/b")).unwrap();
+        let du = cds.put_data_unit("blob", &[("x.txt", b"payload")], &a).unwrap();
+        let n_replicas =
+            |du: &str| sys.locations.lock().unwrap().get(du).map_or(0, |v| v.len());
+        assert_eq!(n_replicas(&du), 2, "auto-replicate placed a second copy on {b}");
+
+        // Outage loss: published on the channel, repaired at the drain.
+        cds.report_replica_lost(&du, &b, LossCause::Outage);
+        assert_eq!(n_replicas(&du), 1, "loss drops the location entry");
+        assert_eq!(cds.drain_data_losses(), 1);
+        assert_eq!(n_replicas(&du), 2, "outage loss re-replicated to target");
+        assert_eq!(cds.fetch(&du, "x.txt").unwrap(), b"payload");
+
+        // Evicted loss: not repaired.
+        cds.report_replica_lost(&du, &b, LossCause::Evicted);
+        assert_eq!(cds.drain_data_losses(), 1);
+        assert_eq!(n_replicas(&du), 1, "eviction is not repaired");
         sys.shutdown();
         let _ = std::fs::remove_dir_all(dir);
     }

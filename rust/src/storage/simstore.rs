@@ -232,6 +232,20 @@ impl SimStore {
         Ok(())
     }
 
+    /// Override the per-attempt transfer failure rate of `pd`'s
+    /// protocol (clamped to `[0, 1]`). Fault experiments scale rates up
+    /// and bit-identity properties zero them; the default comes from
+    /// the endpoint's protocol ([`crate::storage::ProtocolParams`]).
+    pub fn set_failure_rate(&mut self, pd: &str, rate: f64) -> anyhow::Result<()> {
+        self.pds
+            .get_mut(pd)
+            .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{pd}'"))?
+            .endpoint
+            .params
+            .failure_rate = rate.clamp(0.0, 1.0);
+        Ok(())
+    }
+
     /// Bytes occupied by resident replicas on `pd`.
     pub fn used(&self, pd: &str) -> Bytes {
         Bytes(self.used.get(pd).copied().unwrap_or(0))
