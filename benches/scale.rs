@@ -1,0 +1,52 @@
+//! Scale bench: sweeps the DES to production fleet sizes (10²→10⁴
+//! pilots, 10⁴→10⁶ CUs+DUs via `experiments::scale`) and emits
+//! `BENCH_scale.json` with per-tier events/sec, peak RSS, makespan,
+//! event counts, and wall time — the machine-readable trajectory for
+//! the calendar-queue event wheel.
+//!
+//! Set `PD_BENCH_SCALE_OUT` to change the output path and
+//! `PD_BENCH_QUICK=1` for the reduced CI tiers. Peak RSS is the
+//! process high-water mark, so tiers run smallest-first and the
+//! per-tier figure is the cumulative peak after that tier.
+//!
+//! Run with: `cargo bench --bench scale`
+
+use pilot_data::experiments::scale::{run_scale, FULL_SWEEP, QUICK_SWEEP};
+
+fn main() {
+    let quick = std::env::var("PD_BENCH_QUICK").is_ok();
+    let sweep = if quick { QUICK_SWEEP } else { FULL_SWEEP };
+    println!("# Scale sweep ({} tiers, seed 42)", sweep.len());
+    println!(
+        "{:<10}{:>12}{:>10}{:>14}{:>14}{:>14}{:>14}{:>12}",
+        "pilots", "CUs", "DUs", "events", "events/s", "makespan(s)", "peakRSS(MB)", "wall(s)"
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for pilots in sweep {
+        let r = run_scale(pilots, 42).expect("scale run failed");
+        let rss_mb = r.peak_rss_bytes as f64 / 1.0e6;
+        println!(
+            "{:<10}{:>12}{:>10}{:>14}{:>14.0}{:>14.0}{:>14.1}{:>12.3}",
+            r.pilots, r.cus, r.dus, r.events, r.events_per_sec, r.makespan_s, rss_mb, r.wall_s
+        );
+        let tag = format!("pilots_{pilots}");
+        results.push((format!("{tag} cus"), r.cus as f64));
+        results.push((format!("{tag} dus"), r.dus as f64));
+        results.push((format!("{tag} events"), r.events as f64));
+        results.push((format!("{tag} events_per_sec"), r.events_per_sec));
+        results.push((format!("{tag} makespan_s"), r.makespan_s));
+        results.push((format!("{tag} peak_rss_mb"), rss_mb));
+        results.push((format!("{tag} wall_s"), r.wall_s));
+    }
+
+    let out = std::env::var("PD_BENCH_SCALE_OUT").unwrap_or_else(|_| "BENCH_scale.json".into());
+    let mut obj = pilot_data::json::Json::obj();
+    for (name, v) in &results {
+        obj = obj.set(name.as_str(), *v);
+    }
+    match std::fs::write(&out, obj.to_string_pretty()) {
+        Ok(()) => println!("\n[json] {out}"),
+        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
+    }
+}

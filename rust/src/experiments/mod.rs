@@ -18,7 +18,10 @@
 //!
 //! Beyond the paper's own tables, `resilience` sweeps the 2-site
 //! workload across chaos intensities (pilot kills, PD down→up cycles,
-//! lossy links) and reports the fault-lifecycle cost.
+//! lossy links) and reports the fault-lifecycle cost, and `scale`
+//! extends fig11's flat-overhead argument to production fleet sizes
+//! (up to 10⁴ pilots / 10⁶ CUs+DUs), reporting DES events/sec, peak
+//! RSS, and makespan per tier.
 
 pub mod simdrive;
 pub mod fig7;
@@ -27,6 +30,7 @@ pub mod fig9;
 pub mod fig11;
 pub mod modes;
 pub mod resilience;
+pub mod scale;
 pub mod table1;
 
 use crate::metrics::Table;
@@ -45,14 +49,26 @@ pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
         "fig13" => fig11::run_fig13(seed),
         "modes" => modes::run(seed),
         "resilience" => resilience::run(seed),
+        "scale" => scale::run(seed),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, resilience)"
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, resilience, scale)"
         ),
     }
 }
 
-pub const ALL: [&str; 10] =
-    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "modes", "resilience"];
+pub const ALL: [&str; 11] = [
+    "table1",
+    "fig7",
+    "fig8",
+    "fig9",
+    "fig10",
+    "fig11",
+    "fig12",
+    "fig13",
+    "modes",
+    "resilience",
+    "scale",
+];
 
 /// Print tables and persist CSVs under `results/`.
 pub fn report(id: &str, tables: &[Table], results_dir: &Path) -> anyhow::Result<()> {

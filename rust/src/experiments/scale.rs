@@ -1,0 +1,275 @@
+//! Production-scale sweep: 10⁴ pilots / 10⁶ CUs+DUs through the DES.
+//!
+//! The paper's Fig. 11 argument is that a pilot-based data/compute
+//! plane keeps scheduling overhead flat as task counts grow; the fig11
+//! module reproduces it at the paper's 1024-task size. This sweep
+//! extends the same driver to the fleet sizes the pilot-job literature
+//! frames as "production scale" — up to 10⁴ pilots running 10⁶
+//! one-core CUs over 10⁵ co-located DUs — and records what the engine
+//! itself does under that load: DES **events/sec**, **peak RSS**, and
+//! workload **makespan** per tier.
+//!
+//! The workload is deliberately synthetic and placement-heavy rather
+//! than transfer-heavy: every CU carries a site affinity and its input
+//! chunk is pre-placed on that site's scratch PD, so the run exercises
+//! the scheduler index path, the queue/wakeup protocol, and the event
+//! wheel — not the WAN model. `benches/scale.rs` wraps this module and
+//! emits `BENCH_scale.json` (three tiers; `PD_BENCH_QUICK=1` runs a
+//! reduced sweep for CI).
+
+use crate::batch::{BatchState, Machine, QueueModel};
+use crate::config::Testbed;
+use crate::experiments::simdrive::SimSystem;
+use crate::metrics::Table;
+use crate::net::{Bandwidth, Network};
+use crate::storage::{simstore::SimStore, Endpoint};
+use crate::topology::{Label, Topology};
+use crate::unit::{ComputeUnitDescription, DataUnitDescription, FileRef};
+use crate::util::Bytes;
+
+/// Pilots per synthetic site (one machine + one scratch PD each).
+pub const PILOTS_PER_SITE: usize = 10;
+/// Cores per pilot == 1-core CUs it can run concurrently.
+pub const PILOT_CORES: u32 = 100;
+/// CUs submitted per pilot (so 10⁴ pilots ⇒ 10⁶ CUs).
+pub const CUS_PER_PILOT: usize = 100;
+/// CUs sharing one input chunk DU.
+pub const CUS_PER_DU: usize = 10;
+
+/// The full sweep: 10², 10³, 10⁴ pilots (10⁴..10⁶ CUs).
+pub const FULL_SWEEP: [usize; 3] = [100, 1_000, 10_000];
+/// Reduced tiers for CI smoke and `exp scale` (still ≥ 3 fleet sizes).
+pub const QUICK_SWEEP: [usize; 3] = [20, 50, 100];
+
+fn site_machine(site: usize) -> String {
+    format!("site-{site:04}")
+}
+
+fn site_label(site: usize) -> String {
+    format!("grid/site-{site:04}")
+}
+
+fn site_scratch(site: usize) -> String {
+    format!("scratch-{site:04}")
+}
+
+/// A synthetic homogeneous grid: `sites` machines under one `grid`
+/// trunk, each with `PILOTS_PER_SITE × PILOT_CORES` cores, a fast
+/// batch queue, and one quota-less scratch PD. Modeled on
+/// [`crate::config::paper_testbed`] but uniform, so sweep timings
+/// measure the engine rather than testbed asymmetry.
+pub fn scale_testbed(sites: usize) -> Testbed {
+    let topo = Topology::new();
+    let mut net = Network::new();
+    net.set_default_uplink(Bandwidth::mbps(100.0));
+    net.set_uplink("grid", Bandwidth::mbps(10_000.0));
+
+    let machines: Vec<Machine> = (0..sites)
+        .map(|s| {
+            Machine::new(&site_machine(s), &site_label(s), PILOTS_PER_SITE as u32 * PILOT_CORES)
+                .with_queue(QueueModel::with_mean(10.0, 60.0, 0.3))
+                .with_fs_bandwidth(Bandwidth::mbps(2_000.0))
+        })
+        .collect();
+    let batch = BatchState::new(machines);
+
+    let mut store = SimStore::new();
+    for s in 0..sites {
+        store.add_pd(
+            &site_scratch(s),
+            Endpoint::new(&format!("ssh://{}/scratch/pd", site_scratch(s)), &site_label(s))
+                .unwrap(),
+        );
+    }
+
+    // Uploads (unused here — data is pre-placed) route via site 0.
+    let gateway = Label::new(&site_label(0));
+    Testbed { topo, net, batch, store, gateway }
+}
+
+/// One tier of the sweep.
+#[derive(Debug, Clone)]
+pub struct ScaleRunResult {
+    pub pilots: usize,
+    pub cus: usize,
+    pub dus: usize,
+    /// DES events processed end to end.
+    pub events: u64,
+    /// Wall-clock seconds for the whole tier (build + run).
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    /// Simulated makespan of the workload.
+    pub makespan_s: f64,
+    /// Process peak RSS after the tier (`VmHWM`; 0 where unavailable).
+    /// Monotone across tiers run in one process — per-tier deltas need
+    /// one process per tier, which is how `benches/scale.rs` reports.
+    pub peak_rss_bytes: u64,
+}
+
+/// Process peak resident set (bytes) from `/proc/self/status` VmHWM.
+/// Returns 0 on platforms without procfs.
+pub fn peak_rss_bytes() -> u64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                if let Ok(kb) = rest.trim().trim_end_matches("kB").trim().parse::<u64>() {
+                    return kb * 1024;
+                }
+            }
+        }
+    }
+    0
+}
+
+/// Run one fleet tier: `pilots` pilots (10 per site, 100 cores each),
+/// `100 × pilots` one-core CUs with site affinity, inputs pre-placed
+/// co-located. Uses the bulk [`SimSystem::submit_cus`] path — the
+/// per-CU wakeup drain is the O(fleet²) term this sweep exists to keep
+/// out of the driver.
+pub fn run_scale(pilots: usize, seed: u64) -> anyhow::Result<ScaleRunResult> {
+    anyhow::ensure!(pilots > 0, "need at least one pilot");
+    let started = std::time::Instant::now();
+    let sites = pilots.div_ceil(PILOTS_PER_SITE);
+    let cus = pilots * CUS_PER_PILOT;
+
+    let mut sys = SimSystem::new(scale_testbed(sites), seed);
+    sys.zero_transfer_faults();
+    sys.event_budget = (cus as u64 * 24 + pilots as u64 * 12).max(4_000_000);
+
+    // Pilots first; run() lands every activation before data/compute.
+    let mut remaining = pilots;
+    for s in 0..sites {
+        let here = remaining.min(PILOTS_PER_SITE);
+        remaining -= here;
+        for _ in 0..here {
+            sys.submit_pilot(&site_machine(s), PILOT_CORES, &site_scratch(s))?;
+        }
+    }
+    sys.run()?;
+
+    // Input chunks: one DU per CUS_PER_DU CUs, resident on the site's
+    // scratch (placement-heavy, transfer-free — see the module docs).
+    let cus_per_site = CUS_PER_DU * ((cus / sites).max(1) / CUS_PER_DU).max(1);
+    let mut site_dus: Vec<Vec<String>> = Vec::with_capacity(sites);
+    let mut dus = 0usize;
+    for s in 0..sites {
+        let n = (cus_per_site / CUS_PER_DU).max(1);
+        let mut ids = Vec::with_capacity(n);
+        for d in 0..n {
+            let descr = DataUnitDescription {
+                name: format!("chunk-{s:04}-{d:04}"),
+                files: vec![FileRef::sized("reads.fq", Bytes::mb(64))],
+                affinity: Some(Label::new(&site_label(s))),
+            };
+            ids.push(sys.place_du_instant(&descr, &site_scratch(s))?);
+            dus += 1;
+        }
+        site_dus.push(ids);
+    }
+
+    // CUs: site-affine, one shared input chunk each, submitted in bulk.
+    let mut descrs = Vec::with_capacity(cus);
+    for s in 0..sites {
+        let here = &site_dus[s];
+        let label = Label::new(&site_label(s));
+        let n = if s == sites - 1 { cus - cus_per_site * (sites - 1) } else { cus_per_site };
+        for k in 0..n {
+            descrs.push(ComputeUnitDescription {
+                executable: "/bin/synthetic-task".into(),
+                arguments: vec![format!("--task={s}:{k}")],
+                cores: 1,
+                input_data: vec![here[k / CUS_PER_DU % here.len()].clone()],
+                output_data: vec![],
+                affinity: Some(label.clone()),
+                cpu_secs_hint: 600.0,
+                io_bytes_hint: Bytes::mb(64),
+            });
+        }
+    }
+    let ids = sys.submit_cus(descrs)?;
+    anyhow::ensure!(ids.len() == cus, "submitted {} of {cus} CUs", ids.len());
+    sys.run()?;
+    anyhow::ensure!(sys.state.workload_finished(), "scale workload did not finish");
+
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+    let events = sys.sim.processed();
+    Ok(ScaleRunResult {
+        pilots,
+        cus,
+        dus,
+        events,
+        wall_s,
+        events_per_sec: events as f64 / wall_s,
+        makespan_s: sys.makespan(),
+        peak_rss_bytes: peak_rss_bytes(),
+    })
+}
+
+/// `exp scale`: the reduced sweep as a table (the full 10⁴-pilot sweep
+/// runs via `cargo bench --bench scale`).
+pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Scale sweep: DES throughput vs fleet size (reduced tiers; full sweep in benches/scale.rs)",
+        &["pilots", "CUs", "DUs", "events", "events/s", "makespan (s)", "peak RSS (MB)"],
+    );
+    for pilots in QUICK_SWEEP {
+        let r = run_scale(pilots, seed)?;
+        t.row(vec![
+            r.pilots.to_string(),
+            r.cus.to_string(),
+            r.dus.to_string(),
+            r.events.to_string(),
+            format!("{:.0}", r.events_per_sec),
+            format!("{:.0}", r.makespan_s),
+            format!("{:.1}", r.peak_rss_bytes as f64 / 1.0e6),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_tier_completes_with_bounded_event_rate() {
+        let r = run_scale(20, 42).unwrap();
+        assert_eq!(r.pilots, 20);
+        assert_eq!(r.cus, 2_000);
+        assert_eq!(r.dus, 200);
+        assert!(r.events >= r.cus as u64, "events {} < cus", r.events);
+        // Flatness surrogate a unit test can assert: the per-CU event
+        // count stays bounded (the wall-clock rate itself is hardware-
+        // dependent and belongs to the bench).
+        let per_cu = r.events as f64 / r.cus as f64;
+        assert!(per_cu < 40.0, "events/CU blew up: {per_cu}");
+        assert!(r.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn scale_run_is_deterministic_per_seed() {
+        let a = run_scale(20, 7).unwrap();
+        let b = run_scale(20, 7).unwrap();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        let c = run_scale(20, 8).unwrap();
+        assert_ne!(a.makespan_s.to_bits(), c.makespan_s.to_bits(), "seed must matter");
+    }
+
+    #[test]
+    fn partial_last_site_still_finishes() {
+        // 25 pilots → 3 sites (10/10/5); the CU split must cover all
+        // 2500 CUs exactly.
+        let r = run_scale(25, 3).unwrap();
+        assert_eq!(r.pilots, 25);
+        assert_eq!(r.cus, 2_500);
+    }
+
+    #[test]
+    fn peak_rss_reads_on_linux() {
+        // Best-effort elsewhere; on Linux (CI + dev) it must be real.
+        if std::path::Path::new("/proc/self/status").exists() {
+            assert!(peak_rss_bytes() > 0);
+        }
+    }
+}

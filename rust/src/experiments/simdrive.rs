@@ -166,6 +166,10 @@ pub struct SimSystem {
     pub retry: RetryPolicy,
     /// pilot id -> where its agent runs.
     pilot_home: BTreeMap<String, Arc<PilotHome>>,
+    /// machine -> pilot ids homed there (sorted, so iteration matches a
+    /// filtered `pilot_home` scan bit-for-bit) — the per-machine index
+    /// behind `machine_sharers`, which runs on every `CuStaged`.
+    machine_pilots: BTreeMap<String, BTreeSet<String>>,
     /// pilot id -> interned agent-queue key (minted once per pilot).
     qkeys: BTreeMap<String, Key>,
     /// Interned global-queue key.
@@ -246,6 +250,13 @@ pub struct SimSystem {
     /// `false` keeps the capacity-blind decisions for A/B comparisons;
     /// testbeds without quotas are identical either way.
     pub capacity_aware_scheduling: bool,
+    /// While set, push sites skip their per-push wakeup drain; the
+    /// batch entry point ([`SimSystem::submit_cus`]) runs one
+    /// deduplicated drain at the end instead.
+    defer_wakeups: bool,
+    /// Hard event budget for [`SimSystem::run`] — guards against
+    /// accidental infinite self-rescheduling. Scale sweeps raise it.
+    pub event_budget: u64,
 }
 
 impl SimSystem {
@@ -263,6 +274,7 @@ impl SimSystem {
             metrics: RunMetrics::default(),
             retry: RetryPolicy::default(),
             pilot_home: BTreeMap::new(),
+            machine_pilots: BTreeMap::new(),
             qkeys: BTreeMap::new(),
             global_q: keys::global_queue_key().clone(),
             retry_style: RetryStyle::InDes,
@@ -289,7 +301,22 @@ impl SimSystem {
             bytes_moved: 0,
             capacity_rejections: 0,
             capacity_aware_scheduling: true,
+            defer_wakeups: false,
+            event_budget: 2_000_000,
         }
+    }
+
+    /// Select the DES queue backend (default: the calendar-queue
+    /// wheel). Must be called before anything is scheduled — the
+    /// property suites use [`crate::simtime::QueueBackend::Heap`] to
+    /// rerun whole end-to-end workloads on the reference engine.
+    pub fn with_sim_backend(mut self, backend: crate::simtime::QueueBackend) -> SimSystem {
+        assert!(
+            self.sim.pending() == 0 && self.sim.processed() == 0,
+            "select the sim backend before scheduling events"
+        );
+        self.sim = Sim::with_backend(backend);
+        self
     }
 
     pub fn with_scheduler(mut self, s: Box<dyn Scheduler>) -> SimSystem {
@@ -380,6 +407,7 @@ impl SimSystem {
             id.clone(),
             Arc::new(PilotHome { machine: machine.to_string(), scratch: scratch_pd.to_string() }),
         );
+        self.machine_pilots.entry(machine.to_string()).or_default().insert(id.clone());
         self.qkeys.insert(id.clone(), keys::pilot_queue_key(&id));
         self.metrics.set_scalar(&format!("tq:{id}"), wait);
         self.sim.schedule(wait, Ev::PilotActive { pilot: id.clone() });
@@ -711,6 +739,44 @@ impl SimSystem {
         Ok(id)
     }
 
+    /// Bulk CU submission: place every CU, then translate the
+    /// accumulated queue pushes into wakeups in **one** deduplicated
+    /// drain — one `TryPull` per own-queue pilot touched and at most
+    /// one ready-fleet scan for global work, instead of a scan per CU.
+    ///
+    /// Trace-identical to a [`SimSystem::submit_cu`] loop (asserted by
+    /// `prop::bulk_cu_submission_matches_per_cu_reference_traces`): no
+    /// event fires during submission, so every wakeup lands at the same
+    /// instant either way; readiness cannot change between pushes, so
+    /// the per-CU loop's later wakeups are exact duplicates of the
+    /// first — and a duplicate `TryPull` is a no-op by the time it
+    /// fires, because the first-woken pilot pulls until its queue or
+    /// its slots are exhausted and every completion reschedules its own
+    /// `TryPull`.
+    pub fn submit_cus(
+        &mut self,
+        descrs: Vec<ComputeUnitDescription>,
+    ) -> anyhow::Result<Vec<String>> {
+        self.defer_wakeups = true;
+        let mut ids = Vec::with_capacity(descrs.len());
+        let mut failed = None;
+        for d in descrs {
+            match self.submit_cu(d) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+        self.defer_wakeups = false;
+        self.drain_queue_events();
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(ids),
+        }
+    }
+
     /// Record a new replica location in the manager's scheduler-facing
     /// index (incremental: no per-placement rebuild).
     fn note_replica_pd(&mut self, du: &str, pd: &str) {
@@ -726,6 +792,12 @@ impl SimSystem {
     /// pressure there), and a testbed with no quotas at all returns
     /// `None`: the scheduler stays bit-identical capacity-blind.
     fn capacity_by_label(&self) -> Option<BTreeMap<Label, u64>> {
+        // Quota-less testbeds (every experiment before the capacity
+        // model, and the synthetic scale sweep) exit in O(1) instead of
+        // walking every PD per placement.
+        if !self.tb.store.any_quota() {
+            return None;
+        }
         let mut bounded: BTreeMap<Label, u64> = BTreeMap::new();
         let mut unbounded: BTreeSet<Label> = BTreeSet::new();
         let mut any_quota = false;
@@ -769,12 +841,16 @@ impl SimSystem {
                 self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
                 self.store.rpush_k(&self.qkeys[&pilot], cu_id)?;
                 self.state.note_queue_push(&pilot);
-                self.drain_queue_events();
+                if !self.defer_wakeups {
+                    self.drain_queue_events();
+                }
             }
             Placement::Global => {
                 self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
                 self.store.rpush_k(&self.global_q, cu_id)?;
-                self.drain_queue_events();
+                if !self.defer_wakeups {
+                    self.drain_queue_events();
+                }
             }
             Placement::Delay(d) => {
                 self.state.cus.get_mut(cu_id).unwrap().transition(CuState::Queued)?;
@@ -849,11 +925,16 @@ impl SimSystem {
             }
             return;
         }
-        // Every push site drains immediately, so `own` holds at most
-        // one pilot today; wake in arrival order (dedup would need a
-        // sort first if a future change ever batches pushes).
-        for pilot in own {
-            self.sim.schedule(0.0, Ev::TryPull { pilot });
+        // Per-push drains see at most one pilot here; the batched
+        // submission path can accumulate many pushes per pilot — wake
+        // each pilot once, in first-push arrival order (stable: later
+        // duplicates would fire after the first wakeup anyway and
+        // no-op, so dropping them cannot change the trace).
+        let mut woken: BTreeSet<&str> = BTreeSet::new();
+        for pilot in &own {
+            if woken.insert(pilot.as_str()) {
+                self.sim.schedule(0.0, Ev::TryPull { pilot: pilot.clone() });
+            }
         }
         if global_work {
             self.wake_ready_pilots();
@@ -888,7 +969,7 @@ impl SimSystem {
     /// Drive the simulation until all events drain. Panics via the
     /// budget guard rather than hanging.
     pub fn run(&mut self) -> anyhow::Result<()> {
-        let budget = 2_000_000u64;
+        let budget = self.event_budget;
         let mut n = 0u64;
         while let Some((t, ev)) = self.sim.next_event() {
             n += 1;
@@ -1527,13 +1608,21 @@ impl SimSystem {
     /// though the counter ramps sequentially).
     fn machine_sharers(&self, machine: &str, cu_cores: u32) -> f64 {
         let io = self.tb.batch.io_active(machine) as f64;
+        // The per-machine index replaces a full `pilot_home` scan (this
+        // runs per CuStaged — O(fleet) was quadratic in the scale
+        // sweep). The BTreeSet iterates in sorted id order, exactly the
+        // order the filtered scan produced, so the f64 sum is
+        // bit-identical.
         let busy: f64 = self
-            .pilot_home
-            .iter()
-            .filter(|(_, h)| h.machine == machine)
-            .filter_map(|(p, _)| self.state.pilots.get(p))
-            .map(|p| p.busy_slots as f64 / cu_cores.max(1) as f64)
-            .sum();
+            .machine_pilots
+            .get(machine)
+            .map(|ids| {
+                ids.iter()
+                    .filter_map(|p| self.state.pilots.get(p))
+                    .map(|p| p.busy_slots as f64 / cu_cores.max(1) as f64)
+                    .sum()
+            })
+            .unwrap_or(0.0);
         io.max(busy).max(1.0)
     }
 

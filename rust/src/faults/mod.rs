@@ -54,21 +54,29 @@ pub struct RetryPolicy {
     pub max_attempts: u32,
     /// Base backoff in seconds, doubled per attempt.
     pub backoff_s: f64,
+    /// Ceiling on any single backoff. Uncapped doubling overflows
+    /// `powi` to `inf` at high attempt counts and schedules retries
+    /// astronomically far into simulated time well before that.
+    pub max_backoff_s: f64,
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        RetryPolicy { max_attempts: 3, backoff_s: 5.0 }
+        RetryPolicy { max_attempts: 3, backoff_s: 5.0, max_backoff_s: 300.0 }
     }
 }
 
 impl RetryPolicy {
     pub fn none() -> RetryPolicy {
-        RetryPolicy { max_attempts: 1, backoff_s: 0.0 }
+        RetryPolicy { max_attempts: 1, backoff_s: 0.0, max_backoff_s: 300.0 }
     }
 
+    /// Exponential backoff, capped at [`RetryPolicy::max_backoff_s`].
+    /// The exponent is clamped below 1024 so `powi` stays finite (and
+    /// `attempt as i32` cannot wrap); the cap keeps the result bounded
+    /// long before that.
     pub fn backoff_for(&self, attempt: u32) -> f64 {
-        self.backoff_s * 2f64.powi(attempt as i32)
+        (self.backoff_s * 2f64.powi(attempt.min(1023) as i32)).min(self.max_backoff_s)
     }
 }
 
@@ -247,9 +255,27 @@ mod tests {
 
     #[test]
     fn backoff_doubles() {
-        let p = RetryPolicy { max_attempts: 4, backoff_s: 2.0 };
+        let p = RetryPolicy { max_attempts: 4, backoff_s: 2.0, max_backoff_s: 300.0 };
         assert_eq!(p.backoff_for(0), 2.0);
         assert_eq!(p.backoff_for(2), 8.0);
+    }
+
+    #[test]
+    fn backoff_is_capped_at_large_attempt_counts() {
+        let p = RetryPolicy::default();
+        // Small attempts keep the historical doubling.
+        assert_eq!(p.backoff_for(0), 5.0);
+        assert_eq!(p.backoff_for(2), 20.0);
+        // Past the cap, the ceiling holds — and stays finite even where
+        // the uncapped powi would overflow to inf (attempt ≥ 1024) or
+        // where `attempt as i32` would have wrapped negative.
+        assert_eq!(p.backoff_for(10), p.max_backoff_s);
+        assert_eq!(p.backoff_for(2_000), p.max_backoff_s);
+        assert_eq!(p.backoff_for(u32::MAX), p.max_backoff_s);
+        assert!(p.backoff_for(u32::MAX).is_finite());
+        // A zero base never produces a NaN through 0 × inf.
+        let z = RetryPolicy { max_attempts: 9, backoff_s: 0.0, max_backoff_s: 300.0 };
+        assert_eq!(z.backoff_for(5_000), 0.0);
     }
 
     #[test]

@@ -471,14 +471,92 @@ mod tests {
     /// or its scratch — the run must still satisfy the end-to-end
     /// invariants: the workload completes, no CU is lost or completed
     /// twice, no pilot ever exceeds its core count, and every network
-    /// flow drains.
+    /// flow drains. ISSUE 7 rerun: every case runs on **both** DES
+    /// queue backends (the calendar-queue wheel and the retained heap
+    /// reference), proving the engine swap leaves the fault lifecycle
+    /// unchanged; the two runs must also agree on completion counts
+    /// and final sim time exactly.
     #[test]
     fn chaos_runs_preserve_end_to_end_invariants() {
         use crate::config::paper_testbed;
         use crate::experiments::simdrive::SimSystem;
         use crate::faults::ChaosPlan;
+        use crate::simtime::QueueBackend;
         use crate::util::Bytes;
         use crate::workload::bwa_ensemble;
+
+        fn run_under(
+            backend: QueueBackend,
+            seed: u64,
+            tasks: usize,
+            survivor_cores: u32,
+            victim_cores: u32,
+            intensity: f64,
+        ) -> Result<(usize, u64, f64), String> {
+            let es = |e: anyhow::Error| format!("{e} [{backend:?}]");
+            let mut sys = SimSystem::new(paper_testbed(), seed).with_sim_backend(backend);
+            let ens = bwa_ensemble(tasks, Bytes::gb(1), Bytes::gb(8));
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            let mut cores = std::collections::BTreeMap::new();
+            let p1 = sys
+                .submit_pilot("lonestar", survivor_cores, "lonestar-scratch")
+                .map_err(es)?;
+            cores.insert(p1.clone(), survivor_cores);
+            let p2 = sys
+                .submit_pilot("stampede", victim_cores, "stampede-scratch")
+                .map_err(es)?;
+            cores.insert(p2.clone(), victim_cores);
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                sys.submit_cu(cud).map_err(es)?;
+            }
+            // Chaos may only touch the stampede side: the lonestar
+            // pilot and the scratch holding every input DU survive.
+            let plan = ChaosPlan::seeded(
+                seed ^ 0xBAD,
+                intensity,
+                &[p2.clone()],
+                &["stampede-scratch".to_string()],
+                &["xsede/tacc/stampede".to_string()],
+                20_000.0,
+            );
+            sys.apply_chaos(&plan);
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err(format!("workload did not finish under chaos [{backend:?}]"));
+            }
+            let done = sys.state.count_cu_state(crate::unit::CuState::Done);
+            if done != tasks {
+                return Err(format!("{done}/{tasks} CUs done — CUs lost [{backend:?}]"));
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for r in &sys.metrics.cu_records {
+                if !seen.insert(r.cu.clone()) {
+                    return Err(format!("CU {} completed twice [{backend:?}]", r.cu));
+                }
+            }
+            for (pilot, peak) in &sys.max_busy {
+                let c = cores.get(pilot).copied().unwrap_or(0);
+                if *peak > c {
+                    return Err(format!(
+                        "pilot {pilot} peaked at {peak} busy slots with {c} cores [{backend:?}]"
+                    ));
+                }
+            }
+            if sys.tb.net.total_live_flows() != 0 {
+                return Err(format!(
+                    "{} network flows leaked [{backend:?}]",
+                    sys.tb.net.total_live_flows()
+                ));
+            }
+            Ok((done, sys.sim.processed(), sys.sim.now()))
+        }
 
         crate::prop::check(
             Config { cases: 8, seed: 0xC4A0_5 },
@@ -492,66 +570,209 @@ mod tests {
                 )
             },
             |&(seed, tasks, survivor_cores, victim_cores, intensity)| {
-                let es = |e: anyhow::Error| e.to_string();
-                let mut sys = SimSystem::new(paper_testbed(), seed);
-                let ens = bwa_ensemble(tasks, Bytes::gb(1), Bytes::gb(8));
-                let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
-                let mut chunks = Vec::new();
-                for c in &ens.read_chunks {
-                    chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+                let wheel = run_under(
+                    QueueBackend::Wheel,
+                    seed,
+                    tasks,
+                    survivor_cores,
+                    victim_cores,
+                    intensity,
+                )?;
+                let heap = run_under(
+                    QueueBackend::Heap,
+                    seed,
+                    tasks,
+                    survivor_cores,
+                    victim_cores,
+                    intensity,
+                )?;
+                if wheel.0 != heap.0 || wheel.1 != heap.1 || wheel.2.to_bits() != heap.2.to_bits()
+                {
+                    return Err(format!(
+                        "backends diverge under chaos: wheel (done, events, t_end) = {wheel:?}, heap = {heap:?}"
+                    ));
                 }
-                sys.run().map_err(es)?; // land the data
-                let mut cores = std::collections::BTreeMap::new();
-                let p1 = sys
-                    .submit_pilot("lonestar", survivor_cores, "lonestar-scratch")
-                    .map_err(es)?;
-                cores.insert(p1.clone(), survivor_cores);
-                let p2 = sys
-                    .submit_pilot("stampede", victim_cores, "stampede-scratch")
-                    .map_err(es)?;
-                cores.insert(p2.clone(), victim_cores);
-                for chunk in &chunks {
+                Ok(())
+            },
+        );
+    }
+
+    /// ISSUE 7 tentpole: the whole sim driver — fault lifecycle,
+    /// per-slot chains, staging, wakeup protocol — replayed on the
+    /// calendar-queue wheel vs the retained heap reference must yield
+    /// **bit-identical placement traces** on randomized multi-pilot
+    /// workloads. The simtime unit property proves the engines agree
+    /// on synthetic schedules; this one proves it end to end.
+    #[test]
+    fn wheel_driver_matches_heap_reference_traces() {
+        use crate::config::paper_testbed;
+        use crate::experiments::simdrive::SimSystem;
+        use crate::simtime::QueueBackend;
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+
+        type Trace = (Vec<(usize, String, f64, f64, f64, f64)>, f64);
+
+        fn run_one(
+            backend: QueueBackend,
+            seed: u64,
+            pilots: &[(&'static str, &'static str, u32)],
+            tasks: usize,
+            chunk_gb: u64,
+        ) -> Result<Trace, String> {
+            let es = |e: anyhow::Error| e.to_string();
+            let mut sys = SimSystem::new(paper_testbed(), seed).with_sim_backend(backend);
+            let ens = bwa_ensemble(tasks, Bytes::gb(chunk_gb), Bytes::gb(8));
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            for (machine, scratch, cores) in pilots {
+                sys.submit_pilot(machine, *cores, scratch).map_err(es)?;
+            }
+            let mut submitted = Vec::new();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                submitted.push(sys.submit_cu(cud).map_err(es)?);
+            }
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err(format!("workload not finished on {backend:?}"));
+            }
+            let trace = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| {
+                    let idx = submitted
+                        .iter()
+                        .position(|id| *id == r.cu)
+                        .ok_or_else(|| format!("unknown cu {}", r.cu))?;
+                    Ok((idx, r.machine.clone(), r.t_start, r.t_end, r.staging_s, r.compute_s))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok((trace, sys.makespan()))
+        }
+
+        crate::prop::check(
+            Config { cases: 8, seed: 0x8EE1 },
+            |rng| {
+                let mut pilots: Vec<(&'static str, &'static str, u32)> =
+                    vec![("lonestar", "lonestar-scratch", 4 + 4 * rng.below(3) as u32)];
+                if rng.chance(0.6) {
+                    pilots.push(("stampede", "stampede-scratch", 4 + 4 * rng.below(3) as u32));
+                }
+                if rng.chance(0.3) {
+                    pilots.push(("lonestar", "lonestar-scratch", 4));
+                }
+                (rng.next_u64(), pilots, 1 + rng.below(6) as usize, 1 + rng.below(3))
+            },
+            |(seed, pilots, tasks, chunk_gb)| {
+                let wheel = run_one(QueueBackend::Wheel, *seed, pilots, *tasks, *chunk_gb)?;
+                let heap = run_one(QueueBackend::Heap, *seed, pilots, *tasks, *chunk_gb)?;
+                if wheel != heap {
+                    return Err(format!(
+                        "placement traces diverge:\n wheel: {wheel:?}\n heap:  {heap:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// ISSUE 7 tentpole (driver batching): submitting a workload
+    /// through the bulk [`SimSystem::submit_cus`] path — placements
+    /// first, then one deduplicated wakeup drain — must be
+    /// **trace-identical** to the per-CU `submit_cu` loop it
+    /// accelerates. Every wakeup the loop would have scheduled lands at
+    /// the same instant, so the dropped duplicates must all have been
+    /// provable no-ops.
+    #[test]
+    fn bulk_cu_submission_matches_per_cu_reference_traces() {
+        use crate::config::paper_testbed;
+        use crate::experiments::simdrive::SimSystem;
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+
+        type Trace = (Vec<(usize, String, f64, f64, f64, f64)>, f64);
+
+        fn run_one(
+            bulk: bool,
+            seed: u64,
+            pilots: &[(&'static str, &'static str, u32)],
+            tasks: usize,
+            chunk_gb: u64,
+        ) -> Result<Trace, String> {
+            let es = |e: anyhow::Error| e.to_string();
+            let mut sys = SimSystem::new(paper_testbed(), seed);
+            let ens = bwa_ensemble(tasks, Bytes::gb(chunk_gb), Bytes::gb(8));
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            for (machine, scratch, cores) in pilots {
+                sys.submit_pilot(machine, *cores, scratch).map_err(es)?;
+            }
+            let descrs: Vec<_> = chunks
+                .iter()
+                .map(|chunk| {
                     let mut cud = ens.cu_template.clone();
                     cud.input_data = vec![ref_du.clone(), chunk.clone()];
-                    sys.submit_cu(cud).map_err(es)?;
+                    cud
+                })
+                .collect();
+            let submitted = if bulk {
+                sys.submit_cus(descrs).map_err(es)?
+            } else {
+                let mut ids = Vec::new();
+                for d in descrs {
+                    ids.push(sys.submit_cu(d).map_err(es)?);
                 }
-                // Chaos may only touch the stampede side: the lonestar
-                // pilot and the scratch holding every input DU survive.
-                let plan = ChaosPlan::seeded(
-                    seed ^ 0xBAD,
-                    intensity,
-                    &[p2.clone()],
-                    &["stampede-scratch".to_string()],
-                    &["xsede/tacc/stampede".to_string()],
-                    20_000.0,
-                );
-                sys.apply_chaos(&plan);
-                sys.run().map_err(es)?;
-                if !sys.state.workload_finished() {
-                    return Err("workload did not finish under chaos".into());
+                ids
+            };
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err(format!("workload not finished (bulk={bulk})"));
+            }
+            let trace = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| {
+                    let idx = submitted
+                        .iter()
+                        .position(|id| *id == r.cu)
+                        .ok_or_else(|| format!("unknown cu {}", r.cu))?;
+                    Ok((idx, r.machine.clone(), r.t_start, r.t_end, r.staging_s, r.compute_s))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok((trace, sys.makespan()))
+        }
+
+        crate::prop::check(
+            Config { cases: 8, seed: 0xB17C_0DE },
+            |rng| {
+                let mut pilots: Vec<(&'static str, &'static str, u32)> =
+                    vec![("lonestar", "lonestar-scratch", 4 + 4 * rng.below(3) as u32)];
+                if rng.chance(0.6) {
+                    pilots.push(("stampede", "stampede-scratch", 4 + 4 * rng.below(3) as u32));
                 }
-                let done = sys.state.count_cu_state(crate::unit::CuState::Done);
-                if done != tasks {
-                    return Err(format!("{done}/{tasks} CUs done — CUs lost"));
+                if rng.chance(0.3) {
+                    pilots.push(("lonestar", "lonestar-scratch", 4));
                 }
-                let mut seen = std::collections::BTreeSet::new();
-                for r in &sys.metrics.cu_records {
-                    if !seen.insert(r.cu.clone()) {
-                        return Err(format!("CU {} completed twice", r.cu));
-                    }
-                }
-                for (pilot, peak) in &sys.max_busy {
-                    let c = cores.get(pilot).copied().unwrap_or(0);
-                    if *peak > c {
-                        return Err(format!(
-                            "pilot {pilot} peaked at {peak} busy slots with {c} cores"
-                        ));
-                    }
-                }
-                if sys.tb.net.total_live_flows() != 0 {
+                (rng.next_u64(), pilots, 1 + rng.below(6) as usize, 1 + rng.below(3))
+            },
+            |(seed, pilots, tasks, chunk_gb)| {
+                let bulk = run_one(true, *seed, pilots, *tasks, *chunk_gb)?;
+                let loop_ = run_one(false, *seed, pilots, *tasks, *chunk_gb)?;
+                if bulk != loop_ {
                     return Err(format!(
-                        "{} network flows leaked",
-                        sys.tb.net.total_live_flows()
+                        "placement traces diverge:\n bulk: {bulk:?}\n loop: {loop_:?}"
                     ));
                 }
                 Ok(())

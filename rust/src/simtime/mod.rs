@@ -1,22 +1,71 @@
-//! Discrete-event simulation engine.
+//! Discrete-event simulation engine: a calendar-queue **event wheel**.
 //!
 //! The paper's experiments run on production DCI where the dominant time
 //! scales are batch-queue waits (minutes–hours) and WAN transfers
 //! (minutes). We reproduce those experiments inside a deterministic
-//! discrete-event simulation: [`Sim`] owns a priority queue of timed
-//! events; the world advances by popping the earliest event and handing
-//! it to the caller's handler, which may schedule further events.
+//! discrete-event simulation: [`Sim`] owns a timed event queue; the
+//! world advances by popping the earliest event and handing it to the
+//! caller's handler, which may schedule further events.
 //!
-//! Ties are broken FIFO (by insertion sequence) so runs are fully
-//! deterministic. A separate **front lane** ([`Sim::schedule_front`])
-//! fires before every normally scheduled event at the same instant —
-//! used by the sim driver's per-slot agent chains, where one pilot's
-//! next slot must pull before any other same-time event interleaves
-//! (the DES equivalent of a worker handing off to the next worker of
-//! the same pool).
+//! # Ordering contract
+//!
+//! Events fire in `(time, lane, seq)` order. Ties on time are broken
+//! FIFO (by insertion sequence) so runs are fully deterministic. A
+//! separate **front lane** ([`Sim::schedule_front`]) fires before every
+//! normally scheduled event at the same instant — used by the sim
+//! driver's per-slot agent chains, where one pilot's next slot must
+//! pull before any other same-time event interleaves (the DES
+//! equivalent of a worker handing off to the next worker of the same
+//! pool). Times are compared with [`f64::total_cmp`] (a *total* order —
+//! a NaN can never silently corrupt heap order), non-finite times are
+//! rejected at the scheduling boundary, and every accepted time is
+//! normalized through `+ 0.0` so `-0.0` and `+0.0` are one instant.
+//!
+//! # The wheel
+//!
+//! The default backend is a calendar queue tuned for the driver's
+//! event mix, where the vast majority of events are either *at the
+//! current instant* (pull chains, wakeups, completions cascading at one
+//! timestamp) or *in the near future* (transfer/compute completions):
+//!
+//! - **Now lanes** — two FIFO deques hold events whose timestamp is
+//!   bit-equal to the current clock: one for the front lane, one for
+//!   normal lane-1 events. While either is non-empty the clock cannot
+//!   advance (their head is the global minimum), so push and pop are
+//!   plain O(1) deque operations — no comparisons at all on the
+//!   same-instant fast path that dominates large fleets.
+//! - **Near-future buckets** — `BUCKETS` (256) slots spanning
+//!   `[origin, origin + BUCKETS × width)`; an event at time `t` lands
+//!   in bucket `⌊(t − origin) / width⌋`. Each bucket is a small
+//!   min-ordered heap on `(time, seq)`, so the first non-empty bucket
+//!   (tracked by a monotone cursor that is rewound if a push lands
+//!   behind it) always holds the earliest timed event.
+//! - **Overflow tier** — events beyond the bucket window go to a
+//!   single min-heap. When the buckets drain, the wheel **lazily
+//!   rebuckets**: `origin` snaps to the overflow minimum, `width`
+//!   stretches to `(max − min) / (BUCKETS − 1)` (floored at a minimum
+//!   width) so the whole overflow population fits the new window, and
+//!   the tier drains into the buckets in one pass. Rebucketing is
+//!   amortized O(1) per event — each event moves overflow→bucket at
+//!   most once per rebucket epoch.
+//! - **Slab event cells** — payloads live in a slab (`Vec<Option<E>>` +
+//!   free list) and the ordering structures move only 24-byte
+//!   `(time, seq, slot)` cells, so large payload enums are written once
+//!   on schedule and read once on fire, never shuffled through heap
+//!   sift operations.
+//!
+//! Worst case (adversarial time distributions collapsing into one
+//! bucket) degrades to the classic binary-heap O(log n) — never worse
+//! than the seed implementation.
+//!
+//! The original single `BinaryHeap` backend is retained as a reference
+//! implementation ([`QueueBackend::Heap`], via [`Sim::with_backend`]):
+//! the randomized property suites (here and in `crate::prop`) drive
+//! identical schedules through both backends and require **bit-identical
+//! pop sequences**, including lane and seq tie-breaks.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Simulated time in seconds since experiment start.
 #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
@@ -28,7 +77,9 @@ impl SimTime {
         self.0
     }
     pub fn after(self, delay: f64) -> SimTime {
-        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        // A real assert (not debug_assert): a negative or NaN delay in a
+        // release build would silently schedule into the past.
+        assert!(delay >= 0.0, "negative delay {delay}");
         SimTime(self.0 + delay)
     }
 }
@@ -37,6 +88,15 @@ impl std::fmt::Display for SimTime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "t={}", crate::util::fmt_secs(self.0))
     }
+}
+
+/// Which queue implementation backs a [`Sim`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueBackend {
+    /// Calendar-queue event wheel (default).
+    Wheel,
+    /// The original `BinaryHeap` — kept as the property-test reference.
+    Heap,
 }
 
 struct Scheduled<E> {
@@ -50,7 +110,9 @@ struct Scheduled<E> {
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.lane == other.lane && self.seq == other.seq
+        self.time.to_bits() == other.time.to_bits()
+            && self.lane == other.lane
+            && self.seq == other.seq
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -62,21 +124,217 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first, then
-        // front lane first, then FIFO on the sequence number.
+        // front lane first, then FIFO on the sequence number. total_cmp
+        // keeps the order total even if a NaN ever slipped past the
+        // scheduling asserts.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.lane.cmp(&self.lane))
             .then(other.seq.cmp(&self.seq))
     }
+}
+
+/// Number of near-future buckets in the wheel window.
+const BUCKETS: usize = 256;
+/// Floor for the bucket width — guards divide-by-zero when the whole
+/// overflow population shares one timestamp.
+const MIN_WIDTH: f64 = 1e-9;
+
+/// A slab-backed event handle: ordering state only, payload lives in
+/// the slab at `slot`.
+#[derive(Clone, Copy)]
+struct Cell {
+    time: f64,
+    seq: u64,
+    slot: u32,
+}
+
+impl PartialEq for Cell {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
+    }
+}
+impl Eq for Cell {}
+impl PartialOrd for Cell {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cell {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Inverted: BinaryHeap<Cell> is a min-queue on (time, seq).
+        other.time.total_cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Calendar-queue wheel (see the module docs for the layout).
+struct Wheel<E> {
+    /// Event payload arena; `free` recycles vacant slots.
+    slab: Vec<Option<E>>,
+    free: Vec<u32>,
+    /// Lane-0 events at the current instant (always the global minimum).
+    now_front: VecDeque<Cell>,
+    /// Lane-1 events whose time is bit-equal to the current clock.
+    now_lane: VecDeque<Cell>,
+    buckets: Vec<BinaryHeap<Cell>>,
+    /// First possibly non-empty bucket; rewound when a push lands
+    /// behind it, advanced lazily on peek.
+    cursor: usize,
+    origin: f64,
+    width: f64,
+    overflow: BinaryHeap<Cell>,
+    len: usize,
+}
+
+impl<E> Wheel<E> {
+    fn new() -> Wheel<E> {
+        Wheel {
+            slab: Vec::new(),
+            free: Vec::new(),
+            now_front: VecDeque::new(),
+            now_lane: VecDeque::new(),
+            buckets: (0..BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            cursor: 0,
+            origin: 0.0,
+            width: 1.0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    fn alloc(&mut self, event: E) -> u32 {
+        if let Some(slot) = self.free.pop() {
+            self.slab[slot as usize] = Some(event);
+            slot
+        } else {
+            self.slab.push(Some(event));
+            (self.slab.len() - 1) as u32
+        }
+    }
+
+    fn take(&mut self, slot: u32) -> E {
+        let ev = self.slab[slot as usize].take().expect("slab slot already vacated");
+        self.free.push(slot);
+        ev
+    }
+
+    fn push(&mut self, now: f64, time: f64, lane: u8, seq: u64, event: E) {
+        let slot = self.alloc(event);
+        let cell = Cell { time, seq, slot };
+        self.len += 1;
+        if lane == 0 {
+            // Front-lane events are only ever created at `now`; while any
+            // are pending they are the global minimum, so a FIFO deque
+            // reproduces (time, lane, seq) order exactly.
+            self.now_front.push_back(cell);
+        } else if time.to_bits() == now.to_bits() {
+            // Same-instant lane-1 events: the clock cannot advance while
+            // this deque is non-empty, so FIFO order == seq order.
+            self.now_lane.push_back(cell);
+        } else {
+            self.push_timed(cell);
+        }
+    }
+
+    fn push_timed(&mut self, cell: Cell) {
+        let rel = (cell.time - self.origin) / self.width;
+        if rel < BUCKETS as f64 {
+            let idx = if rel <= 0.0 { 0 } else { (rel as usize).min(BUCKETS - 1) };
+            if idx < self.cursor {
+                self.cursor = idx;
+            }
+            self.buckets[idx].push(cell);
+        } else {
+            self.overflow.push(cell);
+        }
+    }
+
+    /// Advance the cursor to the first non-empty bucket, lazily
+    /// rebucketing the overflow tier when the window is exhausted.
+    /// Post-condition: `cursor < BUCKETS` iff any timed event remains.
+    fn settle(&mut self) {
+        loop {
+            while self.cursor < BUCKETS && self.buckets[self.cursor].is_empty() {
+                self.cursor += 1;
+            }
+            if self.cursor < BUCKETS || self.overflow.is_empty() {
+                return;
+            }
+            // Rebucket: snap the window to the overflow population and
+            // drain it. width is chosen so every drained cell fits the
+            // new window (max lands in the last bucket).
+            let cells = std::mem::take(&mut self.overflow).into_vec();
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for c in &cells {
+                lo = lo.min(c.time);
+                hi = hi.max(c.time);
+            }
+            self.origin = lo;
+            self.width = ((hi - lo) / (BUCKETS as f64 - 1.0)).max(MIN_WIDTH);
+            self.cursor = 0;
+            for c in cells {
+                self.push_timed(c);
+            }
+        }
+    }
+
+    /// `(time, seq)` of the earliest timed (non-now-lane) event.
+    fn peek_timed(&mut self) -> Option<(f64, u64)> {
+        self.settle();
+        if self.cursor < BUCKETS {
+            // Bucket invariant: the first non-empty bucket holds the
+            // timed minimum, and every overflow cell lies beyond the
+            // bucket window.
+            let c = self.buckets[self.cursor].peek().expect("settle left an empty cursor bucket");
+            Some((c.time, c.seq))
+        } else {
+            debug_assert!(self.overflow.is_empty());
+            None
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, u8, u64, E)> {
+        if let Some(c) = self.now_front.pop_front() {
+            self.len -= 1;
+            let ev = self.take(c.slot);
+            return Some((c.time, 0, c.seq, ev));
+        }
+        let nn = self.now_lane.front().map(|c| (c.time, c.seq));
+        let timed = self.peek_timed();
+        let pick_now_lane = match (nn, timed) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some((t1, s1)), Some((t2, s2))) => match t1.total_cmp(&t2) {
+                Ordering::Less => true,
+                Ordering::Greater => false,
+                Ordering::Equal => s1 < s2,
+            },
+        };
+        let c = if pick_now_lane {
+            self.now_lane.pop_front().expect("now-lane head vanished")
+        } else {
+            self.settle();
+            self.buckets[self.cursor].pop().expect("cursor bucket drained under peek")
+        };
+        self.len -= 1;
+        let ev = self.take(c.slot);
+        Some((c.time, 1, c.seq, ev))
+    }
+}
+
+enum Queue<E> {
+    Wheel(Wheel<E>),
+    Heap(BinaryHeap<Scheduled<E>>),
 }
 
 /// The event engine. `E` is the caller's event type.
 pub struct Sim<E> {
     now: f64,
     seq: u64,
-    queue: BinaryHeap<Scheduled<E>>,
+    queue: Queue<E>,
     processed: u64,
 }
 
@@ -87,8 +345,26 @@ impl<E> Default for Sim<E> {
 }
 
 impl<E> Sim<E> {
+    /// A wheel-backed engine (the default).
     pub fn new() -> Sim<E> {
-        Sim { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+        Sim::with_backend(QueueBackend::Wheel)
+    }
+
+    /// Choose the queue backend explicitly — [`QueueBackend::Heap`] is
+    /// the retained reference for the bit-identity property suites.
+    pub fn with_backend(backend: QueueBackend) -> Sim<E> {
+        let queue = match backend {
+            QueueBackend::Wheel => Queue::Wheel(Wheel::new()),
+            QueueBackend::Heap => Queue::Heap(BinaryHeap::new()),
+        };
+        Sim { now: 0.0, seq: 0, queue, processed: 0 }
+    }
+
+    pub fn backend(&self) -> QueueBackend {
+        match self.queue {
+            Queue::Wheel(_) => QueueBackend::Wheel,
+            Queue::Heap(_) => QueueBackend::Heap,
+        }
     }
 
     /// Current simulated time (seconds).
@@ -106,21 +382,45 @@ impl<E> Sim<E> {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        match &self.queue {
+            Queue::Wheel(w) => w.len,
+            Queue::Heap(h) => h.len(),
+        }
+    }
+
+    /// Shared scheduling boundary: normalizes `-0.0`, rejects
+    /// non-finite or past times, assigns the FIFO sequence number.
+    fn push(&mut self, time: f64, lane: u8, event: E) {
+        // total_cmp orders -0.0 < +0.0 while the wheel's now-lane
+        // routing uses bit equality; `+ 0.0` maps -0.0 to +0.0 so both
+        // backends agree that they are one instant.
+        let time = time + 0.0;
+        assert!(
+            time.is_finite() && time >= self.now,
+            "bad event time {time} (now {})",
+            self.now
+        );
+        self.seq += 1;
+        match &mut self.queue {
+            Queue::Wheel(w) => w.push(self.now, time, lane, self.seq, event),
+            Queue::Heap(h) => h.push(Scheduled { time, lane, seq: self.seq, event }),
+        }
     }
 
     /// Schedule `event` to fire `delay` seconds from now.
     pub fn schedule(&mut self, delay: f64, event: E) {
         assert!(delay >= 0.0 && delay.is_finite(), "bad delay {delay}");
-        self.seq += 1;
-        self.queue.push(Scheduled { time: self.now + delay, lane: 1, seq: self.seq, event });
+        self.push(self.now + delay, 1, event);
     }
 
-    /// Schedule at an absolute time (must not be in the past).
+    /// Schedule at an absolute time (must be finite and not in the past).
     pub fn schedule_at(&mut self, time: f64, event: E) {
-        assert!(time >= self.now, "schedule_at past time {time} < now {}", self.now);
-        self.seq += 1;
-        self.queue.push(Scheduled { time, lane: 1, seq: self.seq, event });
+        assert!(
+            time.is_finite() && time >= self.now,
+            "schedule_at bad time {time} (now {})",
+            self.now
+        );
+        self.push(time, 1, event);
     }
 
     /// Schedule `event` at the current instant, ahead of every event
@@ -129,50 +429,57 @@ impl<E> Sim<E> {
     /// (e.g. the per-slot agent pull chain); front-lane events among
     /// themselves stay FIFO.
     pub fn schedule_front(&mut self, event: E) {
-        self.seq += 1;
-        self.queue.push(Scheduled { time: self.now, lane: 0, seq: self.seq, event });
+        self.push(self.now, 0, event);
     }
 
     /// Pop the next event, advancing the clock. Returns `None` when the
     /// queue is empty.
     pub fn next_event(&mut self) -> Option<(SimTime, E)> {
-        let s = self.queue.pop()?;
-        debug_assert!(s.time >= self.now, "time went backwards");
-        self.now = s.time;
+        let (time, _lane, _seq, event) = match &mut self.queue {
+            Queue::Wheel(w) => w.pop()?,
+            Queue::Heap(h) => {
+                let s = h.pop()?;
+                (s.time, s.lane, s.seq, s.event)
+            }
+        };
+        debug_assert!(time >= self.now, "time went backwards");
+        self.now = time;
         self.processed += 1;
-        Some((SimTime(s.time), s.event))
+        Some((SimTime(time), event))
     }
 
     /// Drive the simulation until the queue drains or `handler` returns
     /// `false` (stop requested). The handler receives `(self, time,
     /// event)` and may schedule more events.
     pub fn run(&mut self, mut handler: impl FnMut(&mut Sim<E>, SimTime, E) -> bool) {
-        while let Some(s) = self.queue.pop() {
-            self.now = s.time;
-            self.processed += 1;
-            if !handler(self, SimTime(s.time), s.event) {
+        while let Some((t, e)) = self.next_event() {
+            if !handler(self, t, e) {
                 break;
             }
         }
     }
 
     /// Like [`Sim::run`] but with a hard event budget — guards against
-    /// accidental infinite self-rescheduling in tests.
+    /// accidental infinite self-rescheduling. Processes at most
+    /// `max_events` events; errors only if the queue still holds work
+    /// when the budget is spent.
     pub fn run_bounded(
         &mut self,
         max_events: u64,
         mut handler: impl FnMut(&mut Sim<E>, SimTime, E) -> bool,
     ) -> anyhow::Result<()> {
-        let start = self.processed;
-        while let Some(s) = self.queue.pop() {
-            self.now = s.time;
-            self.processed += 1;
-            if self.processed - start > max_events {
-                anyhow::bail!("event budget {max_events} exceeded at t={}", self.now);
+        let mut used = 0u64;
+        while used < max_events {
+            let Some((t, e)) = self.next_event() else {
+                return Ok(());
+            };
+            used += 1;
+            if !handler(self, t, e) {
+                return Ok(());
             }
-            if !handler(self, SimTime(s.time), s.event) {
-                break;
-            }
+        }
+        if self.pending() > 0 {
+            anyhow::bail!("event budget {max_events} exceeded at t={}", self.now);
         }
         Ok(())
     }
@@ -182,53 +489,61 @@ impl<E> Sim<E> {
 mod tests {
     use super::*;
 
+    const BACKENDS: [QueueBackend; 2] = [QueueBackend::Wheel, QueueBackend::Heap];
+
     #[test]
     fn events_fire_in_time_order() {
-        let mut sim: Sim<u32> = Sim::new();
-        sim.schedule(5.0, 2);
-        sim.schedule(1.0, 1);
-        sim.schedule(9.0, 3);
-        let mut seen = Vec::new();
-        sim.run(|_, t, e| {
-            seen.push((t.secs(), e));
-            true
-        });
-        assert_eq!(seen, vec![(1.0, 1), (5.0, 2), (9.0, 3)]);
+        for backend in BACKENDS {
+            let mut sim: Sim<u32> = Sim::with_backend(backend);
+            sim.schedule(5.0, 2);
+            sim.schedule(1.0, 1);
+            sim.schedule(9.0, 3);
+            let mut seen = Vec::new();
+            sim.run(|_, t, e| {
+                seen.push((t.secs(), e));
+                true
+            });
+            assert_eq!(seen, vec![(1.0, 1), (5.0, 2), (9.0, 3)], "{backend:?}");
+        }
     }
 
     #[test]
     fn ties_are_fifo() {
-        let mut sim: Sim<u32> = Sim::new();
-        for i in 0..10 {
-            sim.schedule(1.0, i);
+        for backend in BACKENDS {
+            let mut sim: Sim<u32> = Sim::with_backend(backend);
+            for i in 0..10 {
+                sim.schedule(1.0, i);
+            }
+            let mut seen = Vec::new();
+            sim.run(|_, _, e| {
+                seen.push(e);
+                true
+            });
+            assert_eq!(seen, (0..10).collect::<Vec<_>>(), "{backend:?}");
         }
-        let mut seen = Vec::new();
-        sim.run(|_, _, e| {
-            seen.push(e);
-            true
-        });
-        assert_eq!(seen, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn front_lane_preempts_same_time_events() {
-        let mut sim: Sim<&'static str> = Sim::new();
-        sim.schedule(1.0, "a");
-        sim.schedule(1.0, "b");
-        sim.schedule(2.0, "later");
-        let mut seen = Vec::new();
-        sim.run(|sim, _, e| {
-            seen.push(e);
-            if e == "a" {
-                // Chain: both front events must run before "b", in
-                // FIFO order among themselves — and never before an
-                // earlier-time event would have.
-                sim.schedule_front("front-1");
-                sim.schedule_front("front-2");
-            }
-            true
-        });
-        assert_eq!(seen, vec!["a", "front-1", "front-2", "b", "later"]);
+        for backend in BACKENDS {
+            let mut sim: Sim<&'static str> = Sim::with_backend(backend);
+            sim.schedule(1.0, "a");
+            sim.schedule(1.0, "b");
+            sim.schedule(2.0, "later");
+            let mut seen = Vec::new();
+            sim.run(|sim, _, e| {
+                seen.push(e);
+                if e == "a" {
+                    // Chain: both front events must run before "b", in
+                    // FIFO order among themselves — and never before an
+                    // earlier-time event would have.
+                    sim.schedule_front("front-1");
+                    sim.schedule_front("front-2");
+                }
+                true
+            });
+            assert_eq!(seen, vec!["a", "front-1", "front-2", "b", "later"], "{backend:?}");
+        }
     }
 
     #[test]
@@ -288,6 +603,111 @@ mod tests {
     }
 
     #[test]
+    fn run_bounded_processes_exactly_the_budget() {
+        for backend in BACKENDS {
+            // Exactly max_events pending: the full budget is usable.
+            let mut sim: Sim<u32> = Sim::with_backend(backend);
+            for i in 0..100 {
+                sim.schedule(i as f64, i);
+            }
+            let mut handled = 0u64;
+            let res = sim.run_bounded(100, |_, _, _| {
+                handled += 1;
+                true
+            });
+            assert!(res.is_ok(), "{backend:?}");
+            assert_eq!(handled, 100, "{backend:?}");
+            assert_eq!(sim.pending(), 0, "{backend:?}");
+
+            // One more than the budget: stop after max_events, with the
+            // extra event still pending (the seed processed 101 here).
+            let mut sim: Sim<u32> = Sim::with_backend(backend);
+            for i in 0..101 {
+                sim.schedule(i as f64, i);
+            }
+            let mut handled = 0u64;
+            let res = sim.run_bounded(100, |_, _, _| {
+                handled += 1;
+                true
+            });
+            assert!(res.is_err(), "{backend:?}");
+            assert_eq!(handled, 100, "{backend:?}");
+            assert_eq!(sim.pending(), 1, "{backend:?}");
+            assert_eq!(sim.processed(), 100, "{backend:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule_at bad time")]
+    fn schedule_at_rejects_infinite_time() {
+        let mut sim: Sim<u8> = Sim::new();
+        sim.schedule_at(f64::INFINITY, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule_at bad time")]
+    fn schedule_at_rejects_nan_time() {
+        let mut sim: Sim<u8> = Sim::new();
+        sim.schedule_at(f64::NAN, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative delay")]
+    fn simtime_after_rejects_negative_delay_in_release_too() {
+        // `after` used debug_assert!; it must hold in release builds.
+        let _ = SimTime(1.0).after(-0.5);
+    }
+
+    #[test]
+    fn negative_zero_is_the_current_instant() {
+        for backend in BACKENDS {
+            let mut sim: Sim<u32> = Sim::with_backend(backend);
+            sim.schedule_at(-0.0, 1); // normalized to +0.0
+            sim.schedule(0.0, 2);
+            sim.schedule_front(3);
+            let mut seen = Vec::new();
+            sim.run(|_, t, e| {
+                seen.push((t.secs().to_bits(), e));
+                true
+            });
+            assert_eq!(
+                seen,
+                vec![(0.0f64.to_bits(), 3), (0.0f64.to_bits(), 1), (0.0f64.to_bits(), 2)],
+                "{backend:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn far_future_spread_exercises_overflow_and_rebucketing() {
+        // A spread from sub-second to 1e9 s forces overflow pushes and
+        // at least one lazy rebucket; order must stay exact.
+        for backend in BACKENDS {
+            let mut sim: Sim<usize> = Sim::with_backend(backend);
+            let mut times: Vec<f64> = Vec::new();
+            let mut x = 0.001f64;
+            while x < 1.0e9 {
+                times.push(x);
+                times.push(x); // ties at every scale
+                x *= 3.7;
+            }
+            for (i, t) in times.iter().enumerate() {
+                sim.schedule_at(*t, i);
+            }
+            let mut seen = Vec::new();
+            sim.run(|_, t, e| {
+                seen.push((t.secs(), e));
+                true
+            });
+            let mut expect: Vec<(f64, usize)> =
+                times.iter().copied().zip(0..times.len()).collect();
+            expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            assert_eq!(seen, expect, "{backend:?}");
+            assert_eq!(sim.pending(), 0, "{backend:?}");
+        }
+    }
+
+    #[test]
     fn clock_monotonic_property() {
         crate::prop::check_default(
             |rng| {
@@ -311,6 +731,77 @@ mod tests {
                     Ok(())
                 } else {
                     Err("time went backwards".into())
+                }
+            },
+        );
+    }
+
+    /// Randomized program interpreted on both backends: schedules with
+    /// tie-heavy delays, absolute times, zero delays, and front-lane
+    /// pushes from inside handlers. The full pop sequences (time bits +
+    /// event id) must be bit-identical — this is the heap-vs-wheel
+    /// oracle the engine swap rests on.
+    #[test]
+    fn wheel_pop_sequence_is_bit_identical_to_heap_reference() {
+        // Tie-heavy grid: duplicates at several magnitudes plus far
+        // futures that force the overflow tier.
+        const DELAYS: [f64; 8] = [0.0, 0.0, 0.25, 1.0, 1.0, 3.5, 1.0e4, 1.0e7];
+
+        fn interpret(
+            backend: QueueBackend,
+            initial: &[usize],
+            reactions: &[(u8, usize)],
+        ) -> Vec<(u64, u32)> {
+            let mut sim: Sim<u32> = Sim::with_backend(backend);
+            for (i, d) in initial.iter().enumerate() {
+                sim.schedule(DELAYS[*d % DELAYS.len()], i as u32);
+            }
+            let mut next_id = initial.len() as u32;
+            let mut ri = 0usize;
+            let mut out = Vec::new();
+            sim.run(|sim, t, e| {
+                out.push((t.secs().to_bits(), e));
+                if ri < reactions.len() {
+                    let (kind, d) = reactions[ri];
+                    ri += 1;
+                    let delay = DELAYS[d % DELAYS.len()];
+                    match kind % 4 {
+                        0 => sim.schedule(delay, next_id),
+                        1 => sim.schedule(0.0, next_id),
+                        2 => sim.schedule_at(sim.now() + delay, next_id),
+                        _ => sim.schedule_front(next_id),
+                    }
+                    next_id += 1;
+                }
+                true
+            });
+            assert_eq!(sim.pending(), 0);
+            out
+        }
+
+        crate::prop::check(
+            crate::prop::Config { cases: 96, seed: 0x11EE1 },
+            |rng| {
+                let initial: Vec<usize> = (0..crate::prop::gen::usize_in(rng, 1, 60))
+                    .map(|_| rng.below(1 << 16) as usize)
+                    .collect();
+                let reactions: Vec<(u8, usize)> = (0..crate::prop::gen::usize_in(rng, 0, 80))
+                    .map(|_| (rng.below(256) as u8, rng.below(1 << 16) as usize))
+                    .collect();
+                (initial, reactions)
+            },
+            |(initial, reactions)| {
+                let wheel = interpret(QueueBackend::Wheel, initial, reactions);
+                let heap = interpret(QueueBackend::Heap, initial, reactions);
+                if wheel == heap {
+                    Ok(())
+                } else {
+                    let i = wheel.iter().zip(&heap).position(|(a, b)| a != b);
+                    Err(format!(
+                        "pop sequences diverge (lens {} vs {}, first mismatch at {i:?})",
+                        wheel.len(),
+                        heap.len()
+                    ))
                 }
             },
         );

@@ -209,6 +209,10 @@ pub struct SimStore {
     /// PDs currently unavailable (storage outage): they serve no
     /// transfers and accept no placements until restored.
     down: BTreeSet<String>,
+    /// Count of PDs with a quota set — lets [`SimStore::any_quota`]
+    /// answer in O(1) so quota-less testbeds skip per-placement
+    /// capacity scans entirely.
+    quota_count: usize,
 }
 
 impl SimStore {
@@ -217,19 +221,39 @@ impl SimStore {
     }
 
     pub fn add_pd(&mut self, name: &str, endpoint: Endpoint) {
-        self.pds
+        let old = self
+            .pds
             .insert(name.to_string(), SimPd { name: name.to_string(), endpoint, quota: None });
+        // Re-registering replaces the entry quota-less; keep the O(1)
+        // quota counter honest.
+        if old.map_or(false, |p| p.quota.is_some()) {
+            self.quota_count -= 1;
+        }
     }
 
     /// Set (or clear) a PD's storage quota. Shrinking below the
     /// current occupancy does not evict anything retroactively; the
     /// next [`SimStore::try_place`] faces the pressure.
     pub fn set_quota(&mut self, pd: &str, quota: Option<Bytes>) -> anyhow::Result<()> {
-        self.pds
+        let slot = &mut self
+            .pds
             .get_mut(pd)
             .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{pd}'"))?
-            .quota = quota;
+            .quota;
+        match (slot.is_some(), quota.is_some()) {
+            (false, true) => self.quota_count += 1,
+            (true, false) => self.quota_count -= 1,
+            _ => {}
+        }
+        *slot = quota;
         Ok(())
+    }
+
+    /// `true` if any PD has a quota set (O(1); down PDs still count —
+    /// callers that care filter themselves, and a store whose every
+    /// quota'd PD is down yields the same decisions either way).
+    pub fn any_quota(&self) -> bool {
+        self.quota_count > 0
     }
 
     /// Override the per-attempt transfer failure rate of `pd`'s
@@ -774,6 +798,26 @@ mod tests {
         net.end_flow(&flow);
         assert_eq!(net.congestion_id(a, b), 0);
         assert!(s.staging_cost_flow(&mut net, "du-nope", "pd-gw", "pd-srm", None).is_err());
+    }
+
+    #[test]
+    fn any_quota_counter_tracks_set_clear_and_readd() {
+        let mut s = store_with(&[
+            ("pd-a", "ssh://a/scratch", "xsede/tacc/lonestar"),
+            ("pd-b", "ssh://b/scratch", "xsede/tacc/stampede"),
+        ]);
+        assert!(!s.any_quota());
+        s.set_quota("pd-a", Some(Bytes::gb(5))).unwrap();
+        assert!(s.any_quota());
+        s.set_quota("pd-a", Some(Bytes::gb(7))).unwrap(); // Some→Some: no double count
+        s.set_quota("pd-b", Some(Bytes::gb(1))).unwrap();
+        s.set_quota("pd-a", None).unwrap();
+        assert!(s.any_quota(), "pd-b still bounded");
+        // Re-registering a quota'd PD replaces it quota-less.
+        s.add_pd("pd-b", Endpoint::new("ssh://b/scratch", "xsede/tacc/stampede").unwrap());
+        assert!(!s.any_quota());
+        s.set_quota("pd-a", None).unwrap(); // None→None: stays balanced
+        assert!(!s.any_quota());
     }
 
     #[test]
