@@ -1,0 +1,74 @@
+//! Open-loop bench: drives the DES with generator-based Poisson
+//! arrivals through the M/M/c validation tiers (ρ = 0.3 / 0.6 / 0.9
+//! stable, ρ = 1.5 unstable) and emits `BENCH_openloop.json` with
+//! per-tier events/sec, measured vs Erlang-C mean wait, utilization,
+//! and backlog statistics.
+//!
+//! Set `PD_BENCH_OPENLOOP_OUT` to change the output path and
+//! `PD_BENCH_QUICK=1` for the reduced CI tiers.
+//!
+//! Run with: `cargo bench --bench openloop`
+
+use pilot_data::experiments::openloop::{
+    run_mmc, MmcConfig, MMC_MU, MMC_SLOTS, STABLE_TIERS, UNSTABLE_TIER,
+};
+
+fn main() {
+    let quick = std::env::var("PD_BENCH_QUICK").is_ok();
+    let (arrivals, warmup) = if quick { (2_000, 400) } else { (20_000, 4_000) };
+    println!(
+        "# Open-loop M/M/c sweep (c={MMC_SLOTS}, mu={MMC_MU:.4}/s, {arrivals} arrivals/tier, seed 42)"
+    );
+    println!(
+        "{:<8}{:>10}{:>12}{:>14}{:>14}{:>12}{:>14}{:>14}{:>12}{:>12}",
+        "rho", "util", "Wq_meas(s)", "Wq_erlang(s)", "backlog_mean", "backlog_max", "events",
+        "events/s", "arrivals", "wall(s)"
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for rho in STABLE_TIERS.into_iter().chain([UNSTABLE_TIER]) {
+        let cfg = MmcConfig::new(MMC_SLOTS, rho, MMC_MU, arrivals, warmup, 42);
+        let r = run_mmc(&cfg).expect("open-loop run failed");
+        let analytic = if r.analytic_wait_mean.is_finite() {
+            format!("{:>14.2}", r.analytic_wait_mean)
+        } else {
+            format!("{:>14}", "unstable")
+        };
+        println!(
+            "{:<8.2}{:>10.3}{:>12.2}{analytic}{:>14.1}{:>12.0}{:>14}{:>14.0}{:>12}{:>12.3}",
+            r.rho,
+            r.measured_util,
+            r.measured_wait_mean,
+            r.backlog_mean,
+            r.backlog_max,
+            r.events,
+            r.events_per_sec,
+            r.arrivals,
+            r.wall_s
+        );
+        // Tag like rho_030 / rho_150 (two decimals, dot stripped).
+        let tag = format!("rho_{:03}", (rho * 100.0).round() as u64);
+        results.push((format!("{tag} events"), r.events as f64));
+        results.push((format!("{tag} events_per_sec"), r.events_per_sec));
+        results.push((format!("{tag} util"), r.measured_util));
+        results.push((format!("{tag} wait_mean_s"), r.measured_wait_mean));
+        results.push((format!("{tag} wait_p95_s"), r.wait_p95));
+        if r.analytic_wait_mean.is_finite() {
+            results.push((format!("{tag} wait_analytic_s"), r.analytic_wait_mean));
+        }
+        results.push((format!("{tag} backlog_mean"), r.backlog_mean));
+        results.push((format!("{tag} backlog_max"), r.backlog_max));
+        results.push((format!("{tag} wall_s"), r.wall_s));
+    }
+
+    let out =
+        std::env::var("PD_BENCH_OPENLOOP_OUT").unwrap_or_else(|_| "BENCH_openloop.json".into());
+    let mut obj = pilot_data::json::Json::obj();
+    for (name, v) in &results {
+        obj = obj.set(name.as_str(), *v);
+    }
+    match std::fs::write(&out, obj.to_string_pretty()) {
+        Ok(()) => println!("\n[json] {out}"),
+        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
+    }
+}

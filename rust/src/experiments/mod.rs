@@ -21,7 +21,10 @@
 //! lossy links) and reports the fault-lifecycle cost, and `scale`
 //! extends fig11's flat-overhead argument to production fleet sizes
 //! (up to 10⁴ pilots / 10⁶ CUs+DUs), reporting DES events/sec, peak
-//! RSS, and makespan per tier.
+//! RSS, and makespan per tier. `openloop` drives the system with
+//! generator-based stochastic arrivals and validates the measured
+//! queueing behavior (utilization, mean wait, backlog growth) against
+//! the Erlang-C closed form per load tier ρ.
 
 pub mod simdrive;
 pub mod fig7;
@@ -29,6 +32,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod fig11;
 pub mod modes;
+pub mod openloop;
 pub mod resilience;
 pub mod scale;
 pub mod table1;
@@ -48,15 +52,16 @@ pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
         "fig12" => fig11::run_fig12(seed),
         "fig13" => fig11::run_fig13(seed),
         "modes" => modes::run(seed),
+        "openloop" => openloop::run(seed),
         "resilience" => resilience::run(seed),
         "scale" => scale::run(seed),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, resilience, scale)"
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, openloop, resilience, scale)"
         ),
     }
 }
 
-pub const ALL: [&str; 11] = [
+pub const ALL: [&str; 12] = [
     "table1",
     "fig7",
     "fig8",
@@ -66,6 +71,7 @@ pub const ALL: [&str; 11] = [
     "fig12",
     "fig13",
     "modes",
+    "openloop",
     "resilience",
     "scale",
 ];

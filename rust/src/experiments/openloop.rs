@@ -1,0 +1,396 @@
+//! Open-loop queueing validation: the DES against the M/M/c closed
+//! form.
+//!
+//! Every other experiment replays a closed batch. This one drives the
+//! full pilot system — scheduler, two-queue pull protocol, multi-slot
+//! agents, cost model — with generator-driven Poisson arrivals
+//! ([`crate::workload::openloop`]) and checks the *measured* queueing
+//! behavior against an analytic oracle:
+//!
+//! * 1 site, one pilot with `c` one-core slots;
+//! * Poisson arrivals at rate λ, exponential service at rate μ
+//!   (`cpu_secs_hint ~ Exp(1/μ)` on a speed-1.0 machine with no I/O
+//!   term and `runtime_variance = (1.0, 1.0)`);
+//! * affinity-free compute-only CUs, which the scheduler provably
+//!   routes to the single global FIFO queue.
+//!
+//! That configuration *is* an M/M/c queue, so measured utilization
+//! must match ρ = λ/(cμ) and the mean wait-in-queue must match
+//! Erlang-C (`W_q = C(c, λ/μ) / (cμ − λ)`) within statistical
+//! tolerance — a correctness check of the whole event pipeline that
+//! bit-identity properties cannot provide (they would bless a
+//! consistently-wrong engine). A ρ > 1 tier must instead show the
+//! textbook instability signature: backlog growing linearly at rate
+//! λ − cμ for as long as arrivals continue.
+
+use crate::batch::{BatchState, Machine, QueueModel};
+use crate::config::Testbed;
+use crate::experiments::simdrive::SimSystem;
+use crate::metrics::{CuRecord, Table};
+use crate::net::{Bandwidth, Network};
+use crate::simtime::QueueBackend;
+use crate::storage::{simstore::SimStore, Endpoint};
+use crate::topology::{Label, Topology};
+use crate::util::{mean, percentile};
+use crate::workload::openloop::{mmc_mean_wait, OpenLoopSpec, TenantSpec};
+
+/// Single-site testbed for the M/M/c shape: one machine with `c`
+/// cores, one quota-less scratch PD, and a near-instant batch queue
+/// (the pilot is Active about 2 s in; arrivals start only after).
+pub fn mmc_testbed(c: u32) -> Testbed {
+    let topo = Topology::new();
+    let mut net = Network::new();
+    net.set_default_uplink(Bandwidth::mbps(1_000.0));
+    let machines = vec![Machine::new("site", "grid/site", c)
+        .with_queue(QueueModel::with_mean(0.0, 1.0, 0.1))
+        .with_fs_bandwidth(Bandwidth::mbps(100_000.0))];
+    let batch = BatchState::new(machines);
+    let mut store = SimStore::new();
+    store.add_pd("scratch", Endpoint::new("ssh://site/scratch/pd", "grid/site").unwrap());
+    let gateway = Label::new("grid/site");
+    Testbed { topo, net, batch, store, gateway }
+}
+
+/// One M/M/c run's configuration.
+#[derive(Debug, Clone)]
+pub struct MmcConfig {
+    /// Server count: one pilot with `c` one-core slots.
+    pub c: u32,
+    /// Offered load ρ = λ/(cμ). Values ≥ 1 are legal — that's the
+    /// instability tier — but then no analytic wait exists.
+    pub rho: f64,
+    /// Service rate (1/mean service seconds).
+    pub mu: f64,
+    /// Total arrivals to generate.
+    pub arrivals: u64,
+    /// Arrivals discarded from the wait/backlog statistics (transient
+    /// warm-up; the run still executes them).
+    pub warmup: u64,
+    pub seed: u64,
+    pub backend: QueueBackend,
+}
+
+impl MmcConfig {
+    pub fn new(c: u32, rho: f64, mu: f64, arrivals: u64, warmup: u64, seed: u64) -> MmcConfig {
+        MmcConfig { c, rho, mu, arrivals, warmup, seed, backend: QueueBackend::Wheel }
+    }
+}
+
+/// Measured vs analytic results of one M/M/c tier.
+#[derive(Debug, Clone)]
+pub struct MmcResult {
+    pub rho: f64,
+    pub lambda: f64,
+    pub mu: f64,
+    pub c: u32,
+    pub arrivals: u64,
+    /// Mean wait-in-queue over post-warmup arrivals (T_Q).
+    pub measured_wait_mean: f64,
+    pub wait_p95: f64,
+    /// Erlang-C mean wait; NaN for ρ ≥ 1 (no steady state exists).
+    pub analytic_wait_mean: f64,
+    /// Busy-slot fraction of the pilot, time-averaged over the arrival
+    /// window.
+    pub measured_util: f64,
+    /// Mean waiting-CU backlog over post-warmup arrival-instant
+    /// samples (PASTA).
+    pub backlog_mean: f64,
+    pub backlog_max: f64,
+    /// Mean backlog per quarter of the arrival sequence — the
+    /// instability probe: strictly increasing when ρ > 1.
+    pub backlog_quarters: [f64; 4],
+    pub events: u64,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+}
+
+/// Run one M/M/c-shaped open-loop tier end to end through the DES and
+/// collect the queueing statistics. Every arrival's CU completes
+/// before this returns (arrivals are bounded; the backlog drains).
+pub fn run_mmc(cfg: &MmcConfig) -> anyhow::Result<MmcResult> {
+    anyhow::ensure!(cfg.c > 0 && cfg.mu > 0.0 && cfg.rho > 0.0, "degenerate M/M/c config");
+    anyhow::ensure!(cfg.warmup < cfg.arrivals, "warm-up swallows every arrival");
+    let lambda = cfg.rho * cfg.c as f64 * cfg.mu;
+    let started = std::time::Instant::now();
+
+    let mut sys = SimSystem::new(mmc_testbed(cfg.c), cfg.seed).with_sim_backend(cfg.backend);
+    sys.zero_transfer_faults();
+    sys.runtime_variance = (1.0, 1.0); // undistorted exponential service
+    sys.queueing_telemetry = true;
+    sys.event_budget = (cfg.arrivals * 40).max(2_000_000);
+    let pilot = sys.submit_pilot("site", cfg.c, "scratch")?;
+    sys.run()?; // pilot Active before measurement starts
+
+    let t_open = sys.sim.now();
+    let spec = OpenLoopSpec {
+        tenants: vec![TenantSpec::poisson("mmc", lambda, 1.0 / cfg.mu)],
+        max_arrivals_per_tenant: Some(cfg.arrivals),
+        horizon_s: None,
+    };
+    // The arrival streams key off their own seed space; xor keeps them
+    // decoupled from the system stream without a second seed knob.
+    sys.start_open_loop(spec, cfg.seed ^ 0x6f70_656e);
+    sys.run()?;
+    anyhow::ensure!(sys.state.workload_finished(), "open-loop workload did not drain");
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    let mut by_submit: Vec<&CuRecord> = sys.metrics.cu_records.iter().collect();
+    anyhow::ensure!(
+        by_submit.len() as u64 == cfg.arrivals,
+        "completed {} of {} arrivals",
+        by_submit.len(),
+        cfg.arrivals
+    );
+    // Records land in completion order; the warm-up cut is by
+    // submission order.
+    by_submit.sort_by(|a, b| a.t_submitted.total_cmp(&b.t_submitted));
+    let waits: Vec<f64> =
+        by_submit.iter().skip(cfg.warmup as usize).map(|r| r.wait_s()).collect();
+    let t_last_arrival = by_submit.last().map(|r| r.t_submitted).unwrap_or(t_open);
+
+    let measured_util = sys
+        .metrics
+        .get_series(&format!("busy:{pilot}"))
+        .map(|s| s.time_weighted_mean(t_open, t_last_arrival))
+        .unwrap_or(0.0)
+        / cfg.c as f64;
+
+    let depth_pts: Vec<(f64, f64)> = sys
+        .metrics
+        .get_series("queue_depth")
+        .map(|s| s.points().to_vec())
+        .unwrap_or_default();
+    let depths: Vec<f64> = depth_pts.iter().map(|p| p.1).collect();
+    let post_warmup: Vec<f64> = depths.iter().copied().skip(cfg.warmup as usize).collect();
+    let q = depths.len() / 4;
+    let mut backlog_quarters = [0.0f64; 4];
+    for (i, slot) in backlog_quarters.iter_mut().enumerate() {
+        let lo = i * q;
+        let hi = if i == 3 { depths.len() } else { (i + 1) * q };
+        *slot = mean(&depths[lo..hi]);
+    }
+
+    let events = sys.sim.processed();
+    Ok(MmcResult {
+        rho: cfg.rho,
+        lambda,
+        mu: cfg.mu,
+        c: cfg.c,
+        arrivals: cfg.arrivals,
+        measured_wait_mean: mean(&waits),
+        wait_p95: percentile(&waits, 95.0),
+        analytic_wait_mean: if cfg.rho < 1.0 {
+            mmc_mean_wait(lambda, cfg.mu, cfg.c as usize)
+        } else {
+            f64::NAN
+        },
+        measured_util,
+        backlog_mean: mean(&post_warmup),
+        backlog_max: depths.iter().copied().fold(0.0, f64::max),
+        backlog_quarters,
+        events,
+        wall_s,
+        events_per_sec: events as f64 / wall_s,
+    })
+}
+
+/// Tolerance check for a stable tier: `|measured − analytic|` within a
+/// combined relative + absolute band sized for the sampling noise of
+/// ~10⁴ autocorrelated waits (≳5σ at ρ = 0.9, far wider than any real
+/// engine bug would land).
+pub fn validate_stable_tier(r: &MmcResult) -> anyhow::Result<()> {
+    anyhow::ensure!(r.rho < 1.0, "validate_stable_tier needs ρ < 1");
+    let wait_tol = 0.35 * r.analytic_wait_mean + 1.0;
+    let wait_err = (r.measured_wait_mean - r.analytic_wait_mean).abs();
+    anyhow::ensure!(
+        wait_err <= wait_tol,
+        "ρ={}: mean wait {:.2}s vs Erlang-C {:.2}s (tolerance {:.2}s)",
+        r.rho,
+        r.measured_wait_mean,
+        r.analytic_wait_mean,
+        wait_tol
+    );
+    let util_tol = 0.12 * r.rho + 0.04;
+    let util_err = (r.measured_util - r.rho).abs();
+    anyhow::ensure!(
+        util_err <= util_tol,
+        "ρ={}: utilization {:.3} vs offered load {:.3} (tolerance {:.3})",
+        r.rho,
+        r.measured_util,
+        r.rho,
+        util_tol
+    );
+    Ok(())
+}
+
+/// Default validation shape: c = 4 slots, 60 s mean service.
+pub const MMC_SLOTS: u32 = 4;
+pub const MMC_MU: f64 = 1.0 / 60.0;
+/// Stable tiers validated against Erlang-C, plus the instability tier.
+pub const STABLE_TIERS: [f64; 3] = [0.3, 0.6, 0.9];
+pub const UNSTABLE_TIER: f64 = 1.5;
+
+/// `exp openloop`: the validation sweep as a table.
+pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+    run_with(seed, 6_000, 1_000)
+}
+
+/// Parameterized sweep used by `run` and the bench/tests.
+pub fn run_with(seed: u64, arrivals: u64, warmup: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Open-loop M/M/c validation: measured vs Erlang-C per load tier",
+        &[
+            "rho", "lambda (1/s)", "arrivals", "util meas", "W_q meas (s)", "W_q Erlang-C (s)",
+            "W_q p95 (s)", "backlog mean", "backlog max", "events", "events/s",
+        ],
+    );
+    for rho in STABLE_TIERS.into_iter().chain([UNSTABLE_TIER]) {
+        let r = run_mmc(&MmcConfig::new(MMC_SLOTS, rho, MMC_MU, arrivals, warmup, seed))?;
+        t.row(vec![
+            format!("{rho:.2}"),
+            format!("{:.4}", r.lambda),
+            r.arrivals.to_string(),
+            format!("{:.3}", r.measured_util),
+            format!("{:.2}", r.measured_wait_mean),
+            if r.analytic_wait_mean.is_finite() {
+                format!("{:.2}", r.analytic_wait_mean)
+            } else {
+                "unstable".into()
+            },
+            format!("{:.2}", r.wait_p95),
+            format!("{:.1}", r.backlog_mean),
+            format!("{:.0}", r.backlog_max),
+            r.events.to_string(),
+            format!("{:.0}", r.events_per_sec),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::openloop::{ArrivalProcess, Dist};
+
+    /// The headline acceptance test: measured utilization and mean
+    /// wait match the Erlang-C closed form at every stable tier.
+    #[test]
+    fn mmc_validation_matches_erlang_c_across_stable_tiers() {
+        for rho in STABLE_TIERS {
+            let cfg = MmcConfig::new(MMC_SLOTS, rho, MMC_MU, 10_000, 2_000, 42);
+            let r = run_mmc(&cfg).unwrap();
+            validate_stable_tier(&r).unwrap();
+        }
+    }
+
+    /// ρ > 1 has no steady state: the backlog must grow monotonically
+    /// across the arrival sequence, at roughly the drift λ − cμ.
+    #[test]
+    fn unstable_tier_grows_backlog_without_bound() {
+        let cfg = MmcConfig::new(MMC_SLOTS, UNSTABLE_TIER, MMC_MU, 4_000, 0, 43);
+        let r = run_mmc(&cfg).unwrap();
+        let q = r.backlog_quarters;
+        assert!(
+            q[0] < q[1] && q[1] < q[2] && q[2] < q[3],
+            "backlog quarters not monotone: {q:?}"
+        );
+        // Drift check: λ − cμ = cμ(ρ − 1) = 4/60 · 0.5 per second over
+        // ~40,000 s of arrivals ⇒ final backlog in the thousands. Even
+        // a loose floor separates drift from noise.
+        assert!(q[3] > 100.0, "final-quarter backlog too small: {}", q[3]);
+        assert!(r.backlog_max > q[3], "max must top the quarter mean");
+        assert!(r.analytic_wait_mean.is_nan(), "no analytic wait exists past ρ=1");
+    }
+
+    /// Mixed multi-tenant open-loop trace for the determinism tests:
+    /// Poisson, deterministic, and diurnal tenants, one of them
+    /// carrying heavy-tailed DU payloads.
+    fn mixed_trace(backend: QueueBackend, seed: u64) -> (u64, Vec<(String, [u64; 4])>, Vec<Vec<(u64, u64)>>) {
+        let mut sys = SimSystem::new(mmc_testbed(8), seed).with_sim_backend(backend);
+        sys.zero_transfer_faults();
+        sys.runtime_variance = (1.0, 1.0);
+        sys.queueing_telemetry = true;
+        sys.submit_pilot("site", 8, "scratch").unwrap();
+        sys.run().unwrap();
+        let spec = OpenLoopSpec {
+            tenants: vec![
+                TenantSpec::poisson("poisson", 0.05, 40.0),
+                TenantSpec {
+                    name: "steady".into(),
+                    arrivals: ArrivalProcess::Deterministic { rate: 0.02 },
+                    service: Dist::LogNormal { mu: 3.0, sigma: 0.8 },
+                    batch: 2,
+                    cores: 1,
+                    du: None,
+                },
+                TenantSpec {
+                    name: "bursty".into(),
+                    arrivals: ArrivalProcess::Diurnal {
+                        base_rate: 0.03,
+                        amplitude: 0.9,
+                        period_s: 600.0,
+                    },
+                    service: Dist::Exp { mean: 30.0 },
+                    batch: 1,
+                    cores: 2,
+                    du: Some((Dist::LogNormal { mu: 16.0, sigma: 1.0 }, "scratch".into())),
+                },
+            ],
+            max_arrivals_per_tenant: Some(60),
+            horizon_s: None,
+        };
+        sys.start_open_loop(spec, seed);
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        // Ids differ across runs in one process (global counter), so
+        // the trace compares times/machines/series, never ids.
+        let recs = sys
+            .metrics
+            .cu_records
+            .iter()
+            .map(|r| {
+                (
+                    r.machine.clone(),
+                    [
+                        r.t_submitted.to_bits(),
+                        r.t_start.to_bits(),
+                        r.t_end.to_bits(),
+                        r.staging_s.to_bits(),
+                    ],
+                )
+            })
+            .collect();
+        let series = sys
+            .metrics
+            .series
+            .values()
+            .map(|s| s.points().iter().map(|&(t, v)| (t.to_bits(), v.to_bits())).collect())
+            .collect();
+        (sys.sim.processed(), recs, series)
+    }
+
+    #[test]
+    fn open_loop_traces_are_bit_identical_per_seed() {
+        let a = mixed_trace(QueueBackend::Wheel, 7);
+        let b = mixed_trace(QueueBackend::Wheel, 7);
+        assert_eq!(a, b, "same seed, same backend must be bit-identical");
+        let c = mixed_trace(QueueBackend::Wheel, 8);
+        assert_ne!(a.1, c.1, "seed must matter");
+    }
+
+    #[test]
+    fn open_loop_traces_match_across_queue_backends() {
+        let wheel = mixed_trace(QueueBackend::Wheel, 11);
+        let heap = mixed_trace(QueueBackend::Heap, 11);
+        assert_eq!(wheel, heap, "wheel and heap backends must agree bit-for-bit");
+    }
+
+    #[test]
+    fn validation_table_has_all_tiers() {
+        let tables = run_with(1, 400, 50).unwrap();
+        assert_eq!(tables.len(), 1);
+        // Three stable tiers + the unstable one.
+        assert_eq!(tables[0].rows.len(), 4);
+        assert!(tables[0].rows[3][5].contains("unstable"));
+    }
+}

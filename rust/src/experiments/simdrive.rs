@@ -98,6 +98,12 @@ pub enum Ev {
     /// availability is published on the event layer and the active
     /// execution mode re-balances onto the recovered capacity.
     PdUp { pd: String },
+    /// Open-loop arrival: one tenant's next stochastic submission is
+    /// due (see [`crate::workload::openloop`]). The handler asks the
+    /// generator for the arrival's batch, pre-places any DUs it
+    /// brings, feeds the CUs through [`SimSystem::submit_cus`], and
+    /// schedules the tenant's next arrival.
+    ArrivalDue { tenant: usize },
 }
 
 /// How failed transfer attempts are modeled (see `faults` module docs).
@@ -257,6 +263,22 @@ pub struct SimSystem {
     /// Hard event budget for [`SimSystem::run`] — guards against
     /// accidental infinite self-rescheduling. Scale sweeps raise it.
     pub event_budget: u64,
+    /// Open-loop arrival engine (`None`: closed-batch workloads).
+    /// Installed by [`SimSystem::start_open_loop`].
+    open_loop: Option<crate::workload::openloop::OpenLoopRun>,
+    /// Uniform multiplier range applied to every CU runtime (the BWA
+    /// runtime variance behind the paper's Fig. 12 error bars).
+    /// `(1.0, 1.0)` yields exactly the cost model's runtime — the
+    /// M/M/c validation needs undistorted exponential service. The
+    /// draw is consumed either way, so changing the range never shifts
+    /// the RNG stream shape.
+    pub runtime_variance: (f64, f64),
+    /// Record queueing telemetry into `metrics.series`: waiting-CU
+    /// backlog sampled at each open-loop arrival instant
+    /// (`queue_depth`) and per-pilot busy-slot step series
+    /// (`busy:<pilot>`). Off by default so closed-batch experiments
+    /// and the scale sweep don't pay the sampling cost.
+    pub queueing_telemetry: bool,
 }
 
 impl SimSystem {
@@ -303,6 +325,9 @@ impl SimSystem {
             capacity_aware_scheduling: true,
             defer_wakeups: false,
             event_budget: 2_000_000,
+            open_loop: None,
+            runtime_variance: (0.75, 1.40),
+            queueing_telemetry: false,
         }
     }
 
@@ -729,6 +754,47 @@ impl SimSystem {
         }
     }
 
+    /// Install an open-loop workload (see [`crate::workload::openloop`])
+    /// and schedule every tenant's first arrival. Arrivals are relative
+    /// to the current simulated instant; run the sim to let them land.
+    /// Each tenant draws from its own [`crate::rng::Rng::stream`] keyed
+    /// off `seed` and the tenant name, so a tenant's arrival/demand
+    /// sequence is invariant to the rest of the population.
+    pub fn start_open_loop(&mut self, spec: crate::workload::openloop::OpenLoopSpec, seed: u64) {
+        let t0 = self.sim.now();
+        let mut run = crate::workload::openloop::OpenLoopRun::new(spec, seed, t0);
+        for tenant in 0..run.tenant_count() {
+            let delay = run.first_delay(tenant);
+            self.sim.schedule(delay, Ev::ArrivalDue { tenant });
+        }
+        self.open_loop = Some(run);
+    }
+
+    /// Arrivals generated so far by the open-loop engine (0 when none
+    /// is installed).
+    pub fn open_loop_arrivals(&self) -> u64 {
+        self.open_loop.as_ref().map_or(0, |r| r.total_arrivals())
+    }
+
+    /// CUs waiting right now: every agent queue plus the global queue
+    /// (dispatched/running CUs are no longer waiting).
+    pub fn queued_depth(&self) -> usize {
+        let own: usize = self.state.queue_depths().values().sum();
+        own + self.store.llen_k(&self.global_q).unwrap_or(0)
+    }
+
+    /// Sample a pilot's busy-slot level into the telemetry series
+    /// (no-op unless `queueing_telemetry` is on). Called at every
+    /// busy-slot edge a CU can cause: dispatch, staging failure,
+    /// completion.
+    fn note_busy(&mut self, now: f64, pilot: &str) {
+        if !self.queueing_telemetry {
+            return;
+        }
+        let busy = self.state.pilots[pilot].busy_slots;
+        self.metrics.sample_series(&format!("busy:{pilot}"), now, busy as f64);
+    }
+
     /// Submit a CU through the scheduler.
     pub fn submit_cu(&mut self, descr: ComputeUnitDescription) -> anyhow::Result<String> {
         let mut cu = ComputeUnit::new(descr);
@@ -1151,6 +1217,7 @@ impl SimSystem {
                     let c = self.state.cus.get_mut(&cu).unwrap();
                     let cores = c.description.cores.max(1);
                     self.state.pilots.get_mut(&pilot_id).unwrap().busy_slots -= cores;
+                    self.note_busy(now, &pilot_id);
                     let c = self.state.cus.get_mut(&cu).unwrap();
                     if give_up {
                         c.error = Some("input staging failed permanently".into());
@@ -1235,7 +1302,12 @@ impl SimSystem {
                     c.description.io_bytes_hint,
                     m.speed_factor,
                     fs_share,
-                ) * self.rng.range_f64(0.75, 1.40); // BWA runtime variance (paper Fig. 12 error bars)
+                ) * {
+                    let (lo, hi) = self.runtime_variance;
+                    // BWA runtime variance (paper Fig. 12 error bars);
+                    // (1.0, 1.0) for analytically exact service times.
+                    self.rng.range_f64(lo, hi)
+                };
                 self.metrics.mark(now, &home.machine, TimelineEvent::CuStarted);
                 self.sim.schedule(runtime, Ev::CuDone { cu });
             }
@@ -1265,6 +1337,7 @@ impl SimSystem {
                 self.metrics.record_cu(rec);
                 self.metrics.mark(now, &home.machine, TimelineEvent::CuFinished);
                 self.state.pilots.get_mut(&pilot_id).unwrap().busy_slots -= cores;
+                self.note_busy(now, &pilot_id);
                 self.sim.schedule(0.0, Ev::TryPull { pilot: pilot_id });
             }
 
@@ -1329,6 +1402,50 @@ impl SimSystem {
                 if let Ok(p) = self.tb.store.pd(&pd) {
                     let label = p.endpoint.label.clone();
                     self.wake_pilots_for_du(&label);
+                }
+            }
+
+            Ev::ArrivalDue { tenant } => {
+                // Take the run out so the generator borrow can't alias
+                // the submission path; re-installed before submitting.
+                let Some(mut run) = self.open_loop.take() else {
+                    return Ok(()); // no open-loop workload installed
+                };
+                if self.queueing_telemetry {
+                    // Arrival-instant backlog sample, taken *before*
+                    // this batch joins the queues. Under Poisson
+                    // arrivals these samples are PASTA-unbiased
+                    // estimates of the time-average queue depth.
+                    let depth = self.queued_depth();
+                    self.metrics.sample_series("queue_depth", now, depth as f64);
+                }
+                let batch = run.next_batch(tenant, now);
+                if let Some(next_in) = batch.next_in {
+                    self.sim.schedule(next_in, Ev::ArrivalDue { tenant });
+                }
+                self.open_loop = Some(run);
+                // The arrival's data lands first (pre-placed, instant),
+                // then its minted ids replace the `@i` placeholders in
+                // the CUs' inputs.
+                let mut du_ids = Vec::with_capacity(batch.dus.len());
+                for (descr, pd) in &batch.dus {
+                    du_ids.push(self.place_du_instant(descr, pd)?);
+                }
+                let mut cus = batch.cus;
+                for cu in &mut cus {
+                    for input in &mut cu.input_data {
+                        if let Some(ix) =
+                            input.strip_prefix('@').and_then(|s| s.parse::<usize>().ok())
+                        {
+                            let id = du_ids.get(ix).ok_or_else(|| {
+                                anyhow::anyhow!("arrival batch references unknown DU @{ix}")
+                            })?;
+                            *input = id.clone();
+                        }
+                    }
+                }
+                if !cus.is_empty() {
+                    self.submit_cus(cus)?;
                 }
             }
         }
@@ -1471,6 +1588,7 @@ impl SimSystem {
         let pilot_label = self.tb.batch.machine(&home.machine)?.label.clone();
         let cores = self.state.cus[cu_id].description.cores.max(1);
         self.state.pilots.get_mut(pilot).unwrap().busy_slots += cores;
+        self.note_busy(now, pilot);
         let busy = self.state.pilots[pilot].busy_slots;
         let peak = self.max_busy.entry(pilot.to_string()).or_insert(0);
         if busy > *peak {

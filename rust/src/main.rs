@@ -19,7 +19,8 @@ fn usage() -> ! {
         "usage: pilot-data <command>\n\
          \n\
          commands:\n\
-           exp <id|all> [--seed N] [--results DIR]   regenerate table1 / fig7..fig13 / modes\n\
+           exp <id|all> [--seed N] [--results DIR]   regenerate table1 / fig7..fig13 / modes /\n\
+                                                      openloop / resilience / scale\n\
            align [--artifacts DIR] [--reads N] [--pilots N]  local-mode alignment demo\n\
            capabilities                               print storage adaptor registry\n"
     );

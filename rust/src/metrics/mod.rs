@@ -22,6 +22,87 @@ impl CuRecord {
     pub fn total_s(&self) -> f64 {
         self.t_end - self.t_start
     }
+
+    /// Wait in queue before dispatch (the T_Q term of the timing
+    /// decomposition): submission to the start of input staging.
+    pub fn wait_s(&self) -> f64 {
+        self.t_start - self.t_submitted
+    }
+}
+
+/// A right-continuous step function recorded as `(t, value)` points:
+/// the series holds `value` from `t` until the next point. Backs the
+/// open-loop queueing telemetry (queue-depth and per-pilot busy-slot
+/// series) and its time-weighted utilization means.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct StepSeries {
+    pts: Vec<(f64, f64)>,
+}
+
+impl StepSeries {
+    /// Record the value taking effect at `t`. Timestamps must be
+    /// non-decreasing (the DES emits them in order; asserted in debug
+    /// builds). Same-instant updates overwrite the previous point —
+    /// only the settled level at each instant counts.
+    pub fn push(&mut self, t: f64, v: f64) {
+        if let Some(last) = self.pts.last_mut() {
+            debug_assert!(t >= last.0, "StepSeries time went backwards");
+            if last.0.to_bits() == t.to_bits() {
+                last.1 = v;
+                return;
+            }
+        }
+        self.pts.push((t, v));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.pts
+    }
+
+    /// Last recorded value (0.0 when empty).
+    pub fn last_value(&self) -> f64 {
+        self.pts.last().map(|p| p.1).unwrap_or(0.0)
+    }
+
+    /// Maximum recorded value (0.0 when empty).
+    pub fn max_value(&self) -> f64 {
+        self.pts.iter().map(|p| p.1).fold(0.0, f64::max)
+    }
+
+    /// Time-weighted mean over the window `[a, b]`: the integral of
+    /// the step function divided by the window length. The value in
+    /// force at `a` is the last point at or before it (0.0 before the
+    /// first point). Returns 0.0 for an empty or inverted window.
+    pub fn time_weighted_mean(&self, a: f64, b: f64) -> f64 {
+        if !(b > a) {
+            return 0.0;
+        }
+        let mut integral = 0.0;
+        let mut cur_t = a;
+        let mut cur_v = 0.0;
+        for &(t, v) in &self.pts {
+            if t <= a {
+                cur_v = v;
+                continue;
+            }
+            if t >= b {
+                break;
+            }
+            integral += cur_v * (t - cur_t);
+            cur_t = t;
+            cur_v = v;
+        }
+        integral += cur_v * (b - cur_t);
+        integral / (b - a)
+    }
 }
 
 /// Timeline event kinds for the Fig. 13 time series.
@@ -39,6 +120,10 @@ pub struct RunMetrics {
     pub timeline: Vec<(f64, String, TimelineEvent)>,
     /// Named scalar results (T_D, T_R, makespan, …).
     pub scalars: BTreeMap<String, f64>,
+    /// Named step-function series (`queue_depth`, `busy:<pilot>`, …).
+    /// Empty unless a driver samples into it — the open-loop engine
+    /// does when its telemetry switch is on.
+    pub series: BTreeMap<String, StepSeries>,
 }
 
 impl RunMetrics {
@@ -56,6 +141,27 @@ impl RunMetrics {
 
     pub fn scalar(&self, name: &str) -> f64 {
         *self.scalars.get(name).unwrap_or(&f64::NAN)
+    }
+
+    /// Record a step-series sample (the series is created on first
+    /// use).
+    pub fn sample_series(&mut self, name: &str, t: f64, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, v);
+    }
+
+    /// A recorded step series by name, if any samples landed in it.
+    pub fn get_series(&self, name: &str) -> Option<&StepSeries> {
+        self.series.get(name)
+    }
+
+    /// Per-CU wait in queue (T_Q), in record order.
+    pub fn wait_times(&self) -> Vec<f64> {
+        self.cu_records.iter().map(|r| r.wait_s()).collect()
+    }
+
+    /// Mean wait-in-queue across CU records (0.0 when empty).
+    pub fn mean_wait(&self) -> f64 {
+        mean(&self.wait_times())
     }
 
     /// Makespan across CU records (first submission to last finish).
@@ -92,7 +198,12 @@ impl RunMetrics {
     }
 
     /// Sampled "active CUs" curve: at each event timestamp, how many
-    /// CUs are running (Fig. 13's Active CUs series).
+    /// CUs are running (Fig. 13's Active CUs series). Deltas at the
+    /// same timestamp are coalesced into one point holding the settled
+    /// level — a same-instant finish/start pair contributes no
+    /// transient dip or spike — and the sort is NaN-safe
+    /// (`f64::total_cmp`), so a corrupt timestamp can't panic the
+    /// metrics pass.
     pub fn active_curve(&self) -> Vec<(f64, i64)> {
         let mut deltas: Vec<(f64, i64)> = Vec::new();
         for (t, _, ev) in &self.timeline {
@@ -102,12 +213,15 @@ impl RunMetrics {
                 _ => {}
             }
         }
-        deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut out = Vec::new();
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut out: Vec<(f64, i64)> = Vec::new();
         let mut level = 0i64;
         for (t, d) in deltas {
             level += d;
-            out.push((t, level));
+            match out.last_mut() {
+                Some(last) if last.0.total_cmp(&t).is_eq() => last.1 = level,
+                _ => out.push((t, level)),
+            }
         }
         out
     }
@@ -251,6 +365,70 @@ mod tests {
         m.mark(4.0, "b", TimelineEvent::CuFinished);
         let curve = m.active_curve();
         assert_eq!(curve, vec![(1.0, 1), (2.0, 2), (3.0, 1), (4.0, 0)]);
+    }
+
+    #[test]
+    fn active_curve_coalesces_same_instant_deltas() {
+        let mut m = RunMetrics::default();
+        m.mark(1.0, "a", TimelineEvent::CuStarted);
+        m.mark(2.0, "a", TimelineEvent::CuFinished);
+        m.mark(2.0, "b", TimelineEvent::CuStarted);
+        m.mark(3.0, "b", TimelineEvent::CuFinished);
+        // The finish/start pair at t=2 is one net point at level 1 —
+        // no transient 0 between them.
+        assert_eq!(m.active_curve(), vec![(1.0, 1), (2.0, 1), (3.0, 0)]);
+    }
+
+    #[test]
+    fn active_curve_peak_ignores_transient_same_instant_levels() {
+        let mut m = RunMetrics::default();
+        m.mark(1.0, "a", TimelineEvent::CuStarted);
+        m.mark(2.0, "b", TimelineEvent::CuStarted);
+        m.mark(2.0, "a", TimelineEvent::CuFinished);
+        let curve = m.active_curve();
+        // The start/finish pair at t=2 settles at level 1; the old
+        // implementation emitted a phantom peak of 2.
+        assert_eq!(curve, vec![(1.0, 1), (2.0, 1)]);
+        assert_eq!(curve.iter().map(|&(_, l)| l).max(), Some(1));
+    }
+
+    #[test]
+    fn active_curve_tolerates_nan_timestamps() {
+        let mut m = RunMetrics::default();
+        m.mark(f64::NAN, "a", TimelineEvent::CuStarted);
+        m.mark(1.0, "b", TimelineEvent::CuStarted);
+        // Must not panic; both points survive (NaN sorts last under
+        // the total order).
+        assert_eq!(m.active_curve().len(), 2);
+    }
+
+    #[test]
+    fn step_series_time_weighted_mean_and_extremes() {
+        let mut s = StepSeries::default();
+        s.push(0.0, 0.0);
+        s.push(10.0, 4.0);
+        s.push(20.0, 2.0);
+        // [0,10): 0, [10,20): 4, [20,30): 2 → mean over [0,30] = 2.
+        assert!((s.time_weighted_mean(0.0, 30.0) - 2.0).abs() < 1e-12);
+        // A window starting mid-segment picks up the value in force.
+        assert!((s.time_weighted_mean(15.0, 25.0) - 3.0).abs() < 1e-12);
+        assert_eq!(s.max_value(), 4.0);
+        assert_eq!(s.last_value(), 2.0);
+        assert_eq!(s.time_weighted_mean(5.0, 5.0), 0.0);
+        // Same-instant update settles to the last value pushed.
+        s.push(20.0, 7.0);
+        assert_eq!(s.last_value(), 7.0);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn wait_accessors_follow_records() {
+        let mut m = RunMetrics::default();
+        m.record_cu(rec("lonestar", 0.0, 10.0, 110.0, 20.0));
+        m.record_cu(rec("lonestar", 5.0, 35.0, 95.0, 10.0));
+        assert_eq!(m.wait_times(), vec![10.0, 30.0]);
+        assert_eq!(m.mean_wait(), 20.0);
+        assert_eq!(RunMetrics::default().mean_wait(), 0.0);
     }
 
     #[test]

@@ -103,11 +103,15 @@ impl fmt::Debug for Bytes {
 }
 
 /// Format a duration given in (possibly simulated) seconds as `1h02m03s`.
+/// Negative finite inputs clamp to zero on every path (the h/m branches
+/// already truncated them, but the sub-10s branch used to print the raw
+/// `-5.00s`); `-0.0` normalizes to `0.00s`.
 pub fn fmt_secs(secs: f64) -> String {
     if !secs.is_finite() {
         return format!("{secs}");
     }
-    let total = secs.round().max(0.0) as u64;
+    let secs = if secs > 0.0 { secs } else { 0.0 };
+    let total = secs.round() as u64;
     let (h, m, s) = (total / 3600, (total % 3600) / 60, total % 60);
     if h > 0 {
         format!("{h}h{m:02}m{s:02}s")
@@ -138,15 +142,21 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100].
+/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100]
+/// (out-of-range p clamps). Nearest-rank means the value at 1-based
+/// sorted rank ⌈p/100 · N⌉, with p = 0 mapping to the minimum — so
+/// p50 of `[1, 2, 3, 4]` is 2, and p100 is always the maximum. The
+/// sort uses `f64::total_cmp`, so NaN inputs sort last instead of
+/// panicking; they can only surface if p reaches into them.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    v.sort_by(f64::total_cmp);
+    let p = p.clamp(0.0, 100.0);
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
 }
 
 #[cfg(test)]
@@ -188,11 +198,37 @@ mod tests {
     }
 
     #[test]
+    fn fmt_secs_clamps_negatives_uniformly() {
+        // Every branch clamps, not just the h/m ones.
+        assert_eq!(fmt_secs(-5.0), "0.00s");
+        assert_eq!(fmt_secs(-75.0), "0.00s");
+        assert_eq!(fmt_secs(-3723.0), "0.00s");
+        assert_eq!(fmt_secs(-0.0), "0.00s");
+    }
+
+    #[test]
     fn stats_basics() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(mean(&[2.0, 4.0]), 3.0);
         assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
-        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 3.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.0);
         assert_eq!(percentile(&[5.0], 99.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_edges() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 25.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 75.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&v, 120.0), 4.0);
+        assert_eq!(percentile(&v, -10.0), 1.0);
+        assert_eq!(percentile(&[5.0], 1.0), 5.0);
+        // total_cmp sorts NaN last; finite percentiles never touch it.
+        assert_eq!(percentile(&[f64::NAN, 2.0, 1.0], 50.0), 2.0);
     }
 }

@@ -13,6 +13,7 @@
 //! * the task cost model used by the sim driver.
 
 pub mod mapreduce;
+pub mod openloop;
 
 use crate::rng::Rng;
 use crate::unit::{ComputeUnitDescription, DataUnitDescription, FileRef};

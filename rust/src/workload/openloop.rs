@@ -1,0 +1,462 @@
+//! Open-loop stochastic workload generation.
+//!
+//! Every other workload in the repo is a *closed batch*: all CUs and
+//! DUs exist at t=0 and the run ends when the backlog drains. Real
+//! pilot deployments are *open-loop* — work arrives over time from a
+//! population of users, and the interesting regimes (backlog growth,
+//! utilization knees, the ρ = 1 stability boundary) only appear under
+//! arrival-driven load. This module provides the generator side:
+//!
+//! * [`ArrivalProcess`] — when the next submission lands: Poisson
+//!   (exponential inter-arrival), deterministic rate, or a diurnal
+//!   rate-modulated Poisson process sampled exactly by thinning;
+//! * [`Dist`] — how service demands and DU sizes are drawn, including
+//!   the heavy-tailed log-normal runtimes seen in production traces;
+//! * [`TenantSpec`]/[`OpenLoopSpec`]/[`OpenLoopRun`] — a multi-tenant
+//!   population in which every tenant draws from its own
+//!   [`Rng::stream`], so adding or removing one tenant never perturbs
+//!   the arrival/demand sequences of the others;
+//! * Erlang closed forms ([`erlang_c`], [`mmc_mean_wait`]) — the
+//!   analytic M/M/c oracle that `experiments::openloop` validates the
+//!   whole DES pipeline against.
+//!
+//! The DES side lives in `experiments::simdrive`: an `ArrivalDue`
+//! event asks the [`OpenLoopRun`] for the next [`ArrivalBatch`] and
+//! feeds it through the normal submission path inside simulated time.
+
+use crate::rng::Rng;
+use crate::unit::{ComputeUnitDescription, DataUnitDescription, FileRef};
+use crate::util::Bytes;
+
+/// When a tenant's next arrival lands. All rates are arrivals per
+/// simulated second.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson process: exponential inter-arrival with mean `1/rate`.
+    Poisson { rate: f64 },
+    /// Deterministic: exactly `1/rate` between arrivals.
+    Deterministic { rate: f64 },
+    /// Rate-modulated (inhomogeneous) Poisson: the instantaneous rate
+    /// swings sinusoidally around `base_rate` with relative
+    /// `amplitude` in [0, 1] and period `period_s` — the diurnal load
+    /// shape. Sampled by thinning (Lewis & Shedler): candidates at the
+    /// peak rate are accepted with probability `rate(t)/rate_peak`,
+    /// which preserves the exact inhomogeneous-Poisson law.
+    Diurnal { base_rate: f64, amplitude: f64, period_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Draw the delay from an arrival at `t` (seconds since the
+    /// open-loop start) to this tenant's next arrival.
+    pub fn next_interval(&self, rng: &mut Rng, t: f64) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(*rate > 0.0, "Poisson rate must be positive");
+                rng.exp(1.0 / rate)
+            }
+            ArrivalProcess::Deterministic { rate } => {
+                assert!(*rate > 0.0, "deterministic rate must be positive");
+                1.0 / rate
+            }
+            ArrivalProcess::Diurnal { base_rate, amplitude, period_s } => {
+                assert!(*base_rate > 0.0 && *period_s > 0.0);
+                assert!((0.0..=1.0).contains(amplitude), "amplitude in [0, 1]");
+                let peak = base_rate * (1.0 + amplitude);
+                let mut at = t;
+                let mut waited = 0.0;
+                loop {
+                    let step = rng.exp(1.0 / peak);
+                    waited += step;
+                    at += step;
+                    let rate_at = base_rate
+                        * (1.0 + amplitude * (std::f64::consts::TAU * at / period_s).sin());
+                    if rng.f64() < rate_at / peak {
+                        return waited;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Long-run mean arrival rate (the sinusoidal modulation averages
+    /// out over whole periods).
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Deterministic { rate } => *rate,
+            ArrivalProcess::Diurnal { base_rate, .. } => *base_rate,
+        }
+    }
+}
+
+/// How a scalar demand (service seconds, DU bytes) is drawn.
+#[derive(Debug, Clone)]
+pub enum Dist {
+    Fixed(f64),
+    /// Exponential with the given mean — the M/M/c service law.
+    Exp { mean: f64 },
+    /// Log-normal parameterized by the mean/std of the *underlying*
+    /// normal — the heavy-tailed runtime/size model.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Dist::Fixed(v) => *v,
+            Dist::Exp { mean } => rng.exp(*mean),
+            Dist::LogNormal { mu, sigma } => rng.lognormal(*mu, *sigma),
+        }
+    }
+
+    /// Analytic mean (for load math and reporting).
+    pub fn mean(&self) -> f64 {
+        match self {
+            Dist::Fixed(v) => *v,
+            Dist::Exp { mean } => *mean,
+            Dist::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+        }
+    }
+}
+
+/// One tenant of the multi-tenant open-loop population.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Stable name. Keys the tenant's independent RNG stream: the
+    /// stream is a pure function of (base seed, name), so a population
+    /// change never perturbs this tenant's draws.
+    pub name: String,
+    pub arrivals: ArrivalProcess,
+    /// Service demand per CU (`cpu_secs_hint`; on a speed-1.0 machine
+    /// with no I/O this *is* the service time).
+    pub service: Dist,
+    /// CUs per arrival (≥ 1; a burst arrives as one batch submission).
+    pub batch: usize,
+    /// Cores per CU.
+    pub cores: u32,
+    /// Data each arrival brings: `None` is compute-only (the M/M/c
+    /// shape — inputs pre-placed or absent); `Some((size_dist, pd))`
+    /// pre-places one fresh DU of sampled size on pilot-data store
+    /// `pd` per arrival and wires it as every batch CU's input.
+    pub du: Option<(Dist, String)>,
+}
+
+impl TenantSpec {
+    /// Compute-only tenant with Poisson arrivals and exponential
+    /// service — the building block of the M/M/c validation.
+    pub fn poisson(name: &str, rate: f64, mean_service_s: f64) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            arrivals: ArrivalProcess::Poisson { rate },
+            service: Dist::Exp { mean: mean_service_s },
+            batch: 1,
+            cores: 1,
+            du: None,
+        }
+    }
+}
+
+/// The whole open-loop workload: a tenant population plus stopping
+/// rules. At least one stopping rule must be set, or arrivals would
+/// never end.
+#[derive(Debug, Clone)]
+pub struct OpenLoopSpec {
+    pub tenants: Vec<TenantSpec>,
+    /// Stop a tenant's arrivals once its count reaches this bound.
+    pub max_arrivals_per_tenant: Option<u64>,
+    /// Stop all arrivals past `start + horizon_s` of simulated time.
+    pub horizon_s: Option<f64>,
+}
+
+/// One arrival's submission payload, produced by
+/// [`OpenLoopRun::next_batch`].
+#[derive(Debug, Clone)]
+pub struct ArrivalBatch {
+    /// DU descriptions to pre-place on the named PD before the CUs
+    /// submit. The minted id of `dus[i]` is substituted for the
+    /// placeholder `@i` in the CUs' `input_data`.
+    pub dus: Vec<(DataUnitDescription, String)>,
+    pub cus: Vec<ComputeUnitDescription>,
+    /// Delay to this tenant's next arrival; `None` once a stopping
+    /// rule has been reached.
+    pub next_in: Option<f64>,
+}
+
+/// Live generator state: per-tenant RNG streams and arrival counters.
+/// Deliberately sim-agnostic — the driver owns the clock and asks for
+/// batches at the times this generator dictated, so the whole arrival
+/// schedule is a pure function of (spec, seed).
+#[derive(Debug, Clone)]
+pub struct OpenLoopRun {
+    spec: OpenLoopSpec,
+    /// Simulated time of `start_open_loop` (arrival t=0).
+    t0: f64,
+    tenants: Vec<TenantState>,
+}
+
+#[derive(Debug, Clone)]
+struct TenantState {
+    rng: Rng,
+    arrivals: u64,
+}
+
+impl OpenLoopRun {
+    pub fn new(spec: OpenLoopSpec, seed: u64, t0: f64) -> OpenLoopRun {
+        assert!(!spec.tenants.is_empty(), "open-loop spec needs at least one tenant");
+        assert!(
+            spec.max_arrivals_per_tenant.is_some() || spec.horizon_s.is_some(),
+            "open-loop spec needs a stopping rule (max arrivals or horizon)"
+        );
+        let base = Rng::new(seed);
+        let tenants = spec
+            .tenants
+            .iter()
+            .map(|t| TenantState {
+                rng: base.stream(&format!("openloop:{}", t.name)),
+                arrivals: 0,
+            })
+            .collect();
+        OpenLoopRun { spec, t0, tenants }
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn arrivals(&self, tenant: usize) -> u64 {
+        self.tenants[tenant].arrivals
+    }
+
+    pub fn total_arrivals(&self) -> u64 {
+        self.tenants.iter().map(|t| t.arrivals).sum()
+    }
+
+    /// Delay from the open-loop start to tenant `i`'s first arrival.
+    pub fn first_delay(&mut self, i: usize) -> f64 {
+        let spec = &self.spec.tenants[i];
+        spec.arrivals.next_interval(&mut self.tenants[i].rng, 0.0)
+    }
+
+    /// Generate the batch due now for tenant `i` plus the delay to its
+    /// next arrival. `now` is absolute simulated time. The next
+    /// interval is always drawn — even past a stopping rule — so each
+    /// tenant's stream position stays a pure function of its arrival
+    /// count.
+    pub fn next_batch(&mut self, i: usize, now: f64) -> ArrivalBatch {
+        let spec = &self.spec.tenants[i];
+        let st = &mut self.tenants[i];
+        st.arrivals += 1;
+        let mut dus = Vec::new();
+        let input: Vec<String> = match &spec.du {
+            Some((size, pd)) => {
+                let bytes = size.sample(&mut st.rng).max(1.0);
+                dus.push((
+                    DataUnitDescription {
+                        name: format!("ol-{}-{:06}", spec.name, st.arrivals),
+                        files: vec![FileRef::sized("payload.bin", Bytes(bytes as u64))],
+                        affinity: None,
+                    },
+                    pd.clone(),
+                ));
+                vec!["@0".to_string()]
+            }
+            None => Vec::new(),
+        };
+        let cus = (0..spec.batch.max(1))
+            .map(|k| ComputeUnitDescription {
+                executable: format!("openloop:{}", spec.name),
+                arguments: vec![format!("--arrival={}:{k}", st.arrivals)],
+                cores: spec.cores.max(1),
+                input_data: input.clone(),
+                output_data: Vec::new(),
+                affinity: None,
+                cpu_secs_hint: spec.service.sample(&mut st.rng),
+                io_bytes_hint: Bytes(0),
+            })
+            .collect();
+        let rel_now = now - self.t0;
+        let next = spec.arrivals.next_interval(&mut st.rng, rel_now);
+        let capped = self.spec.max_arrivals_per_tenant.is_some_and(|m| st.arrivals >= m);
+        let past_horizon = self.spec.horizon_s.is_some_and(|h| rel_now + next > h);
+        ArrivalBatch {
+            dus,
+            cus,
+            next_in: if capped || past_horizon { None } else { Some(next) },
+        }
+    }
+}
+
+/// Erlang-C probability that an arrival must wait, for `c` servers at
+/// offered load `a = λ/μ` (requires `a < c`). Computed from the
+/// numerically stable Erlang-B recursion `B(0) = 1`,
+/// `B(k) = a·B(k−1) / (k + a·B(k−1))`, then
+/// `C = B / (1 − ρ·(1 − B))` with `ρ = a/c`.
+pub fn erlang_c(c: usize, a: f64) -> f64 {
+    assert!(c > 0, "Erlang-C needs at least one server");
+    assert!((0.0..c as f64).contains(&a), "Erlang-C needs 0 ≤ a < c, got a={a} c={c}");
+    let mut b = 1.0;
+    for k in 1..=c {
+        b = a * b / (k as f64 + a * b);
+    }
+    let rho = a / c as f64;
+    b / (1.0 - rho * (1.0 - b))
+}
+
+/// Mean wait in queue W_q of an M/M/c system:
+/// `W_q = C(c, λ/μ) / (c·μ − λ)`. Requires λ < c·μ (stable system).
+pub fn mmc_mean_wait(lambda: f64, mu: f64, c: usize) -> f64 {
+    erlang_c(c, lambda / mu) / (c as f64 * mu - lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mean;
+
+    #[test]
+    fn erlang_c_matches_known_values() {
+        // c = 1 reduces to M/M/1: P(wait) = ρ.
+        for rho in [0.1, 0.5, 0.9] {
+            assert!((erlang_c(1, rho) - rho).abs() < 1e-12, "rho={rho}");
+        }
+        // c = 4, a = 3.6 (ρ = 0.9): standard-table value ≈ 0.7878.
+        assert!((erlang_c(4, 3.6) - 0.7878).abs() < 1e-3);
+        // No load, no waiting.
+        assert_eq!(erlang_c(4, 0.0), 0.0);
+        // Mean wait: M/M/1 with λ=0.5, μ=1 → W_q = ρ/(μ−λ) = 1.
+        assert!((mmc_mean_wait(0.5, 1.0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "0 ≤ a < c")]
+    fn erlang_c_rejects_unstable_load() {
+        erlang_c(2, 2.0);
+    }
+
+    #[test]
+    fn poisson_intervals_have_the_right_mean() {
+        let p = ArrivalProcess::Poisson { rate: 0.5 };
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..20_000).map(|_| p.next_interval(&mut rng, 0.0)).collect();
+        assert!((mean(&xs) - 2.0).abs() < 0.1, "mean={}", mean(&xs));
+    }
+
+    #[test]
+    fn deterministic_intervals_are_exact() {
+        let p = ArrivalProcess::Deterministic { rate: 4.0 };
+        let mut rng = Rng::new(12);
+        for _ in 0..10 {
+            assert_eq!(p.next_interval(&mut rng, 0.0), 0.25);
+        }
+    }
+
+    #[test]
+    fn diurnal_long_run_rate_matches_base() {
+        // Thinning preserves the mean rate over whole periods: count
+        // arrivals over many periods and compare with base_rate · T.
+        let p = ArrivalProcess::Diurnal { base_rate: 1.0, amplitude: 0.8, period_s: 100.0 };
+        let mut rng = Rng::new(13);
+        let horizon = 20_000.0;
+        let mut t = 0.0;
+        let mut n = 0u64;
+        while t < horizon {
+            t += p.next_interval(&mut rng, t);
+            n += 1;
+        }
+        let rate = n as f64 / horizon;
+        assert!((rate - 1.0).abs() < 0.05, "measured rate {rate}");
+    }
+
+    #[test]
+    fn dist_means_are_consistent() {
+        let mut rng = Rng::new(14);
+        for d in [
+            Dist::Fixed(3.0),
+            Dist::Exp { mean: 5.0 },
+            Dist::LogNormal { mu: 1.0, sigma: 0.5 },
+        ] {
+            let xs: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+            let m = mean(&xs);
+            assert!(
+                (m - d.mean()).abs() < 0.06 * d.mean().max(1.0),
+                "{d:?}: measured {m} vs analytic {}",
+                d.mean()
+            );
+        }
+    }
+
+    /// Walk a tenant's whole arrival schedule without a simulator:
+    /// the generator is sim-agnostic, so times and demands unroll from
+    /// the stream alone.
+    fn unroll(run: &mut OpenLoopRun, i: usize) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut t = run.first_delay(i);
+        loop {
+            let batch = run.next_batch(i, t);
+            for cu in &batch.cus {
+                out.push((t.to_bits(), cu.cpu_secs_hint.to_bits()));
+            }
+            match batch.next_in {
+                Some(d) => t += d,
+                None => return out,
+            }
+        }
+    }
+
+    #[test]
+    fn removing_a_tenant_leaves_the_others_streams_unchanged() {
+        let spec_for = |names: &[&str]| OpenLoopSpec {
+            tenants: names.iter().map(|n| TenantSpec::poisson(n, 0.2, 30.0)).collect(),
+            max_arrivals_per_tenant: Some(25),
+            horizon_s: None,
+        };
+        let mut all = OpenLoopRun::new(spec_for(&["alice", "bob", "carol"]), 99, 0.0);
+        let mut fewer = OpenLoopRun::new(spec_for(&["alice", "carol"]), 99, 0.0);
+        // alice is index 0 in both; carol moves from 2 to 1. Bit-exact
+        // either way: streams key off names, not population order.
+        assert_eq!(unroll(&mut all, 0), unroll(&mut fewer, 0));
+        assert_eq!(unroll(&mut all, 2), unroll(&mut fewer, 1));
+    }
+
+    #[test]
+    fn batches_carry_du_payloads_when_configured() {
+        let spec = OpenLoopSpec {
+            tenants: vec![TenantSpec {
+                name: "data".into(),
+                arrivals: ArrivalProcess::Deterministic { rate: 1.0 },
+                service: Dist::Fixed(5.0),
+                batch: 3,
+                cores: 2,
+                du: Some((Dist::LogNormal { mu: 10.0, sigma: 1.0 }, "scratch".into())),
+            }],
+            max_arrivals_per_tenant: Some(2),
+            horizon_s: None,
+        };
+        let mut run = OpenLoopRun::new(spec, 7, 0.0);
+        let b = run.next_batch(0, 1.0);
+        assert_eq!(b.dus.len(), 1);
+        assert_eq!(b.dus[0].1, "scratch");
+        assert_eq!(b.cus.len(), 3);
+        for cu in &b.cus {
+            assert_eq!(cu.input_data, vec!["@0".to_string()]);
+            assert_eq!(cu.cores, 2);
+            assert_eq!(cu.cpu_secs_hint, 5.0);
+        }
+        let b2 = run.next_batch(0, 2.0);
+        assert!(b2.next_in.is_none(), "arrival cap must stop the schedule");
+    }
+
+    #[test]
+    fn horizon_stops_the_schedule() {
+        let spec = OpenLoopSpec {
+            tenants: vec![TenantSpec::poisson("t", 1.0, 10.0)],
+            max_arrivals_per_tenant: None,
+            horizon_s: Some(50.0),
+        };
+        let mut run = OpenLoopRun::new(spec, 21, 0.0);
+        let times = unroll(&mut run, 0);
+        let last = f64::from_bits(times.last().unwrap().0);
+        assert!(last <= 50.0, "arrival at {last} past the horizon");
+        assert!(times.len() > 10, "expected a few dozen arrivals, got {}", times.len());
+    }
+}
