@@ -11,10 +11,11 @@
 
 use pilot_data::datamgmt::ModeKind;
 use pilot_data::experiments::modes::run_mode;
+use pilot_data::util::bench_out;
 use std::time::Instant;
 
 fn main() {
-    let reps: u64 = if std::env::var("PD_BENCH_QUICK").is_ok() { 1 } else { 3 };
+    let reps: u64 = if bench_out::quick() { 1 } else { 3 };
     println!("# Execution-mode comparison ({reps} seed(s) per mode)");
     println!(
         "{:<16}{:>12}{:>16}{:>14}{:>12}",
@@ -50,14 +51,5 @@ fn main() {
         results.push((format!("{} wall_s", mode.name()), wall));
     }
 
-    let out =
-        std::env::var("PD_BENCH_MODES_OUT").unwrap_or_else(|_| "BENCH_modes.json".into());
-    let mut obj = pilot_data::json::Json::obj();
-    for (name, v) in &results {
-        obj = obj.set(name.as_str(), *v);
-    }
-    match std::fs::write(&out, obj.to_string_pretty()) {
-        Ok(()) => println!("\n[json] {out}"),
-        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
-    }
+    bench_out::emit("PD_BENCH_MODES_OUT", "BENCH_modes.json", &results);
 }

@@ -12,10 +12,10 @@
 use pilot_data::experiments::openloop::{
     run_mmc, MmcConfig, MMC_MU, MMC_SLOTS, STABLE_TIERS, UNSTABLE_TIER,
 };
+use pilot_data::util::bench_out;
 
 fn main() {
-    let quick = std::env::var("PD_BENCH_QUICK").is_ok();
-    let (arrivals, warmup) = if quick { (2_000, 400) } else { (20_000, 4_000) };
+    let (arrivals, warmup) = if bench_out::quick() { (2_000, 400) } else { (20_000, 4_000) };
     println!(
         "# Open-loop M/M/c sweep (c={MMC_SLOTS}, mu={MMC_MU:.4}/s, {arrivals} arrivals/tier, seed 42)"
     );
@@ -61,14 +61,5 @@ fn main() {
         results.push((format!("{tag} wall_s"), r.wall_s));
     }
 
-    let out =
-        std::env::var("PD_BENCH_OPENLOOP_OUT").unwrap_or_else(|_| "BENCH_openloop.json".into());
-    let mut obj = pilot_data::json::Json::obj();
-    for (name, v) in &results {
-        obj = obj.set(name.as_str(), *v);
-    }
-    match std::fs::write(&out, obj.to_string_pretty()) {
-        Ok(()) => println!("\n[json] {out}"),
-        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
-    }
+    bench_out::emit("PD_BENCH_OPENLOOP_OUT", "BENCH_openloop.json", &results);
 }

@@ -25,8 +25,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Iteration divisor: 10× fewer iterations under `PD_BENCH_QUICK`.
 fn quick() -> u64 {
-    if std::env::var("PD_BENCH_QUICK").is_ok() {
+    if pilot_data::util::bench_out::quick() {
         10
     } else {
         1
@@ -370,13 +371,5 @@ fn main() {
     results.push(("fig11 sc3 wall_s".to_string(), dt));
 
     // --- machine-readable trajectory ---
-    let out = std::env::var("PD_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf_micro.json".into());
-    let mut obj = pilot_data::json::Json::obj();
-    for (name, v) in &results {
-        obj = obj.set(name.as_str(), *v);
-    }
-    match std::fs::write(&out, obj.to_string_pretty()) {
-        Ok(()) => println!("\n[json] {out}"),
-        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
-    }
+    pilot_data::util::bench_out::emit("PD_BENCH_OUT", "BENCH_perf_micro.json", &results);
 }

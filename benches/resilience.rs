@@ -11,10 +11,11 @@
 //! Run with: `cargo bench --bench resilience`
 
 use pilot_data::experiments::resilience::{run_intensity, INTENSITIES, TASKS};
+use pilot_data::util::bench_out;
 use std::time::Instant;
 
 fn main() {
-    let reps: u64 = if std::env::var("PD_BENCH_QUICK").is_ok() { 1 } else { 3 };
+    let reps: u64 = if bench_out::quick() { 1 } else { 3 };
     println!("# Resilience sweep ({reps} seed(s) per intensity, {TASKS} tasks)");
     println!(
         "{:<12}{:>12}{:>16}{:>14}{:>12}{:>10}{:>12}",
@@ -54,14 +55,5 @@ fn main() {
         results.push((format!("{tag} wall_s"), wall));
     }
 
-    let out = std::env::var("PD_BENCH_RESILIENCE_OUT")
-        .unwrap_or_else(|_| "BENCH_resilience.json".into());
-    let mut obj = pilot_data::json::Json::obj();
-    for (name, v) in &results {
-        obj = obj.set(name.as_str(), *v);
-    }
-    match std::fs::write(&out, obj.to_string_pretty()) {
-        Ok(()) => println!("\n[json] {out}"),
-        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
-    }
+    bench_out::emit("PD_BENCH_RESILIENCE_OUT", "BENCH_resilience.json", &results);
 }

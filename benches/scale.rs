@@ -1,34 +1,57 @@
 //! Scale bench: sweeps the DES to production fleet sizes (10²→10⁴
 //! pilots, 10⁴→10⁶ CUs+DUs via `experiments::scale`) and emits
-//! `BENCH_scale.json` with per-tier events/sec, peak RSS, makespan,
-//! event counts, and wall time — the machine-readable trajectory for
-//! the calendar-queue event wheel.
+//! `BENCH_scale.json` with per-tier events/sec, makespan, event
+//! counts, wall time, and the event-wheel structural counters
+//! (now-lane hit rate, rebucket/rewind traffic, slab high-water mark)
+//! that attribute cost per tier. Peak RSS is a process-global
+//! high-water mark (`VmHWM`) and cannot be attributed to a tier, so
+//! it is reported once under `whole_run`.
 //!
 //! Set `PD_BENCH_SCALE_OUT` to change the output path and
-//! `PD_BENCH_QUICK=1` for the reduced CI tiers. Peak RSS is the
-//! process high-water mark, so tiers run smallest-first and the
-//! per-tier figure is the cumulative peak after that tier.
+//! `PD_BENCH_QUICK=1` for the reduced CI tiers.
 //!
 //! Run with: `cargo bench --bench scale`
 
-use pilot_data::experiments::scale::{run_scale, FULL_SWEEP, QUICK_SWEEP};
+use pilot_data::experiments::scale::{peak_rss_bytes, run_scale, FULL_SWEEP, QUICK_SWEEP};
+use pilot_data::util::bench_out;
 
 fn main() {
-    let quick = std::env::var("PD_BENCH_QUICK").is_ok();
-    let sweep = if quick { QUICK_SWEEP } else { FULL_SWEEP };
+    let sweep = if bench_out::quick() { QUICK_SWEEP } else { FULL_SWEEP };
     println!("# Scale sweep ({} tiers, seed 42)", sweep.len());
     println!(
-        "{:<10}{:>12}{:>10}{:>14}{:>14}{:>14}{:>14}{:>12}",
-        "pilots", "CUs", "DUs", "events", "events/s", "makespan(s)", "peakRSS(MB)", "wall(s)"
+        "{:<10}{:>12}{:>10}{:>14}{:>14}{:>14}{:>10}{:>11}{:>12}{:>9}{:>11}{:>12}",
+        "pilots",
+        "CUs",
+        "DUs",
+        "events",
+        "events/s",
+        "makespan(s)",
+        "now-hit%",
+        "rebuckets",
+        "rebucketed",
+        "rewinds",
+        "slab-peak",
+        "wall(s)"
     );
 
     let mut results: Vec<(String, f64)> = Vec::new();
     for pilots in sweep {
         let r = run_scale(pilots, 42).expect("scale run failed");
-        let rss_mb = r.peak_rss_bytes as f64 / 1.0e6;
+        let q = r.queue;
         println!(
-            "{:<10}{:>12}{:>10}{:>14}{:>14.0}{:>14.0}{:>14.1}{:>12.3}",
-            r.pilots, r.cus, r.dus, r.events, r.events_per_sec, r.makespan_s, rss_mb, r.wall_s
+            "{:<10}{:>12}{:>10}{:>14}{:>14.0}{:>14.0}{:>10.1}{:>11}{:>12}{:>9}{:>11}{:>12.3}",
+            r.pilots,
+            r.cus,
+            r.dus,
+            r.events,
+            r.events_per_sec,
+            r.makespan_s,
+            q.now_hit_rate() * 100.0,
+            q.rebuckets,
+            q.rebucketed_cells,
+            q.cursor_rewinds,
+            q.slab_peak,
+            r.wall_s
         );
         let tag = format!("pilots_{pilots}");
         results.push((format!("{tag} cus"), r.cus as f64));
@@ -36,17 +59,16 @@ fn main() {
         results.push((format!("{tag} events"), r.events as f64));
         results.push((format!("{tag} events_per_sec"), r.events_per_sec));
         results.push((format!("{tag} makespan_s"), r.makespan_s));
-        results.push((format!("{tag} peak_rss_mb"), rss_mb));
+        results.push((format!("{tag} now_hit_rate"), q.now_hit_rate()));
+        results.push((format!("{tag} rebuckets"), q.rebuckets as f64));
+        results.push((format!("{tag} rebucketed_cells"), q.rebucketed_cells as f64));
+        results.push((format!("{tag} cursor_rewinds"), q.cursor_rewinds as f64));
+        results.push((format!("{tag} slab_peak"), q.slab_peak as f64));
         results.push((format!("{tag} wall_s"), r.wall_s));
     }
+    let rss_mb = peak_rss_bytes() as f64 / 1.0e6;
+    println!("whole-run peak RSS: {rss_mb:.1} MB");
+    results.push(("whole_run peak_rss_mb".to_string(), rss_mb));
 
-    let out = std::env::var("PD_BENCH_SCALE_OUT").unwrap_or_else(|_| "BENCH_scale.json".into());
-    let mut obj = pilot_data::json::Json::obj();
-    for (name, v) in &results {
-        obj = obj.set(name.as_str(), *v);
-    }
-    match std::fs::write(&out, obj.to_string_pretty()) {
-        Ok(()) => println!("\n[json] {out}"),
-        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
-    }
+    bench_out::emit("PD_BENCH_SCALE_OUT", "BENCH_scale.json", &results);
 }

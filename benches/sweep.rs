@@ -1,0 +1,87 @@
+//! Sweep-harness bench: runs the mode × sites × quota grid serially
+//! (1 worker) and on the multi-threaded pool, checks the two result
+//! tables are byte-identical (the harness's determinism contract), and
+//! emits `BENCH_sweep.json` with both wall times, the parallel
+//! speedup, per-cell sim measurements, and the annealing tuner's
+//! search cost — the machine-readable trajectory for the parallel
+//! experiment harness.
+//!
+//! Set `PD_BENCH_SWEEP_OUT` to change the output path and
+//! `PD_BENCH_QUICK=1` for a reduced 2×2 grid (CI smoke).
+//!
+//! Run with: `cargo bench --bench sweep`
+
+use pilot_data::datamgmt::ModeKind;
+use pilot_data::experiments::sweep::{
+    anneal, cell_table, default_workers, quick_grid, run_cells, AnnealConfig, Axis, CellSpec,
+    Grid,
+};
+use pilot_data::util::bench_out;
+use std::time::Instant;
+
+fn main() {
+    let seed = 42u64;
+    let grid = if bench_out::quick() {
+        // 2×2 smoke grid: cheapest cells that still cross two axes.
+        Grid::new(CellSpec::default())
+            .axis(Axis::Mode(vec![ModeKind::OnDemand, ModeKind::PreStage]))
+            .axis(Axis::Sites(vec![2, 4]))
+    } else {
+        quick_grid() // 12 cells: mode × sites × quota
+    };
+    let cells = grid.cells();
+    let workers = default_workers().max(4);
+    println!("# Sweep harness ({} cells, seed {seed}, {workers} workers vs 1)", cells.len());
+
+    let t0 = Instant::now();
+    let serial = run_cells(&cells, seed, 1).expect("serial sweep failed");
+    let wall_serial = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let parallel = run_cells(&cells, seed, workers).expect("parallel sweep failed");
+    let wall_parallel = t0.elapsed().as_secs_f64();
+
+    let table = cell_table("Sweep (parallel)", &parallel);
+    let identical = table.render() == cell_table("Sweep (serial)", &serial).render();
+    let speedup = wall_serial / wall_parallel.max(1e-9);
+    println!("{}", table.render());
+    println!(
+        "serial {wall_serial:.3}s, parallel {wall_parallel:.3}s ({workers} workers) -> \
+         {speedup:.2}x speedup; tables identical: {identical}"
+    );
+
+    let mut results: Vec<(String, f64)> = vec![
+        ("cells".to_string(), cells.len() as f64),
+        ("workers".to_string(), workers as f64),
+        ("wall_serial_s".to_string(), wall_serial),
+        ("wall_parallel_s".to_string(), wall_parallel),
+        ("speedup".to_string(), speedup),
+        ("tables_identical".to_string(), if identical { 1.0 } else { 0.0 }),
+    ];
+    for (i, r) in parallel.iter().enumerate() {
+        let tag = format!("cell_{i:02}");
+        results.push((format!("{tag} makespan_s"), r.makespan_s));
+        results.push((format!("{tag} bytes_moved"), r.bytes_moved as f64));
+        results.push((format!("{tag} events"), r.events as f64));
+    }
+
+    // The tuner over the same grid: search cost + what it found.
+    let cfg = AnnealConfig::default();
+    let t0 = Instant::now();
+    let out = anneal(&grid, &cfg, seed).expect("anneal failed");
+    let wall_anneal = t0.elapsed().as_secs_f64();
+    println!(
+        "anneal ({}): best {} = {:.0} after {} evaluations ({} accepted, {wall_anneal:.3}s)",
+        cfg.objective.name(),
+        out.best.key,
+        cfg.objective.energy(&out.best),
+        out.evaluations,
+        out.accepted
+    );
+    results.push(("anneal evaluations".to_string(), out.evaluations as f64));
+    results.push(("anneal accepted".to_string(), out.accepted as f64));
+    results.push(("anneal best_energy".to_string(), cfg.objective.energy(&out.best)));
+    results.push(("anneal wall_s".to_string(), wall_anneal));
+
+    bench_out::emit("PD_BENCH_SWEEP_OUT", "BENCH_sweep.json", &results);
+}

@@ -20,11 +20,14 @@
 //! workload across chaos intensities (pilot kills, PD down→up cycles,
 //! lossy links) and reports the fault-lifecycle cost, and `scale`
 //! extends fig11's flat-overhead argument to production fleet sizes
-//! (up to 10⁴ pilots / 10⁶ CUs+DUs), reporting DES events/sec, peak
-//! RSS, and makespan per tier. `openloop` drives the system with
-//! generator-based stochastic arrivals and validates the measured
+//! (up to 10⁴ pilots / 10⁶ CUs+DUs), reporting DES events/sec, event-
+//! wheel counters, and makespan per tier. `openloop` drives the system
+//! with generator-based stochastic arrivals and validates the measured
 //! queueing behavior (utilization, mean wait, backlog growth) against
-//! the Erlang-C closed form per load tier ρ.
+//! the Erlang-C closed form per load tier ρ. `sweep` expands a typed
+//! parameter grid (mode × sites × quota, …) into cells executed on a
+//! multi-threaded work-stealing pool and runs a simulated-annealing
+//! auto-tuner over the same grid.
 
 pub mod simdrive;
 pub mod fig7;
@@ -35,6 +38,7 @@ pub mod modes;
 pub mod openloop;
 pub mod resilience;
 pub mod scale;
+pub mod sweep;
 pub mod table1;
 
 use crate::metrics::Table;
@@ -55,13 +59,14 @@ pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
         "openloop" => openloop::run(seed),
         "resilience" => resilience::run(seed),
         "scale" => scale::run(seed),
+        "sweep" => sweep::run(seed),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, openloop, resilience, scale)"
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, openloop, resilience, scale, sweep)"
         ),
     }
 }
 
-pub const ALL: [&str; 12] = [
+pub const ALL: [&str; 13] = [
     "table1",
     "fig7",
     "fig8",
@@ -74,6 +79,7 @@ pub const ALL: [&str; 12] = [
     "openloop",
     "resilience",
     "scale",
+    "sweep",
 ];
 
 /// Print tables and persist CSVs under `results/`.

@@ -6,8 +6,14 @@
 //! extends the same driver to the fleet sizes the pilot-job literature
 //! frames as "production scale" — up to 10⁴ pilots running 10⁶
 //! one-core CUs over 10⁵ co-located DUs — and records what the engine
-//! itself does under that load: DES **events/sec**, **peak RSS**, and
-//! workload **makespan** per tier.
+//! itself does under that load: DES **events/sec**, the event-wheel's
+//! **structural counters** ([`crate::simtime::QueueStats`]: now-lane
+//! hit rate, rebucket/rewind traffic, slab high-water mark), and
+//! workload **makespan** per tier, plus one whole-run **peak RSS**
+//! row. (Peak RSS is `VmHWM` — process-global and monotone, so it is
+//! deliberately *not* attributed per tier: under concurrent tiers or
+//! sweep cells it measures the process, not the workload. The wheel
+//! counters are owned by each tier's own queue and stay attributable.)
 //!
 //! The workload is deliberately synthetic and placement-heavy rather
 //! than transfer-heavy: every CU carries a site affinity and its input
@@ -100,14 +106,20 @@ pub struct ScaleRunResult {
     pub events_per_sec: f64,
     /// Simulated makespan of the workload.
     pub makespan_s: f64,
-    /// Process peak RSS after the tier (`VmHWM`; 0 where unavailable).
-    /// Monotone across tiers run in one process — per-tier deltas need
-    /// one process per tier, which is how `benches/scale.rs` reports.
-    pub peak_rss_bytes: u64,
+    /// Event-wheel structural counters for *this tier's* sim — the
+    /// per-tier attribution signal. Unlike `VmHWM` (process-global,
+    /// monotone across tiers, and meaningless once tiers or sweep
+    /// cells run concurrently), these are owned by the tier's own
+    /// queue: slab high-water mark, now-lane hit rate, rebucket and
+    /// cursor-rewind traffic.
+    pub queue: crate::simtime::QueueStats,
 }
 
 /// Process peak resident set (bytes) from `/proc/self/status` VmHWM.
-/// Returns 0 on platforms without procfs.
+/// Returns 0 on platforms without procfs. **Whole-process** and
+/// monotone — report it once per run (the footer row of `exp scale` /
+/// the `whole_run` key of `BENCH_scale.json`), never per tier or per
+/// concurrent cell.
 pub fn peak_rss_bytes() -> u64 {
     if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
         for line in status.lines() {
@@ -201,16 +213,30 @@ pub fn run_scale(pilots: usize, seed: u64) -> anyhow::Result<ScaleRunResult> {
         wall_s,
         events_per_sec: events as f64 / wall_s,
         makespan_s: sys.makespan(),
-        peak_rss_bytes: peak_rss_bytes(),
+        queue: sys.queue_stats(),
     })
 }
 
-/// `exp scale`: the reduced sweep as a table (the full 10⁴-pilot sweep
-/// runs via `cargo bench --bench scale`).
+/// `exp scale`: the reduced sweep as two tables — per-tier engine
+/// behaviour (events/sec plus the tier-owned wheel counters that
+/// attribute it), and one whole-run row for the process-global peak
+/// RSS (the full 10⁴-pilot sweep runs via `cargo bench --bench scale`).
 pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
     let mut t = Table::new(
         "Scale sweep: DES throughput vs fleet size (reduced tiers; full sweep in benches/scale.rs)",
-        &["pilots", "CUs", "DUs", "events", "events/s", "makespan (s)", "peak RSS (MB)"],
+        &[
+            "pilots",
+            "CUs",
+            "DUs",
+            "events",
+            "events/s",
+            "makespan (s)",
+            "now-hit %",
+            "rebuckets",
+            "rebucketed",
+            "rewinds",
+            "slab peak",
+        ],
     );
     for pilots in QUICK_SWEEP {
         let r = run_scale(pilots, seed)?;
@@ -221,10 +247,19 @@ pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
             r.events.to_string(),
             format!("{:.0}", r.events_per_sec),
             format!("{:.0}", r.makespan_s),
-            format!("{:.1}", r.peak_rss_bytes as f64 / 1.0e6),
+            format!("{:.1}", r.queue.now_hit_rate() * 100.0),
+            r.queue.rebuckets.to_string(),
+            r.queue.rebucketed_cells.to_string(),
+            r.queue.cursor_rewinds.to_string(),
+            r.queue.slab_peak.to_string(),
         ]);
     }
-    Ok(vec![t])
+    let mut rss = Table::new(
+        "Scale sweep: whole-run process footprint (VmHWM is process-global — not per tier)",
+        &["peak RSS (MB)"],
+    );
+    rss.row(vec![format!("{:.1}", peak_rss_bytes() as f64 / 1.0e6)]);
+    Ok(vec![t, rss])
 }
 
 #[cfg(test)]
@@ -244,6 +279,13 @@ mod tests {
         let per_cu = r.events as f64 / r.cus as f64;
         assert!(per_cu < 40.0, "events/CU blew up: {per_cu}");
         assert!(r.makespan_s > 0.0);
+        // The default backend is the wheel: its per-tier counters are
+        // live (pushes counted, slab high-water mark set) — the signal
+        // that replaced per-tier VmHWM.
+        let q = r.queue;
+        assert!(q.now_hits + q.timed_pushes >= r.events, "{q:?}");
+        assert!(q.slab_peak > 0, "{q:?}");
+        assert!(q.now_hit_rate() > 0.0 && q.now_hit_rate() <= 1.0, "{q:?}");
     }
 
     #[test]

@@ -397,6 +397,15 @@ impl SimSystem {
         Bytes(self.bytes_moved)
     }
 
+    /// Structural counters from the event-wheel backend (all-zero under
+    /// the heap reference) — per-run queue behaviour that, unlike
+    /// process-global VmHWM, stays attributable when many systems run
+    /// concurrently (`experiments::sweep` cells, `experiments::scale`
+    /// tiers).
+    pub fn queue_stats(&self) -> crate::simtime::QueueStats {
+        self.sim.queue_stats()
+    }
+
     pub fn with_wakeups(mut self, mode: WakeupMode) -> SimSystem {
         self.wakeups = mode;
         self

@@ -1,0 +1,937 @@
+//! Parallel parameter sweeps + simulated-annealing auto-tuner.
+//!
+//! The paper's claims (§5–6) are *curves* — makespan and T_D as
+//! functions of execution mode, replication factor, and infrastructure
+//! shape — while every other experiment in this repo evaluates one
+//! point per run on one core. Each [`SimSystem`] is an independent
+//! DES, so a parameter grid is embarrassingly parallel. This module
+//! provides:
+//!
+//! * [`CellSpec`] — one point of the parameter space (mode incl.
+//!   `AutoReplicate` N, site count, pilots per site, cores per pilot,
+//!   task count, scratch quota ratio, open-loop arrival intensity ρ);
+//! * [`Axis`] / [`Grid`] — typed axes over a base `CellSpec`, expanded
+//!   row-major (last axis fastest) into a stable cell order;
+//! * [`run_cell`] — the cell executor: an N-site testbed, the
+//!   cell-parameterized BWA ensemble
+//!   ([`crate::workload::sweep_ensemble`]) or an open-loop Poisson
+//!   tenant when `rho > 0`, run end to end under the cell's mode;
+//! * [`run_cells`] — a work-stealing pool of scoped OS threads
+//!   (`std::thread::scope`, no dependencies) that executes cells
+//!   concurrently and collects [`CellResult`] rows **in grid order**,
+//!   independent of completion order;
+//! * [`anneal`] — simulated annealing over the grid's axes (Metropolis
+//!   acceptance, geometric cooling, seeded proposal chain), where
+//!   every objective evaluation is one sweep cell through the same
+//!   executor (memoized by cell key).
+//!
+//! # Determinism
+//!
+//! Each cell's RNG seed is derived from `(base_seed,
+//! cell-coordinates)` via [`Rng::stream`]: the stream is a pure
+//! function of the base seed and the cell's canonical key
+//! ([`CellSpec::key`]), so a cell's result does not depend on which
+//! worker ran it, in what order, or how many workers exist. The only
+//! cross-cell process state is the `util::next_id` counter, and sim
+//! outcomes are invariant to its base (each system compares ids only
+//! against its own) — property-tested by
+//! `sweep_is_bit_identical_across_thread_counts`, which requires the
+//! deterministic fields of every `CellResult` (and the rendered table)
+//! to be **byte-identical** between a serial reference, a 1-worker
+//! pool, and a 4-worker pool. Wall-clock fields (`wall_s`,
+//! `events_per_sec`) are excluded from the table for exactly this
+//! reason; they feed `BENCH_sweep.json` instead.
+//!
+//! # Worker count
+//!
+//! [`default_workers`] reads `PD_SWEEP_THREADS` (≥ 1) and falls back
+//! to [`std::thread::available_parallelism`].
+
+use crate::batch::{BatchState, Machine, QueueModel};
+use crate::config::Testbed;
+use crate::datamgmt::{self, ModeKind};
+use crate::experiments::simdrive::SimSystem;
+use crate::metrics::Table;
+use crate::net::{Bandwidth, Network};
+use crate::rng::Rng;
+use crate::storage::{simstore::SimStore, Endpoint};
+use crate::topology::{Label, Topology};
+use crate::unit::CuState;
+use crate::util::Bytes;
+use crate::workload::openloop::{ArrivalProcess, Dist, OpenLoopSpec, TenantSpec};
+use crate::workload::sweep_ensemble;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Shared reference dataset per cell (the BWA genome + index).
+pub const REF_SIZE: Bytes = Bytes::gb(4);
+/// Read chunk per task.
+pub const CHUNK: Bytes = Bytes::mb(64);
+/// Mean service demand of an open-loop CU (`rho > 0` cells), seconds.
+pub const SERVICE_MEAN_S: f64 = 600.0;
+
+/// One point of the sweep's parameter space. `Default` is the smallest
+/// meaningful cell: two sites, one 8-core pilot each, 8 tasks,
+/// unlimited scratch, closed batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellSpec {
+    /// Execution mode (replication factor rides in
+    /// [`ModeKind::AutoReplicate`]).
+    pub mode: ModeKind,
+    /// Synthetic sites under one trunk (topology shape).
+    pub sites: usize,
+    /// Pilots submitted per site.
+    pub pilots_per_site: usize,
+    /// Cores per pilot (CUs are 1-core, so this is per-pilot slots).
+    pub cores: u32,
+    /// BWA tasks (closed batch) or arrival cap (open loop).
+    pub tasks: usize,
+    /// Scratch quota on non-origin sites as a multiple of [`REF_SIZE`];
+    /// `0.0` means unlimited. Ratios in (0, 1.1) are rejected — the
+    /// reference plus one chunk must fit or staging can never succeed.
+    pub quota_ratio: f64,
+    /// Open-loop offered load ρ = λ / (c·μ); `0.0` runs the closed
+    /// BWA batch instead.
+    pub rho: f64,
+}
+
+impl Default for CellSpec {
+    fn default() -> CellSpec {
+        CellSpec {
+            mode: ModeKind::OnDemand,
+            sites: 2,
+            pilots_per_site: 1,
+            cores: 8,
+            tasks: 8,
+            quota_ratio: 0.0,
+            rho: 0.0,
+        }
+    }
+}
+
+/// `ModeKind` rendered with its replication factor, so two
+/// `AutoReplicate` cells with different N have different keys.
+fn mode_key(mode: ModeKind) -> String {
+    match mode {
+        ModeKind::AutoReplicate { replicas } => format!("auto-replicate:{replicas}"),
+        m => m.name().to_string(),
+    }
+}
+
+impl CellSpec {
+    /// Canonical cell coordinates: every knob, in a fixed order with
+    /// fixed formatting. This string keys the per-cell RNG stream and
+    /// the anneal memo — two specs are the same cell iff their keys
+    /// are equal (axis f64 values are rendered at 4 decimals; axes
+    /// must not carry values closer than that).
+    pub fn key(&self) -> String {
+        format!(
+            "mode={} sites={} pilots={} cores={} tasks={} quota={:.4} rho={:.4}",
+            mode_key(self.mode),
+            self.sites,
+            self.pilots_per_site,
+            self.cores,
+            self.tasks,
+            self.quota_ratio,
+            self.rho
+        )
+    }
+
+    /// The cell's sim seed: a pure function of `(base_seed, key)` via
+    /// the label-stable [`Rng::stream`] — no execution-order or
+    /// thread-count dependence.
+    pub fn seed(&self, base_seed: u64) -> u64 {
+        Rng::new(base_seed).stream(&format!("sweep/{}", self.key())).next_u64()
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!((1..=64).contains(&self.sites), "sites must be 1..=64");
+        anyhow::ensure!(self.pilots_per_site >= 1, "need at least one pilot per site");
+        anyhow::ensure!(self.cores >= 1, "pilots need at least one core");
+        anyhow::ensure!(self.tasks >= 1, "need at least one task");
+        anyhow::ensure!(
+            self.quota_ratio == 0.0 || (1.1..=1000.0).contains(&self.quota_ratio),
+            "quota_ratio must be 0 (unlimited) or in [1.1, 1000] — below 1.1 the \
+             reference plus one chunk cannot fit any scratch and staging livelocks"
+        );
+        anyhow::ensure!(
+            self.rho >= 0.0 && self.rho.is_finite() && self.rho <= 4.0,
+            "rho must be finite in [0, 4]"
+        );
+        if let ModeKind::AutoReplicate { replicas } = self.mode {
+            anyhow::ensure!(replicas >= 1, "AutoReplicate needs replicas >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// One typed sweep dimension: which knob varies and the values it
+/// takes. Axis order in the [`Grid`] fixes cell order (row-major,
+/// last axis fastest).
+#[derive(Debug, Clone)]
+pub enum Axis {
+    Mode(Vec<ModeKind>),
+    Sites(Vec<usize>),
+    PilotsPerSite(Vec<usize>),
+    Cores(Vec<u32>),
+    Tasks(Vec<usize>),
+    QuotaRatio(Vec<f64>),
+    Rho(Vec<f64>),
+}
+
+impl Axis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Axis::Mode(_) => "mode",
+            Axis::Sites(_) => "sites",
+            Axis::PilotsPerSite(_) => "pilots_per_site",
+            Axis::Cores(_) => "cores",
+            Axis::Tasks(_) => "tasks",
+            Axis::QuotaRatio(_) => "quota_ratio",
+            Axis::Rho(_) => "rho",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Mode(v) => v.len(),
+            Axis::Sites(v) => v.len(),
+            Axis::PilotsPerSite(v) => v.len(),
+            Axis::Cores(v) => v.len(),
+            Axis::Tasks(v) => v.len(),
+            Axis::QuotaRatio(v) => v.len(),
+            Axis::Rho(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Set this axis's knob on `spec` to its `i`-th value.
+    fn apply(&self, spec: &mut CellSpec, i: usize) {
+        match self {
+            Axis::Mode(v) => spec.mode = v[i],
+            Axis::Sites(v) => spec.sites = v[i],
+            Axis::PilotsPerSite(v) => spec.pilots_per_site = v[i],
+            Axis::Cores(v) => spec.cores = v[i],
+            Axis::Tasks(v) => spec.tasks = v[i],
+            Axis::QuotaRatio(v) => spec.quota_ratio = v[i],
+            Axis::Rho(v) => spec.rho = v[i],
+        }
+    }
+}
+
+/// A parameter grid: a base cell plus the axes that vary over it.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub base: CellSpec,
+    pub axes: Vec<Axis>,
+}
+
+impl Grid {
+    pub fn new(base: CellSpec) -> Grid {
+        Grid { base, axes: Vec::new() }
+    }
+
+    /// Add an axis (builder style). Empty axes are rejected — they
+    /// would silently collapse the grid to zero cells.
+    pub fn axis(mut self, axis: Axis) -> Grid {
+        assert!(!axis.is_empty(), "axis {} has no values", axis.name());
+        self.axes.push(axis);
+        self
+    }
+
+    /// Total cell count (product of axis lengths; 1 for no axes).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(Axis::len).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cell at one index-vector (one index per axis).
+    pub fn cell_at(&self, idx: &[usize]) -> CellSpec {
+        assert_eq!(idx.len(), self.axes.len());
+        let mut spec = self.base;
+        for (axis, &i) in self.axes.iter().zip(idx) {
+            axis.apply(&mut spec, i);
+        }
+        spec
+    }
+
+    /// Expand the full grid, row-major: the **last** axis varies
+    /// fastest. The order is a pure function of the grid declaration —
+    /// this is the stable order every sweep table reports in.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            out.push(self.cell_at(&idx));
+            // Odometer increment, last digit fastest.
+            let mut d = self.axes.len();
+            loop {
+                if d == 0 {
+                    return out;
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < self.axes[d].len() {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+}
+
+fn site_machine(site: usize) -> String {
+    format!("s{site:02}")
+}
+
+fn site_label(site: usize) -> String {
+    format!("sweep/s{site:02}")
+}
+
+fn site_scratch(site: usize) -> String {
+    format!("scratch-s{site:02}")
+}
+
+/// Uniform N-site testbed for one cell: `sites` machines under one
+/// `sweep` trunk, each with `pilots_per_site × cores` cores and one
+/// scratch PD. Site 0 is the gateway/origin; when `quota_ratio > 0`
+/// every *non-origin* scratch is quota-bound to
+/// `quota_ratio × REF_SIZE` (the origin keeps the originals, whose
+/// last replicas are never evictable). Modeled on
+/// [`crate::experiments::scale::scale_testbed`] but shaped by the cell.
+pub fn cell_testbed(spec: &CellSpec) -> Testbed {
+    let topo = Topology::new();
+    let mut net = Network::new();
+    net.set_default_uplink(Bandwidth::mbps(100.0));
+    net.set_uplink("sweep", Bandwidth::mbps(10_000.0));
+
+    let machines: Vec<Machine> = (0..spec.sites)
+        .map(|s| {
+            Machine::new(
+                &site_machine(s),
+                &site_label(s),
+                spec.pilots_per_site as u32 * spec.cores,
+            )
+            .with_queue(QueueModel::with_mean(10.0, 60.0, 0.3))
+            .with_fs_bandwidth(Bandwidth::mbps(2_000.0))
+        })
+        .collect();
+    let batch = BatchState::new(machines);
+
+    let mut store = SimStore::new();
+    for s in 0..spec.sites {
+        store.add_pd(
+            &site_scratch(s),
+            Endpoint::new(&format!("ssh://{}/scratch/pd", site_machine(s)), &site_label(s))
+                .unwrap(),
+        );
+        if s > 0 && spec.quota_ratio > 0.0 {
+            let quota = Bytes((spec.quota_ratio * REF_SIZE.as_f64()) as u64);
+            store.set_quota(&site_scratch(s), Some(quota)).unwrap();
+        }
+    }
+
+    let gateway = Label::new(&site_label(0));
+    Testbed { topo, net, batch, store, gateway }
+}
+
+/// One executed cell. The fields above `wall_s` are deterministic per
+/// `(base_seed, key)` — they are what the bit-identity property test
+/// compares and what [`cell_table`] renders. `wall_s` /
+/// `events_per_sec` are host-timing and feed `BENCH_sweep.json` only.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub spec: CellSpec,
+    /// Canonical coordinates ([`CellSpec::key`]).
+    pub key: String,
+    /// The derived cell seed actually used.
+    pub seed: u64,
+    pub makespan_s: f64,
+    /// Simulated time until uploads (+ any pre-stage fan-out) settled;
+    /// 0 for open-loop cells (no upload phase).
+    pub t_d_s: f64,
+    pub bytes_moved: u64,
+    pub mean_wait_s: f64,
+    pub p95_wait_s: f64,
+    pub done_cus: usize,
+    /// DES events processed.
+    pub events: u64,
+    /// Quota-driven placement rejections (capacity pressure indicator).
+    pub capacity_rejections: u32,
+    /// Host wall-clock seconds for this cell (timing-only; never in
+    /// the deterministic table).
+    pub wall_s: f64,
+}
+
+impl CellResult {
+    /// The deterministic fields, floats as raw bits — equality here is
+    /// the bit-identity the threading contract promises.
+    pub fn det_fields(&self) -> (String, u64, u64, u64, u64, u64, u64, usize, u64, u32) {
+        (
+            self.key.clone(),
+            self.seed,
+            self.makespan_s.to_bits(),
+            self.t_d_s.to_bits(),
+            self.bytes_moved,
+            self.mean_wait_s.to_bits(),
+            self.p95_wait_s.to_bits(),
+            self.done_cus,
+            self.events,
+            self.capacity_rejections,
+        )
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Execute one cell end to end. Closed batch (`rho == 0`): upload the
+/// reference (affinity = the `sweep` trunk, so proactive modes fan it
+/// out per site), pre-place the read chunks on the origin scratch,
+/// land pilots, then run `tasks` CUs affinity-pinned round-robin
+/// across sites. Open loop (`rho > 0`): a single Poisson tenant at
+/// offered load ρ against the fleet's total slots, each arrival
+/// bringing one chunk-sized DU placed at the origin.
+pub fn run_cell(spec: &CellSpec, base_seed: u64) -> anyhow::Result<CellResult> {
+    spec.validate()?;
+    let started = std::time::Instant::now();
+    let seed = spec.seed(base_seed);
+    let pilots = spec.sites * spec.pilots_per_site;
+
+    let mut sys = SimSystem::new(cell_testbed(spec), seed).with_mode(datamgmt::make(spec.mode));
+    sys.zero_transfer_faults();
+    sys.event_budget =
+        (spec.tasks as u64 * 80 + pilots as u64 * 40 + spec.sites as u64 * 200).max(2_000_000);
+
+    let mut t_d = 0.0;
+    if spec.rho == 0.0 {
+        // Closed batch, phase 1 — data placement.
+        let ens = sweep_ensemble(
+            spec.tasks,
+            Bytes(CHUNK.as_u64() * spec.tasks as u64),
+            REF_SIZE,
+            "sweep",
+            1,
+        );
+        let ref_du = sys.upload_du(&ens.reference, &site_scratch(0))?;
+        let mut chunk_dus = Vec::with_capacity(spec.tasks);
+        for c in &ens.read_chunks {
+            chunk_dus.push(sys.place_du_instant(c, &site_scratch(0))?);
+        }
+        sys.run()?; // land the upload + any pre-stage fan-out
+        t_d = sys.sim.now();
+
+        // Phase 2 — pilots everywhere; draining lets auto-replication
+        // top up behind the batch-queue wait.
+        for s in 0..spec.sites {
+            for _ in 0..spec.pilots_per_site {
+                sys.submit_pilot(&site_machine(s), spec.cores, &site_scratch(s))?;
+            }
+        }
+        sys.run()?;
+
+        // Phase 3 — the workload, round-robin across sites so every
+        // mode faces the identical distribution.
+        let mut descrs = Vec::with_capacity(spec.tasks);
+        for (i, chunk) in chunk_dus.iter().enumerate() {
+            let mut cud = ens.cu_template.clone();
+            cud.input_data = vec![ref_du.clone(), chunk.clone()];
+            cud.affinity = Some(Label::new(&site_label(i % spec.sites)));
+            descrs.push(cud);
+        }
+        let ids = sys.submit_cus(descrs)?;
+        anyhow::ensure!(ids.len() == spec.tasks);
+        sys.run()?;
+    } else {
+        // Open loop: pilots first, then Poisson arrivals at offered
+        // load ρ = λ / (c·μ) against the fleet's 1-core slots.
+        for s in 0..spec.sites {
+            for _ in 0..spec.pilots_per_site {
+                sys.submit_pilot(&site_machine(s), spec.cores, &site_scratch(s))?;
+            }
+        }
+        sys.run()?;
+
+        let slots = (pilots as u32 * spec.cores) as f64;
+        let lambda = spec.rho * slots / SERVICE_MEAN_S;
+        let ol = OpenLoopSpec {
+            tenants: vec![TenantSpec {
+                name: "sweep-tenant".into(),
+                arrivals: ArrivalProcess::Poisson { rate: lambda },
+                service: Dist::Exp { mean: SERVICE_MEAN_S },
+                batch: 1,
+                cores: 1,
+                du: Some((Dist::Fixed(CHUNK.as_f64()), site_scratch(0))),
+            }],
+            max_arrivals_per_tenant: Some(spec.tasks as u64),
+            horizon_s: None,
+        };
+        sys.start_open_loop(ol, seed ^ 0x6f70_656e);
+        sys.run()?;
+    }
+    anyhow::ensure!(
+        sys.state.workload_finished(),
+        "sweep cell did not finish: {}",
+        spec.key()
+    );
+
+    let waits: Vec<f64> = sys.metrics.cu_records.iter().map(|r| r.wait_s()).collect();
+    Ok(CellResult {
+        spec: *spec,
+        key: spec.key(),
+        seed,
+        makespan_s: sys.makespan(),
+        t_d_s: t_d,
+        bytes_moved: sys.bytes_moved().as_u64(),
+        mean_wait_s: crate::util::mean(&waits),
+        p95_wait_s: crate::util::percentile(&waits, 95.0),
+        done_cus: sys.state.count_cu_state(CuState::Done),
+        events: sys.sim.processed(),
+        capacity_rejections: sys.capacity_rejections,
+        wall_s: started.elapsed().as_secs_f64().max(1e-9),
+    })
+}
+
+/// Parse a `PD_SWEEP_THREADS`-style override (≥ 1).
+fn parse_workers(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
+}
+
+/// Worker count: `PD_SWEEP_THREADS` when set to a positive integer,
+/// else [`std::thread::available_parallelism`] (1 if unknown).
+pub fn default_workers() -> usize {
+    if let Some(n) = parse_workers(std::env::var("PD_SWEEP_THREADS").ok().as_deref()) {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Execute `cells` on a work-stealing pool of `workers` scoped OS
+/// threads: a shared atomic cursor hands the next un-run cell to
+/// whichever worker frees up first, and results land in per-cell slots
+/// — the returned vector is always in **grid order**, whatever the
+/// completion order was. The first failing cell's error is returned
+/// (cells after it may still have run).
+pub fn run_cells(
+    cells: &[CellSpec],
+    base_seed: u64,
+    workers: usize,
+) -> anyhow::Result<Vec<CellResult>> {
+    anyhow::ensure!(workers >= 1, "need at least one worker");
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<anyhow::Result<CellResult>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(cells.len().max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let res = run_cell(&cells[i], base_seed);
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(cells.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        let res = slot
+            .into_inner()
+            .unwrap()
+            .unwrap_or_else(|| Err(anyhow::anyhow!("cell {i} was never executed")));
+        out.push(res.map_err(|e| anyhow::anyhow!("sweep cell {i} ({}): {e}", cells[i].key()))?);
+    }
+    Ok(out)
+}
+
+/// Render results (in the given order) as the deterministic sweep
+/// table: coordinates + sim-domain measurements only. No wall-clock
+/// column — the rendered string is byte-identical across worker
+/// counts for the same `(grid, base_seed)`.
+pub fn cell_table(title: &str, results: &[CellResult]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "mode", "sites", "pilots", "cores", "tasks", "quota", "rho", "T (s)", "T_D (s)",
+            "bytes moved", "mean wait (s)", "p95 wait (s)", "done", "events",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            mode_key(r.spec.mode),
+            r.spec.sites.to_string(),
+            (r.spec.sites * r.spec.pilots_per_site).to_string(),
+            r.spec.cores.to_string(),
+            r.spec.tasks.to_string(),
+            format!("{:.2}", r.spec.quota_ratio),
+            format!("{:.2}", r.spec.rho),
+            format!("{:.1}", r.makespan_s),
+            format!("{:.1}", r.t_d_s),
+            format!("{}", Bytes(r.bytes_moved)),
+            format!("{:.1}", r.mean_wait_s),
+            format!("{:.1}", r.p95_wait_s),
+            r.done_cus.to_string(),
+            r.events.to_string(),
+        ]);
+    }
+    t
+}
+
+/// What the auto-tuner minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    MinMakespan,
+    MinBytesMoved,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::MinMakespan => "min-makespan",
+            Objective::MinBytesMoved => "min-bytes-moved",
+        }
+    }
+
+    /// The energy the annealer minimizes for one evaluated cell.
+    pub fn energy(self, r: &CellResult) -> f64 {
+        match self {
+            Objective::MinMakespan => r.makespan_s,
+            Objective::MinBytesMoved => r.bytes_moved as f64,
+        }
+    }
+}
+
+/// Simulated-annealing knobs. `t0` is the initial temperature as a
+/// *relative* energy scale (0.3 ⇒ a move 30 % worse than the current
+/// energy is accepted with probability e⁻¹ at the start); cooling is
+/// geometric per iteration.
+#[derive(Debug, Clone)]
+pub struct AnnealConfig {
+    pub objective: Objective,
+    pub iters: usize,
+    pub t0: f64,
+    pub cooling: f64,
+    /// Seeds the proposal/acceptance chain (independent of the cell
+    /// `base_seed`, which fixes what each cell *measures*).
+    pub seed: u64,
+}
+
+impl Default for AnnealConfig {
+    fn default() -> AnnealConfig {
+        AnnealConfig {
+            objective: Objective::MinBytesMoved,
+            iters: 40,
+            t0: 0.3,
+            cooling: 0.9,
+            seed: 7,
+        }
+    }
+}
+
+/// One annealing run's outcome.
+#[derive(Debug, Clone)]
+pub struct AnnealOutcome {
+    /// Best-ever evaluated cell under the objective.
+    pub best: CellResult,
+    /// Distinct cells simulated (memo misses) — the search cost.
+    pub evaluations: usize,
+    /// Accepted proposals (downhill + Metropolis uphill).
+    pub accepted: usize,
+    /// Current energy after each iteration.
+    pub trace: Vec<f64>,
+}
+
+/// Simulated annealing over the grid's axes: the state space is the
+/// grid's cartesian product, a proposal re-rolls one axis to a
+/// different value, and every evaluation is one sweep cell through
+/// [`run_cell`] (memoized by [`CellSpec::key`] — legal because a
+/// cell's result is a pure function of `(base_seed, key)`). Starts
+/// from the all-index-0 corner; returns the best cell ever evaluated.
+pub fn anneal(grid: &Grid, cfg: &AnnealConfig, base_seed: u64) -> anyhow::Result<AnnealOutcome> {
+    anyhow::ensure!(!grid.axes.is_empty(), "anneal needs at least one axis");
+    anyhow::ensure!(
+        grid.axes.iter().any(|a| a.len() >= 2),
+        "anneal needs an axis with at least two values"
+    );
+    anyhow::ensure!(cfg.iters >= 1, "anneal needs iters >= 1");
+    anyhow::ensure!(cfg.t0 > 0.0 && cfg.t0.is_finite(), "t0 must be positive");
+    anyhow::ensure!(
+        cfg.cooling > 0.0 && cfg.cooling < 1.0,
+        "cooling must be geometric in (0, 1)"
+    );
+
+    let mut rng = Rng::new(cfg.seed).stream("sweep/anneal");
+    let mut memo: BTreeMap<String, CellResult> = BTreeMap::new();
+    let mut evaluations = 0usize;
+    let mut eval = |spec: &CellSpec,
+                    memo: &mut BTreeMap<String, CellResult>,
+                    evaluations: &mut usize|
+     -> anyhow::Result<CellResult> {
+        let key = spec.key();
+        if let Some(r) = memo.get(&key) {
+            return Ok(r.clone());
+        }
+        let r = run_cell(spec, base_seed)?;
+        *evaluations += 1;
+        memo.insert(key, r.clone());
+        Ok(r)
+    };
+
+    // Axes worth proposing on (≥ 2 values).
+    let movable: Vec<usize> =
+        (0..grid.axes.len()).filter(|&a| grid.axes[a].len() >= 2).collect();
+
+    let mut idx = vec![0usize; grid.axes.len()];
+    let mut cur = eval(&grid.cell_at(&idx), &mut memo, &mut evaluations)?;
+    let mut cur_e = cfg.objective.energy(&cur);
+    let mut best = cur.clone();
+    let mut best_e = cur_e;
+    let mut temp = cfg.t0;
+    let mut accepted = 0usize;
+    let mut trace = Vec::with_capacity(cfg.iters);
+
+    for _ in 0..cfg.iters {
+        // Propose: re-roll one movable axis to a different index.
+        let a = movable[rng.below(movable.len() as u64) as usize];
+        let n = grid.axes[a].len();
+        let mut j = rng.below((n - 1) as u64) as usize;
+        if j >= idx[a] {
+            j += 1;
+        }
+        let mut cand_idx = idx.clone();
+        cand_idx[a] = j;
+        let cand = eval(&grid.cell_at(&cand_idx), &mut memo, &mut evaluations)?;
+        let cand_e = cfg.objective.energy(&cand);
+
+        // Metropolis with a relative energy scale: Δ is normalized by
+        // the current energy so the schedule is unit-free.
+        let scale = cur_e.abs().max(1e-12);
+        let delta = (cand_e - cur_e) / scale;
+        let accept = delta <= 0.0 || rng.f64() < (-delta / temp).exp();
+        if accept {
+            accepted += 1;
+            idx = cand_idx;
+            cur = cand;
+            cur_e = cand_e;
+            if cur_e < best_e {
+                best = cur.clone();
+                best_e = cur_e;
+            }
+        }
+        trace.push(cur_e);
+        temp *= cfg.cooling;
+    }
+    Ok(AnnealOutcome { best, evaluations, accepted, trace })
+}
+
+/// The quick grid `exp sweep` runs: all three execution modes × two
+/// topology widths × scratch pressure on/off — 12 cells, small enough
+/// for a test-tier run, wide enough that every axis type is exercised.
+pub fn quick_grid() -> Grid {
+    Grid::new(CellSpec::default())
+        .axis(Axis::Mode(ModeKind::all().to_vec()))
+        .axis(Axis::Sites(vec![2, 4]))
+        .axis(Axis::QuotaRatio(vec![0.0, 2.0]))
+}
+
+/// Experiment id `sweep`: run [`quick_grid`] on the default worker
+/// pool, then anneal the same grid for min bytes-moved. Two tables:
+/// the per-cell sweep and the tuner summary.
+pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let grid = quick_grid();
+    let cells = grid.cells();
+    let workers = default_workers();
+    let results = run_cells(&cells, seed, workers)?;
+    let sweep_t = cell_table(
+        &format!(
+            "Sweep: mode x sites x quota over the BWA cell ({} cells, {} workers)",
+            cells.len(),
+            workers
+        ),
+        &results,
+    );
+
+    let cfg = AnnealConfig::default();
+    let out = anneal(&grid, &cfg, seed)?;
+    let mut tune_t = Table::new(
+        "Anneal: simulated annealing over the sweep grid",
+        &["objective", "iters", "evaluations", "accepted", "best cell", "best value"],
+    );
+    tune_t.row(vec![
+        cfg.objective.name().to_string(),
+        cfg.iters.to_string(),
+        out.evaluations.to_string(),
+        out.accepted.to_string(),
+        out.best.key.clone(),
+        format!("{:.0}", cfg.objective.energy(&out.best)),
+    ]);
+    Ok(vec![sweep_t, tune_t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expands_row_major_with_last_axis_fastest() {
+        let grid = Grid::new(CellSpec::default())
+            .axis(Axis::Sites(vec![1, 2]))
+            .axis(Axis::Tasks(vec![2, 4, 8]));
+        assert_eq!(grid.len(), 6);
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 6);
+        let coords: Vec<(usize, usize)> = cells.iter().map(|c| (c.sites, c.tasks)).collect();
+        assert_eq!(coords, vec![(1, 2), (1, 4), (1, 8), (2, 2), (2, 4), (2, 8)]);
+        // Declaration order is the table order — stable across calls.
+        assert_eq!(
+            grid.cells().iter().map(CellSpec::key).collect::<Vec<_>>(),
+            cells.iter().map(CellSpec::key).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn cell_seed_is_a_pure_function_of_coordinates() {
+        let a = CellSpec::default();
+        let mut b = CellSpec::default();
+        assert_eq!(a.seed(42), b.seed(42), "same coordinates, same seed");
+        assert_ne!(a.seed(42), a.seed(43), "base seed must matter");
+        b.tasks = 9;
+        assert_ne!(a.seed(42), b.seed(42), "coordinates must matter");
+        // AutoReplicate N is part of the coordinates.
+        let r2 = CellSpec { mode: ModeKind::AutoReplicate { replicas: 2 }, ..a };
+        let r3 = CellSpec { mode: ModeKind::AutoReplicate { replicas: 3 }, ..a };
+        assert_ne!(r2.key(), r3.key());
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_cells() {
+        let ok = CellSpec::default();
+        assert!(run_cell(&CellSpec { sites: 0, ..ok }, 1).is_err());
+        assert!(run_cell(&CellSpec { quota_ratio: 0.5, ..ok }, 1).is_err());
+        assert!(run_cell(&CellSpec { rho: f64::NAN, ..ok }, 1).is_err());
+        assert!(run_cell(
+            &CellSpec { mode: ModeKind::AutoReplicate { replicas: 0 }, ..ok },
+            1
+        )
+        .is_err());
+    }
+
+    /// ISSUE 9 satellite 1 — the threading contract: a serial
+    /// reference loop, a 1-worker pool, and a 4-worker pool must
+    /// produce **byte-identical** deterministic fields and rendered
+    /// tables. (Runs as a lib test so the CI `RUST_TEST_THREADS`
+    /// matrix exercises it under both harness schedules.)
+    #[test]
+    fn sweep_is_bit_identical_across_thread_counts() {
+        let grid = Grid::new(CellSpec { tasks: 2, cores: 4, ..CellSpec::default() })
+            .axis(Axis::Mode(ModeKind::all().to_vec()))
+            .axis(Axis::Tasks(vec![2, 4]));
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 6);
+
+        let serial: Vec<CellResult> =
+            cells.iter().map(|c| run_cell(c, 42).unwrap()).collect();
+        let pool1 = run_cells(&cells, 42, 1).unwrap();
+        let pool4 = run_cells(&cells, 42, 4).unwrap();
+
+        let det = |rs: &[CellResult]| rs.iter().map(CellResult::det_fields).collect::<Vec<_>>();
+        assert_eq!(det(&serial), det(&pool1), "1-worker pool diverged from serial");
+        assert_eq!(det(&serial), det(&pool4), "4-worker pool diverged from serial");
+        assert_eq!(
+            cell_table("t", &serial).render(),
+            cell_table("t", &pool4).render(),
+            "rendered table must be byte-identical across worker counts"
+        );
+    }
+
+    /// The sweep substrate reproduces the modes experiment's headline:
+    /// proactive placement moves fewer bytes than on-demand pulls.
+    #[test]
+    fn modes_separate_on_the_sweep_substrate() {
+        let base = CellSpec::default();
+        let od = run_cell(&CellSpec { mode: ModeKind::OnDemand, ..base }, 11).unwrap();
+        let ps = run_cell(&CellSpec { mode: ModeKind::PreStage, ..base }, 11).unwrap();
+        assert_eq!(od.done_cus, base.tasks);
+        assert_eq!(ps.done_cus, base.tasks);
+        assert!(
+            ps.bytes_moved < od.bytes_moved,
+            "pre-stage bytes {} !< on-demand {}",
+            ps.bytes_moved,
+            od.bytes_moved
+        );
+    }
+
+    /// ISSUE 9 acceptance — the tuner finds the mode the exhaustive
+    /// sweep ranks best for min bytes-moved, on a seeded run.
+    #[test]
+    fn anneal_converges_to_the_min_bytes_mode() {
+        let grid =
+            Grid::new(CellSpec::default()).axis(Axis::Mode(ModeKind::all().to_vec()));
+        let exhaustive = run_cells(&grid.cells(), 42, 1).unwrap();
+        let oracle = exhaustive
+            .iter()
+            .min_by(|a, b| a.bytes_moved.cmp(&b.bytes_moved))
+            .unwrap();
+
+        let cfg = AnnealConfig { iters: 15, ..AnnealConfig::default() };
+        let out = anneal(&grid, &cfg, 42).unwrap();
+        assert_eq!(
+            out.best.key, oracle.key,
+            "anneal best {} != exhaustive argmin {}",
+            out.best.key, oracle.key
+        );
+        assert!(out.evaluations <= grid.len(), "memo must cap evaluations at the grid size");
+        assert_eq!(out.trace.len(), cfg.iters);
+    }
+
+    /// Quota-bound and open-loop cells run to completion.
+    #[test]
+    fn quota_and_open_loop_cells_complete() {
+        let q = run_cell(&CellSpec { quota_ratio: 1.2, ..CellSpec::default() }, 5).unwrap();
+        assert_eq!(q.done_cus, 8);
+
+        let o = run_cell(&CellSpec { rho: 0.5, tasks: 12, ..CellSpec::default() }, 5).unwrap();
+        assert_eq!(o.done_cus, 12, "all open-loop arrivals must complete");
+        assert_eq!(o.t_d_s, 0.0, "open-loop cells have no upload phase");
+        assert!(o.makespan_s > 0.0);
+        assert!(o.mean_wait_s >= 0.0);
+    }
+
+    #[test]
+    fn worker_override_parses_defensively() {
+        assert_eq!(parse_workers(Some("4")), Some(4));
+        assert_eq!(parse_workers(Some(" 2 ")), Some(2));
+        assert_eq!(parse_workers(Some("0")), None);
+        assert_eq!(parse_workers(Some("-1")), None);
+        assert_eq!(parse_workers(Some("lots")), None);
+        assert_eq!(parse_workers(None), None);
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn sweep_experiment_tables_render() {
+        // One tiny end-to-end pass of the `exp sweep` entry shape: a
+        // 2-cell grid + a short anneal, through the same plumbing.
+        let grid = Grid::new(CellSpec { tasks: 2, ..CellSpec::default() })
+            .axis(Axis::Mode(vec![ModeKind::OnDemand, ModeKind::PreStage]));
+        let results = run_cells(&grid.cells(), 9, 2).unwrap();
+        let t = cell_table("t", &results);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("pre-stage"));
+        let out = anneal(
+            &grid,
+            &AnnealConfig { iters: 4, ..AnnealConfig::default() },
+            9,
+        )
+        .unwrap();
+        assert!(out.evaluations >= 1 && out.evaluations <= 2);
+    }
+}

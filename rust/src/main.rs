@@ -20,7 +20,10 @@ fn usage() -> ! {
          \n\
          commands:\n\
            exp <id|all> [--seed N] [--results DIR]   regenerate table1 / fig7..fig13 / modes /\n\
-                                                      openloop / resilience / scale\n\
+                                                      openloop / resilience / scale / sweep\n\
+                                                      (sweep: parallel mode x sites x quota grid\n\
+                                                      + annealing tuner; workers from\n\
+                                                      PD_SWEEP_THREADS or available cores)\n\
            align [--artifacts DIR] [--reads N] [--pilots N]  local-mode alignment demo\n\
            capabilities                               print storage adaptor registry\n"
     );

@@ -99,6 +99,47 @@ pub enum QueueBackend {
     Heap,
 }
 
+/// Cheap structural counters kept by the wheel backend — pure
+/// increments on paths the wheel already takes, so they can never
+/// perturb event ordering (the heap-vs-wheel bit-identity property
+/// suites keep holding). Read through [`Sim::queue_stats`]; the
+/// [`QueueBackend::Heap`] reference reports all-zeros.
+///
+/// These attribute events/sec differences across workload tiers
+/// (`experiments::scale`, `BENCH_scale.json`): a falling
+/// [`now_hit_rate`](QueueStats::now_hit_rate) means fewer O(1)
+/// same-instant pushes, and growing `rebuckets`/`rebucketed_cells`
+/// mean more overflow traffic through the amortized rebucket path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Lazy rebucket passes (overflow tier drained into the window).
+    pub rebuckets: u64,
+    /// Cells moved overflow→bucket across all rebucket passes.
+    pub rebucketed_cells: u64,
+    /// Pushes that landed behind the cursor and rewound it.
+    pub cursor_rewinds: u64,
+    /// Pushes routed to a now-lane deque (O(1), no comparisons).
+    pub now_hits: u64,
+    /// Pushes routed through the bucket/overflow tier.
+    pub timed_pushes: u64,
+    /// Pushes that went straight to the overflow tier.
+    pub overflow_pushes: u64,
+    /// Peak live payload cells in the slab arena (queue high-water mark).
+    pub slab_peak: u32,
+}
+
+impl QueueStats {
+    /// Fraction of pushes that took the O(1) now-lane fast path.
+    pub fn now_hit_rate(&self) -> f64 {
+        let total = self.now_hits + self.timed_pushes;
+        if total == 0 {
+            0.0
+        } else {
+            self.now_hits as f64 / total as f64
+        }
+    }
+}
+
 struct Scheduled<E> {
     time: f64,
     /// 0 = front lane (fires before lane-1 events at the same time),
@@ -185,6 +226,7 @@ struct Wheel<E> {
     width: f64,
     overflow: BinaryHeap<Cell>,
     len: usize,
+    stats: QueueStats,
 }
 
 impl<E> Wheel<E> {
@@ -200,17 +242,21 @@ impl<E> Wheel<E> {
             width: 1.0,
             overflow: BinaryHeap::new(),
             len: 0,
+            stats: QueueStats::default(),
         }
     }
 
     fn alloc(&mut self, event: E) -> u32 {
-        if let Some(slot) = self.free.pop() {
+        let slot = if let Some(slot) = self.free.pop() {
             self.slab[slot as usize] = Some(event);
             slot
         } else {
             self.slab.push(Some(event));
             (self.slab.len() - 1) as u32
-        }
+        };
+        let live = (self.slab.len() - self.free.len()) as u32;
+        self.stats.slab_peak = self.stats.slab_peak.max(live);
+        slot
     }
 
     fn take(&mut self, slot: u32) -> E {
@@ -227,25 +273,34 @@ impl<E> Wheel<E> {
             // Front-lane events are only ever created at `now`; while any
             // are pending they are the global minimum, so a FIFO deque
             // reproduces (time, lane, seq) order exactly.
+            self.stats.now_hits += 1;
             self.now_front.push_back(cell);
         } else if time.to_bits() == now.to_bits() {
             // Same-instant lane-1 events: the clock cannot advance while
             // this deque is non-empty, so FIFO order == seq order.
+            self.stats.now_hits += 1;
             self.now_lane.push_back(cell);
         } else {
-            self.push_timed(cell);
+            self.stats.timed_pushes += 1;
+            self.push_timed(cell, true);
         }
     }
 
-    fn push_timed(&mut self, cell: Cell) {
+    fn push_timed(&mut self, cell: Cell, fresh: bool) {
         let rel = (cell.time - self.origin) / self.width;
         if rel < BUCKETS as f64 {
             let idx = if rel <= 0.0 { 0 } else { (rel as usize).min(BUCKETS - 1) };
             if idx < self.cursor {
+                self.stats.cursor_rewinds += 1;
                 self.cursor = idx;
             }
             self.buckets[idx].push(cell);
         } else {
+            // Rebucket re-insertions (`fresh == false`) always fit the
+            // freshly snapped window, so this only counts caller pushes.
+            if fresh {
+                self.stats.overflow_pushes += 1;
+            }
             self.overflow.push(cell);
         }
     }
@@ -274,8 +329,10 @@ impl<E> Wheel<E> {
             self.origin = lo;
             self.width = ((hi - lo) / (BUCKETS as f64 - 1.0)).max(MIN_WIDTH);
             self.cursor = 0;
+            self.stats.rebuckets += 1;
+            self.stats.rebucketed_cells += cells.len() as u64;
             for c in cells {
-                self.push_timed(c);
+                self.push_timed(c, false);
             }
         }
     }
@@ -385,6 +442,16 @@ impl<E> Sim<E> {
         match &self.queue {
             Queue::Wheel(w) => w.len,
             Queue::Heap(h) => h.len(),
+        }
+    }
+
+    /// Structural counters from the wheel backend ([`QueueStats`]).
+    /// The heap reference backend keeps no counters and reports the
+    /// all-zero default.
+    pub fn queue_stats(&self) -> QueueStats {
+        match &self.queue {
+            Queue::Wheel(w) => w.stats,
+            Queue::Heap(_) => QueueStats::default(),
         }
     }
 
@@ -705,6 +772,55 @@ mod tests {
             assert_eq!(seen, expect, "{backend:?}");
             assert_eq!(sim.pending(), 0, "{backend:?}");
         }
+    }
+
+    #[test]
+    fn queue_stats_count_wheel_activity() {
+        // Far-future spread: overflow pushes and at least one rebucket.
+        let mut sim: Sim<usize> = Sim::new();
+        let mut x = 0.001f64;
+        let mut n = 0usize;
+        while x < 1.0e9 {
+            sim.schedule_at(x, n);
+            x *= 3.7;
+            n += 1;
+        }
+        sim.run(|_, _, _| true);
+        let s = sim.queue_stats();
+        assert!(s.overflow_pushes > 0, "spread must hit the overflow tier: {s:?}");
+        assert!(s.rebuckets > 0, "draining must rebucket: {s:?}");
+        assert!(s.rebucketed_cells >= s.rebuckets, "{s:?}");
+        assert_eq!(s.timed_pushes, n as u64, "{s:?}");
+        assert!(s.slab_peak >= 1 && s.slab_peak <= n as u32, "{s:?}");
+
+        // Same-instant chains take the now-lane fast path; a push that
+        // lands behind the cursor rewinds it.
+        let mut sim: Sim<u32> = Sim::new();
+        sim.schedule(100.0, 0);
+        sim.run(|sim, _, e| {
+            if e == 0 {
+                sim.schedule_front(1); // now-lane (front)
+                sim.schedule(0.0, 2); // now-lane (bit-equal time)
+                sim.schedule(50.0, 3); // bucket ahead of the clock
+            }
+            if e == 2 {
+                // Fires at t=100 after peeking advanced the cursor to
+                // the t=150 bucket; this short-delay push lands in the
+                // t=110 bucket, behind the cursor — a rewind.
+                sim.schedule(10.0, 4);
+            }
+            true
+        });
+        let s = sim.queue_stats();
+        assert_eq!(s.now_hits, 2, "{s:?}");
+        assert!(s.now_hit_rate() > 0.0 && s.now_hit_rate() < 1.0, "{s:?}");
+        assert!(s.cursor_rewinds >= 1, "{s:?}");
+
+        // The heap reference keeps no counters.
+        let mut sim: Sim<u32> = Sim::with_backend(QueueBackend::Heap);
+        sim.schedule(1.0, 1);
+        sim.run(|_, _, _| true);
+        assert_eq!(sim.queue_stats(), QueueStats::default());
     }
 
     #[test]

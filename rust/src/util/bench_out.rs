@@ -1,0 +1,71 @@
+//! Shared emission path for the harness-less bench targets
+//! (`benches/*.rs`, `harness = false`).
+//!
+//! Every bench ends the same way: collect `(name, value)` rows while
+//! printing human-readable progress, then flatten them into one JSON
+//! object and write it where CI's artifact-upload step expects it.
+//! That tail (plus the `PD_BENCH_QUICK` tier check and the per-bench
+//! `PD_BENCH_*_OUT` path override) used to be copy-pasted into each
+//! target; this module is the single copy.
+//!
+//! ```no_run
+//! let mut results: Vec<(String, f64)> = Vec::new();
+//! results.push(("tier_1 events_per_sec".into(), 1.5e6));
+//! pilot_data::util::bench_out::emit("PD_BENCH_X_OUT", "BENCH_x.json", &results);
+//! ```
+
+use crate::json::Json;
+
+/// True when `PD_BENCH_QUICK` is set — benches drop to their reduced
+/// CI smoke tiers (fewer iterations / smaller grids), keeping the
+/// emitted JSON schema identical to a full run.
+pub fn quick() -> bool {
+    std::env::var("PD_BENCH_QUICK").is_ok()
+}
+
+/// Resolve the output path for a bench: the value of `env_var` when
+/// set, else `default` (the committed `BENCH_*.json` name CI uploads).
+pub fn out_path(env_var: &str, default: &str) -> String {
+    std::env::var(env_var).unwrap_or_else(|_| default.to_string())
+}
+
+/// Flatten `results` name→value rows into one JSON object and write it
+/// to [`out_path`]`(env_var, default)`, printing the `[json]` trailer
+/// the bench logs always end with. Duplicate names keep the last
+/// value (the object is a map). Write failures are reported on stderr
+/// but do not panic — a bench run's measurements still printed.
+pub fn emit(env_var: &str, default: &str, results: &[(String, f64)]) {
+    let out = out_path(env_var, default);
+    let mut obj = Json::obj();
+    for (name, v) in results {
+        obj = obj.set(name.as_str(), *v);
+    }
+    match std::fs::write(&out, obj.to_string_pretty()) {
+        Ok(()) => println!("\n[json] {out}"),
+        Err(e) => eprintln!("\n[json] failed to write {out}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_flattens_rows_into_the_json_object() {
+        let dir = std::env::temp_dir().join("pd_bench_out_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_emit_test.json");
+        let path_s = path.to_str().unwrap().to_string();
+        // Unset env var falls back to the default path.
+        assert_eq!(out_path("PD_BENCH_OUT_TEST_UNSET_VAR", &path_s), path_s);
+        let rows = vec![
+            ("alpha events_per_sec".to_string(), 1.5e6),
+            ("beta wall_s".to_string(), 0.25),
+        ];
+        emit("PD_BENCH_OUT_TEST_UNSET_VAR", &path_s, &rows);
+        let parsed = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("alpha events_per_sec").and_then(|j| j.as_f64()), Some(1.5e6));
+        assert_eq!(parsed.get("beta wall_s").and_then(|j| j.as_f64()), Some(0.25));
+        let _ = std::fs::remove_file(&path);
+    }
+}

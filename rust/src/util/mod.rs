@@ -1,6 +1,8 @@
 //! Small shared utilities: unique ids, byte/size formatting, duration
-//! formatting, and a dependency-free CLI argument parser.
+//! formatting, a dependency-free CLI argument parser, and the shared
+//! BENCH-JSON emission helper for the harness-less bench targets.
 
+pub mod bench_out;
 pub mod cli;
 
 use std::fmt;

@@ -148,6 +148,25 @@ pub fn bwa_ensemble(tasks: usize, reads_total: Bytes, ref_size: Bytes) -> BwaEns
     BwaEnsemble { reference, read_chunks, cu_template }
 }
 
+/// Cell-parameterized variant of [`bwa_ensemble`] for the sweep
+/// harness (`crate::experiments::sweep`): same footprint math, but the
+/// shared reference carries a caller-chosen affinity label (the
+/// pre-stage/auto-replicate policies fan out over it) and the per-CU
+/// core count is a sweep knob instead of the paper's fixed 2.
+pub fn sweep_ensemble(
+    tasks: usize,
+    reads_total: Bytes,
+    ref_size: Bytes,
+    ref_affinity: &str,
+    cu_cores: u32,
+) -> BwaEnsemble {
+    assert!(cu_cores >= 1, "CUs need at least one core");
+    let mut ens = bwa_ensemble(tasks, reads_total, ref_size);
+    ens.reference.affinity = Some(crate::topology::Label::new(ref_affinity));
+    ens.cu_template.cores = cu_cores;
+    ens
+}
+
 /// Task cost model (sim mode): pure CPU time scaled by machine speed +
 /// shared-FS scan time at the task's current bandwidth share.
 pub fn task_runtime_s(
@@ -246,6 +265,16 @@ mod tests {
         assert_eq!(e.read_chunks[0].total_size(), Bytes::gb(1));
         assert_eq!(e.cu_template.io_bytes_hint, Bytes::gb(9));
         assert_eq!(e.cu_template.cores, 2); // "For each tasks two cores"
+    }
+
+    #[test]
+    fn sweep_ensemble_parameterizes_affinity_and_cores() {
+        let e = sweep_ensemble(4, Bytes::gb(1), Bytes::gb(8), "grid", 1);
+        assert_eq!(e.reference.affinity, Some(crate::topology::Label::new("grid")));
+        assert_eq!(e.cu_template.cores, 1);
+        // Footprint math is unchanged from the paper ensemble.
+        assert_eq!(e.read_chunks.len(), 4);
+        assert_eq!(e.reference.total_size(), Bytes::gb(8));
     }
 
     #[test]
