@@ -1,0 +1,85 @@
+//! Storage-backend bench: runs the 2-site BWA overflow workload across
+//! the three backend classes (parallel-fs / object-store / node-local)
+//! with and without the scheduler's delay-scheduling locality wait, and
+//! emits `BENCH_backends.json` — per cell: completion, makespan, wire
+//! bytes, and backend dollars, plus the headline deltas (bytes and
+//! dollars saved by waiting). Asserts the acceptance invariant: on the
+//! node-local testbed, delay scheduling completes the same 8/8 tasks
+//! while moving strictly fewer bytes than the no-wait baseline.
+//!
+//! Set `PD_BENCH_BACKENDS_OUT` to change the output path and
+//! `PD_BENCH_QUICK=1` to run only the node-local pair (CI smoke).
+//!
+//! Run with: `cargo bench --bench backends`
+
+use pilot_data::experiments::backends::{run_case, BackendRun, TASKS, WAIT_S};
+use pilot_data::storage::BackendClass;
+use pilot_data::util::bench_out;
+use std::time::Instant;
+
+fn main() {
+    let seed = 42u64;
+    let classes: &[BackendClass] = if bench_out::quick() {
+        &[BackendClass::NodeLocal]
+    } else {
+        &[BackendClass::ParallelFs, BackendClass::ObjectStore, BackendClass::NodeLocal]
+    };
+    println!(
+        "# Backends bench ({} classes x {{no-wait, wait {WAIT_S:.0}s}}, seed {seed})",
+        classes.len()
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut cells: Vec<(BackendRun, f64)> = Vec::new();
+    for &class in classes {
+        for wait in [None, Some(WAIT_S)] {
+            let t0 = Instant::now();
+            let r = run_case(class, wait, seed).expect("backend cell failed");
+            let wall = t0.elapsed().as_secs_f64();
+            let tag = format!(
+                "{}/{}",
+                r.class,
+                if r.wait_s.is_some() { "wait" } else { "no-wait" }
+            );
+            println!(
+                "{tag}: {}/{TASKS} done, makespan {:.0}s, {} moved, ${:.2} ({wall:.3}s wall)",
+                r.done, r.makespan, r.bytes_moved, r.dollars
+            );
+            results.push((format!("{tag} done"), r.done as f64));
+            results.push((format!("{tag} makespan_s"), r.makespan));
+            results.push((format!("{tag} bytes_moved"), r.bytes_moved.as_f64()));
+            results.push((format!("{tag} dollars"), r.dollars));
+            results.push((format!("{tag} wall_s"), wall));
+            cells.push((r, wall));
+        }
+    }
+
+    // Headline deltas per class: what the locality wait saved.
+    for pair in cells.chunks(2) {
+        let [(base, _), (wait, _)] = pair else { continue };
+        let bytes_saved = base.bytes_moved.as_f64() - wait.bytes_moved.as_f64();
+        let dollars_saved = base.dollars - wait.dollars;
+        println!(
+            "{}: wait saved {:.2} GiB and ${:.2} ({}/{TASKS} -> {}/{TASKS} done)",
+            base.class,
+            bytes_saved / (1u64 << 30) as f64,
+            dollars_saved,
+            base.done,
+            wait.done
+        );
+        results.push((format!("{} bytes_saved", base.class), bytes_saved));
+        results.push((format!("{} dollars_saved", base.class), dollars_saved));
+        // Acceptance: equal completion, strictly fewer bytes with the
+        // wait on the node-local testbed.
+        if base.class == BackendClass::NodeLocal {
+            assert_eq!(base.done, TASKS, "node-local no-wait must finish {TASKS}/{TASKS}");
+            assert_eq!(wait.done, TASKS, "node-local wait must finish {TASKS}/{TASKS}");
+            assert!(
+                wait.bytes_moved.as_u64() < base.bytes_moved.as_u64(),
+                "delay scheduling saved no bytes on node-local"
+            );
+        }
+    }
+
+    bench_out::emit("PD_BENCH_BACKENDS_OUT", "BENCH_backends.json", &results);
+}

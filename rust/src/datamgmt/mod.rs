@@ -348,6 +348,16 @@ impl ExecutionMode for PreStage {
 /// the candidate's site (most compute first, then PD name for
 /// determinism). Lost replicas (eviction, outage) are repaired the
 /// same way.
+///
+/// On a testbed with heterogeneous
+/// [`crate::storage::BackendProfile`]s the ranking becomes
+/// cost-aware: the same candidate pool is ordered by the target
+/// backend's ingest penalty for this DU's bytes (fixed latency +
+/// dollars at [`crate::storage::simstore::DOLLAR_WEIGHT_S`] seconds
+/// per dollar + capped wire seconds) first, with the pilot count as
+/// the tiebreak — so a busy site behind an expensive object store
+/// loses to a slightly quieter node-local disk. Uniform profiles take
+/// the original pilot-count sort verbatim (bit-identical).
 pub struct AutoReplicate {
     pub replicas: u32,
 }
@@ -398,7 +408,29 @@ impl AutoReplicate {
                 .count();
             candidates.push((weight, scratch.as_str()));
         }
-        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(b.1)));
+        if ctx.store.heterogeneous() {
+            // Cost-aware order (see the struct docs): backend ingest
+            // penalty asc, then pilot count desc, then name asc. Only
+            // the sort key changes — eligibility stayed identical.
+            let bytes = size.as_u64();
+            let penalty = |pd: &str| -> f64 {
+                let Ok(p) = ctx.store.pd(pd) else { return f64::INFINITY };
+                let prof = &p.profile;
+                let cap_s =
+                    prof.bandwidth_cap.map_or(0.0, |c| bytes as f64 / c.max(1e-6));
+                prof.fixed_latency_s
+                    + crate::storage::simstore::DOLLAR_WEIGHT_S * prof.dollars_for(bytes)
+                    + cap_s
+            };
+            candidates.sort_by(|a, b| {
+                penalty(a.1)
+                    .total_cmp(&penalty(b.1))
+                    .then(b.0.cmp(&a.0))
+                    .then(a.1.cmp(b.1))
+            });
+        } else {
+            candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(b.1)));
+        }
         let mut out = Vec::new();
         for (_, pd) in candidates {
             if need == 0 {
@@ -640,6 +672,56 @@ mod tests {
             in_flight: &in_flight,
         };
         assert!(m.on_du_available(&du, "ls-scratch", &ctx).is_empty());
+    }
+
+    /// With heterogeneous backend profiles the top-up ranking flips
+    /// from pilot count to backend ingest penalty: a quieter
+    /// node-local site beats a busier site behind a priced object
+    /// store. (The uniform case keeps the pilot-count order — covered
+    /// by `auto_replicate_tops_up_on_pilot_sites`.)
+    #[test]
+    fn auto_replicate_cost_ranking_prefers_cheap_backends() {
+        use crate::storage::BackendProfile;
+        let topo = Topology::new();
+        let mut store = store_with(&[
+            ("ls-scratch", "xsede/tacc/lonestar"),
+            ("st-scratch", "xsede/tacc/stampede"),
+            ("tr-scratch", "xsede/sdsc/trestles"),
+        ]);
+        // Stampede's scratch is an expensive object store; trestles
+        // sits on free node-local disk.
+        store.set_profile("st-scratch", BackendProfile::object_store()).unwrap();
+        store.set_profile("tr-scratch", BackendProfile::node_local()).unwrap();
+        let mut st = ManagerState::new();
+        let p1 = pilot_at(&mut st, "xsede/tacc/stampede", PilotState::Active);
+        let p2 = pilot_at(&mut st, "xsede/sdsc/trestles", PilotState::Active);
+        pilot_at(&mut st, "xsede/tacc/stampede", PilotState::Active); // 2nd stampede pilot
+        let du = du_with_affinity(&mut st, 2, None);
+        store.register_du(&du, Bytes::gb(2), 1);
+        store.place(&du, "ls-scratch").unwrap();
+        let in_flight = BTreeSet::new();
+        let scratch = vec![
+            (p1.clone(), "st-scratch".to_string()),
+            (p2.clone(), "tr-scratch".to_string()),
+        ];
+        let ctx = DataCtx {
+            topo: &topo,
+            store: &store,
+            state: &st,
+            pilot_scratch: &scratch,
+            in_flight: &in_flight,
+        };
+        // Pilot count alone would pick stampede (2 pilots > 1); the
+        // priced ranking routes the copy to the free local disk.
+        let m = AutoReplicate { replicas: 2 };
+        assert_eq!(
+            m.on_du_available(&du, "ls-scratch", &ctx),
+            vec![StageAction { du: du.clone(), dst_pd: "tr-scratch".into() }]
+        );
+        // Replicas:3 still fills both sites — pricing reorders, it
+        // never shrinks the candidate pool.
+        let m3 = AutoReplicate { replicas: 3 };
+        assert_eq!(m3.on_du_available(&du, "ls-scratch", &ctx).len(), 2);
     }
 
     #[test]

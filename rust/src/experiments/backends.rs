@@ -1,0 +1,238 @@
+//! Three-backend comparison (experiment id `backends`): the same
+//! two-site workload run with the TACC scratch Pilot-Data mapped onto
+//! each storage backend class — parallel filesystem, object store,
+//! node-local disk — with and without the scheduler's delay-scheduling
+//! locality wait.
+//!
+//! The scenario is the locality trade-off the paper's heterogeneous
+//! follow-ups (Pilot-Abstraction on HPC/Hadoop/Cloud; Hadoop on HPC)
+//! evaluate: all input data sits on Lonestar's scratch, and the fleet
+//! has more compute than Lonestar alone can serve. Without a locality
+//! wait the overflow tasks spill to Stampede and drag the 8 GiB
+//! reference across the interconnect per task; with a wait budget they
+//! park until Lonestar's slots turn over and run data-local. The
+//! backend profile decides what the spilled bytes *cost*: free on
+//! parallel-fs/node-local, real dollars (plus a fixed per-attempt
+//! latency and a bandwidth cap) on the object store.
+//!
+//! Per `(backend, wait)` cell the table reports completed CUs,
+//! makespan, wire bytes, backend dollars, and mean staging time. The
+//! headline invariant — delay scheduling moves fewer bytes at equal
+//! 8/8 completion — is asserted by this module's tests and smoked in
+//! CI by `benches/backends.rs` (`BENCH_backends.json`).
+
+use crate::config::{paper_testbed, Testbed};
+use crate::experiments::simdrive::SimSystem;
+use crate::metrics::Table;
+use crate::storage::{BackendClass, BackendProfile};
+use crate::util::Bytes;
+use crate::workload::bwa_ensemble;
+
+/// Number of BWA tasks in the comparison workload.
+pub const TASKS: usize = 8;
+
+/// Locality-wait budget (simulated seconds) used by the "wait" rows:
+/// generous enough that Lonestar's first task wave (≈1 h of compute)
+/// finishes inside it, so parked tasks re-place onto freed local slots
+/// instead of giving up and going remote.
+pub const WAIT_S: f64 = 7200.0;
+
+/// Map the two TACC scratch PDs onto one backend class. `ParallelFs`
+/// applies the uniform default profile, so that row doubles as the
+/// bit-identical pre-profile baseline (`SimStore::heterogeneous()`
+/// stays false and no pricing path changes).
+pub fn apply_backend(tb: &mut Testbed, class: BackendClass) {
+    let profile = match class {
+        BackendClass::ParallelFs => BackendProfile::parallel_fs(),
+        BackendClass::ObjectStore => BackendProfile::object_store(),
+        BackendClass::NodeLocal => BackendProfile::node_local(),
+    };
+    for pd in ["lonestar-scratch", "stampede-scratch"] {
+        tb.store.set_profile(pd, profile).expect("testbed scratch PD exists");
+    }
+}
+
+/// Result of one `(backend, wait)` cell.
+pub struct BackendRun {
+    pub class: BackendClass,
+    /// Locality-wait budget, `None` for the no-wait baseline.
+    pub wait_s: Option<f64>,
+    pub done: usize,
+    pub makespan: f64,
+    pub bytes_moved: Bytes,
+    pub dollars: f64,
+    pub staging_mean: f64,
+}
+
+/// Run the two-site overflow workload on one backend class, with or
+/// without the locality wait. Transfer faults are zeroed so byte and
+/// dollar totals are exact per seed.
+pub fn run_case(
+    class: BackendClass,
+    wait_s: Option<f64>,
+    seed: u64,
+) -> anyhow::Result<BackendRun> {
+    let mut tb = paper_testbed();
+    apply_backend(&mut tb, class);
+    let mut sys = SimSystem::new(tb, seed);
+    if let Some(w) = wait_s {
+        sys = sys.with_locality_wait(w);
+    }
+    sys.zero_transfer_faults();
+
+    // All data lands on Lonestar's scratch: the only data-local site.
+    let ens = bwa_ensemble(TASKS, Bytes::gb(2), Bytes::gb(8));
+    let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch")?;
+    let mut chunk_dus = Vec::new();
+    for c in &ens.read_chunks {
+        chunk_dus.push(sys.upload_du(c, "lonestar-scratch")?);
+    }
+    sys.run()?;
+
+    // More fleet than the data site can serve at once: Lonestar fits 4
+    // concurrent 2-core tasks, Stampede idles next to it as the
+    // remote overflow target.
+    sys.submit_pilot("lonestar", 8, "lonestar-scratch")?;
+    sys.submit_pilot("stampede", 8, "stampede-scratch")?;
+    sys.run()?; // both pilots Active before any CU places
+
+    for chunk in &chunk_dus {
+        let mut cud = ens.cu_template.clone();
+        cud.cores = 2;
+        cud.input_data = vec![ref_du.clone(), chunk.clone()];
+        sys.submit_cu(cud)?;
+    }
+    sys.run()?;
+    anyhow::ensure!(
+        sys.state.workload_finished(),
+        "workload did not finish ({class}, wait {wait_s:?})"
+    );
+
+    let staging: Vec<f64> = sys.metrics.cu_records.iter().map(|r| r.staging_s).collect();
+    Ok(BackendRun {
+        class,
+        wait_s,
+        done: sys.state.count_cu_state(crate::unit::CuState::Done),
+        makespan: sys.metrics.makespan(),
+        bytes_moved: sys.bytes_moved(),
+        dollars: sys.dollars_spent(),
+        staging_mean: crate::util::mean(&staging),
+    })
+}
+
+/// All six cells: each backend class, no-wait then wait.
+pub fn run_all(seed: u64) -> anyhow::Result<Vec<BackendRun>> {
+    let mut out = Vec::new();
+    for class in [BackendClass::ParallelFs, BackendClass::ObjectStore, BackendClass::NodeLocal] {
+        out.push(run_case(class, None, seed)?);
+        out.push(run_case(class, Some(WAIT_S), seed)?);
+    }
+    Ok(out)
+}
+
+/// The backend-comparison table (experiment id `backends`).
+pub fn run(seed: u64) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Storage backends x delay scheduling: 2-site BWA overflow, 8 tasks + 8 GiB reference",
+        &["backend", "wait (s)", "done", "T (s)", "bytes moved", "dollars", "staging mean (s)"],
+    );
+    for r in run_all(seed)? {
+        t.row(vec![
+            format!("{}", r.class),
+            r.wait_s.map_or("0".to_string(), |w| format!("{w:.0}")),
+            format!("{}/{}", r.done, TASKS),
+            format!("{:.0}", r.makespan),
+            format!("{}", r.bytes_moved),
+            format!("{:.2}", r.dollars),
+            format!("{:.0}", r.staging_mean),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance invariant behind `BENCH_backends.json`: on the
+    /// node-local testbed, delay scheduling completes the same 8/8
+    /// tasks while moving strictly fewer bytes than the no-wait
+    /// baseline (the parked tasks run data-local instead of dragging
+    /// the reference to Stampede).
+    #[test]
+    fn delay_scheduling_cuts_bytes_at_equal_completion() {
+        let base = run_case(BackendClass::NodeLocal, None, 11).unwrap();
+        let wait = run_case(BackendClass::NodeLocal, Some(WAIT_S), 11).unwrap();
+        assert_eq!(base.done, TASKS, "no-wait baseline must finish 8/8");
+        assert_eq!(wait.done, TASKS, "delay-scheduled run must finish 8/8");
+        assert!(
+            wait.bytes_moved.as_u64() < base.bytes_moved.as_u64(),
+            "waiting moved {} bytes, no-wait {} — delay scheduling saved nothing",
+            wait.bytes_moved,
+            base.bytes_moved
+        );
+    }
+
+    /// Dollar accounting: the object-store rows pay for every wire
+    /// byte that touches a priced endpoint, so the no-wait spill costs
+    /// strictly more than the data-local wait run; the free backends
+    /// cost exactly 0.
+    #[test]
+    fn object_store_prices_the_spilled_bytes() {
+        let base = run_case(BackendClass::ObjectStore, None, 11).unwrap();
+        let wait = run_case(BackendClass::ObjectStore, Some(WAIT_S), 11).unwrap();
+        assert!(base.dollars > 0.0, "spilled bytes into a priced store cost nothing");
+        assert!(
+            wait.dollars < base.dollars,
+            "wait run ${} !< no-wait ${}",
+            wait.dollars,
+            base.dollars
+        );
+        let free = run_case(BackendClass::ParallelFs, None, 11).unwrap();
+        assert_eq!(free.dollars, 0.0, "uniform backend must accrue no dollars");
+        let local = run_case(BackendClass::NodeLocal, None, 11).unwrap();
+        assert_eq!(local.dollars, 0.0, "node-local backend is unpriced");
+    }
+
+    /// The parallel-fs no-wait cell is the uniform baseline: its
+    /// profile is the no-op default, so `heterogeneous()` stays false
+    /// and the run is byte-identical to a plain unprofiled system.
+    #[test]
+    fn parallel_fs_cell_matches_the_unprofiled_baseline() {
+        let profiled = run_case(BackendClass::ParallelFs, None, 17).unwrap();
+        // Same workload, no profile application at all.
+        let mut sys = SimSystem::new(paper_testbed(), 17);
+        sys.zero_transfer_faults();
+        let ens = bwa_ensemble(TASKS, Bytes::gb(2), Bytes::gb(8));
+        let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").unwrap();
+        let mut chunks = Vec::new();
+        for c in &ens.read_chunks {
+            chunks.push(sys.upload_du(c, "lonestar-scratch").unwrap());
+        }
+        sys.run().unwrap();
+        sys.submit_pilot("lonestar", 8, "lonestar-scratch").unwrap();
+        sys.submit_pilot("stampede", 8, "stampede-scratch").unwrap();
+        sys.run().unwrap();
+        for chunk in &chunks {
+            let mut cud = ens.cu_template.clone();
+            cud.cores = 2;
+            cud.input_data = vec![ref_du.clone(), chunk.clone()];
+            sys.submit_cu(cud).unwrap();
+        }
+        sys.run().unwrap();
+        assert!(sys.state.workload_finished());
+        assert_eq!(profiled.bytes_moved.as_u64(), sys.bytes_moved().as_u64());
+        assert_eq!(profiled.makespan.to_bits(), sys.makespan().to_bits());
+        assert_eq!(profiled.dollars, 0.0);
+    }
+
+    #[test]
+    fn backends_table_renders_and_is_deterministic() {
+        let a = run(3).unwrap();
+        let b = run(3).unwrap();
+        assert_eq!(a[0].rows.len(), 6);
+        assert_eq!(a[0].render(), b[0].render(), "backends table drifted between runs");
+        assert!(a[0].render().contains("object-store"));
+        assert!(a[0].render().contains("node-local"));
+    }
+}

@@ -127,6 +127,9 @@ pub fn run_scenario(scenario: usize, seed: u64) -> anyhow::Result<ScenarioResult
 
 /// Average a scenario over a few seeds (the paper reports averages).
 pub fn run_scenario_avg(scenario: usize, seed: u64, reps: u64) -> anyhow::Result<ScenarioResult> {
+    // `reps = 0` would divide the averages below by zero and return
+    // NaN scenario times — reject it instead of poisoning the table.
+    anyhow::ensure!(reps > 0, "run_scenario_avg needs at least one rep");
     let mut results = Vec::new();
     for r in 0..reps {
         results.push(run_scenario(scenario, seed + r * 101)?);
@@ -185,6 +188,12 @@ pub fn run_fig10(seed: u64) -> anyhow::Result<Vec<Table>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn zero_reps_is_an_error_not_a_nan() {
+        let err = run_scenario_avg(1, 11, 0).unwrap_err().to_string();
+        assert!(err.contains("at least one rep"), "unexpected error: {err}");
+    }
 
     #[test]
     fn pd_scenarios_beat_naive() {

@@ -25,10 +25,16 @@
 //! with generator-based stochastic arrivals and validates the measured
 //! queueing behavior (utilization, mean wait, backlog growth) against
 //! the Erlang-C closed form per load tier ρ. `sweep` expands a typed
-//! parameter grid (mode × sites × quota, …) into cells executed on a
-//! multi-threaded work-stealing pool and runs a simulated-annealing
-//! auto-tuner over the same grid.
+//! parameter grid (mode × sites × quota, with an opt-in storage
+//! backend axis, …) into cells executed on a multi-threaded
+//! work-stealing pool and runs a simulated-annealing auto-tuner over
+//! the same grid. `backends` runs
+//! the 2-site overflow workload across the three storage backend
+//! classes (parallel-fs / object-store / node-local) with and without
+//! the scheduler's delay-scheduling locality wait, reporting bytes
+//! moved and backend dollars per cell.
 
+pub mod backends;
 pub mod simdrive;
 pub mod fig7;
 pub mod fig8;
@@ -56,17 +62,18 @@ pub fn run(id: &str, seed: u64) -> anyhow::Result<Vec<Table>> {
         "fig12" => fig11::run_fig12(seed),
         "fig13" => fig11::run_fig13(seed),
         "modes" => modes::run(seed),
+        "backends" => backends::run(seed),
         "openloop" => openloop::run(seed),
         "resilience" => resilience::run(seed),
         "scale" => scale::run(seed),
         "sweep" => sweep::run(seed),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, openloop, resilience, scale, sweep)"
+            "unknown experiment '{other}' (try table1, fig7, fig8, fig9, fig10, fig11, fig12, fig13, modes, backends, openloop, resilience, scale, sweep)"
         ),
     }
 }
 
-pub const ALL: [&str; 13] = [
+pub const ALL: [&str; 14] = [
     "table1",
     "fig7",
     "fig8",
@@ -76,6 +83,7 @@ pub const ALL: [&str; 13] = [
     "fig12",
     "fig13",
     "modes",
+    "backends",
     "openloop",
     "resilience",
     "scale",

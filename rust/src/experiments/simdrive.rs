@@ -249,6 +249,12 @@ pub struct SimSystem {
     /// Total bytes sent over the wire (DU uploads/replications + remote
     /// CU stage-ins) — the mode-comparison cost metric.
     bytes_moved: u64,
+    /// Cumulative egress+ingress dollars for every wire transfer,
+    /// priced by the endpoints' [`crate::storage::BackendProfile`]s.
+    /// Stays exactly 0.0 on a uniform testbed (the store's
+    /// `transfer_dollars` is gated on `heterogeneous()`), so the
+    /// bit-identity oracles never see a float drift from it.
+    dollars_spent: f64,
     /// Placements rejected by the storage-capacity model (PD full of
     /// pinned/last replicas, or down).
     pub capacity_rejections: u32,
@@ -321,6 +327,7 @@ impl SimSystem {
             repl_in_flight: BTreeSet::new(),
             data_events,
             bytes_moved: 0,
+            dollars_spent: 0.0,
             capacity_rejections: 0,
             capacity_aware_scheduling: true,
             defer_wakeups: false,
@@ -395,6 +402,24 @@ impl SimSystem {
     /// remote stage-ins).
     pub fn bytes_moved(&self) -> Bytes {
         Bytes(self.bytes_moved)
+    }
+
+    /// Cumulative backend dollars charged for wire transfers so far
+    /// (0.0 on a uniform testbed — see [`crate::storage::BackendProfile`]).
+    pub fn dollars_spent(&self) -> f64 {
+        self.dollars_spent
+    }
+
+    /// Enable delay scheduling with the given locality-wait budget by
+    /// installing a fresh [`AffinityScheduler`]. The budget is spent in
+    /// simulated time: a CU whose best data score has no free local
+    /// slot parks for up to `wait_s` seconds before accepting a remote
+    /// placement. `with_locality_wait(0.0)` is the bit-identity
+    /// reference — the scheduler takes the no-wait path unchanged.
+    pub fn with_locality_wait(mut self, wait_s: f64) -> SimSystem {
+        self.scheduler =
+            Box::new(AffinityScheduler::new(None).with_locality_wait(Some(wait_s)));
+        self
     }
 
     /// Structural counters from the event-wheel backend (all-zero under
@@ -619,6 +644,7 @@ impl SimSystem {
         match self.retry_style {
             RetryStyle::Aggregate => {
                 self.bytes_moved += size;
+                self.dollars_spent += self.tb.store.transfer_dollars(src_pd, dst_pd, size);
                 let outcome =
                     attempt_transfer(&mut self.rng, proto_rate, cost.wire_s, self.retry);
                 let total = cost.total() + outcome.wasted_s;
@@ -643,10 +669,13 @@ impl SimSystem {
                 let rate = 1.0 - (1.0 - proto_rate) * (1.0 - link_rate);
                 let (elapsed, ok) = if self.rng.chance(rate) {
                     let frac = self.rng.range_f64(0.1, 0.9);
-                    self.bytes_moved += (size as f64 * frac) as u64;
+                    let part = (size as f64 * frac) as u64;
+                    self.bytes_moved += part;
+                    self.dollars_spent += self.tb.store.transfer_dollars(src_pd, dst_pd, part);
                     (cost.setup_s + cost.wire_s * frac, false)
                 } else {
                     self.bytes_moved += size;
+                    self.dollars_spent += self.tb.store.transfer_dollars(src_pd, dst_pd, size);
                     (cost.total(), true)
                 };
                 self.sim.schedule(elapsed, Ev::DuStaged {
@@ -903,9 +932,10 @@ impl SimSystem {
     fn place_cu(&mut self, cu_id: &str) -> anyhow::Result<()> {
         let capacity =
             if self.capacity_aware_scheduling { self.capacity_by_label() } else { None };
+        let now = self.sim.now();
         let placement = {
             let cu = &self.state.cus[cu_id];
-            let mut ctx = SchedContext::from_state(&self.tb.topo, &self.state);
+            let mut ctx = SchedContext::from_state(&self.tb.topo, &self.state).with_now(now);
             if let Some(cap) = capacity.as_ref() {
                 ctx = ctx.with_capacity(cap);
             }
@@ -1681,6 +1711,8 @@ impl SimSystem {
                         ok &= outcome.succeeded;
                         total += cost.total() + outcome.wasted_s;
                         self.bytes_moved += size;
+                        self.dollars_spent +=
+                            self.tb.store.transfer_dollars(&src_name, &home.scratch, size);
                     }
                     RetryStyle::InDes => {
                         // One draw per attempt, composed with the
@@ -1697,10 +1729,15 @@ impl SimSystem {
                             let frac = self.rng.range_f64(0.1, 0.9);
                             ok = false;
                             total += cost.setup_s + cost.wire_s * frac;
-                            self.bytes_moved += (size as f64 * frac) as u64;
+                            let part = (size as f64 * frac) as u64;
+                            self.bytes_moved += part;
+                            self.dollars_spent +=
+                                self.tb.store.transfer_dollars(&src_name, &home.scratch, part);
                         } else {
                             total += cost.total();
                             self.bytes_moved += size;
+                            self.dollars_spent +=
+                                self.tb.store.transfer_dollars(&src_name, &home.scratch, size);
                         }
                     }
                 }

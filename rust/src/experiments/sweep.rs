@@ -9,7 +9,8 @@
 //!
 //! * [`CellSpec`] — one point of the parameter space (mode incl.
 //!   `AutoReplicate` N, site count, pilots per site, cores per pilot,
-//!   task count, scratch quota ratio, open-loop arrival intensity ρ);
+//!   task count, scratch quota ratio, open-loop arrival intensity ρ,
+//!   storage backend class for every site scratch);
 //! * [`Axis`] / [`Grid`] — typed axes over a base `CellSpec`, expanded
 //!   row-major (last axis fastest) into a stable cell order;
 //! * [`run_cell`] — the cell executor: an N-site testbed, the
@@ -54,7 +55,7 @@ use crate::experiments::simdrive::SimSystem;
 use crate::metrics::Table;
 use crate::net::{Bandwidth, Network};
 use crate::rng::Rng;
-use crate::storage::{simstore::SimStore, Endpoint};
+use crate::storage::{simstore::SimStore, BackendClass, BackendProfile, Endpoint};
 use crate::topology::{Label, Topology};
 use crate::unit::CuState;
 use crate::util::Bytes;
@@ -94,6 +95,11 @@ pub struct CellSpec {
     /// Open-loop offered load ρ = λ / (c·μ); `0.0` runs the closed
     /// BWA batch instead.
     pub rho: f64,
+    /// Storage backend class applied to every site scratch.
+    /// `ParallelFs` is the uniform default — it leaves the store
+    /// non-heterogeneous and (by design) absent from [`Self::key`], so
+    /// pre-backend cell seeds are unchanged.
+    pub backend: BackendClass,
 }
 
 impl Default for CellSpec {
@@ -106,6 +112,7 @@ impl Default for CellSpec {
             tasks: 8,
             quota_ratio: 0.0,
             rho: 0.0,
+            backend: BackendClass::ParallelFs,
         }
     }
 }
@@ -126,7 +133,7 @@ impl CellSpec {
     /// are equal (axis f64 values are rendered at 4 decimals; axes
     /// must not carry values closer than that).
     pub fn key(&self) -> String {
-        format!(
+        let mut key = format!(
             "mode={} sites={} pilots={} cores={} tasks={} quota={:.4} rho={:.4}",
             mode_key(self.mode),
             self.sites,
@@ -135,7 +142,15 @@ impl CellSpec {
             self.tasks,
             self.quota_ratio,
             self.rho
-        )
+        );
+        // The default backend is deliberately left out: a pre-backend
+        // cell's key (and therefore its derived RNG seed and measured
+        // result) is byte-identical to what it was before the backend
+        // axis existed.
+        if self.backend != BackendClass::ParallelFs {
+            key.push_str(&format!(" backend={}", self.backend));
+        }
+        key
     }
 
     /// The cell's sim seed: a pure function of `(base_seed, key)` via
@@ -178,6 +193,7 @@ pub enum Axis {
     Tasks(Vec<usize>),
     QuotaRatio(Vec<f64>),
     Rho(Vec<f64>),
+    Backend(Vec<BackendClass>),
 }
 
 impl Axis {
@@ -190,6 +206,7 @@ impl Axis {
             Axis::Tasks(_) => "tasks",
             Axis::QuotaRatio(_) => "quota_ratio",
             Axis::Rho(_) => "rho",
+            Axis::Backend(_) => "backend",
         }
     }
 
@@ -202,6 +219,7 @@ impl Axis {
             Axis::Tasks(v) => v.len(),
             Axis::QuotaRatio(v) => v.len(),
             Axis::Rho(v) => v.len(),
+            Axis::Backend(v) => v.len(),
         }
     }
 
@@ -219,6 +237,7 @@ impl Axis {
             Axis::Tasks(v) => spec.tasks = v[i],
             Axis::QuotaRatio(v) => spec.quota_ratio = v[i],
             Axis::Rho(v) => spec.rho = v[i],
+            Axis::Backend(v) => spec.backend = v[i],
         }
     }
 }
@@ -335,6 +354,18 @@ pub fn cell_testbed(spec: &CellSpec) -> Testbed {
         if s > 0 && spec.quota_ratio > 0.0 {
             let quota = Bytes((spec.quota_ratio * REF_SIZE.as_f64()) as u64);
             store.set_quota(&site_scratch(s), Some(quota)).unwrap();
+        }
+        // Non-default backend classes flip the store heterogeneous and
+        // bring their latency/cap/dollar pricing into every cell
+        // transfer; the ParallelFs default leaves the store exactly as
+        // it was before the backend axis existed.
+        if spec.backend != BackendClass::ParallelFs {
+            let profile = match spec.backend {
+                BackendClass::ParallelFs => BackendProfile::parallel_fs(),
+                BackendClass::ObjectStore => BackendProfile::object_store(),
+                BackendClass::NodeLocal => BackendProfile::node_local(),
+            };
+            store.set_profile(&site_scratch(s), profile).unwrap();
         }
     }
 
@@ -560,8 +591,8 @@ pub fn cell_table(title: &str, results: &[CellResult]) -> Table {
     let mut t = Table::new(
         title,
         &[
-            "mode", "sites", "pilots", "cores", "tasks", "quota", "rho", "T (s)", "T_D (s)",
-            "bytes moved", "mean wait (s)", "p95 wait (s)", "done", "events",
+            "mode", "sites", "pilots", "cores", "tasks", "quota", "rho", "backend", "T (s)",
+            "T_D (s)", "bytes moved", "mean wait (s)", "p95 wait (s)", "done", "events",
         ],
     );
     for r in results {
@@ -573,6 +604,7 @@ pub fn cell_table(title: &str, results: &[CellResult]) -> Table {
             r.spec.tasks.to_string(),
             format!("{:.2}", r.spec.quota_ratio),
             format!("{:.2}", r.spec.rho),
+            r.spec.backend.to_string(),
             format!("{:.1}", r.makespan_s),
             format!("{:.1}", r.t_d_s),
             format!("{}", Bytes(r.bytes_moved)),
@@ -890,6 +922,43 @@ mod tests {
         );
         assert!(out.evaluations <= grid.len(), "memo must cap evaluations at the grid size");
         assert_eq!(out.trace.len(), cfg.iters);
+    }
+
+    /// ISSUE 10 satellite — the backend axis. The default backend is
+    /// absent from the key (pre-backend cell seeds are frozen), the
+    /// non-default classes get distinct coordinates, and a backend
+    /// grid keeps the serial-vs-pool byte-identity contract.
+    #[test]
+    fn backend_axis_expands_and_keeps_pool_identity() {
+        let base = CellSpec { tasks: 2, cores: 4, ..CellSpec::default() };
+        // Key stability: the default class renders the exact
+        // pre-backend key, so its derived seed is unchanged.
+        assert!(!base.key().contains("backend="));
+        let nl = CellSpec { backend: BackendClass::NodeLocal, ..base };
+        let os = CellSpec { backend: BackendClass::ObjectStore, ..base };
+        assert!(nl.key().ends_with("backend=node-local"));
+        assert_ne!(nl.key(), os.key());
+        assert_ne!(nl.seed(42), os.seed(42));
+
+        let grid = Grid::new(base).axis(Axis::Backend(vec![
+            BackendClass::ParallelFs,
+            BackendClass::ObjectStore,
+            BackendClass::NodeLocal,
+        ]));
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 3);
+
+        let serial: Vec<CellResult> =
+            cells.iter().map(|c| run_cell(c, 42).unwrap()).collect();
+        let pool = run_cells(&cells, 42, 3).unwrap();
+        let det = |rs: &[CellResult]| rs.iter().map(CellResult::det_fields).collect::<Vec<_>>();
+        assert_eq!(det(&serial), det(&pool), "backend grid diverged across worker counts");
+        for r in &serial {
+            assert_eq!(r.done_cus, 2, "cell {} lost CUs", r.key);
+        }
+        let t = cell_table("t", &pool);
+        assert!(t.render().contains("object-store"));
+        assert!(t.render().contains("node-local"));
     }
 
     /// Quota-bound and open-loop cells run to completion.

@@ -20,10 +20,14 @@ fn usage() -> ! {
          \n\
          commands:\n\
            exp <id|all> [--seed N] [--results DIR]   regenerate table1 / fig7..fig13 / modes /\n\
-                                                      openloop / resilience / scale / sweep\n\
+                                                      backends / openloop / resilience / scale /\n\
+                                                      sweep\n\
                                                       (sweep: parallel mode x sites x quota grid\n\
-                                                      + annealing tuner; workers from\n\
-                                                      PD_SWEEP_THREADS or available cores)\n\
+                                                      + annealing tuner, with an opt-in backend\n\
+                                                      axis; workers\n\
+                                                      from PD_SWEEP_THREADS or available cores;\n\
+                                                      backends: storage classes x delay\n\
+                                                      scheduling on the 2-site workload)\n\
            align [--artifacts DIR] [--reads N] [--pilots N]  local-mode alignment demo\n\
            capabilities                               print storage adaptor registry\n"
     );

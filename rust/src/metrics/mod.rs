@@ -139,8 +139,16 @@ impl RunMetrics {
         self.scalars.insert(name.to_string(), value);
     }
 
+    /// Named scalar, `f64::NAN` when absent. The NaN is a sentinel for
+    /// display code; arithmetic callers should use [`Self::try_scalar`]
+    /// so a missing scalar can't silently poison a mean or total.
     pub fn scalar(&self, name: &str) -> f64 {
         *self.scalars.get(name).unwrap_or(&f64::NAN)
+    }
+
+    /// Named scalar, `None` when absent — the NaN-free accessor.
+    pub fn try_scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.get(name).copied()
     }
 
     /// Record a step-series sample (the series is created on first
@@ -234,7 +242,10 @@ impl RunMetrics {
             .filter(|(_, who, ev)| *ev == TimelineEvent::CuFinished && who == machine)
             .map(|(t, _, _)| *t)
             .collect();
-        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // NaN-safe total order: a corrupt timestamp sorts last instead
+        // of panicking the metrics pass (same contract as
+        // `active_curve`).
+        ts.sort_by(|a, b| a.total_cmp(b));
         ts.into_iter().enumerate().map(|(i, t)| (t, i as u64 + 1)).collect()
     }
 }
@@ -354,6 +365,30 @@ mod tests {
         assert_eq!(m.makespan(), 0.0);
         assert!(m.distribution().is_empty());
         assert!(m.scalar("absent").is_nan());
+        assert_eq!(m.try_scalar("absent"), None);
+    }
+
+    #[test]
+    fn try_scalar_is_the_nan_free_accessor() {
+        let mut m = RunMetrics::default();
+        m.set_scalar("t_d", 12.5);
+        assert_eq!(m.try_scalar("t_d"), Some(12.5));
+        assert_eq!(m.scalar("t_d"), 12.5);
+        // The NaN sentinel never leaks through try_scalar, so summing
+        // over present scalars stays finite even when one is missing.
+        let total: f64 = ["t_d", "absent"].iter().filter_map(|k| m.try_scalar(k)).sum();
+        assert_eq!(total, 12.5);
+    }
+
+    #[test]
+    fn finished_curve_tolerates_nan_timestamps() {
+        let mut m = RunMetrics::default();
+        m.mark(f64::NAN, "lonestar", TimelineEvent::CuFinished);
+        m.mark(3.0, "lonestar", TimelineEvent::CuFinished);
+        // Must not panic; the finite point sorts first.
+        let curve = m.finished_curve("lonestar");
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[0], (3.0, 1));
     }
 
     #[test]

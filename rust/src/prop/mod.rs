@@ -475,13 +475,19 @@ mod tests {
     /// queue backends (the calendar-queue wheel and the retained heap
     /// reference), proving the engine swap leaves the fault lifecycle
     /// unchanged; the two runs must also agree on completion counts
-    /// and final sim time exactly.
+    /// and final sim time exactly. ISSUE 10 rerun: a random half of the
+    /// cases run on a **mixed-backend** testbed (node-local Lonestar
+    /// scratch, object-store Stampede scratch), so the heterogeneous
+    /// pricing path — per-attempt latency, bandwidth caps, dollar
+    /// accrual — is exercised under the same chaos, and the two queue
+    /// backends must additionally agree on dollars spent bit-for-bit.
     #[test]
     fn chaos_runs_preserve_end_to_end_invariants() {
         use crate::config::paper_testbed;
         use crate::experiments::simdrive::SimSystem;
         use crate::faults::ChaosPlan;
         use crate::simtime::QueueBackend;
+        use crate::storage::BackendProfile;
         use crate::util::Bytes;
         use crate::workload::bwa_ensemble;
 
@@ -492,9 +498,19 @@ mod tests {
             survivor_cores: u32,
             victim_cores: u32,
             intensity: f64,
-        ) -> Result<(usize, u64, f64), String> {
+            mixed: bool,
+        ) -> Result<(usize, u64, f64, f64), String> {
             let es = |e: anyhow::Error| format!("{e} [{backend:?}]");
-            let mut sys = SimSystem::new(paper_testbed(), seed).with_sim_backend(backend);
+            let mut tb = paper_testbed();
+            if mixed {
+                tb.store
+                    .set_profile("lonestar-scratch", BackendProfile::node_local())
+                    .map_err(es)?;
+                tb.store
+                    .set_profile("stampede-scratch", BackendProfile::object_store())
+                    .map_err(es)?;
+            }
+            let mut sys = SimSystem::new(tb, seed).with_sim_backend(backend);
             let ens = bwa_ensemble(tasks, Bytes::gb(1), Bytes::gb(8));
             let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
             let mut chunks = Vec::new();
@@ -555,7 +571,7 @@ mod tests {
                     sys.tb.net.total_live_flows()
                 ));
             }
-            Ok((done, sys.sim.processed(), sys.sim.now()))
+            Ok((done, sys.sim.processed(), sys.sim.now(), sys.dollars_spent()))
         }
 
         crate::prop::check(
@@ -567,9 +583,10 @@ mod tests {
                     4 + 4 * rng.below(3) as u32,        // survivor cores
                     4 + 4 * rng.below(2) as u32,        // victim cores
                     rng.range_f64(0.3, 1.0),            // chaos intensity
+                    rng.chance(0.5),                    // mixed-backend testbed
                 )
             },
-            |&(seed, tasks, survivor_cores, victim_cores, intensity)| {
+            |&(seed, tasks, survivor_cores, victim_cores, intensity, mixed)| {
                 let wheel = run_under(
                     QueueBackend::Wheel,
                     seed,
@@ -577,6 +594,7 @@ mod tests {
                     survivor_cores,
                     victim_cores,
                     intensity,
+                    mixed,
                 )?;
                 let heap = run_under(
                     QueueBackend::Heap,
@@ -585,12 +603,22 @@ mod tests {
                     survivor_cores,
                     victim_cores,
                     intensity,
+                    mixed,
                 )?;
-                if wheel.0 != heap.0 || wheel.1 != heap.1 || wheel.2.to_bits() != heap.2.to_bits()
+                if wheel.0 != heap.0
+                    || wheel.1 != heap.1
+                    || wheel.2.to_bits() != heap.2.to_bits()
+                    || wheel.3.to_bits() != heap.3.to_bits()
                 {
                     return Err(format!(
-                        "backends diverge under chaos: wheel (done, events, t_end) = {wheel:?}, heap = {heap:?}"
+                        "backends diverge under chaos (mixed={mixed}): wheel (done, events, t_end, dollars) = {wheel:?}, heap = {heap:?}"
                     ));
+                }
+                // A uniform testbed must never accrue dollars; the
+                // mixed one prices any wire transfer that touches the
+                // object-store scratch.
+                if !mixed && wheel.3 != 0.0 {
+                    return Err(format!("uniform testbed accrued ${}", wheel.3));
                 }
                 Ok(())
             },
@@ -677,6 +705,112 @@ mod tests {
                     return Err(format!(
                         "placement traces diverge:\n wheel: {wheel:?}\n heap:  {heap:?}"
                     ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// ISSUE 10 tentpole: heterogeneous backends and delay scheduling
+    /// must be a perfect off-switch. A system with a **zero**
+    /// locality-wait budget and explicitly applied **uniform** backend
+    /// profiles on both scratches must produce **bit-identical**
+    /// placement traces, makespan, and wire bytes to the plain
+    /// pre-backend scheduler on randomized two-site workloads: the
+    /// wait ledger records nothing at `Some(0.0)`, a uniform profile
+    /// keeps `SimStore::heterogeneous()` false so no pricing or
+    /// ranking path diverges, and `dollars_spent` stays exactly 0.
+    #[test]
+    fn zero_wait_uniform_profiles_match_seed_scheduler_traces() {
+        use crate::config::paper_testbed;
+        use crate::experiments::simdrive::SimSystem;
+        use crate::storage::BackendProfile;
+        use crate::util::Bytes;
+        use crate::workload::bwa_ensemble;
+
+        type Trace = (Vec<(usize, String, f64, f64, f64, f64)>, f64, u64);
+
+        fn run_one(
+            backends_on: bool,
+            seed: u64,
+            pilots: &[(&'static str, &'static str, u32)],
+            tasks: usize,
+            chunk_gb: u64,
+        ) -> Result<(Trace, f64), String> {
+            let es = |e: anyhow::Error| e.to_string();
+            let mut tb = paper_testbed();
+            if backends_on {
+                // Uniform (default-equal) profiles: the store must not
+                // flip into heterogeneous pricing.
+                tb.store
+                    .set_profile("lonestar-scratch", BackendProfile::parallel_fs())
+                    .map_err(es)?;
+                tb.store
+                    .set_profile("stampede-scratch", BackendProfile::parallel_fs())
+                    .map_err(es)?;
+            }
+            let mut sys = SimSystem::new(tb, seed);
+            if backends_on {
+                sys = sys.with_locality_wait(0.0);
+            }
+            let ens = bwa_ensemble(tasks, Bytes::gb(chunk_gb), Bytes::gb(8));
+            let ref_du = sys.upload_du(&ens.reference, "lonestar-scratch").map_err(es)?;
+            let mut chunks = Vec::new();
+            for c in &ens.read_chunks {
+                chunks.push(sys.upload_du(c, "lonestar-scratch").map_err(es)?);
+            }
+            sys.run().map_err(es)?; // land the data
+            for (machine, scratch, cores) in pilots {
+                sys.submit_pilot(machine, *cores, scratch).map_err(es)?;
+            }
+            let mut submitted = Vec::new();
+            for chunk in &chunks {
+                let mut cud = ens.cu_template.clone();
+                cud.input_data = vec![ref_du.clone(), chunk.clone()];
+                submitted.push(sys.submit_cu(cud).map_err(es)?);
+            }
+            sys.run().map_err(es)?;
+            if !sys.state.workload_finished() {
+                return Err(format!("workload not finished (backends_on={backends_on})"));
+            }
+            let trace = sys
+                .metrics
+                .cu_records
+                .iter()
+                .map(|r| {
+                    let idx = submitted
+                        .iter()
+                        .position(|id| *id == r.cu)
+                        .ok_or_else(|| format!("unknown cu {}", r.cu))?;
+                    Ok((idx, r.machine.clone(), r.t_start, r.t_end, r.staging_s, r.compute_s))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok(((trace, sys.makespan(), sys.bytes_moved().as_u64()), sys.dollars_spent()))
+        }
+
+        crate::prop::check(
+            Config { cases: 8, seed: 0xBAC_EAD },
+            |rng| {
+                let mut pilots: Vec<(&'static str, &'static str, u32)> =
+                    vec![("lonestar", "lonestar-scratch", 4 + 4 * rng.below(3) as u32)];
+                if rng.chance(0.6) {
+                    pilots.push(("stampede", "stampede-scratch", 4 + 4 * rng.below(3) as u32));
+                }
+                if rng.chance(0.3) {
+                    pilots.push(("lonestar", "lonestar-scratch", 4));
+                }
+                (rng.next_u64(), pilots, 1 + rng.below(6) as usize, 1 + rng.below(3))
+            },
+            |(seed, pilots, tasks, chunk_gb)| {
+                let (with, dollars) = run_one(true, *seed, pilots, *tasks, *chunk_gb)?;
+                let (without, _) = run_one(false, *seed, pilots, *tasks, *chunk_gb)?;
+                if with != without {
+                    return Err(format!(
+                        "zero-wait uniform run diverges from seed scheduler:\n on:  {with:?}\n off: {without:?}"
+                    ));
+                }
+                if dollars != 0.0 {
+                    return Err(format!("uniform profiles accrued ${dollars}"));
                 }
                 Ok(())
             },

@@ -77,6 +77,14 @@ pub struct SchedContext<'a> {
     /// disables the gate and keeps decisions bit-identical to the
     /// capacity-blind scheduler.
     pub capacity: Option<&'a BTreeMap<Label, u64>>,
+    /// Current time in seconds, used by delay scheduling
+    /// ([`AffinityScheduler::locality_wait_s`]) to meter a CU's
+    /// locality-wait budget. The sim driver passes its simclock
+    /// ([`SchedContext::with_now`]); the wall-clock service leaves the
+    /// [`SchedContext::from_state`] default of `0.0`, which freezes the
+    /// budget clock and makes the scheduler fall back to skip
+    /// counting.
+    pub now: f64,
 }
 
 impl<'a> SchedContext<'a> {
@@ -89,6 +97,7 @@ impl<'a> SchedContext<'a> {
             du_locations: state.du_locations(),
             queue_depth: state.queue_depths(),
             capacity: None,
+            now: 0.0,
         }
     }
 
@@ -96,6 +105,13 @@ impl<'a> SchedContext<'a> {
     /// field) to enable capacity-aware scoring.
     pub fn with_capacity(mut self, capacity: &'a BTreeMap<Label, u64>) -> SchedContext<'a> {
         self.capacity = Some(capacity);
+        self
+    }
+
+    /// Set the scheduler's clock (see the `now` field): the sim driver
+    /// passes its simtime so locality-wait deadlines expire exactly.
+    pub fn with_now(mut self, now: f64) -> SchedContext<'a> {
+        self.now = now;
         self
     }
 
@@ -189,6 +205,24 @@ pub trait Scheduler: Send + Sync {
 
 /// The paper's affinity-aware scheduler (§5) with optional delayed
 /// scheduling.
+///
+/// # Delay scheduling (locality wait)
+///
+/// With [`AffinityScheduler::locality_wait_s`] set, a CU whose best
+/// [`SchedContext::data_score`] pilot is busy *waits* instead of
+/// accepting a remote slot: `place` returns [`Placement::Delay`] and
+/// the driver re-invokes it later. The wait is a hard per-CU budget
+/// metered on [`SchedContext::now`]: the first waiting decision records
+/// the start time, subsequent re-placements return the *remaining*
+/// budget, and once `now` reaches `start + locality_wait_s` the CU
+/// falls through to the normal non-local path (global queue or the
+/// constrained subtree's best pilot) — waiting can therefore never
+/// deadlock an otherwise-servable CU. Drivers with no simclock (the
+/// wall-clock service leaves `now` at `0.0`) fall back to counting
+/// re-placement skips against [`AffinityScheduler::max_delay_rounds`].
+/// A budget of `Some(0.0)` records nothing and decides exactly like
+/// `None` — that equivalence is what the bit-identity oracle property
+/// pins.
 pub struct AffinityScheduler {
     /// Seconds to wait for a slot on the preferred pilot before falling
     /// back to the global queue. `None` disables delayed scheduling.
@@ -197,11 +231,29 @@ pub struct AffinityScheduler {
     delays_spent: Mutex<BTreeMap<String, u32>>,
     /// Max delay rounds before giving up on locality.
     pub max_delay_rounds: u32,
+    /// Locality-wait budget (seconds) for delay scheduling; `None`
+    /// disables it (the pre-budget behavior).
+    pub locality_wait_s: Option<f64>,
+    /// Per-CU wait ledger: (budget start time, re-placement skips so
+    /// far). Entries exist only while a CU is actively waiting.
+    wait_started: Mutex<BTreeMap<String, (f64, u32)>>,
 }
 
 impl AffinityScheduler {
     pub fn new(delay_s: Option<f64>) -> AffinityScheduler {
-        AffinityScheduler { delay_s, delays_spent: Mutex::new(BTreeMap::new()), max_delay_rounds: 3 }
+        AffinityScheduler {
+            delay_s,
+            delays_spent: Mutex::new(BTreeMap::new()),
+            max_delay_rounds: 3,
+            locality_wait_s: None,
+            wait_started: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Enable delay scheduling with the given locality-wait budget.
+    pub fn with_locality_wait(mut self, wait_s: Option<f64>) -> AffinityScheduler {
+        self.locality_wait_s = wait_s;
+        self
     }
 }
 
@@ -249,7 +301,49 @@ impl Scheduler for AffinityScheduler {
         // not already spoken for by queued work.
         if best.has_free_slot(cu.description.cores) && best_slots >= cores as i64 {
             self.delays_spent.lock().unwrap().remove(&cu.id);
+            self.wait_started.lock().unwrap().remove(&cu.id);
             return Placement::Pilot(best.id.clone());
+        }
+
+        // Step 2.5: delay scheduling — the data-local pilot is busy, so
+        // spend the locality-wait budget before accepting a non-local
+        // slot. Only engages when the CU actually has data somewhere
+        // (`best_score > 0.0`); score-less CUs gain nothing by waiting.
+        if let Some(w) = self.locality_wait_s {
+            if best_score > 0.0 {
+                let mut waits = self.wait_started.lock().unwrap();
+                match waits.get(&cu.id).copied() {
+                    None => {
+                        // A zero budget records nothing and falls
+                        // through — exactly the `None` decision path
+                        // (the bit-identity oracle).
+                        if w > 0.0 {
+                            waits.insert(cu.id.clone(), (ctx.now, 0));
+                            return Placement::Delay(w);
+                        }
+                    }
+                    Some((start, skips)) => {
+                        // Float-exact expiry: the driver re-places at
+                        // `start + w`, and this comparison recomputes
+                        // the same expression.
+                        let deadline = start + w;
+                        if ctx.now >= deadline {
+                            // Budget exhausted: fall through to the
+                            // non-local path — never deadlock.
+                            waits.remove(&cu.id);
+                        } else if skips + 1 >= self.max_delay_rounds {
+                            // Wall-clock fallback: a frozen clock
+                            // (`now` stuck at 0.0) can never reach the
+                            // deadline, so skip counting bounds the
+                            // wait instead.
+                            waits.remove(&cu.id);
+                        } else {
+                            waits.insert(cu.id.clone(), (start, skips + 1));
+                            return Placement::Delay(deadline - ctx.now);
+                        }
+                    }
+                }
+            }
         }
 
         // Step 3: delayed scheduling.
@@ -393,7 +487,7 @@ mod tests {
         locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
         let topo = Topology::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let cu = mk_cu(vec![du], None);
         let sched = AffinityScheduler::new(None);
         assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(p_near.clone()));
@@ -407,7 +501,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let sched = AffinityScheduler::new(None);
         assert_eq!(sched.place(&mk_cu(vec![], None), &ctx), Placement::Global);
     }
@@ -420,7 +514,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let sched = AffinityScheduler::new(None);
         let cu = mk_cu(vec![], Some("xsede"));
         assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(p_x));
@@ -435,7 +529,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let mut cu = mk_cu(vec![], None);
         cu.description.cores = 16;
         assert!(matches!(
@@ -502,6 +596,7 @@ mod tests {
             du_locations: &locs,
             queue_depth: &depth,
             capacity: None,
+            now: 0.0,
         };
         assert_eq!(sched.place(&cu, &blind), Placement::Pilot(p_full.clone()));
         // Stampede's scratch has 1 GiB of headroom left; lonestar is
@@ -517,6 +612,7 @@ mod tests {
             du_locations: &locs,
             queue_depth: &depth,
             capacity: Some(&cap),
+            now: 0.0,
         };
         assert_eq!(sched.place(&cu, &gated), Placement::Pilot(p_full.clone()));
         // Now the replica lives only on lonestar: stampede would have
@@ -529,6 +625,7 @@ mod tests {
             du_locations: &locs,
             queue_depth: &depth,
             capacity: Some(&cap),
+            now: 0.0,
         };
         assert_eq!(sched.place(&cu, &gated), Placement::Pilot(p_roomy));
         let _ = p_full;
@@ -545,7 +642,7 @@ mod tests {
         locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
         let topo = Topology::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let sched = AffinityScheduler::new(Some(30.0));
         let cu = mk_cu(vec![du], None);
         // max_delay_rounds delays, then fall back to global.
@@ -553,6 +650,174 @@ mod tests {
         assert_eq!(sched.place(&cu, &ctx), Placement::Delay(30.0));
         assert_eq!(sched.place(&cu, &ctx), Placement::Delay(30.0));
         assert_eq!(sched.place(&cu, &ctx), Placement::Global);
+    }
+
+    /// Busy data-local pilot + roomy remote pilot + one replica on the
+    /// local site: the canonical delay-scheduling scenario.
+    fn wait_scenario() -> (ManagerState, String, BTreeMap<String, Vec<Label>>) {
+        let mut st = ManagerState::new();
+        let near = mk_pilot(&mut st, 1, "xsede/tacc/lonestar", PilotState::Active);
+        st.pilots.get_mut(&near).unwrap().busy_slots = 1; // full
+        mk_pilot(&mut st, 8, "osg/cornell", PilotState::Active);
+        let du = mk_du(&mut st, Bytes::gb(4));
+        let mut locs = BTreeMap::new();
+        locs.insert(du.clone(), vec![Label::new("xsede/tacc/lonestar")]);
+        (st, du, locs)
+    }
+
+    /// ISSUE 10 tentpole oracle: a zero locality-wait budget records
+    /// nothing and decides exactly like no budget at all.
+    #[test]
+    fn zero_locality_wait_is_the_no_wait_path() {
+        let (st, du, locs) = wait_scenario();
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
+        let plain = AffinityScheduler::new(None);
+        let zero = AffinityScheduler::new(None).with_locality_wait(Some(0.0));
+        let cu = mk_cu(vec![du], None);
+        for _ in 0..4 {
+            assert_eq!(zero.place(&cu, &ctx), plain.place(&cu, &ctx));
+        }
+        assert_eq!(zero.place(&cu, &ctx), Placement::Global);
+    }
+
+    /// With a simclock, a waiting CU parks for the remaining budget on
+    /// every re-place and accepts a remote slot exactly at the
+    /// deadline.
+    #[test]
+    fn locality_wait_parks_then_accepts_remote_at_the_deadline() {
+        let (st, du, locs) = wait_scenario();
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let at = |now: f64| SchedContext {
+            topo: &topo,
+            state: &st,
+            du_locations: &locs,
+            queue_depth: &depth,
+            capacity: None,
+            now,
+        };
+        let sched = AffinityScheduler::new(None).with_locality_wait(Some(60.0));
+        let cu = mk_cu(vec![du], None);
+        assert_eq!(sched.place(&cu, &at(0.0)), Placement::Delay(60.0));
+        // Mid-budget re-place returns the *remaining* budget.
+        assert_eq!(sched.place(&cu, &at(20.0)), Placement::Delay(40.0));
+        // At the deadline the budget is spent: non-local placement.
+        assert_eq!(sched.place(&cu, &at(60.0)), Placement::Global);
+        // The ledger was cleared: a fresh submission waits again.
+        assert_eq!(sched.place(&cu, &at(100.0)), Placement::Delay(60.0));
+    }
+
+    /// With a frozen clock (the wall-clock service leaves `now` at
+    /// 0.0), skip counting bounds the wait instead of the deadline.
+    #[test]
+    fn locality_wait_skip_count_bounds_wall_clock_waiting() {
+        let (st, du, locs) = wait_scenario();
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
+        let sched = AffinityScheduler::new(None).with_locality_wait(Some(60.0));
+        let cu = mk_cu(vec![du], None);
+        // max_delay_rounds re-places, then fall back to global.
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(60.0));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(60.0));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(60.0));
+        assert_eq!(sched.place(&cu, &ctx), Placement::Global);
+    }
+
+    /// A slot freeing on the preferred pilot ends the wait immediately
+    /// and clears the ledger.
+    #[test]
+    fn locality_wait_releases_when_the_local_slot_frees() {
+        let (mut st, du, locs) = wait_scenario();
+        let topo = Topology::new();
+        let depth = BTreeMap::new();
+        let sched = AffinityScheduler::new(None).with_locality_wait(Some(60.0));
+        let cu = mk_cu(vec![du], None);
+        {
+            let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
+            assert_eq!(sched.place(&cu, &ctx), Placement::Delay(60.0));
+        }
+        let near = st.pilots.values().find(|p| p.busy_slots == 1).unwrap().id.clone();
+        st.pilots.get_mut(&near).unwrap().busy_slots = 0;
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 10.0 };
+        assert_eq!(sched.place(&cu, &ctx), Placement::Pilot(near.clone()));
+        // Ledger cleared: refilling the pilot starts a fresh budget.
+        st.pilots.get_mut(&near).unwrap().busy_slots = 1;
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 10.0 };
+        assert_eq!(sched.place(&cu, &ctx), Placement::Delay(60.0));
+    }
+
+    /// ISSUE 10 tentpole properties: the locality-wait budget is never
+    /// exceeded (every promised wakeup lands at or before the
+    /// deadline), the frozen-clock skip counter never exceeds
+    /// `max_delay_rounds` delays, and waiting never deadlocks an
+    /// otherwise-servable CU — at or past the deadline the decision is
+    /// always non-Delay.
+    #[test]
+    fn locality_wait_budget_bound_and_no_deadlock_property() {
+        crate::prop::check_default(
+            |rng| {
+                let w = rng.range_f64(0.1, 120.0);
+                let frozen = rng.chance(0.3);
+                let n = crate::prop::gen::usize_in(rng, 1, 10);
+                let steps: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 60.0)).collect();
+                (w, frozen, steps)
+            },
+            |(w, frozen, steps)| {
+                let (st, du, locs) = wait_scenario();
+                let topo = Topology::new();
+                let depth = BTreeMap::new();
+                let sched = AffinityScheduler::new(None).with_locality_wait(Some(*w));
+                let cu = mk_cu(vec![du], None);
+                let mut now = 0.0;
+                let mut start: Option<f64> = None;
+                let mut delays_seen = 0u32;
+                for (i, dt) in steps.iter().enumerate() {
+                    if !*frozen {
+                        now += dt;
+                    }
+                    let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now };
+                    match sched.place(&cu, &ctx) {
+                        Placement::Delay(d) => {
+                            delays_seen += 1;
+                            let s = *start.get_or_insert(now);
+                            if now + d > s + w + 1e-9 {
+                                return Err(format!(
+                                    "step {i}: wakeup past deadline: {now}+{d} > {s}+{w}"
+                                ));
+                            }
+                            if delays_seen > sched.max_delay_rounds && *frozen {
+                                return Err(format!("step {i}: frozen-clock skip bound exceeded"));
+                            }
+                        }
+                        Placement::Global => {
+                            // Legitimate give-up; the ledger is clear,
+                            // so the next round starts a fresh budget.
+                            start = None;
+                            delays_seen = 0;
+                        }
+                        other => return Err(format!("step {i}: unexpected {other:?}")),
+                    }
+                    if let Some(s) = start {
+                        if now >= s + w {
+                            // No deadlock: past the deadline the CU
+                            // must be serviced immediately.
+                            let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now };
+                            if matches!(sched.place(&cu, &ctx), Placement::Delay(_)) {
+                                return Err(format!(
+                                    "step {i}: Delay at/after deadline ({now} >= {s}+{w})"
+                                ));
+                            }
+                            start = None;
+                            delays_seen = 0;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -563,7 +828,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let cu = mk_cu(vec![], None);
         assert_eq!(DataUnawareScheduler.place(&cu, &ctx), Placement::Pilot(a));
     }
@@ -576,7 +841,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let sched = RoundRobinScheduler::default();
         let cu = mk_cu(vec![], None);
         let p1 = sched.place(&cu, &ctx);
@@ -596,7 +861,7 @@ mod tests {
         let topo = Topology::new();
         let locs = BTreeMap::new();
         let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
         let cu = mk_cu(vec![], None);
         let seq = |seed| {
             let s = RandomScheduler::new(seed);
@@ -719,6 +984,7 @@ mod tests {
                         du_locations: &expected_locs,
                         queue_depth: &expected_depth,
                         capacity: None,
+                        now: 0.0,
                     };
                     let a = sched_indexed.place(&cu, &ctx_indexed);
                     let b = sched_rebuilt.place(&cu, &ctx_rebuilt);
@@ -776,6 +1042,7 @@ mod tests {
                     du_locations: &locs,
                     queue_depth: &depth,
                     capacity: None,
+                    now: 0.0,
                 };
                 for (site, cores) in constraints {
                     let mut cu = mk_cu(vec![], Some(site.as_str()));
@@ -847,7 +1114,7 @@ mod tests {
                 let topo = Topology::new();
                 let locs = BTreeMap::new();
                 let depth = BTreeMap::new();
-        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None };
+        let ctx = SchedContext { topo: &topo, state: &st, du_locations: &locs, queue_depth: &depth, capacity: None, now: 0.0 };
                 let sched = AffinityScheduler::new(None);
                 for (cores, aff) in cus {
                     let mut cu = mk_cu(vec![], aff.as_deref());

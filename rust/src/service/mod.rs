@@ -1102,7 +1102,21 @@ impl ComputeDataService {
         let placement = {
             let st = self.sys.state.lock().unwrap();
             let ctx = SchedContext::from_state(&self.sys.topo, &st);
-            self.sys.scheduler.place(&cu, &ctx)
+            // The wall-clock service has no simulated clock to park a
+            // Delay on (`ctx.now` stays 0.0), so a delaying scheduler
+            // is resolved inline: re-place until its skip-count
+            // fallback — bounded by `max_delay_rounds` — accepts a
+            // slot or goes global. The extra iteration cap is a
+            // defensive bound on third-party `Scheduler` impls that
+            // delay forever; the leftover `Delay` then routes to the
+            // global queue below, exactly as before.
+            let mut p = self.sys.scheduler.place(&cu, &ctx);
+            let mut rounds = 0u32;
+            while matches!(p, Placement::Delay(_)) && rounds < 8 {
+                p = self.sys.scheduler.place(&cu, &ctx);
+                rounds += 1;
+            }
+            p
         };
 
         let enqueue = |queue: &str, cu: ComputeUnit| -> anyhow::Result<()> {

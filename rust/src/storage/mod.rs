@@ -277,6 +277,115 @@ impl Endpoint {
     }
 }
 
+/// Physical backend families for heterogeneous-testbed pricing (the
+/// parallel-FS / object-store / node-local split evaluated in the
+/// pilot-abstraction follow-up papers). Orthogonal to [`BackendKind`]:
+/// the kind names the *protocol*, the class names the *device* behind
+/// it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum BackendClass {
+    /// Shared parallel filesystem (Lustre/GPFS-class): no extra
+    /// latency, high shared bandwidth, free within the allocation.
+    #[default]
+    ParallelFs,
+    /// Cloud object store (S3-class): per-request latency, WAN-bounded
+    /// bandwidth, billed per GB moved.
+    ObjectStore,
+    /// Node-local disk/SSD: near-zero latency and free, but only fast
+    /// when the compute lands on the same node — the case delay
+    /// scheduling exists to exploit.
+    NodeLocal,
+}
+
+impl std::fmt::Display for BackendClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendClass::ParallelFs => "parallel-fs",
+            BackendClass::ObjectStore => "object-store",
+            BackendClass::NodeLocal => "node-local",
+        })
+    }
+}
+
+/// Per-PD device profile composed into transfer pricing on
+/// heterogeneous testbeds.
+///
+/// The profile adjusts a priced transfer *into or out of* the PD it is
+/// attached to: `fixed_latency_s` adds to the setup term once per
+/// attempt, `bandwidth_cap` floors the wire time at `size / cap`
+/// (min()-composed with the uplink walk — the slower of path and
+/// device governs), and `cost_per_gb` accrues into
+/// `SimSystem::dollars_spent` for every byte moved.
+///
+/// [`BackendProfile::default`] is the uniform no-op profile (zero
+/// latency, no cap, zero cost): a testbed where every PD keeps the
+/// default prices transfers **bit-identically** to the
+/// pre-profile code path, which is what the scheduler oracle
+/// properties pin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendProfile {
+    pub class: BackendClass,
+    /// Fixed per-attempt latency added to transfer setup (seconds).
+    pub fixed_latency_s: f64,
+    /// Device bandwidth ceiling (bytes/s); `None` = unbounded (the
+    /// network path alone governs).
+    pub bandwidth_cap: Option<f64>,
+    /// Monetary cost per GiB moved in or out of this PD.
+    pub cost_per_gb: f64,
+}
+
+impl Default for BackendProfile {
+    fn default() -> BackendProfile {
+        BackendProfile {
+            class: BackendClass::ParallelFs,
+            fixed_latency_s: 0.0,
+            bandwidth_cap: None,
+            cost_per_gb: 0.0,
+        }
+    }
+}
+
+impl BackendProfile {
+    /// Shared parallel filesystem: the uniform default (free, uncapped).
+    pub fn parallel_fs() -> BackendProfile {
+        BackendProfile::default()
+    }
+
+    /// Cloud object store: ~90 ms request latency, 60 MiB/s device
+    /// ceiling, $0.09/GB egress-class pricing.
+    pub fn object_store() -> BackendProfile {
+        BackendProfile {
+            class: BackendClass::ObjectStore,
+            fixed_latency_s: 0.09,
+            bandwidth_cap: Some(1048576.0 * 60.0),
+            cost_per_gb: 0.09,
+        }
+    }
+
+    /// Node-local disk: free and effectively latency-less, with a
+    /// single-spindle 200 MiB/s ceiling.
+    pub fn node_local() -> BackendProfile {
+        BackendProfile {
+            class: BackendClass::NodeLocal,
+            fixed_latency_s: 0.0,
+            bandwidth_cap: Some(1048576.0 * 200.0),
+            cost_per_gb: 0.0,
+        }
+    }
+
+    /// True when this profile changes nothing relative to the uniform
+    /// default — used to keep homogeneous testbeds on the exact
+    /// pre-profile pricing path.
+    pub fn is_uniform(&self) -> bool {
+        self.fixed_latency_s == 0.0 && self.bandwidth_cap.is_none() && self.cost_per_gb == 0.0
+    }
+
+    /// Dollars charged for moving `bytes` in or out of this PD.
+    pub fn dollars_for(&self, bytes: u64) -> f64 {
+        self.cost_per_gb * bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,6 +440,27 @@ mod tests {
         assert!(irods.replication);
         let ssh = m.iter().find(|c| c.kind == BackendKind::Ssh).unwrap();
         assert!(!ssh.third_party);
+    }
+
+    #[test]
+    fn default_profile_is_the_uniform_noop() {
+        let p = BackendProfile::default();
+        assert!(p.is_uniform());
+        assert_eq!(p.class, BackendClass::ParallelFs);
+        assert_eq!(p.dollars_for(1 << 30), 0.0);
+        assert!(BackendProfile::parallel_fs().is_uniform());
+    }
+
+    #[test]
+    fn preset_profiles_are_heterogeneous_and_priced() {
+        let os = BackendProfile::object_store();
+        assert!(!os.is_uniform());
+        assert_eq!(os.class, BackendClass::ObjectStore);
+        assert!((os.dollars_for(2 << 30) - 0.18).abs() < 1e-12);
+        let nl = BackendProfile::node_local();
+        assert!(!nl.is_uniform());
+        assert_eq!(nl.dollars_for(u64::MAX / 2), 0.0);
+        assert!(nl.bandwidth_cap.unwrap() > os.bandwidth_cap.unwrap());
     }
 
     #[test]

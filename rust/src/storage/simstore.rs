@@ -23,7 +23,7 @@
 //! removal path (PD outages, tests): it bypasses the pin/last-replica
 //! safety rules by design.
 
-use super::{Endpoint, ProtocolParams};
+use super::{BackendProfile, Endpoint, ProtocolParams};
 use crate::net::{Bandwidth, FlowHandle, Network};
 use crate::topology::{Label, NodeId};
 use crate::util::Bytes;
@@ -166,6 +166,32 @@ pub fn transfer_cost_reference(
     TransferCost { setup_s, wire_s, register_s: params.register_s }
 }
 
+/// Exchange rate folding monetary cost into replica-ranking seconds:
+/// one dollar of egress is treated as this many seconds of transfer
+/// pain when [`SimStore::closest_replica`] ranks priced sources. Only
+/// a ranking weight — wall-clock costs never include it.
+pub const DOLLAR_WEIGHT_S: f64 = 60.0;
+
+/// Compose the src/dst device profiles into a priced path cost: fixed
+/// latency adds to the setup term once per attempt, and each device's
+/// bandwidth ceiling floors the wire time at `size / cap`
+/// (min()-composition with the uplink walk — the slower of network
+/// path and device governs).
+fn profile_adjust(
+    mut cost: TransferCost,
+    src: &BackendProfile,
+    dst: &BackendProfile,
+    size: Bytes,
+) -> TransferCost {
+    for p in [src, dst] {
+        cost.setup_s += p.fixed_latency_s;
+        if let Some(cap) = p.bandwidth_cap {
+            cost.wire_s = cost.wire_s.max(size.as_f64() / cap.max(1e-6));
+        }
+    }
+    cost
+}
+
 /// A named Pilot-Data location in the simulation with its endpoint.
 #[derive(Debug, Clone)]
 pub struct SimPd {
@@ -173,6 +199,11 @@ pub struct SimPd {
     pub endpoint: Endpoint,
     /// Storage quota in bytes; `None` = unbounded (the seed behavior).
     pub quota: Option<Bytes>,
+    /// Physical device profile behind the endpoint. The default is the
+    /// uniform no-op ([`BackendProfile::is_uniform`]); a store where
+    /// every PD keeps it prices transfers on the exact pre-profile
+    /// path.
+    pub profile: BackendProfile,
 }
 
 /// Outcome of a quota-checked placement ([`SimStore::try_place`]).
@@ -213,6 +244,11 @@ pub struct SimStore {
     /// answer in O(1) so quota-less testbeds skip per-placement
     /// capacity scans entirely.
     quota_count: usize,
+    /// Count of PDs with a non-uniform [`BackendProfile`] — lets
+    /// [`SimStore::heterogeneous`] answer in O(1) so homogeneous
+    /// testbeds take the exact pre-profile pricing and ranking paths
+    /// (the bit-identity oracles depend on this).
+    profile_count: usize,
 }
 
 impl SimStore {
@@ -221,14 +257,63 @@ impl SimStore {
     }
 
     pub fn add_pd(&mut self, name: &str, endpoint: Endpoint) {
-        let old = self
-            .pds
-            .insert(name.to_string(), SimPd { name: name.to_string(), endpoint, quota: None });
-        // Re-registering replaces the entry quota-less; keep the O(1)
-        // quota counter honest.
-        if old.map_or(false, |p| p.quota.is_some()) {
-            self.quota_count -= 1;
+        let old = self.pds.insert(
+            name.to_string(),
+            SimPd {
+                name: name.to_string(),
+                endpoint,
+                quota: None,
+                profile: BackendProfile::default(),
+            },
+        );
+        // Re-registering replaces the entry quota-less and with the
+        // uniform profile; keep the O(1) counters honest.
+        if let Some(p) = old {
+            if p.quota.is_some() {
+                self.quota_count -= 1;
+            }
+            if !p.profile.is_uniform() {
+                self.profile_count -= 1;
+            }
         }
+    }
+
+    /// Attach a device profile to a PD. Setting a non-uniform profile
+    /// flips the store heterogeneous ([`SimStore::heterogeneous`]);
+    /// setting the uniform default back flips it homogeneous again
+    /// once no priced PD remains.
+    pub fn set_profile(&mut self, pd: &str, profile: BackendProfile) -> anyhow::Result<()> {
+        let slot = &mut self
+            .pds
+            .get_mut(pd)
+            .ok_or_else(|| anyhow::anyhow!("unknown pilot-data '{pd}'"))?
+            .profile;
+        match (slot.is_uniform(), profile.is_uniform()) {
+            (true, false) => self.profile_count += 1,
+            (false, true) => self.profile_count -= 1,
+            _ => {}
+        }
+        *slot = profile;
+        Ok(())
+    }
+
+    /// `true` if any PD carries a non-uniform [`BackendProfile`]
+    /// (O(1)). All profile-aware pricing and ranking is gated on this,
+    /// so homogeneous testbeds run bit-identically to the pre-profile
+    /// code.
+    pub fn heterogeneous(&self) -> bool {
+        self.profile_count > 0
+    }
+
+    /// Dollars charged for moving `bytes` from `src_pd` to `dst_pd`
+    /// (both devices' per-GB rates apply; 0.0 on homogeneous stores or
+    /// unknown PDs).
+    pub fn transfer_dollars(&self, src_pd: &str, dst_pd: &str, bytes: u64) -> f64 {
+        if !self.heterogeneous() {
+            return 0.0;
+        }
+        let rate = |pd: &str| self.pds.get(pd).map(|p| p.profile.dollars_for(bytes)).unwrap_or(0.0);
+        rate(src_pd) + rate(dst_pd)
     }
 
     /// Set (or clear) a PD's storage quota. Shrinking below the
@@ -507,12 +592,37 @@ impl SimStore {
     /// The replica of `du` closest (max affinity) to `target`, if any —
     /// this is the paper's "optimized replication mechanism, which
     /// utilizes the replica closest to the target site".
+    ///
+    /// On a [`SimStore::heterogeneous`] store the ranking is
+    /// price-aware: affinity still dominates (it is the transfer-cost
+    /// proxy — closer means a cheaper path walk), but equal-affinity
+    /// sources break ties toward the device with the lower penalty
+    /// (`fixed_latency_s` + device wire time + [`DOLLAR_WEIGHT_S`] ×
+    /// egress dollars), so a free node-local copy beats an equally
+    /// close object-store copy. Homogeneous stores take the seed
+    /// ranking verbatim.
     pub fn closest_replica(
         &self,
         topo: &crate::topology::Topology,
         du: &str,
         target: &Label,
     ) -> Option<&SimPd> {
+        if self.heterogeneous() {
+            let size = self.du_meta.get(du).map(|(s, _)| *s).unwrap_or(Bytes(0));
+            let penalty = |p: &SimPd| {
+                let prof = &p.profile;
+                let mut s = prof.fixed_latency_s + DOLLAR_WEIGHT_S * prof.dollars_for(size.as_u64());
+                if let Some(cap) = prof.bandwidth_cap {
+                    s += size.as_f64() / cap.max(1e-6);
+                }
+                s
+            };
+            return self.replicas(du).into_iter().min_by(|a, b| {
+                let ka = (-topo.affinity_interned(target, &a.endpoint.label), penalty(a));
+                let kb = (-topo.affinity_interned(target, &b.endpoint.label), penalty(b));
+                ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+            });
+        }
         self.replicas(du)
             .into_iter()
             .max_by(|a, b| {
@@ -535,7 +645,7 @@ impl SimStore {
         let src = self.pd(src_pd)?;
         let dst = self.pd(dst_pd)?;
         // The destination's protocol governs the transfer mechanics.
-        Ok(transfer_cost(
+        let cost = transfer_cost(
             net,
             &src.endpoint.label,
             &dst.endpoint.label,
@@ -543,7 +653,11 @@ impl SimStore {
             &dst.endpoint.params,
             size,
             files,
-        ))
+        );
+        if self.heterogeneous() {
+            return Ok(profile_adjust(cost, &src.profile, &dst.profile, size));
+        }
+        Ok(cost)
     }
 
     /// [`SimStore::staging_cost`] that also registers the src→dst wire
@@ -564,7 +678,11 @@ impl SimStore {
         let s = net.node(&src.endpoint.label);
         let d = net.node(&dst.endpoint.label);
         let v = via.map(|l| net.node(l));
-        Ok(transfer_cost_flow(net, s, d, v, &dst.endpoint.params, size, files))
+        let (cost, flow) = transfer_cost_flow(net, s, d, v, &dst.endpoint.params, size, files);
+        if self.heterogeneous() {
+            return Ok((profile_adjust(cost, &src.profile, &dst.profile, size), flow));
+        }
+        Ok((cost, flow))
     }
 }
 
@@ -906,11 +1024,16 @@ mod tests {
         crate::prop::check_default(
             |rng| {
                 let n_pds = crate::prop::gen::usize_in(rng, 1, 4);
-                let pds: Vec<(String, Option<u64>)> = (0..n_pds)
+                // Third element: device profile (0 = uniform, 1 =
+                // object-store, 2 = node-local) — the invariants must
+                // hold on heterogeneous stores too (ISSUE 10: cost-
+                // ranked placement never evicts a pinned/last replica).
+                let pds: Vec<(String, Option<u64>, u8)> = (0..n_pds)
                     .map(|i| {
                         (
                             format!("pd-{i}"),
                             if rng.chance(0.7) { Some(2 + rng.below(8)) } else { None },
+                            rng.below(3) as u8,
                         )
                     })
                     .collect();
@@ -933,15 +1056,21 @@ mod tests {
             },
             |(pds, dus, ops)| {
                 let mut s = SimStore::new();
-                for (name, quota) in pds {
+                for (name, quota, prof) in pds {
                     s.add_pd(name, Endpoint::new(&format!("ssh://{name}/x"), "osg/a").unwrap());
                     s.set_quota(name, (*quota).map(Bytes::gb)).unwrap();
+                    let profile = match prof {
+                        1 => crate::storage::BackendProfile::object_store(),
+                        2 => crate::storage::BackendProfile::node_local(),
+                        _ => crate::storage::BackendProfile::default(),
+                    };
+                    s.set_profile(name, profile).unwrap();
                 }
                 for (du, gb) in dus {
                     s.register_du(du, Bytes::gb(*gb), 1);
                 }
                 let check = |s: &SimStore, when: &str| -> Result<(), String> {
-                    for (pd, quota) in pds {
+                    for (pd, quota, _) in pds {
                         let resident: u64 = dus
                             .iter()
                             .filter(|(du, _)| s.has_replica(du, pd))
@@ -968,7 +1097,7 @@ mod tests {
                         0 => {
                             let mut pinned_before: Vec<(String, String)> = Vec::new();
                             for (d, _) in dus.iter() {
-                                for (p, _) in pds.iter() {
+                                for (p, _, _) in pds.iter() {
                                     if s.is_pinned(d, p) {
                                         pinned_before.push((d.clone(), p.clone()));
                                     }
@@ -1020,6 +1149,106 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn profile_counter_tracks_set_clear_and_readd() {
+        use crate::storage::BackendProfile;
+        let mut s = store_with(&[
+            ("pd-a", "ssh://a/scratch", "xsede/tacc/lonestar"),
+            ("pd-b", "ssh://b/scratch", "xsede/tacc/stampede"),
+        ]);
+        assert!(!s.heterogeneous());
+        s.set_profile("pd-a", BackendProfile::object_store()).unwrap();
+        assert!(s.heterogeneous());
+        s.set_profile("pd-a", BackendProfile::node_local()).unwrap(); // non-uniform→non-uniform
+        s.set_profile("pd-b", BackendProfile::object_store()).unwrap();
+        s.set_profile("pd-a", BackendProfile::default()).unwrap();
+        assert!(s.heterogeneous(), "pd-b still priced");
+        // Re-registering a priced PD resets it to the uniform default.
+        s.add_pd("pd-b", Endpoint::new("ssh://b/scratch", "xsede/tacc/stampede").unwrap());
+        assert!(!s.heterogeneous());
+        s.set_profile("pd-a", BackendProfile::parallel_fs()).unwrap(); // uniform→uniform
+        assert!(!s.heterogeneous());
+        assert!(s.set_profile("pd-nope", BackendProfile::node_local()).is_err());
+    }
+
+    #[test]
+    fn uniform_profiles_price_identically_to_the_seed_path() {
+        use crate::storage::BackendProfile;
+        let mut s = store_with(&[
+            ("pd-gw", "ssh://gw68/staging", "xsede/iu/gw68"),
+            ("pd-srm", "srm://osg-pool/x", "osg/fermilab"),
+        ]);
+        s.register_du("du-1", Bytes::gb(4), 16);
+        s.place("du-1", "pd-gw").unwrap();
+        let net = Network::new();
+        let before = s.staging_cost(&net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        // Explicitly setting the uniform default on every PD keeps the
+        // store homogeneous: costs stay bitwise identical.
+        s.set_profile("pd-gw", BackendProfile::parallel_fs()).unwrap();
+        s.set_profile("pd-srm", BackendProfile::default()).unwrap();
+        assert!(!s.heterogeneous());
+        let after = s.staging_cost(&net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        assert_eq!(before, after);
+        assert_eq!(s.transfer_dollars("pd-gw", "pd-srm", Bytes::gb(4).as_u64()), 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_profiles_add_latency_cap_and_dollars() {
+        use crate::storage::BackendProfile;
+        let mut s = store_with(&[
+            ("pd-gw", "ssh://gw68/staging", "xsede/iu/gw68"),
+            ("pd-srm", "srm://osg-pool/x", "osg/fermilab"),
+        ]);
+        s.register_du("du-1", Bytes::gb(4), 16);
+        s.place("du-1", "pd-gw").unwrap();
+        let net = Network::new();
+        let base = s.staging_cost(&net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        s.set_profile("pd-gw", BackendProfile::object_store()).unwrap();
+        let priced = s.staging_cost(&net, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        // Latency lands in setup once per attempt…
+        let os = BackendProfile::object_store();
+        assert!((priced.setup_s - base.setup_s - os.fixed_latency_s).abs() < 1e-12);
+        // …and the device cap floors the wire time (min() with the
+        // uplink walk: the slower of path and device governs).
+        let device_floor = Bytes::gb(4).as_f64() / os.bandwidth_cap.unwrap();
+        assert!((priced.wire_s - base.wire_s.max(device_floor)).abs() < 1e-9);
+        // The combined flow path prices identically.
+        let mut net2 = Network::new();
+        let (flow_cost, _h) =
+            s.staging_cost_flow(&mut net2, "du-1", "pd-gw", "pd-srm", None).unwrap();
+        assert_eq!(priced, flow_cost);
+        // Dollars: only the object-store side charges.
+        let d = s.transfer_dollars("pd-gw", "pd-srm", Bytes::gb(4).as_u64());
+        assert!((d - os.cost_per_gb * 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priced_closest_replica_prefers_cheap_equally_close_sources() {
+        use crate::storage::BackendProfile;
+        // Two replicas at the same affinity distance from the target;
+        // the object-store copy is billed, the node-local one free.
+        let mut s = store_with(&[
+            ("pd-s3", "s3://bucket/x", "aws/us-east"),
+            ("pd-nl", "ssh://node/x", "osg/purdue"),
+        ]);
+        s.register_du("du-1", Bytes::gb(2), 1);
+        s.place("du-1", "pd-s3").unwrap();
+        s.place("du-1", "pd-nl").unwrap();
+        s.set_profile("pd-s3", BackendProfile::object_store()).unwrap();
+        s.set_profile("pd-nl", BackendProfile::node_local()).unwrap();
+        let topo = Topology::new();
+        // Target at a third site: both replicas are equally distant
+        // (disjoint label trees), so the price penalty decides.
+        let near = s
+            .closest_replica(&topo, "du-1", &Label::new("xsede/tacc/lonestar"))
+            .unwrap();
+        assert_eq!(near.name, "pd-nl", "free node-local copy must win the tie");
+        // Affinity still dominates price: move the target next to the
+        // expensive copy and it wins anyway.
+        let near = s.closest_replica(&topo, "du-1", &Label::new("aws/us-east")).unwrap();
+        assert_eq!(near.name, "pd-s3");
     }
 
     #[test]

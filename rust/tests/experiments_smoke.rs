@@ -1,0 +1,34 @@
+//! Registry-wide experiment smoke: every id in `experiments::ALL` —
+//! exactly what `pilot-data exp all` iterates — must run end to end
+//! and produce at least one non-empty, renderable table. This is the
+//! regression net for the registry itself: a new experiment that is
+//! registered but panics, bails, or returns an empty table fails here
+//! before it ships.
+//!
+//! This lives in its own integration binary (one test, own process) so
+//! setting `PD_BENCH_QUICK` cannot race other tests: the quick flag
+//! keeps any bench-shared helpers on their reduced configurations.
+
+#[test]
+fn every_registered_experiment_runs_and_reports() {
+    // Safe: this binary runs exactly one test, so no other thread
+    // observes the env mutation.
+    std::env::set_var("PD_BENCH_QUICK", "1");
+
+    for id in pilot_data::experiments::ALL {
+        let tables = pilot_data::experiments::run(id, 42)
+            .unwrap_or_else(|e| panic!("experiment '{id}' failed: {e}"));
+        assert!(!tables.is_empty(), "experiment '{id}' produced no tables");
+        for (i, t) in tables.iter().enumerate() {
+            assert!(
+                !t.rows.is_empty(),
+                "experiment '{id}' table {i} has no rows"
+            );
+            let rendered = t.render();
+            assert!(
+                !rendered.trim().is_empty(),
+                "experiment '{id}' table {i} rendered empty"
+            );
+        }
+    }
+}
